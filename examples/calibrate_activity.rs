@@ -1,0 +1,84 @@
+//! One-off measurement harness: per-cycle switching activity of the five
+//! Table III modes on a 256×256 PPAC under the paper's stimuli protocol
+//! (random A, 100 random inputs). Used to pin the EnergyModel constants;
+//! kept in-tree so the calibration is reproducible.
+
+use ppac::formats::NumberFormat;
+use ppac::isa::{BankCombine, OpMode, PpacUnit, TermKind};
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn report(name: &str, u: &mut PpacUnit) {
+    let t = u.array_mut().take_trace().unwrap();
+    println!(
+        "{name:>12}: cycles={} cell_toggles/cyc: xnor={:.0} and={:.0}  x_tog/cyc={:.1} \
+         reg_writes/cyc={:.1} offset_ops/cyc={:.1} r_toggled/cyc={:.1}",
+        t.cycles,
+        t.xnor_toggles as f64 / t.cycles as f64,
+        t.and_toggles as f64 / t.cycles as f64,
+        t.x_line_toggles as f64 / t.cycles as f64,
+        t.alu_reg_writes as f64 / t.cycles as f64,
+        t.alu_offset_ops as f64 / t.cycles as f64,
+        t.r_toggled_rows as f64 / t.cycles as f64,
+    );
+}
+
+fn main() {
+    let cfg = PpacConfig::new(256, 256);
+    let mut rng = Xoshiro256pp::seeded(2024);
+    let a: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
+
+    // hamming
+    let mut u = PpacUnit::new(cfg).unwrap();
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Hamming).unwrap();
+    u.enable_trace();
+    let qs: Vec<Vec<bool>> = (0..100).map(|_| rng.bits(256)).collect();
+    u.hamming_batch(&qs).unwrap();
+    report("hamming", &mut u);
+
+    // pm1 mvp
+    let mut u = PpacUnit::new(cfg).unwrap();
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Pm1Mvp).unwrap();
+    u.enable_trace();
+    u.mvp1_batch(&qs).unwrap();
+    report("pm1_mvp", &mut u);
+
+    // gf2
+    let mut u = PpacUnit::new(cfg).unwrap();
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Gf2Mvp).unwrap();
+    u.enable_trace();
+    u.gf2_batch(&qs).unwrap();
+    report("gf2", &mut u);
+
+    // pla (min-terms, 16 terms/bank)
+    let mut u = PpacUnit::new(cfg).unwrap();
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Pla {
+        kind: TermKind::MinTerm,
+        combine: BankCombine::Or,
+        terms_per_bank: vec![16; 16],
+    })
+    .unwrap();
+    u.enable_trace();
+    u.pla_batch(&qs).unwrap();
+    report("pla", &mut u);
+
+    // 4-bit {0,1} multibit-matrix MVP (100 MVPs)
+    let mut u = PpacUnit::new(cfg).unwrap();
+    let a4: Vec<Vec<i64>> = (0..256).map(|_| rng.ints(64, 0, 15)).collect();
+    u.load_multibit_matrix(&a4, 4, NumberFormat::Uint).unwrap();
+    u.configure(OpMode::MultibitMatrix {
+        kbits: 4,
+        lbits: 4,
+        a_fmt: NumberFormat::Uint,
+        x_fmt: NumberFormat::Uint,
+    })
+    .unwrap();
+    u.enable_trace();
+    let xs4: Vec<Vec<i64>> = (0..100).map(|_| rng.ints(64, 0, 15)).collect();
+    u.mvp_multibit_batch(&xs4).unwrap();
+    report("multibit4", &mut u);
+}

@@ -1,0 +1,221 @@
+//! END-TO-END DRIVER: batched BNN inference through the full stack.
+//!
+//! This example proves all three layers compose:
+//!
+//!   1. **L2/L1 artifacts**: the JAX/Pallas BNN model (`bnn_mlp.hlo.txt`,
+//!      built by `make artifacts`) is loaded and executed via the PJRT C
+//!      API — the golden functional reference.
+//!   2. **L3 simulator**: the same network runs on the cycle-accurate
+//!      PPAC simulator (three 1-bit ±1 MVP layers, biases in δ_m).
+//!   3. **L3 coordinator**: the first layer additionally runs as batched
+//!      jobs through the multi-tile serving layer.
+//!
+//! All three answers must agree **bit-exactly**; the run then reports the
+//! paper's headline metrics for this workload (throughput at modelled
+//! fmax, energy/MVP from measured switching activity) plus host-side
+//! serving statistics. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_bnn
+//! ```
+
+use std::time::Instant;
+
+use ppac::apps::{BnnLayer, BnnOnPpac, TeacherDataset};
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput};
+use ppac::isa::{OpMode, PpacUnit};
+use ppac::power::{EnergyModel, ImplModel};
+use ppac::runtime::Runtime;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn bits_to_i32(rows: &[Vec<bool>]) -> Vec<i32> {
+    rows.iter().flatten().map(|&b| b as i32).collect()
+}
+
+fn columns_to_i32(cols: &[Vec<bool>]) -> Vec<i32> {
+    let n = cols[0].len();
+    let b = cols.len();
+    let mut flat = vec![0i32; n * b];
+    for (j, col) in cols.iter().enumerate() {
+        for (i, &bit) in col.iter().enumerate() {
+            flat[i * b + j] = bit as i32;
+        }
+    }
+    flat
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---------------- workload: a 256-256-256-10 BNN --------------------
+    let mut rng = Xoshiro256pp::seeded(2719);
+    let (m, n, classes) = (256usize, 256usize, 10usize);
+    let layers = vec![
+        BnnLayer::random(&mut rng, m, n),
+        BnnLayer::random(&mut rng, m, m),
+        BnnLayer {
+            weights: (0..classes).map(|_| rng.bits(m)).collect(),
+            bias: rng.ints(classes, -8, 8),
+        },
+    ];
+    let params: usize = layers.iter().map(|l| l.out_dim() * l.in_dim()).sum();
+    println!("network: 256→256→256→10 BNN ({params} binary weights)");
+
+    // Teacher-labelled dataset: the network itself defines the labels, so
+    // end-to-end accuracy is measurable and must be 100%.
+    let ds = TeacherDataset::generate(&layers, 512, 7);
+    println!("dataset: {} teacher-labelled samples", ds.inputs.len());
+
+    // ---------------- 1) golden reference via PJRT artifacts ------------
+    let batch = 16usize;
+    let mut rt = Runtime::load(Runtime::default_dir())?;
+    let to_i32 = |v: Vec<i64>| v.iter().map(|&x| x as i32).collect::<Vec<i32>>();
+    // model.py computes y = Wx − t; our layers use y = Wx + b ⇒ t = −b.
+    let t1 = to_i32(layers[0].bias.iter().map(|&b| -b).collect());
+    let t2 = to_i32(layers[1].bias.iter().map(|&b| -b).collect());
+    let t3 = to_i32(layers[2].bias.iter().map(|&b| -b).collect());
+
+    let t_pjrt = Instant::now();
+    let mut pjrt_scores: Vec<Vec<i64>> = Vec::with_capacity(ds.inputs.len());
+    for chunk in ds.inputs.chunks(batch) {
+        let mut cols: Vec<Vec<bool>> = chunk.to_vec();
+        while cols.len() < batch {
+            cols.push(vec![false; n]); // pad the final partial batch
+        }
+        let out = rt.execute_i32(
+            "bnn_mlp",
+            &[
+                columns_to_i32(&cols),
+                bits_to_i32(&layers[0].weights),
+                t1.clone(),
+                bits_to_i32(&layers[1].weights),
+                t2.clone(),
+                bits_to_i32(&layers[2].weights),
+                t3.clone(),
+            ],
+        )?;
+        for j in 0..chunk.len() {
+            pjrt_scores
+                .push((0..classes).map(|c| out[0][c * batch + j] as i64).collect());
+        }
+    }
+    let pjrt_s = t_pjrt.elapsed().as_secs_f64();
+    println!(
+        "\n[1] PJRT golden (JAX/Pallas AOT): {} samples in {:.2}s",
+        ds.inputs.len(),
+        pjrt_s
+    );
+
+    // ---------------- 2) cycle-accurate simulator -----------------------
+    let cfg = PpacConfig::new(m, n);
+    let mut net = BnnOnPpac::compile(layers.clone(), cfg)?;
+    let t_sim = Instant::now();
+    let sim_scores = net.forward_batch(&ds.inputs)?;
+    let sim_s = t_sim.elapsed().as_secs_f64();
+    let sim_cycles = net.compute_cycles();
+    println!(
+        "[2] cycle-accurate sim: {} samples, {} array cycles, {:.2}s host",
+        ds.inputs.len(),
+        sim_cycles,
+        sim_s
+    );
+
+    // Bit-exact agreement (1 ⇄ 2).
+    assert_eq!(pjrt_scores.len(), sim_scores.len());
+    for (i, (a, b)) in pjrt_scores.iter().zip(&sim_scores).enumerate() {
+        assert_eq!(a, b, "sample {i}: PJRT vs simulator diverged");
+    }
+    println!(
+        "    PJRT ⇄ simulator: BIT-EXACT on all {} samples",
+        sim_scores.len()
+    );
+
+    // Accuracy against teacher labels (must be 100%).
+    let correct = sim_scores
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(scores, &l)| {
+            scores.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0 == l
+        })
+        .count();
+    println!(
+        "    accuracy: {}/{} = {:.1}%",
+        correct,
+        ds.labels.len(),
+        100.0 * correct as f64 / ds.labels.len() as f64
+    );
+    assert_eq!(correct, ds.labels.len());
+
+    // ---------------- 3) coordinator serving path -----------------------
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: cfg,
+        workers: 4,
+        max_batch: 64,
+    })?;
+    let mid = coord.register_matrix(layers[0].weights.clone())?;
+    let t_serve = Instant::now();
+    let handles: Vec<_> = ds
+        .inputs
+        .iter()
+        .map(|x| coord.submit(mid, JobInput::Pm1Mvp(x.clone())))
+        .collect::<ppac::Result<_>>()?;
+    let mut served = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait()?;
+        let JobOutput::Ints(y) = r.output else { panic!("wrong output kind") };
+        // The coordinator's raw MVP plus the bias must equal the layer's
+        // golden pre-activation.
+        let want = layers[0].preact(&ds.inputs[i]);
+        let got: Vec<i64> =
+            y.iter().zip(&layers[0].bias).map(|(v, &b)| v + b).collect();
+        assert_eq!(got[..layers[0].out_dim()], want[..], "sample {i}");
+        served += 1;
+    }
+    let serve_s = t_serve.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    println!(
+        "[3] coordinator: {served} layer-1 jobs in {:.2}s ({:.0} jobs/s, mean batch {:.1}, p99 {:.0}µs)",
+        serve_s,
+        served as f64 / serve_s,
+        snap.mean_batch_size,
+        snap.p99_us
+    );
+    coord.shutdown();
+
+    // ---------------- headline metrics ----------------------------------
+    // Measured activity → modelled power for this exact workload.
+    let impl_model = ImplModel::calibrated();
+    let energy = EnergyModel::calibrated();
+    let fmax = impl_model.fmax_ghz(m, n);
+    let mut probe = PpacUnit::new(cfg)?;
+    probe.load_bit_matrix(&layers[0].weights)?;
+    probe.configure(OpMode::Pm1Mvp)?;
+    probe.enable_trace();
+    probe.mvp1_batch(&ds.inputs[..100.min(ds.inputs.len())])?;
+    let trace = probe.array_mut().take_trace().unwrap();
+    let mw = energy.power_mw(&cfg, &trace, fmax);
+    let infer_cycles_per_sample = 3.0; // three 1-bit MVP layers, II = 1
+
+    println!("\n=== headline metrics (256×256 PPAC, 28 nm model) ===");
+    println!(
+        "peak throughput        : {:.2} TOP/s (paper: 91.99)",
+        impl_model.peak_tops(m, n)
+    );
+    println!("fmax                   : {fmax:.3} GHz (paper: 0.703)");
+    println!("1-bit ±1 MVP power     : {mw:.0} mW (paper Table III: 498)");
+    println!(
+        "energy per layer MVP   : {:.0} pJ (paper: 709)",
+        energy.energy_per_mvp_pj(&cfg, &trace, 1)
+    );
+    println!(
+        "BNN inference rate     : {:.1} M samples/s ({} cycles/sample at fmax)",
+        fmax * 1e9 / infer_cycles_per_sample / 1e6,
+        infer_cycles_per_sample
+    );
+    println!(
+        "simulated cycles total : {sim_cycles} for {} samples ({:.2} cycles/sample incl. drains)",
+        ds.inputs.len(),
+        sim_cycles as f64 / ds.inputs.len() as f64
+    );
+    println!("\ne2e_bnn OK — three layers compose, bit-exactly");
+    Ok(())
+}

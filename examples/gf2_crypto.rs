@@ -1,0 +1,79 @@
+//! GF(2) workloads on PPAC (§III-D): AES S-box computation, LDPC-style
+//! and polar encoding — all exercising the bit-true LSB path that
+//! mixed-signal PIM cannot provide.
+//!
+//! ```bash
+//! cargo run --release --example gf2_crypto
+//! ```
+
+use ppac::apps::gf2codes::{aes_sbox_via_ppac, LinearCode, PpacEncoder};
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+/// FIPS-197 S-box (first row) for the printed sanity check.
+const SBOX_ROW0: [u8; 16] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b,
+    0xfe, 0xd7, 0xab, 0x76,
+];
+
+fn main() -> ppac::Result<()> {
+    let mut rng = Xoshiro256pp::seeded(77);
+
+    // ---------------- AES S-box: affine step as a GF(2) MVP -------------
+    let sbox = aes_sbox_via_ppac(PpacConfig::new(16, 16))?;
+    print!("AES S-box row 0 via PPAC :");
+    for v in &sbox[..16] {
+        print!(" {v:02x}");
+    }
+    println!();
+    assert_eq!(&sbox[..16], &SBOX_ROW0, "must match FIPS-197");
+    println!("  all 256 entries computed; affine layer ran on PPAC GF(2) MVPs");
+
+    // ---------------- LDPC-style systematic encoding --------------------
+    // Rate-1/2 (128, 256) systematic code; Gᵀ resident in a 256×128 slice.
+    let code = LinearCode::random_systematic(&mut rng, 128, 256);
+    let mut enc = PpacEncoder::new(PpacConfig::new(256, 128), &code)?;
+    let messages: Vec<Vec<bool>> = (0..200).map(|_| rng.bits(128)).collect();
+    let before = enc.compute_cycles();
+    let codewords = enc.encode_batch(&messages)?;
+    let cycles = enc.compute_cycles() - before;
+    for (u, c) in messages.iter().zip(&codewords) {
+        assert_eq!(c, &code.encode_golden(u));
+        assert_eq!(&c[..128], &u[..], "systematic part");
+    }
+    println!(
+        "\nLDPC-style (128,256) encode: {} messages, {} PPAC cycles ({:.2}/msg)",
+        messages.len(),
+        cycles,
+        cycles as f64 / messages.len() as f64
+    );
+
+    // ---------------- polar encoding -------------------------------------
+    let polar = LinearCode::polar(256);
+    let mut penc = PpacEncoder::new(PpacConfig::new(256, 256), &polar)?;
+    let msgs: Vec<Vec<bool>> = (0..100).map(|_| rng.bits(256)).collect();
+    let before = penc.compute_cycles();
+    let cws = penc.encode_batch(&msgs)?;
+    let pcycles = penc.compute_cycles() - before;
+    for (u, c) in msgs.iter().zip(&cws) {
+        assert_eq!(c, &polar.encode_golden(u));
+    }
+    println!(
+        "polar N=256 encode         : {} messages, {} PPAC cycles ({:.2}/msg)",
+        msgs.len(),
+        pcycles,
+        pcycles as f64 / msgs.len() as f64
+    );
+
+    // GF(2) linearity spot-check through the hardware path.
+    let u = rng.bits(256);
+    let v = rng.bits(256);
+    let uv: Vec<bool> = u.iter().zip(&v).map(|(a, b)| a ^ b).collect();
+    let enc3 = penc.encode_batch(&[u, v, uv])?;
+    let xor: Vec<bool> = enc3[0].iter().zip(&enc3[1]).map(|(a, b)| a ^ b).collect();
+    assert_eq!(enc3[2], xor, "GF(2) linearity");
+    println!("linearity c(u⊕v) = c(u)⊕c(v) verified on hardware path");
+
+    println!("\ngf2_crypto OK — every LSB bit-true");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Micro-probe for the §Perf log: times the individual stages of the
+//! simulator hot path so optimization work targets the real bottleneck.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use ppac::sim::{BitVec, CycleInput, PpacArray, PpacConfig, RowAluCtrl};
+use ppac::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::seeded(3);
+    let n = 256;
+    let m = 256;
+    let rows: Vec<BitVec> = (0..m).map(|_| BitVec::from_bools(&rng.bits(n))).collect();
+    let x = BitVec::from_bools(&rng.bits(n));
+    let s = BitVec::ones(n);
+    let iters = 20_000u64;
+
+    // 1) fused popcount over all rows (stage 1 alone)
+    let t = Instant::now();
+    let mut acc = 0u32;
+    for _ in 0..iters {
+        for r in &rows {
+            acc = acc.wrapping_add(BitVec::cell_popcount(r, black_box(&x), &s));
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!("stage1 fused popcount: {:.2} us/cycle (acc={acc})", dt * 1e6 / iters as f64);
+
+    // 2) full array cycle
+    let cfg = PpacConfig::new(m, n);
+    let mut arr = PpacArray::new(cfg).unwrap();
+    for (i, r) in rows.iter().enumerate() {
+        arr.write_row(i, r.clone()).unwrap();
+    }
+    let input = CycleInput::compute(x.clone(), s.clone(), RowAluCtrl::pm1_mvp());
+    let t = Instant::now();
+    let mut acc2 = 0i64;
+    for _ in 0..iters {
+        if let Some(out) = arr.cycle(black_box(&input)).unwrap() {
+            acc2 += out.y[0];
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!("full array cycle     : {:.2} us/cycle (acc={acc2})", dt * 1e6 / iters as f64);
+}

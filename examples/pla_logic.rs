@@ -1,0 +1,82 @@
+//! PLA mode (§III-E): compile Boolean functions onto PPAC banks and
+//! evaluate them — including a 7-segment display decoder, a classic PLA
+//! showcase.
+//!
+//! ```bash
+//! cargo run --release --example pla_logic
+//! ```
+
+use ppac::apps::pla::{PlaProgram, SumOfProducts};
+use ppac::sim::PpacConfig;
+
+/// 7-segment truth tables for digits 0-9 (segments a..g), indexed by the
+/// 4-bit BCD input. Entry [d][s] = segment s lit for digit d.
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],     // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],    // 2
+    [true, true, true, true, false, false, true],    // 3
+    [false, true, true, false, false, true, true],   // 4
+    [true, false, true, true, false, true, true],    // 5
+    [true, false, true, true, true, true, true],     // 6
+    [true, true, true, false, false, false, false],  // 7
+    [true, true, true, true, true, true, true],      // 8
+    [true, true, true, true, false, true, true],     // 9
+];
+
+fn main() -> ppac::Result<()> {
+    // One Boolean function per segment: 7 functions over 4 variables.
+    // Truth table index = BCD digit; inputs ≥ 10 are don't-care (0).
+    let mut functions = Vec::new();
+    for s in 0..7 {
+        let table: Vec<bool> = (0..16)
+            .map(|d| if d < 10 { SEGMENTS[d][s] } else { false })
+            .collect();
+        functions.push(SumOfProducts::from_truth_table(4, &table));
+    }
+    let total_terms: usize = functions.iter().map(|f| f.terms.len()).sum();
+    println!("7-segment decoder: 7 functions, {total_terms} min-terms total");
+
+    // 7 banks of 16 rows, 8 columns (4 variables + complements).
+    let cfg = PpacConfig::new(7 * 16, 16);
+    let mut pla = PlaProgram::compile(cfg, 4, &functions)?;
+
+    // Evaluate all ten digits in ten cycles.
+    let assignments: Vec<Vec<bool>> = (0..10usize)
+        .map(|d| (0..4).map(|b| (d >> b) & 1 == 1).collect())
+        .collect();
+    let out = pla.eval_batch(&assignments)?;
+
+    println!("\n digit  a b c d e f g   rendered");
+    for (d, segs) in out.iter().enumerate() {
+        let bits: Vec<u8> = segs.iter().map(|&b| b as u8).collect();
+        assert_eq!(
+            segs[..7],
+            SEGMENTS[d][..],
+            "digit {d} segments must match the truth table"
+        );
+        println!(
+            "   {d}    {} {} {} {} {} {} {}   {}",
+            bits[0], bits[1], bits[2], bits[3], bits[4], bits[5], bits[6],
+            render(segs)
+        );
+    }
+
+    println!("\npla_logic OK — 7 Boolean functions per cycle, one per bank");
+    Ok(())
+}
+
+/// Tiny ASCII 7-segment rendering (one line).
+fn render(segs: &[bool]) -> String {
+    let on = |i: usize, c: char| if segs[i] { c } else { ' ' };
+    format!(
+        "[{}{}{}|{}{}{}{}]",
+        on(0, 'a'),
+        on(1, 'b'),
+        on(2, 'c'),
+        on(3, 'd'),
+        on(4, 'e'),
+        on(5, 'f'),
+        on(6, 'g')
+    )
+}

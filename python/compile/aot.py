@@ -1,0 +1,145 @@
+"""AOT compiler: lower the L2 JAX models to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Writes every artifact listed in ``ENTRIES`` into the directory of ``--out``
+plus a ``manifest.json`` describing shapes/dtypes for the rust runtime.
+``--out`` itself (model.hlo.txt) is a copy of the BNN-MLP artifact and
+serves as the Makefile's freshness stamp.
+"""
+
+import argparse
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Canonical artifact shapes: a 256×256 PPAC array (the paper's headline
+# configuration) streaming batches of 16 input vectors.
+M, N, B = 256, 256, 16
+BNN_CLASSES = 10
+MB_K, MB_L = 4, 4  # Table III's 4-bit mode; row ALU supports K, L ≤ 4
+MB_NEFF = N // MB_K  # §III-C2: K-bit entries use K columns each
+
+
+def _spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _multibit(a_int, x_int):
+    return model.multibit_mvp(a_int, x_int, MB_K, MB_L, "int", "int")
+
+
+def _multibit_uint(a_int, x_int):
+    return model.multibit_mvp(a_int, x_int, MB_K, MB_L, "uint", "uint")
+
+
+def _hadamard(x_int):
+    return model.hadamard_transform(x_int, lbits=8)
+
+
+# name -> (fn, example_args). Shapes must match what the rust coordinator
+# feeds at runtime (manifest.json carries them across the language gap).
+ENTRIES = {
+    "hamming": (model.hamming_similarity, [_spec((M, N)), _spec((N, B))]),
+    "pm1_mvp": (model.pm1_mvp, [_spec((M, N)), _spec((N, B))]),
+    "and01_mvp": (model.and01_mvp, [_spec((M, N)), _spec((N, B))]),
+    "gf2_mvp": (model.gf2_mvp, [_spec((M, N)), _spec((N, B))]),
+    "multibit_mvp_int4": (_multibit, [_spec((M, MB_NEFF)), _spec((MB_NEFF, B))]),
+    "multibit_mvp_uint4": (
+        _multibit_uint,
+        [_spec((M, MB_NEFF)), _spec((MB_NEFF, B))],
+    ),
+    "bnn_mlp": (
+        model.bnn_mlp,
+        [
+            _spec((N, B)),  # x_bits
+            _spec((M, N)),  # w1
+            _spec((M,)),  # t1
+            _spec((M, M)),  # w2
+            _spec((M,)),  # t2
+            _spec((BNN_CLASSES, M)),  # w3
+            _spec((BNN_CLASSES,)),  # t3
+        ],
+    ),
+    "hadamard": (_hadamard, [_spec((N, B))]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    fn, specs = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_shapes = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.eval_shape(fn, *specs)
+    ]
+    meta = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": out_shapes,
+    }
+    return text, meta
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entries"
+    )
+    args = parser.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    names = args.only.split(",") if args.only else list(ENTRIES)
+
+    manifest = {
+        "array": {"m": M, "n": N, "batch": B},
+        "bnn_classes": BNN_CLASSES,
+        "multibit": {"k": MB_K, "l": MB_L, "n_eff": MB_NEFF},
+        "entries": [],
+    }
+    for name in names:
+        text, meta = lower_entry(name)
+        path = os.path.join(out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(meta)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Makefile freshness stamp: model.hlo.txt := the BNN-MLP artifact.
+    stamp_src = os.path.join(out_dir, "bnn_mlp.hlo.txt")
+    if os.path.exists(stamp_src):
+        shutil.copyfile(stamp_src, os.path.abspath(args.out))
+        print(f"stamp -> {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Pallas kernels for the AND-popcount family ({0,1} MVP and GF(2) MVP —
+PPAC §III-B2 and §III-D).
+
+The AND bit-cell operator makes each partial product a·x over {0,1}; the
+row popcount is then exactly the integer inner product, which maps directly
+onto an MXU contraction. The GF(2) kernel extracts the LSB of that integer
+sum — the paper's point is that this LSB must be *bit-true*, which holds
+trivially for integer arithmetic (and is impossible for analog PIM).
+"""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _and_mvp_kernel(a_ref, x_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    o_ref[...] = a @ x
+
+
+def _gf2_mvp_kernel(a_ref, x_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    # Integer popcount of (a AND x); GF(2) sum = LSB (addition mod 2).
+    o_ref[...] = (a @ x) & 1
+
+
+def and_mvp(a_bits, x_bits, bm=None, bb=None):
+    """1-bit {0,1}×{0,1} MVP: popcount(a AND x) per row — one PPAC cycle."""
+    common.check_bits("a_bits", a_bits)
+    common.check_bits("x_bits", x_bits)
+    m, n = a_bits.shape
+    b = x_bits.shape[1]
+    call = common.pallas_mvp_call(_and_mvp_kernel, m, n, b, bm, bb)
+    return call(common.as_i32(a_bits), common.as_i32(x_bits))
+
+
+def gf2_mvp(a_bits, x_bits, bm=None, bb=None):
+    """GF(2) MVP: y = A·x over the two-element field, per §III-D."""
+    common.check_bits("a_bits", a_bits)
+    common.check_bits("x_bits", x_bits)
+    m, n = a_bits.shape
+    b = x_bits.shape[1]
+    call = common.pallas_mvp_call(_gf2_mvp_kernel, m, n, b, bm, bb)
+    return call(common.as_i32(a_bits), common.as_i32(x_bits))

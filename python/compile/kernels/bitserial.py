@@ -1,0 +1,136 @@
+"""Fused bit-serial multi-bit MVP Pallas kernels (PPAC §III-C).
+
+PPAC computes an MVP with an L-bit vector (and optionally a K-bit matrix)
+over K·L clock cycles: the row ALU's first accumulator doubles-and-adds
+vector bit-plane partials (``vAcc``; ``vAccX-1`` negates the signed MSB) and
+the second accumulator doubles-and-adds across matrix bit-planes (``mAcc`` /
+``mAccX-1``).
+
+The kernels below fuse that whole schedule into one Pallas call: the loops
+over bit-planes are unrolled at trace time (K, L ≤ 4 in the paper's row-ALU
+configuration), each iteration being one MXU contraction — the same
+doubling-accumulator dataflow, so results are bit-identical to the rust
+cycle-accurate simulator.
+
+Plane convention: index 0 = MSB, matching the hardware schedule (PPAC
+consumes the most significant plane first).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _vector_partial(a, xp, matrix_fmt, n):
+    """One-cycle 1-bit partial product ⟨a, x_plane⟩ for the given matrix
+    format ('pm1' uses eq. (2): {±1} matrix × {0,1} plane)."""
+    if matrix_fmt == "pm1":
+        # eq. (2): h̄(a, x̂) + h̄(a, 1) − N, folded: (2a−1)·x summed.
+        return (2 * a - 1) @ xp
+    return a @ xp
+
+
+def _bitserial_vec_kernel(nbits, signed_vector, matrix_fmt, n, a_ref, x_ref, o_ref):
+    """1-bit matrix × L-bit vector: L-cycle vAcc schedule, unrolled."""
+    a = a_ref[...].astype(jnp.int32)
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for i in range(nbits):
+        xp = x_ref[i, :, :].astype(jnp.int32)
+        partial = _vector_partial(a, xp, matrix_fmt, n)
+        if i == 0 and signed_vector:
+            partial = -partial  # row-ALU control vAccX-1
+        acc = 2 * acc + partial  # row-ALU control vAcc (double-and-add)
+    o_ref[...] = acc
+
+
+def _bitserial_mat_kernel(
+    kbits, lbits, signed_matrix, signed_vector, n, a_ref, x_ref, o_ref
+):
+    """K-bit matrix × L-bit vector: K·L-cycle mAcc/vAcc schedule, unrolled."""
+    macc = jnp.zeros(o_ref.shape, jnp.int32)
+    for k in range(kbits):
+        ak = a_ref[k, :, :].astype(jnp.int32)
+        vacc = jnp.zeros(o_ref.shape, jnp.int32)
+        for i in range(lbits):
+            xp = x_ref[i, :, :].astype(jnp.int32)
+            partial = ak @ xp  # {0,1} planes → AND operator
+            if i == 0 and signed_vector:
+                partial = -partial
+            vacc = 2 * vacc + partial
+        if k == 0 and signed_matrix:
+            vacc = -vacc  # row-ALU control mAccX-1
+        macc = 2 * macc + vacc  # row-ALU control mAcc
+    o_ref[...] = macc
+
+
+def bitserial_vector_mvp(
+    a_bits, x_planes, signed_vector, matrix_fmt="pm1", bm=None, bb=None
+):
+    """1-bit matrix × L-bit vector over L fused "cycles" (§III-C1).
+
+    a_bits:   (M, N) int32 {0,1}; ±1-interpreted when matrix_fmt='pm1'.
+    x_planes: (L, N, B) int32 {0,1}, MSB first.
+    signed_vector: int (2's-complement) vector format when True, else uint.
+    Returns (M, B) int32 — exactly A·x for the decoded integer operands.
+    """
+    common.check_bits("a_bits", a_bits)
+    common.check_bits("x_planes", x_planes)
+    m, n = a_bits.shape
+    nbits, _, b = x_planes.shape
+    bm = bm or common.pick_block(m, common.DEFAULT_BLOCK_M)
+    bb = bb or common.pick_block(b, common.DEFAULT_BLOCK_B)
+
+    def kernel(a_ref, x_ref, o_ref):
+        _bitserial_vec_kernel(
+            nbits, signed_vector, matrix_fmt, n, a_ref, x_ref, o_ref
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, b // bb),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((nbits, n, bb), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.int32),
+        interpret=True,
+    )(common.as_i32(a_bits), common.as_i32(x_planes))
+
+
+def bitserial_matrix_mvp(
+    a_planes, x_planes, signed_matrix, signed_vector, bm=None, bb=None
+):
+    """K-bit matrix × L-bit vector over K·L fused "cycles" (§III-C2).
+
+    a_planes: (K, M, N) int32 {0,1}, MSB first ({0,1} column encoding — the
+              hardware stores all K planes in separate columns and nulls the
+              inactive ones via AND + zero input).
+    x_planes: (L, N, B) int32 {0,1}, MSB first.
+    Returns (M, B) int32 — exactly A·x for the decoded integer operands.
+    """
+    common.check_bits("a_planes", a_planes)
+    common.check_bits("x_planes", x_planes)
+    kbits, m, n = a_planes.shape
+    lbits, _, b = x_planes.shape
+    bm = bm or common.pick_block(m, common.DEFAULT_BLOCK_M)
+    bb = bb or common.pick_block(b, common.DEFAULT_BLOCK_B)
+
+    def kernel(a_ref, x_ref, o_ref):
+        _bitserial_mat_kernel(
+            kbits, lbits, signed_matrix, signed_vector, n, a_ref, x_ref, o_ref
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, b // bb),
+        in_specs=[
+            pl.BlockSpec((kbits, bm, n), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((lbits, n, bb), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.int32),
+        interpret=True,
+    )(common.as_i32(a_planes), common.as_i32(x_planes))

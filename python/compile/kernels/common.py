@@ -1,0 +1,79 @@
+"""Shared helpers for the PPAC Pallas kernels.
+
+All kernels in this package follow the same tiling scheme, chosen for the
+TPU adaptation described in DESIGN.md §Hardware-Adaptation: the stored
+matrix A is blocked over rows (PPAC words) and the streamed input x over
+batch columns, with the full reduction dimension N kept resident per block
+(PPAC reduces a whole row per cycle; on TPU the analogous schedule keeps a
+(bm, N) weight tile in VMEM while batches stream through the MXU).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode produces plain HLO that the
+rust runtime can load (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile targets. 128 matches the MXU systolic-array edge; on small
+# problems we fall back to the largest divisor of the dimension.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_B = 128
+
+
+def pick_block(dim, target):
+    """Largest divisor of ``dim`` that is ≤ ``target``.
+
+    PPAC array sizes are powers of two (16..256 in the paper), so this
+    normally returns min(dim, target); the divisor walk keeps odd test
+    shapes working.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def mvp_grid_spec(m, n, b, bm=None, bb=None):
+    """Grid + BlockSpecs for an (M,N) @ (N,B) product blocked over (M, B).
+
+    Returns (grid, in_specs, out_specs) for pallas_call, with A blocked as
+    (bm, N), x as (N, bb) and the output as (bm, bb).
+    """
+    bm = bm or pick_block(m, DEFAULT_BLOCK_M)
+    bb = bb or pick_block(b, DEFAULT_BLOCK_B)
+    grid = (m // bm, b // bb)
+    in_specs = [
+        pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        pl.BlockSpec((n, bb), lambda i, j: (0, j)),
+    ]
+    out_spec = pl.BlockSpec((bm, bb), lambda i, j: (i, j))
+    return grid, in_specs, out_spec
+
+
+def check_bits(name, arr):
+    """Trace-time sanity check that an input is an int32 {0,1} bit tensor."""
+    if arr.dtype not in (jnp.int32, jnp.int8, jnp.uint8, jnp.int16):
+        raise TypeError(f"{name} must be an integer bit tensor, got {arr.dtype}")
+
+
+def as_i32(arr):
+    return arr.astype(jnp.int32)
+
+
+def pallas_mvp_call(kernel, m, n, b, bm=None, bb=None, n_in=2):
+    """Build an interpret-mode pallas_call for a 2-input MVP-shaped kernel."""
+    grid, in_specs, out_spec = mvp_grid_spec(m, n, b, bm, bb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs[:n_in],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.int32),
+        interpret=True,
+    )

@@ -1,0 +1,235 @@
+"""Pure-jnp correctness oracles for the PPAC Pallas kernels.
+
+Everything here mirrors the arithmetic contract of the PPAC hardware
+(Castañeda et al., 2019, Sections II-III) in plain `jnp` so the Pallas
+kernels in this package can be checked bit-exactly against it:
+
+  * Hamming similarity      h̄(a, x) = N − h(a, x)               (§II-A)
+  * 1-bit {±1} MVP          ⟨a, x⟩ = 2·h̄(a, x) − N              (eq. 1)
+  * 1-bit {0,1} MVP         ⟨a, x⟩ = popcount(a AND x)           (§III-B2)
+  * mixed-format 1-bit MVPs (eqs. 2 and 3)
+  * multi-bit MVPs          bit-serial doubling accumulation     (§III-C)
+  * GF(2) MVP               LSB of the integer {0,1} MVP         (§III-D)
+
+Bit conventions: all "bit" tensors are int32 arrays with values in {0, 1}.
+A logical HI (1) maps to +1 and LO (0) maps to −1 in the ±1 interpretation,
+exactly as in the paper.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# 1-bit primitives
+# ---------------------------------------------------------------------------
+
+
+def hamming_similarity_ref(a_bits, x_bits):
+    """Hamming similarity h̄ between each row of ``a_bits`` and each column
+    of ``x_bits``.
+
+    a_bits: (M, N) int32 in {0,1};  x_bits: (N, B) int32 in {0,1}.
+    Returns (M, B) int32: the number of *equal* bit positions.
+
+    XNOR(a, x) = a·x + (1−a)·(1−x), so the popcount over a row is a pair of
+    integer matmuls — the same identity the Pallas kernel folds into the MXU.
+    """
+    a = a_bits.astype(jnp.int32)
+    x = x_bits.astype(jnp.int32)
+    return a @ x + (1 - a) @ (1 - x)
+
+
+def pm1_mvp_ref(a_bits, x_bits):
+    """1-bit {±1}×{±1} MVP via eq. (1): ⟨a, x⟩ = 2·h̄ − N."""
+    n = a_bits.shape[-1]
+    return 2 * hamming_similarity_ref(a_bits, x_bits) - n
+
+
+def and_mvp_ref(a_bits, x_bits):
+    """1-bit {0,1}×{0,1} MVP: plain integer matmul (AND + popcount)."""
+    return a_bits.astype(jnp.int32) @ x_bits.astype(jnp.int32)
+
+
+def pm1_mat_01_vec_ref(a_bits, x_bits):
+    """{±1} matrix × {0,1} vector via eq. (2):
+    ⟨a, x⟩ = h̄(a, x̂) + h̄(a, 1) − N, where x̂ shares logic levels with x."""
+    n = a_bits.shape[-1]
+    ones = jnp.ones((n, x_bits.shape[-1]), jnp.int32)
+    return (
+        hamming_similarity_ref(a_bits, x_bits)
+        + hamming_similarity_ref(a_bits, ones)
+        - n
+    )
+
+
+def pm1_vec_01_mat_ref(a_bits, x_bits):
+    """{0,1} matrix × {±1} vector via eq. (3):
+    ⟨a, x⟩ = 2·⟨a, x̃⟩ + h̄(a, 0) − N, where x̃ shares logic levels with x."""
+    n = a_bits.shape[-1]
+    zeros = jnp.zeros((n, x_bits.shape[-1]), jnp.int32)
+    return (
+        2 * and_mvp_ref(a_bits, x_bits)
+        + hamming_similarity_ref(a_bits, zeros)
+        - n
+    )
+
+
+def gf2_mvp_ref(a_bits, x_bits):
+    """GF(2) MVP: the LSB of the integer {0,1} MVP (§III-D)."""
+    return and_mvp_ref(a_bits, x_bits) & 1
+
+
+# ---------------------------------------------------------------------------
+# Number formats (Table I) — bit-plane (de)composition
+# ---------------------------------------------------------------------------
+
+
+def decompose_bits(v, nbits, fmt):
+    """Decompose integer tensor ``v`` into ``nbits`` bit-planes (MSB first).
+
+    fmt: 'uint'   — v in [0, 2^L − 1]; planes weighted +2^(l−1)
+         'int'    — v in [−2^(L−1), 2^(L−1)−1] (2's complement; the MSB
+                    plane carries weight −2^(L−1))
+         'oddint' — v an odd signed number in [−2^L+1, 2^L−1]; each plane
+                    bit b maps to ±1 via (2b−1) and is weighted 2^(l−1)
+
+    Returns (nbits, *v.shape) int32 in {0,1}; plane index 0 is the MSB,
+    matching the paper's bit-serial schedule (PPAC consumes MSB first).
+    """
+    v = jnp.asarray(v, jnp.int32)
+    if fmt == "uint":
+        u = v
+    elif fmt == "int":
+        u = jnp.where(v < 0, v + (1 << nbits), v)  # 2's complement
+    elif fmt == "oddint":
+        # oddint value = Σ_l 2^(l−1)·(2·b_l − 1), so (v + 2^L − 1) / 2 is
+        # the uint with the same bit pattern.
+        u = (v + (1 << nbits) - 1) >> 1
+    else:
+        raise ValueError(f"unknown format {fmt!r}")
+    planes = [(u >> (nbits - 1 - i)) & 1 for i in range(nbits)]
+    return jnp.stack(planes).astype(jnp.int32)
+
+
+def recompose_bits(planes, fmt):
+    """Inverse of :func:`decompose_bits` (planes are MSB-first)."""
+    planes = jnp.asarray(planes, jnp.int32)
+    nbits = planes.shape[0]
+    if fmt == "oddint":
+        return sum(
+            (1 << (nbits - 1 - i)) * (2 * planes[i] - 1) for i in range(nbits)
+        )
+    acc = jnp.zeros(planes.shape[1:], jnp.int32)
+    for i in range(nbits):
+        weight = 1 << (nbits - 1 - i)
+        if fmt == "int" and i == 0:
+            weight = -weight
+        elif fmt not in ("uint", "int"):
+            raise ValueError(f"unknown format {fmt!r}")
+        acc = acc + weight * planes[i]
+    return acc
+
+
+def format_range(nbits, fmt):
+    """(min, max) representable value for the Table-I formats."""
+    if fmt == "uint":
+        return 0, (1 << nbits) - 1
+    if fmt == "int":
+        return -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    if fmt == "oddint":
+        return -(1 << nbits) + 1, (1 << nbits) - 1
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-bit MVPs (§III-C) — bit-serial doubling accumulation
+# ---------------------------------------------------------------------------
+
+
+def multibit_vector_mvp_ref(a_bits, x_planes, signed_vector, matrix_fmt="pm1"):
+    """1-bit matrix × L-bit vector, bit-serially (§III-C1).
+
+    a_bits:   (M, N) {0,1}; interpreted as ±1 when ``matrix_fmt == 'pm1'``
+              and as {0,1} when ``matrix_fmt == '01'``.
+    x_planes: (L, N, B) {0,1}, MSB first.
+    signed_vector: if True the MSB partial product is negated (int format;
+    row-ALU control ``vAccX-1``), else uint.
+    """
+    nbits = x_planes.shape[0]
+    acc = jnp.zeros((a_bits.shape[0], x_planes.shape[-1]), jnp.int32)
+    partial_fn = pm1_mat_01_vec_ref if matrix_fmt == "pm1" else and_mvp_ref
+    for i in range(nbits):
+        partial = partial_fn(a_bits, x_planes[i])
+        if i == 0 and signed_vector:
+            partial = -partial
+        acc = 2 * acc + partial
+    return acc
+
+
+def multibit_mvp_ref(a_int, x_int):
+    """Full-precision integer MVP — the end-to-end oracle for any of the
+    bit-serial schedules (they must all reproduce the plain matmul)."""
+    return jnp.asarray(a_int, jnp.int32) @ jnp.asarray(x_int, jnp.int32)
+
+
+def multibit_matrix_mvp_ref(a_planes, x_planes, signed_matrix, signed_vector):
+    """K-bit matrix × L-bit vector bit-serial schedule (§III-C2): the outer
+    loop runs over matrix bit-planes (MSB first, ``mAcc`` doubling), the
+    inner loop over vector bit-planes (``vAcc`` doubling).
+
+    a_planes: (K, M, N) {0,1}; x_planes: (L, N, B) {0,1}; both MSB first.
+    """
+    kbits = a_planes.shape[0]
+    macc = jnp.zeros((a_planes.shape[1], x_planes.shape[-1]), jnp.int32)
+    for k in range(kbits):
+        inner = multibit_vector_mvp_ref(
+            a_planes[k], x_planes, signed_vector, matrix_fmt="01"
+        )
+        if k == 0 and signed_matrix:
+            inner = -inner
+        macc = 2 * macc + inner
+    return macc
+
+
+# ---------------------------------------------------------------------------
+# Applications
+# ---------------------------------------------------------------------------
+
+
+def bnn_layer_ref(w_bits, x_bits, thresh):
+    """Binarized dense layer: sign(W·x − δ) as {0,1} bits (§III-C3 use case).
+
+    w_bits: (M, N) {0,1} as ±1 weights; x_bits: (N, B) {0,1} as ±1
+    activations; thresh: (M,) int32 per-row threshold (bias) δ_m.
+    Output: (M, B) {0,1} — 1 where the pre-activation y_m ≥ 0.
+    """
+    y = pm1_mvp_ref(w_bits, x_bits) - thresh[:, None]
+    return (y >= 0).astype(jnp.int32)
+
+
+def bnn_mlp_ref(x_bits, layers):
+    """Stack of binarized layers; the last layer returns raw int32 scores.
+
+    layers: list of (w_bits, thresh) tuples.
+    """
+    h = x_bits
+    for w_bits, thresh in layers[:-1]:
+        h = bnn_layer_ref(w_bits, h, thresh)
+    w_bits, thresh = layers[-1]
+    return pm1_mvp_ref(w_bits, h) - thresh[:, None]
+
+
+def hadamard_matrix_bits(n):
+    """Sylvester Hadamard matrix of size n (power of two) as {0,1} bits
+    (HI=+1 / LO=−1), i.e. the oddint L=1 encoding of H_n."""
+    assert n & (n - 1) == 0 and n > 0, "n must be a power of two"
+    h = jnp.array([[1]], jnp.int32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return ((h + 1) // 2).astype(jnp.int32)
+
+
+def hadamard_transform_ref(x_int):
+    """H_n · x over the integers (n = x.shape[0], power of two)."""
+    n = x_int.shape[0]
+    h_bits = hadamard_matrix_bits(n)
+    return (2 * h_bits - 1) @ jnp.asarray(x_int, jnp.int32)

@@ -1,0 +1,68 @@
+"""Pallas kernels for the XNOR-popcount family (Hamming similarity and
+1-bit {±1} MVP — PPAC §II-A, §III-A/B1).
+
+PPAC computes ⟨a, x⟩ for ±1 vectors as 2·h̄(a, x) − N where h̄ is the
+popcount over per-bit XNORs (eq. 1). A TPU has no popcount datapath in the
+MXU, so the kernel folds the identity into an integer matmul instead
+(DESIGN.md §Hardware-Adaptation):
+
+    h̄(a, x) = a·x + (1−a)·(1−x)        (two rank-N MXU contractions)
+    ⟨a, x⟩  = 2·h̄ − N
+
+Both kernels take {0,1} int32 bit tensors (HI=+1, LO=−1 interpretation) and
+return exact int32 results, bit-identical to the rust cycle-accurate
+simulator's row-ALU outputs.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _hamming_kernel(a_ref, x_ref, o_ref):
+    """o = popcount(XNOR(a_row, x_col)) for one (bm, bb) output tile."""
+    a = a_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    # XNOR popcount as two MXU contractions: a·x counts the (1,1) matches,
+    # (1−a)·(1−x) the (0,0) matches.
+    o_ref[...] = a @ x + (1 - a) @ (1 - x)
+
+
+def _pm1_mvp_kernel(n, a_ref, x_ref, o_ref):
+    """o = 2·h̄ − N — eq. (1), with the row-ALU's popX2/offset folded in."""
+    a = a_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    h = a @ x + (1 - a) @ (1 - x)
+    o_ref[...] = 2 * h - n
+
+
+def hamming_similarity(a_bits, x_bits, bm=None, bb=None):
+    """Hamming similarity h̄ for all (row, column) pairs.
+
+    a_bits: (M, N) int32 {0,1};  x_bits: (N, B) int32 {0,1}.
+    Returns (M, B) int32 in [0, N].
+    """
+    common.check_bits("a_bits", a_bits)
+    common.check_bits("x_bits", x_bits)
+    m, n = a_bits.shape
+    b = x_bits.shape[1]
+    call = common.pallas_mvp_call(_hamming_kernel, m, n, b, bm, bb)
+    return call(common.as_i32(a_bits), common.as_i32(x_bits))
+
+
+def pm1_mvp(a_bits, x_bits, bm=None, bb=None):
+    """1-bit {±1}×{±1} MVP ⟨a_m, x⟩ for every row m — one PPAC cycle.
+
+    a_bits: (M, N) int32 {0,1} (bit 1 ↦ +1);  x_bits: (N, B) likewise.
+    Returns (M, B) int32 in [−N, N].
+    """
+    common.check_bits("a_bits", a_bits)
+    common.check_bits("x_bits", x_bits)
+    m, n = a_bits.shape
+    b = x_bits.shape[1]
+
+    def kernel(a_ref, x_ref, o_ref):
+        _pm1_mvp_kernel(n, a_ref, x_ref, o_ref)
+
+    call = common.pallas_mvp_call(kernel, m, n, b, bm, bb)
+    return call(common.as_i32(a_bits), common.as_i32(x_bits))

@@ -1,0 +1,113 @@
+"""L2 — JAX functional model of PPAC workloads (build-time only).
+
+Each public function here is a *functional* (non-cycle) model of a PPAC
+operation mode or application, expressed in JAX and calling the Pallas
+kernels in :mod:`compile.kernels` so that the kernels lower into the same
+HLO module. ``aot.py`` lowers these functions once to HLO text; the rust
+runtime executes them as the golden reference against the cycle-accurate
+simulator.
+
+All functions return tuples (the AOT recipe lowers with return_tuple=True).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import and_mvp as _and
+from .kernels import bitserial as _bs
+from .kernels import ref as _ref
+from .kernels import xnor_mvp as _xnor
+
+# ---------------------------------------------------------------------------
+# Operation modes (PPAC §III)
+# ---------------------------------------------------------------------------
+
+
+def hamming_similarity(a_bits, x_bits):
+    """§III-A: M parallel Hamming similarities per input column."""
+    return (_xnor.hamming_similarity(a_bits, x_bits),)
+
+
+def pm1_mvp(a_bits, x_bits):
+    """§III-B1: 1-bit {±1} MVP, one PPAC cycle per input column."""
+    return (_xnor.pm1_mvp(a_bits, x_bits),)
+
+
+def and01_mvp(a_bits, x_bits):
+    """§III-B2: 1-bit {0,1} MVP."""
+    return (_and.and_mvp(a_bits, x_bits),)
+
+
+def gf2_mvp(a_bits, x_bits):
+    """§III-D: GF(2) MVP (bit-true LSB)."""
+    return (_and.gf2_mvp(a_bits, x_bits),)
+
+
+def multibit_mvp(a_int, x_int, kbits, lbits, a_fmt="int", x_fmt="int"):
+    """§III-C: K-bit matrix × L-bit vector MVP, bit-serial schedule.
+
+    a_int: (M, N_eff) integer matrix; x_int: (N_eff, B) integer vector
+    batch. The bit-plane decomposition happens inside the lowered module so
+    the AOT artifact takes plain integer tensors.
+    """
+    a_planes = _ref.decompose_bits(a_int, kbits, a_fmt)
+    x_planes = _ref.decompose_bits(x_int, lbits, x_fmt)
+    y = _bs.bitserial_matrix_mvp(
+        a_planes,
+        x_planes,
+        signed_matrix=(a_fmt == "int"),
+        signed_vector=(x_fmt == "int"),
+    )
+    return (y,)
+
+
+def multibit_vector_mvp(a_bits, x_int, lbits, x_fmt="int", matrix_fmt="pm1"):
+    """§III-C1: 1-bit matrix × L-bit vector MVP (L-cycle schedule)."""
+    x_planes = _ref.decompose_bits(x_int, lbits, x_fmt)
+    y = _bs.bitserial_vector_mvp(
+        a_bits,
+        x_planes,
+        signed_vector=(x_fmt == "int"),
+        matrix_fmt=matrix_fmt,
+    )
+    return (y,)
+
+
+# ---------------------------------------------------------------------------
+# Applications
+# ---------------------------------------------------------------------------
+
+
+def bnn_layer(w_bits, x_bits, thresh):
+    """Binarized dense layer on PPAC: y = sign(W·x − δ) as {0,1} bits.
+
+    The MVP runs in 1-bit {±1} mode; the bias lives in the per-row
+    threshold δ_m, and the sign is the complement of the output MSB —
+    exactly how §III-C3 describes BNN inference on PPAC.
+    """
+    y = _xnor.pm1_mvp(w_bits, x_bits) - thresh[:, None]
+    return (y >= 0).astype(jnp.int32)
+
+
+def bnn_mlp(x_bits, w1, t1, w2, t2, w3, t3):
+    """Three binarized dense layers; the last returns raw int32 scores.
+
+    Shapes: x_bits (N, B); w1 (H1, N); w2 (H2, H1); w3 (C, H2);
+    thresholds per row. This is the functional golden model for the
+    end-to-end BNN example (examples/e2e_bnn.rs).
+    """
+    h1 = bnn_layer(w1, x_bits, t1)
+    h2 = bnn_layer(w2, h1, t2)
+    scores = _xnor.pm1_mvp(w3, h2) - t3[:, None]
+    return (scores,)
+
+
+def hadamard_transform(x_int, lbits=8):
+    """Hadamard transform H_n·x via PPAC's 1-bit oddint matrix × L-bit int
+    vector mode (§III-C3 use case; STOne/Hadamard reference [18])."""
+    n = x_int.shape[0]
+    h_bits = _ref.hadamard_matrix_bits(n)
+    x_planes = _ref.decompose_bits(x_int, lbits, "int")
+    y = _bs.bitserial_vector_mvp(
+        h_bits, x_planes, signed_vector=True, matrix_fmt="pm1"
+    )
+    return (y,)

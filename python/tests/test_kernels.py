@@ -1,0 +1,258 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle *bit-exactly* — PPAC is
+an all-digital design whose selling point over analog PIM is bit-true
+results (the paper stresses the GF(2) LSB case), so `assert_array_equal`,
+never `allclose`.
+
+Hypothesis sweeps shapes and bit-widths; block sizes are swept explicitly
+so the BlockSpec tiling is exercised with more than one grid point.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import and_mvp, bitserial, ref, xnor_mvp
+
+# Small-but-nontrivial dims; must include non-divisible-by-128 sizes and
+# sizes that force multi-tile grids once bm/bb are forced small.
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 12, 16, 32])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand_bits(rng, *shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 1-bit kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_hamming_kernel_matches_ref(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = xnor_mvp.hamming_similarity(a, x)
+    want = ref.hamming_similarity_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_pm1_mvp_kernel_matches_ref(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = xnor_mvp.pm1_mvp(a, x)
+    want = ref.pm1_mvp_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_and_mvp_kernel_matches_ref(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = and_mvp.and_mvp(a, x)
+    want = ref.and_mvp_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_gf2_mvp_kernel_matches_ref(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = and_mvp.gf2_mvp(a, x)
+    want = ref.gf2_mvp_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).max(initial=0) <= 1, "GF(2) output must be bits"
+
+
+@pytest.mark.parametrize("bm,bb", [(1, 1), (2, 4), (4, 2), (8, 8)])
+def test_tiling_grid_multi_block(bm, bb):
+    """Force multi-tile grids to exercise BlockSpec index maps."""
+    rng = np.random.default_rng(7)
+    a, x = rand_bits(rng, 16, 8), rand_bits(rng, 8, 16)
+    got = xnor_mvp.pm1_mvp(a, x, bm=bm, bb=bb)
+    want = ref.pm1_mvp_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pm1_mvp_sign_identity():
+    """±1 MVP equals the integer matmul of the decoded ±1 operands."""
+    rng = np.random.default_rng(3)
+    a, x = rand_bits(rng, 8, 16), rand_bits(rng, 16, 4)
+    got = np.asarray(xnor_mvp.pm1_mvp(a, x))
+    decoded = (2 * np.asarray(a) - 1) @ (2 * np.asarray(x) - 1)
+    np.testing.assert_array_equal(got, decoded)
+
+
+def test_hamming_range_and_extremes():
+    n = 16
+    a = jnp.ones((4, n), jnp.int32)
+    x_same = jnp.ones((n, 1), jnp.int32)
+    x_diff = jnp.zeros((n, 1), jnp.int32)
+    h_same = np.asarray(xnor_mvp.hamming_similarity(a, x_same))
+    h_diff = np.asarray(xnor_mvp.hamming_similarity(a, x_diff))
+    assert (h_same == n).all(), "identical words must give h̄ = N"
+    assert (h_diff == 0).all(), "complementary words must give h̄ = 0"
+
+
+# ---------------------------------------------------------------------------
+# Mixed-format 1-bit MVPs (eqs. 2 and 3) — reference-level identities
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_eq2_pm1_matrix_01_vector(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = np.asarray(ref.pm1_mat_01_vec_ref(a, x))
+    decoded = (2 * np.asarray(a) - 1) @ np.asarray(x)
+    np.testing.assert_array_equal(got, decoded)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_eq3_01_matrix_pm1_vector(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_bits(rng, m, n), rand_bits(rng, n, b)
+    got = np.asarray(ref.pm1_vec_01_mat_ref(a, x))
+    decoded = np.asarray(a) @ (2 * np.asarray(x) - 1)
+    np.testing.assert_array_equal(got, decoded)
+
+
+# ---------------------------------------------------------------------------
+# Number formats (Table I)
+# ---------------------------------------------------------------------------
+
+FMTS = st.sampled_from(["uint", "int", "oddint"])
+NBITS = st.integers(min_value=1, max_value=8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(nbits=NBITS, fmt=FMTS, seed=SEEDS)
+def test_bitplane_roundtrip(nbits, fmt, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = ref.format_range(nbits, fmt)
+    v = rng.integers(lo, hi + 1, size=(5, 7))
+    if fmt == "oddint":
+        v = v | 1  # oddint cannot represent even numbers
+        v = np.clip(v, lo, hi)
+    planes = ref.decompose_bits(jnp.asarray(v, jnp.int32), nbits, fmt)
+    back = ref.recompose_bits(planes, fmt)
+    np.testing.assert_array_equal(np.asarray(back), v)
+
+
+def test_format_ranges_match_table1():
+    # Table I, L = 2 examples.
+    assert ref.format_range(2, "uint") == (0, 3)
+    assert ref.format_range(2, "int") == (-2, 1)
+    assert ref.format_range(2, "oddint") == (-3, 3)
+
+
+def test_oddint_cannot_represent_zero():
+    lo, hi = ref.format_range(3, "oddint")
+    vals = sorted(
+        int(ref.recompose_bits(ref.decompose_bits(
+            jnp.asarray([v], jnp.int32), 3, "oddint"), "oddint")[0])
+        for v in range(lo, hi + 1, 2)
+    )
+    assert 0 not in vals
+    assert all(v % 2 != 0 for v in vals)
+
+
+# ---------------------------------------------------------------------------
+# Bit-serial multi-bit kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, lbits=st.integers(1, 4),
+       x_fmt=st.sampled_from(["uint", "int"]), seed=SEEDS)
+def test_bitserial_vector_pm1_matrix(m, n, b, lbits, x_fmt, seed):
+    """1-bit ±1 matrix × L-bit vector == integer matmul of decoded values."""
+    rng = np.random.default_rng(seed)
+    a = rand_bits(rng, m, n)
+    lo, hi = ref.format_range(lbits, x_fmt)
+    x = rng.integers(lo, hi + 1, size=(n, b))
+    planes = ref.decompose_bits(jnp.asarray(x, jnp.int32), lbits, x_fmt)
+    got = bitserial.bitserial_vector_mvp(
+        a, planes, signed_vector=(x_fmt == "int"), matrix_fmt="pm1"
+    )
+    want = (2 * np.asarray(a) - 1) @ x
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, b=DIMS, kbits=st.integers(1, 4),
+       lbits=st.integers(1, 4), a_fmt=st.sampled_from(["uint", "int"]),
+       x_fmt=st.sampled_from(["uint", "int"]), seed=SEEDS)
+def test_bitserial_matrix_full(m, n, b, kbits, lbits, a_fmt, x_fmt, seed):
+    """K-bit matrix × L-bit vector == integer matmul, all sign pairings."""
+    rng = np.random.default_rng(seed)
+    alo, ahi = ref.format_range(kbits, a_fmt)
+    xlo, xhi = ref.format_range(lbits, x_fmt)
+    a = rng.integers(alo, ahi + 1, size=(m, n))
+    x = rng.integers(xlo, xhi + 1, size=(n, b))
+    a_planes = ref.decompose_bits(jnp.asarray(a, jnp.int32), kbits, a_fmt)
+    x_planes = ref.decompose_bits(jnp.asarray(x, jnp.int32), lbits, x_fmt)
+    got = bitserial.bitserial_matrix_mvp(
+        a_planes,
+        x_planes,
+        signed_matrix=(a_fmt == "int"),
+        signed_vector=(x_fmt == "int"),
+    )
+    np.testing.assert_array_equal(np.asarray(got), a @ x)
+
+
+def test_bitserial_matches_ref_schedule():
+    """Kernel vs the reference bit-serial schedule (not just the matmul)."""
+    rng = np.random.default_rng(11)
+    a_planes = jnp.asarray(rng.integers(0, 2, (3, 8, 16)), jnp.int32)
+    x_planes = jnp.asarray(rng.integers(0, 2, (2, 16, 4)), jnp.int32)
+    got = bitserial.bitserial_matrix_mvp(
+        a_planes, x_planes, signed_matrix=True, signed_vector=False
+    )
+    want = ref.multibit_matrix_mvp_ref(
+        a_planes, x_planes, signed_matrix=True, signed_vector=False
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Dtype sweeps — the kernels must accept any integer bit-tensor dtype
+# ---------------------------------------------------------------------------
+
+DTYPES = st.sampled_from([jnp.int8, jnp.int16, jnp.int32, jnp.uint8])
+
+
+@settings(max_examples=20, deadline=None)
+@given(dtype=DTYPES, m=DIMS, n=DIMS, b=DIMS, seed=SEEDS)
+def test_kernels_accept_integer_dtypes(dtype, m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2, size=(m, n)), dtype)
+    x = jnp.asarray(rng.integers(0, 2, size=(n, b)), dtype)
+    want_h = ref.hamming_similarity_ref(a, x)
+    got_h = xnor_mvp.hamming_similarity(a, x)
+    np.testing.assert_array_equal(np.asarray(got_h), np.asarray(want_h))
+    assert got_h.dtype == jnp.int32, "results are always exact int32"
+    got_g = and_mvp.gf2_mvp(a, x)
+    np.testing.assert_array_equal(
+        np.asarray(got_g), np.asarray(ref.gf2_mvp_ref(a, x))
+    )
+
+
+def test_float_inputs_rejected():
+    a = jnp.zeros((4, 4), jnp.float32)
+    x = jnp.zeros((4, 2), jnp.int32)
+    with pytest.raises(TypeError):
+        xnor_mvp.hamming_similarity(a, x)
+    with pytest.raises(TypeError):
+        and_mvp.and_mvp(a, x)

@@ -1,0 +1,81 @@
+"""L2 model tests: shapes, golden behaviour, application-level identities."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand_bits(rng, *shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape), jnp.int32)
+
+
+def test_bnn_layer_matches_ref():
+    rng = np.random.default_rng(0)
+    w, x = rand_bits(rng, 16, 32), rand_bits(rng, 32, 4)
+    t = jnp.asarray(rng.integers(-8, 8, 16), jnp.int32)
+    got = model.bnn_layer(w, x, t)
+    want = ref.bnn_layer_ref(w, x, t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bnn_mlp_matches_ref_and_shapes():
+    rng = np.random.default_rng(1)
+    n, h, c, b = 32, 16, 4, 8
+    x = rand_bits(rng, n, b)
+    w1, t1 = rand_bits(rng, h, n), jnp.zeros(h, jnp.int32)
+    w2, t2 = rand_bits(rng, h, h), jnp.zeros(h, jnp.int32)
+    w3, t3 = rand_bits(rng, c, h), jnp.zeros(c, jnp.int32)
+    (scores,) = model.bnn_mlp(x, w1, t1, w2, t2, w3, t3)
+    assert scores.shape == (c, b)
+    want = ref.bnn_mlp_ref(x, [(w1, t1), (w2, t2), (w3, t3)])
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS)
+def test_multibit_mvp_is_integer_matmul(seed):
+    rng = np.random.default_rng(seed)
+    m, n, b, k, l = 8, 16, 4, 4, 4
+    a = rng.integers(-8, 8, size=(m, n))
+    x = rng.integers(-8, 8, size=(n, b))
+    (y,) = model.multibit_mvp(
+        jnp.asarray(a, jnp.int32), jnp.asarray(x, jnp.int32), k, l
+    )
+    np.testing.assert_array_equal(np.asarray(y), a @ x)
+
+
+def test_hadamard_transform_matches_ref():
+    rng = np.random.default_rng(5)
+    n, b = 16, 4
+    x = rng.integers(-128, 128, size=(n, b))
+    (y,) = model.hadamard_transform(jnp.asarray(x, jnp.int32), lbits=8)
+    want = ref.hadamard_transform_ref(jnp.asarray(x, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+
+
+def test_hadamard_involution():
+    """H·(H·x) = n·x — a strong end-to-end identity for the oddint path."""
+    rng = np.random.default_rng(6)
+    n, b = 8, 3
+    x = jnp.asarray(rng.integers(-10, 10, size=(n, b)), jnp.int32)
+    (y,) = model.hadamard_transform(x, lbits=8)
+    # second application needs enough bits for |y| ≤ n·2^7
+    (z,) = model.hadamard_transform(y, lbits=12)
+    np.testing.assert_array_equal(np.asarray(z), n * np.asarray(x))
+
+
+def test_gf2_linear():
+    """GF(2) MVP is linear: A(x ⊕ y) = Ax ⊕ Ay."""
+    rng = np.random.default_rng(7)
+    a = rand_bits(rng, 8, 16)
+    x, y = rand_bits(rng, 16, 2), rand_bits(rng, 16, 2)
+    (axy,) = model.gf2_mvp(a, x ^ y)
+    (ax,) = model.gf2_mvp(a, x)
+    (ay,) = model.gf2_mvp(a, y)
+    np.testing.assert_array_equal(np.asarray(axy), np.asarray(ax ^ ay))

@@ -1,0 +1,138 @@
+//! Host-side hot-path benchmarks: the packed simulator engine and the
+//! coordinator serving layer. These are the targets of the EXPERIMENTS.md
+//! §Perf optimization log.
+
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+use ppac::isa::{OpMode, PpacUnit};
+use ppac::sim::{BitVec, CycleInput, PpacArray, PpacConfig, RowAluCtrl};
+use ppac::util::bench::{human_rate, Bench};
+use ppac::util::rng::Xoshiro256pp;
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut rng = Xoshiro256pp::seeded(17);
+
+    // ---- raw array cycle (256×256, tracing off) ------------------------
+    let cfg = PpacConfig::new(256, 256);
+    let mut arr = PpacArray::new(cfg).unwrap();
+    for i in 0..256 {
+        arr.write_row(i, BitVec::from_bools(&rng.bits(256))).unwrap();
+    }
+    let inputs: Vec<CycleInput> = (0..64)
+        .map(|_| {
+            CycleInput::compute(
+                BitVec::from_bools(&rng.bits(256)),
+                BitVec::ones(256),
+                RowAluCtrl::pm1_mvp(),
+            )
+        })
+        .collect();
+    let s = bench.run("array_cycle_256x256_untraced", || {
+        let mut acc = 0i64;
+        for i in &inputs {
+            if let Some(out) = arr.cycle(i).unwrap() {
+                acc += out.y[0];
+            }
+        }
+        acc
+    });
+    println!(
+        "  -> {} (1-bit MVP cycles/s, one 256x256 array)",
+        human_rate(s.throughput(inputs.len() as f64), "cyc/s")
+    );
+
+    // ---- raw array cycle with activity tracing -------------------------
+    let mut arr_t = PpacArray::new(cfg).unwrap();
+    for i in 0..256 {
+        arr_t.write_row(i, BitVec::from_bools(&rng.bits(256))).unwrap();
+    }
+    arr_t.enable_trace();
+    let s = bench.run("array_cycle_256x256_traced", || {
+        let mut acc = 0i64;
+        for i in &inputs {
+            if let Some(out) = arr_t.cycle(i).unwrap() {
+                acc += out.y[0];
+            }
+        }
+        acc
+    });
+    println!(
+        "  -> {} (with exact toggle counting)",
+        human_rate(s.throughput(inputs.len() as f64), "cyc/s")
+    );
+
+    // ---- PpacUnit batch path (schedule compiler overhead) ---------------
+    let mut unit = PpacUnit::new(cfg).unwrap();
+    let a: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
+    unit.load_bit_matrix(&a).unwrap();
+    unit.configure(OpMode::Pm1Mvp).unwrap();
+    let xs: Vec<Vec<bool>> = (0..64).map(|_| rng.bits(256)).collect();
+    let s = bench.run("unit_mvp1_batch64_256x256", || unit.mvp1_batch(&xs).unwrap());
+    println!(
+        "  -> {} (MVPs/s through the mode layer)",
+        human_rate(s.throughput(xs.len() as f64), "MVP/s")
+    );
+
+    // ---- coordinator end-to-end (submit → wait) -------------------------
+    for workers in [1usize, 4] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            tile: cfg,
+            workers,
+            max_batch: 64,
+        })
+        .unwrap();
+        let mids: Vec<_> = (0..workers)
+            .map(|_| {
+                coord
+                    .register_matrix((0..256).map(|_| rng.bits(256)).collect())
+                    .unwrap()
+            })
+            .collect();
+        let payloads: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
+        let s = bench.run(&format!("coordinator_roundtrip_w{workers}_b256"), || {
+            let handles: Vec<_> = payloads
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    coord
+                        .submit(mids[i % mids.len()], JobInput::Pm1Mvp(x.clone()))
+                        .unwrap()
+                })
+                .collect();
+            let mut acc = 0i64;
+            for h in handles {
+                if let ppac::coordinator::JobOutput::Ints(y) = h.wait().unwrap().output {
+                    acc += y[0];
+                }
+            }
+            acc
+        });
+        println!(
+            "  -> {} ({} workers, burst of 256 jobs)",
+            human_rate(s.throughput(payloads.len() as f64), "job/s"),
+            workers
+        );
+        coord.shutdown();
+    }
+
+    // ---- single-job latency ---------------------------------------------
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: cfg,
+        workers: 1,
+        max_batch: 64,
+    })
+    .unwrap();
+    let mid = coord
+        .register_matrix((0..256).map(|_| rng.bits(256)).collect())
+        .unwrap();
+    let x = rng.bits(256);
+    let s = bench.run("coordinator_single_job_latency", || {
+        coord
+            .submit(mid, JobInput::Pm1Mvp(x.clone()))
+            .unwrap()
+            .wait()
+            .unwrap()
+    });
+    println!("  -> {:.1} µs median round trip", s.median_ns() / 1e3);
+    coord.shutdown();
+}

@@ -1,0 +1,61 @@
+//! Bench/reproduction of **Table II**: post-layout implementation results
+//! for the four PPAC array sizes.
+//!
+//! The modelled columns (area, kGE, fmax, power, TOP/s, fJ/OP) come from
+//! the calibrated implementation model; alongside, the host-side
+//! simulator throughput for each array size is measured (cycles/s of the
+//! packed cycle-accurate engine under the 1-bit ±1 MVP workload).
+
+use ppac::isa::{OpMode, PpacUnit};
+use ppac::power::{ImplModel, TABLE2};
+use ppac::sim::PpacConfig;
+use ppac::util::bench::Bench;
+use ppac::util::rng::Xoshiro256pp;
+use ppac::util::table::Table;
+
+fn main() {
+    let bench = Bench::from_env().quiet();
+    let model = ImplModel::calibrated();
+    let mut t = Table::new(
+        "Table II reproduction — model (paper) per array size",
+        &[
+            "M", "N", "B", "Bs", "area um2", "kGE", "fmax GHz", "power mW",
+            "peak TOP/s", "fJ/OP", "host sim Mcyc/s",
+        ],
+    );
+
+    for p in TABLE2 {
+        let (m, n) = (p.m, p.n);
+        // Host-side throughput of the cycle-accurate simulator.
+        let mut rng = Xoshiro256pp::seeded(1);
+        let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let mut unit = PpacUnit::new(PpacConfig::new(m, n)).unwrap();
+        unit.load_bit_matrix(&a).unwrap();
+        unit.configure(OpMode::Pm1Mvp).unwrap();
+        let xs: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(n)).collect();
+        let s = bench.run(&format!("sim_pm1_mvp_{m}x{n}"), || {
+            unit.mvp1_batch(&xs).unwrap()
+        });
+        let cycles_per_iter = xs.len() as f64 + 1.0;
+        let mcyc_s = s.throughput(cycles_per_iter) / 1e6;
+
+        t.row(&[
+            m.to_string(),
+            n.to_string(),
+            p.banks.to_string(),
+            p.subrows.to_string(),
+            format!("{:.0} ({:.0})", model.area_um2(m, n), p.area_um2),
+            format!("{:.0} ({:.0})", model.cell_area_kge(m, n), p.cell_area_kge),
+            format!("{:.3} ({:.3})", model.fmax_ghz(m, n), p.fmax_ghz),
+            format!("{:.2} ({:.2})", model.power_mw(m, n), p.power_mw),
+            format!("{:.2} ({:.2})", model.peak_tops(m, n), p.peak_tops),
+            format!("{:.2} ({:.2})", model.fj_per_op(m, n), p.energy_fj_per_op),
+            format!("{mcyc_s:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape checks: TOP/s grows with array size (0.55 → 92); fJ/OP improves \
+         with N (12.0 → 4.15); adding rows costs more than adding columns."
+    );
+}

@@ -1,0 +1,273 @@
+//! Binarized neural-network inference on PPAC (§III-B1 / §III-C3).
+//!
+//! A BNN dense layer is sign(W·x + b) with W, x ∈ {±1}^… — exactly
+//! PPAC's 1-bit {±1} MVP with the bias folded into the per-row threshold
+//! δ_m (the paper: "the threshold δ_m can be used as the bias term of a
+//! fully-connected layer"). The sign is the complement of the output MSB,
+//! so a layer's activations are directly the match bits.
+
+use crate::error::{PpacError, Result};
+use crate::isa::{OpMode, PpacUnit};
+use crate::sim::PpacConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// One binarized dense layer: out_dim×in_dim ±1 weights + integer biases.
+#[derive(Debug, Clone)]
+pub struct BnnLayer {
+    /// Weights as bits (HI = +1, LO = −1): `w[m][n]`.
+    pub weights: Vec<Vec<bool>>,
+    /// Bias b_m, applied as threshold δ_m = −b_m (y = W·x − δ).
+    pub bias: Vec<i64>,
+}
+
+impl BnnLayer {
+    pub fn out_dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.weights.first().map_or(0, |r| r.len())
+    }
+
+    /// Random layer (for synthetic workloads).
+    pub fn random(rng: &mut Xoshiro256pp, out_dim: usize, in_dim: usize) -> Self {
+        Self {
+            weights: (0..out_dim).map(|_| rng.bits(in_dim)).collect(),
+            bias: rng.ints(out_dim, -(in_dim as i64) / 8, in_dim as i64 / 8),
+        }
+    }
+
+    /// Golden: pre-activation W·x + b over decoded ±1 values.
+    pub fn preact(&self, x: &[bool]) -> Vec<i64> {
+        self.weights
+            .iter()
+            .zip(&self.bias)
+            .map(|(row, &b)| crate::golden::pm1_inner(row, x) + b)
+            .collect()
+    }
+
+    /// Golden: binarized activation sign(W·x + b) ≥ 0 as bits.
+    pub fn forward(&self, x: &[bool]) -> Vec<bool> {
+        self.preact(x).iter().map(|&v| v >= 0).collect()
+    }
+}
+
+/// A multi-layer BNN compiled onto a pool of PPAC arrays — one `PpacUnit`
+/// per layer, each holding that layer's weights resident (the paper's
+/// envisioned use: A static, x streaming).
+pub struct BnnOnPpac {
+    units: Vec<PpacUnit>,
+    layers: Vec<BnnLayer>,
+}
+
+impl BnnOnPpac {
+    /// Map each layer onto a PPAC array of the paper's microarchitecture.
+    /// Layer dims must fit one array (≤ array M rows, = array N columns).
+    pub fn compile(layers: Vec<BnnLayer>, cfg: PpacConfig) -> Result<Self> {
+        let mut units = Vec::with_capacity(layers.len());
+        for (li, layer) in layers.iter().enumerate() {
+            if layer.in_dim() != cfg.n {
+                return Err(PpacError::DimMismatch {
+                    context: "BNN layer input dim vs array N",
+                    expected: cfg.n,
+                    got: layer.in_dim(),
+                });
+            }
+            if layer.out_dim() > cfg.m {
+                return Err(PpacError::Config(format!(
+                    "layer {li}: out_dim {} exceeds array M {}",
+                    layer.out_dim(),
+                    cfg.m
+                )));
+            }
+            // Pad unused rows with zero weights; disable them via bias.
+            let mut rows = layer.weights.clone();
+            rows.resize(cfg.m, vec![false; cfg.n]);
+            let mut unit = PpacUnit::new(cfg)?;
+            unit.load_bit_matrix(&rows)?;
+            unit.configure(OpMode::Pm1Mvp)?;
+            // δ_m = −bias  ⇒  y_m = ⟨w, x⟩ + b.
+            let mut deltas: Vec<i64> = layer.bias.iter().map(|&b| -b).collect();
+            deltas.resize(cfg.m, 0);
+            unit.set_thresholds(&deltas)?;
+            units.push(unit);
+        }
+        Ok(Self { units, layers })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total compute cycles burned so far across all layer arrays.
+    pub fn compute_cycles(&self) -> u64 {
+        self.units.iter().map(|u| u.compute_cycles()).sum()
+    }
+
+    /// Run a batch of inputs through all layers; hidden layers binarize,
+    /// the last layer returns raw integer scores (class logits).
+    pub fn forward_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<Vec<i64>>> {
+        let mut acts: Vec<Vec<bool>> = xs.to_vec();
+        let last = self.units.len() - 1;
+        for li in 0..self.units.len() {
+            let out_dim = self.layers[li].out_dim();
+            let ys = self.units[li].mvp1_batch(&acts)?;
+            if li == last {
+                return Ok(ys.into_iter().map(|y| y[..out_dim].to_vec()).collect());
+            }
+            acts = ys
+                .into_iter()
+                .map(|y| y[..out_dim].iter().map(|&v| v >= 0).collect())
+                .collect();
+        }
+        unreachable!("network has at least one layer")
+    }
+
+    /// Argmax classification over the final scores.
+    pub fn classify_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<usize>> {
+        Ok(self
+            .forward_batch(xs)?
+            .into_iter()
+            .map(|scores| {
+                scores
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Golden full-network forward for cross-checking.
+    pub fn golden_forward(&self, x: &[bool]) -> Vec<i64> {
+        let mut act: Vec<bool> = x.to_vec();
+        for layer in &self.layers[..self.layers.len() - 1] {
+            act = layer.forward(&act);
+        }
+        self.layers.last().unwrap().preact(&act)
+    }
+}
+
+/// A synthetic-but-meaningful classification workload: the *labels are
+/// produced by a hidden teacher BNN*, so a student with the same weights
+/// must reach 100% accuracy — making end-to-end correctness measurable —
+/// while label balance exercises every class.
+pub struct TeacherDataset {
+    pub inputs: Vec<Vec<bool>>,
+    pub labels: Vec<usize>,
+}
+
+impl TeacherDataset {
+    pub fn generate(
+        teacher: &[BnnLayer],
+        samples: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let in_dim = teacher[0].in_dim();
+        let mut inputs = Vec::with_capacity(samples);
+        let mut labels = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let x = rng.bits(in_dim);
+            let mut act = x.clone();
+            for layer in &teacher[..teacher.len() - 1] {
+                act = layer.forward(&act);
+            }
+            let scores = teacher.last().unwrap().preact(&act);
+            let label = scores
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap();
+            inputs.push(x);
+            labels.push(label);
+        }
+        Self { inputs, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_16x32() -> PpacConfig {
+        let mut cfg = PpacConfig::new(16, 32);
+        cfg.rows_per_bank = 16;
+        cfg.subrows = 2;
+        cfg
+    }
+
+    #[test]
+    fn single_layer_matches_golden() {
+        let mut rng = Xoshiro256pp::seeded(20);
+        let layer = BnnLayer::random(&mut rng, 16, 32);
+        let mut net = BnnOnPpac::compile(vec![layer.clone()], cfg_16x32()).unwrap();
+        let xs: Vec<Vec<bool>> = (0..10).map(|_| rng.bits(32)).collect();
+        let got = net.forward_batch(&xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got[xi], layer.preact(x), "input {xi}");
+        }
+    }
+
+    #[test]
+    fn multilayer_matches_golden_forward() {
+        let mut rng = Xoshiro256pp::seeded(21);
+        let l1 = BnnLayer::random(&mut rng, 32, 32);
+        let l2 = BnnLayer::random(&mut rng, 32, 32);
+        let l3 = BnnLayer::random(&mut rng, 10, 32);
+        let cfg = PpacConfig::new(32, 32);
+        let mut net = BnnOnPpac::compile(vec![l1, l2, l3], cfg).unwrap();
+        let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(32)).collect();
+        let got = net.forward_batch(&xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got[xi], net.golden_forward(x), "input {xi}");
+        }
+    }
+
+    #[test]
+    fn teacher_student_reaches_perfect_accuracy() {
+        let mut rng = Xoshiro256pp::seeded(22);
+        let teacher = vec![
+            BnnLayer::random(&mut rng, 32, 32),
+            BnnLayer::random(&mut rng, 8, 32),
+        ];
+        let ds = TeacherDataset::generate(&teacher, 64, 99);
+        let cfg = PpacConfig::new(32, 32);
+        let mut student = BnnOnPpac::compile(teacher, cfg).unwrap();
+        let preds = student.classify_batch(&ds.inputs).unwrap();
+        let correct = preds
+            .iter()
+            .zip(&ds.labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        assert_eq!(correct, ds.inputs.len(), "student must match its teacher");
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let mut rng = Xoshiro256pp::seeded(23);
+        let layer = BnnLayer::random(&mut rng, 16, 24); // N ≠ 32
+        assert!(BnnOnPpac::compile(vec![layer], cfg_16x32()).is_err());
+        let too_many = BnnLayer::random(&mut rng, 17, 32); // M > 16
+        assert!(BnnOnPpac::compile(vec![too_many], cfg_16x32()).is_err());
+    }
+
+    #[test]
+    fn bias_is_folded_into_threshold() {
+        // A bias must shift the pre-activation exactly.
+        let mut rng = Xoshiro256pp::seeded(24);
+        let mut layer = BnnLayer::random(&mut rng, 16, 32);
+        layer.bias = (0..16).map(|i| i as i64 - 8).collect();
+        let x = rng.bits(32);
+        let mut net = BnnOnPpac::compile(vec![layer.clone()], cfg_16x32()).unwrap();
+        let got = net.forward_batch(&[x.clone()]).unwrap();
+        for m in 0..16 {
+            assert_eq!(
+                got[0][m],
+                crate::golden::pm1_inner(&layer.weights[m], &x) + layer.bias[m]
+            );
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! CAM applications (§III-A): an associative lookup table in the style of
+//! network switches/routers [12] and highly-associative caches [13] —
+//! exact-match and ternary (masked) lookups, plus in-place entry updates
+//! through the write port.
+
+use crate::error::{PpacError, Result};
+use crate::isa::{OpMode, PpacUnit};
+use crate::sim::PpacConfig;
+
+/// An associative match table resident in PPAC: each row stores a key;
+/// lookups return matching row indices in one cycle.
+pub struct CamTable {
+    unit: PpacUnit,
+    /// Valid entries (rows beyond are free).
+    used: usize,
+    key_bits: usize,
+}
+
+impl CamTable {
+    pub fn new(cfg: PpacConfig, key_bits: usize) -> Result<Self> {
+        if key_bits > cfg.n {
+            return Err(PpacError::Config(format!(
+                "key width {key_bits} exceeds array N {}",
+                cfg.n
+            )));
+        }
+        let mut unit = PpacUnit::new(cfg)?;
+        // Unused rows must never match: the complete-match threshold is N,
+        // and an all-zero row only matches the all-zero key... so disable
+        // free rows with an impossible threshold instead.
+        unit.load_bit_matrix(&vec![vec![false; cfg.n]; cfg.m])?;
+        let mut deltas = vec![cfg.n as i64 + 1; cfg.m];
+        unit.configure(OpMode::Cam { deltas: deltas.clone() })?;
+        deltas.truncate(cfg.m);
+        Ok(Self { unit, used: 0, key_bits })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.unit.config().m
+    }
+
+    pub fn len(&self) -> usize {
+        self.used
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.used == 0
+    }
+
+    fn pad_key(&self, key: &[bool]) -> Result<Vec<bool>> {
+        if key.len() != self.key_bits {
+            return Err(PpacError::DimMismatch {
+                context: "CAM key width",
+                expected: self.key_bits,
+                got: key.len(),
+            });
+        }
+        let mut row = key.to_vec();
+        row.resize(self.unit.config().n, false);
+        Ok(row)
+    }
+
+    /// Insert a key, returning its row id. One write-port cycle.
+    pub fn insert(&mut self, key: &[bool]) -> Result<usize> {
+        if self.used >= self.capacity() {
+            return Err(PpacError::Config("CAM table full".into()));
+        }
+        let row = self.pad_key(key)?;
+        let id = self.used;
+        self.unit.update_row(id, &row)?;
+        // Arm the row: complete match requires all N cells equal, and the
+        // padded tail bits (stored 0) match the padded query tail (also 0).
+        let n = self.unit.config().n as i64;
+        self.unit.array_mut().set_threshold(id, n)?;
+        self.used += 1;
+        Ok(id)
+    }
+
+    /// Overwrite an existing entry in place (one cycle).
+    pub fn update(&mut self, id: usize, key: &[bool]) -> Result<()> {
+        if id >= self.used {
+            return Err(PpacError::RowOutOfRange { row: id, m: self.used });
+        }
+        let row = self.pad_key(key)?;
+        self.unit.update_row(id, &row)
+    }
+
+    /// Exact-match lookup for a batch of keys: all matching row ids per
+    /// key (one cycle per key, all M rows compared in parallel).
+    pub fn lookup_batch(&mut self, keys: &[Vec<bool>]) -> Result<Vec<Vec<usize>>> {
+        let queries: Vec<Vec<bool>> =
+            keys.iter().map(|k| self.pad_key(k)).collect::<Result<_>>()?;
+        let matches = self.unit.cam_batch(&queries)?;
+        Ok(matches
+            .into_iter()
+            .map(|row| {
+                row[..self.used]
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &m)| m.then_some(i))
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Fuzzy lookup: row ids whose Hamming similarity to the key is at
+    /// least `key_bits − tolerance` (a programmable-δ similarity match).
+    pub fn lookup_fuzzy(
+        &mut self,
+        keys: &[Vec<bool>],
+        tolerance: u32,
+    ) -> Result<Vec<Vec<usize>>> {
+        let cfg = *self.unit.config();
+        let delta = cfg.n as i64 - tolerance as i64;
+        let mut deltas = vec![cfg.n as i64 + 1; cfg.m];
+        for d in deltas.iter_mut().take(self.used) {
+            *d = delta;
+        }
+        self.unit.configure(OpMode::Cam { deltas })?;
+        let out = self.lookup_batch(keys);
+        // Restore exact-match thresholds.
+        let mut exact = vec![cfg.n as i64 + 1; cfg.m];
+        for d in exact.iter_mut().take(self.used) {
+            *d = cfg.n as i64;
+        }
+        self.unit.configure(OpMode::Cam { deltas: exact })?;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn table() -> CamTable {
+        CamTable::new(PpacConfig::new(16, 32), 24).unwrap()
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip() {
+        let mut rng = Xoshiro256pp::seeded(60);
+        let mut t = table();
+        let keys: Vec<Vec<bool>> = (0..10).map(|_| rng.bits(24)).collect();
+        for k in &keys {
+            t.insert(k).unwrap();
+        }
+        let hits = t.lookup_batch(&keys).unwrap();
+        for (i, h) in hits.iter().enumerate() {
+            assert!(h.contains(&i), "key {i} must match its own row: {h:?}");
+            // With random 24-bit keys, collisions are essentially
+            // impossible; every hit must BE key i's row or a duplicate key.
+            for &id in h {
+                assert_eq!(keys[id], keys[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn absent_key_does_not_match() {
+        let mut rng = Xoshiro256pp::seeded(61);
+        let mut t = table();
+        for _ in 0..8 {
+            t.insert(&rng.bits(24)).unwrap();
+        }
+        // A fresh random key differs from all stored ones w.h.p.
+        let probe = rng.bits(24);
+        let hits = t.lookup_batch(&[probe]).unwrap();
+        assert!(hits[0].is_empty(), "{:?}", hits[0]);
+    }
+
+    #[test]
+    fn empty_table_never_matches_even_zero_key() {
+        let mut t = table();
+        let zero = vec![false; 24];
+        let hits = t.lookup_batch(&[zero]).unwrap();
+        assert!(hits[0].is_empty(), "free rows must be disabled");
+    }
+
+    #[test]
+    fn update_replaces_entry() {
+        let mut rng = Xoshiro256pp::seeded(62);
+        let mut t = table();
+        let k1 = rng.bits(24);
+        let k2 = rng.bits(24);
+        let id = t.insert(&k1).unwrap();
+        t.update(id, &k2).unwrap();
+        assert!(t.lookup_batch(&[k1]).unwrap()[0].is_empty());
+        assert_eq!(t.lookup_batch(&[k2]).unwrap()[0], vec![id]);
+    }
+
+    #[test]
+    fn fuzzy_lookup_tolerates_bit_errors() {
+        let mut rng = Xoshiro256pp::seeded(63);
+        let mut t = table();
+        let key = rng.bits(24);
+        let id = t.insert(&key).unwrap();
+        let mut noisy = key.clone();
+        noisy[3] = !noisy[3];
+        noisy[17] = !noisy[17];
+        assert!(t.lookup_batch(&[noisy.clone()]).unwrap()[0].is_empty());
+        assert_eq!(t.lookup_fuzzy(&[noisy], 2).unwrap()[0], vec![id]);
+        // And exact matching still works afterwards.
+        assert_eq!(t.lookup_batch(&[key]).unwrap()[0], vec![id]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut rng = Xoshiro256pp::seeded(64);
+        let mut t = CamTable::new(PpacConfig::new(16, 32), 24).unwrap();
+        for _ in 0..16 {
+            t.insert(&rng.bits(24)).unwrap();
+        }
+        assert!(t.insert(&rng.bits(24)).is_err());
+    }
+}

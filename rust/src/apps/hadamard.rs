@@ -1,0 +1,152 @@
+//! Hadamard transform on PPAC (§III-C3 use case; STOne transform [18]).
+//!
+//! H_n is a ±1 matrix, i.e. a 1-bit `oddint` matrix; an L-bit `int` input
+//! vector then runs through the multi-bit-vector mode in L cycles —
+//! PPAC computes the full n-point transform L cycles per vector instead
+//! of the n·log n serial butterflies of a CPU implementation.
+
+use crate::error::Result;
+use crate::isa::{MatrixInterp, OpMode, PpacUnit};
+use crate::formats::NumberFormat;
+use crate::sim::PpacConfig;
+
+/// Sylvester Hadamard matrix H_n as HI/LO bits (HI = +1).
+pub fn hadamard_bits(n: usize) -> Vec<Vec<bool>> {
+    assert!(n.is_power_of_two() && n > 0);
+    let mut h = vec![vec![true]];
+    while h.len() < n {
+        let k = h.len();
+        let mut next = vec![vec![false; 2 * k]; 2 * k];
+        for i in 0..k {
+            for j in 0..k {
+                next[i][j] = h[i][j];
+                next[i][j + k] = h[i][j];
+                next[i + k][j] = h[i][j];
+                next[i + k][j + k] = !h[i][j];
+            }
+        }
+        h = next;
+    }
+    h
+}
+
+/// Golden O(n·log n) fast Walsh–Hadamard transform.
+pub fn fwht(x: &[i64]) -> Vec<i64> {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut a = x.to_vec();
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(2 * h) {
+            for j in i..i + h {
+                let (u, v) = (a[j], a[j + h]);
+                a[j] = u + v;
+                a[j + h] = u - v;
+            }
+        }
+        h *= 2;
+    }
+    a
+}
+
+/// A Hadamard transformer resident in a PPAC array.
+pub struct PpacHadamard {
+    unit: PpacUnit,
+    n: usize,
+    lbits: u32,
+}
+
+impl PpacHadamard {
+    /// `n` must equal both array dimensions (H_n is n×n).
+    pub fn new(cfg: PpacConfig, lbits: u32) -> Result<Self> {
+        assert_eq!(cfg.m, cfg.n, "H_n is square");
+        let h = hadamard_bits(cfg.n);
+        let mut unit = PpacUnit::new(cfg)?;
+        unit.load_bit_matrix(&h)?;
+        unit.configure(OpMode::MultibitVector {
+            lbits,
+            x_fmt: NumberFormat::Int,
+            matrix: MatrixInterp::Pm1,
+        })?;
+        Ok(Self { unit, n: cfg.n, lbits })
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.unit.compute_cycles()
+    }
+
+    pub fn cycles_per_transform(&self) -> u64 {
+        self.lbits as u64
+    }
+
+    /// Transform a batch of n-point integer vectors (L bits each entry).
+    pub fn transform_batch(&mut self, xs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n);
+        }
+        self.unit.mvp_multibit_batch(xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn fwht_matches_matrix_definition() {
+        let mut rng = Xoshiro256pp::seeded(50);
+        let n = 16;
+        let h = hadamard_bits(n);
+        let x = rng.ints(n, -50, 50);
+        let by_matrix: Vec<i64> = h
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&x)
+                    .map(|(&b, &v)| if b { v } else { -v })
+                    .sum()
+            })
+            .collect();
+        assert_eq!(fwht(&x), by_matrix);
+    }
+
+    #[test]
+    fn ppac_transform_matches_fwht() {
+        let mut rng = Xoshiro256pp::seeded(51);
+        let n = 32;
+        let cfg = PpacConfig::new(n, n);
+        let mut had = PpacHadamard::new(cfg, 8).unwrap();
+        let xs: Vec<Vec<i64>> = (0..6).map(|_| rng.ints(n, -128, 127)).collect();
+        let got = had.transform_batch(&xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got[xi], fwht(x), "vector {xi}");
+        }
+    }
+
+    #[test]
+    fn involution_property_through_hardware() {
+        // H(Hx) = n·x, both transforms on PPAC (needs wider L for pass 2).
+        let mut rng = Xoshiro256pp::seeded(52);
+        let n = 16;
+        let x = rng.ints(n, -7, 7);
+        let mut pass1 = PpacHadamard::new(PpacConfig::new(n, n), 4).unwrap();
+        let y = pass1.transform_batch(&[x.clone()]).unwrap().remove(0);
+        let mut pass2 = PpacHadamard::new(PpacConfig::new(n, n), 8).unwrap();
+        let z = pass2.transform_batch(&[y]).unwrap().remove(0);
+        let want: Vec<i64> = x.iter().map(|&v| v * n as i64).collect();
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn cycle_cost_is_l_per_transform() {
+        let n = 16;
+        let mut had = PpacHadamard::new(PpacConfig::new(n, n), 6).unwrap();
+        let before = had.compute_cycles();
+        let xs: Vec<Vec<i64>> = (0..10).map(|i| vec![i as i64 - 5; n]).collect();
+        had.transform_batch(&xs).unwrap();
+        // 10 transforms × 6 cycles + 1 drain.
+        assert_eq!(had.compute_cycles() - before, 61);
+        assert_eq!(had.cycles_per_transform(), 6);
+    }
+}

@@ -1,0 +1,252 @@
+//! Locality-sensitive hashing on PPAC (§III-A use case).
+//!
+//! Sign-random-projection LSH: a d-dimensional real/integer vector is
+//! hashed to N bits by the signs of N random-hyperplane projections. The
+//! cosine-similar neighbours of a query then agree on most signature
+//! bits, so approximate nearest-neighbour search reduces to *maximum
+//! Hamming similarity over the stored signatures* — exactly PPAC's
+//! similarity-match CAM / Hamming mode, M candidates per cycle.
+
+use crate::error::Result;
+use crate::isa::{OpMode, PpacUnit};
+use crate::sim::PpacConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// Sign-random-projection hasher: N hyperplanes over i64 vectors.
+#[derive(Debug, Clone)]
+pub struct SrpHasher {
+    /// hyperplanes[j][k]: ±1 entries (packed dense is overkill here).
+    planes: Vec<Vec<i64>>,
+}
+
+impl SrpHasher {
+    pub fn new(rng: &mut Xoshiro256pp, nbits: usize, dim: usize) -> Self {
+        Self {
+            planes: (0..nbits)
+                .map(|_| (0..dim).map(|_| if rng.bit() { 1 } else { -1 }).collect())
+                .collect(),
+        }
+    }
+
+    pub fn nbits(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Signature: bit j = (⟨plane_j, v⟩ ≥ 0).
+    pub fn hash(&self, v: &[i64]) -> Vec<bool> {
+        self.planes
+            .iter()
+            .map(|p| p.iter().zip(v).map(|(a, b)| a * b).sum::<i64>() >= 0)
+            .collect()
+    }
+}
+
+/// An LSH index resident in a PPAC array: one signature per row.
+pub struct LshIndex {
+    unit: PpacUnit,
+    hasher: SrpHasher,
+    stored: usize,
+}
+
+/// One query answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Neighbor {
+    pub id: usize,
+    pub similarity: u32,
+}
+
+impl LshIndex {
+    /// Build the index: hash every item and load signatures as rows.
+    pub fn build(
+        cfg: PpacConfig,
+        hasher: SrpHasher,
+        items: &[Vec<i64>],
+    ) -> Result<Self> {
+        assert!(items.len() <= cfg.m, "index overflow");
+        assert_eq!(hasher.nbits(), cfg.n);
+        let mut rows: Vec<Vec<bool>> = items.iter().map(|v| hasher.hash(v)).collect();
+        rows.resize(cfg.m, vec![false; cfg.n]);
+        let mut unit = PpacUnit::new(cfg)?;
+        unit.load_bit_matrix(&rows)?;
+        unit.configure(OpMode::Hamming)?;
+        Ok(Self { unit, hasher, stored: items.len() })
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.unit.compute_cycles()
+    }
+
+    /// Nearest neighbour (by signature similarity) for each query — one
+    /// PPAC cycle per query, M similarities in parallel.
+    pub fn query_nearest(&mut self, queries: &[Vec<i64>]) -> Result<Vec<Neighbor>> {
+        let sigs: Vec<Vec<bool>> = queries.iter().map(|q| self.hasher.hash(q)).collect();
+        let sims = self.unit.hamming_batch(&sigs)?;
+        Ok(sims
+            .into_iter()
+            .map(|row| {
+                let (id, &best) = row[..self.stored]
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &s)| s)
+                    .expect("non-empty index");
+                Neighbor { id, similarity: best as u32 }
+            })
+            .collect())
+    }
+
+    /// All items whose signature similarity meets `delta` (the
+    /// similarity-match CAM behaviour, δ-programmable).
+    pub fn query_radius(&mut self, queries: &[Vec<i64>], delta: u32) -> Result<Vec<Vec<usize>>> {
+        let cfg = *self.unit.config();
+        self.unit
+            .configure(OpMode::Cam { deltas: vec![delta as i64; cfg.m] })?;
+        let sigs: Vec<Vec<bool>> = queries.iter().map(|q| self.hasher.hash(q)).collect();
+        let matches = self.unit.cam_batch(&sigs)?;
+        // Restore hamming mode for subsequent nearest queries.
+        self.unit.configure(OpMode::Hamming)?;
+        Ok(matches
+            .into_iter()
+            .map(|row| {
+                row[..self.stored]
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &m)| m.then_some(i))
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+/// Exact cosine-similarity argmax (the brute-force reference).
+pub fn exact_nearest(items: &[Vec<i64>], q: &[i64]) -> usize {
+    let score = |v: &[i64]| {
+        let dot: i64 = v.iter().zip(q).map(|(a, b)| a * b).sum();
+        let nv = (v.iter().map(|a| a * a).sum::<i64>() as f64).sqrt();
+        let nq = (q.iter().map(|a| a * a).sum::<i64>() as f64).sqrt();
+        dot as f64 / (nv * nq).max(1e-12)
+    };
+    items
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| score(a).partial_cmp(&score(b)).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster_dataset(
+        rng: &mut Xoshiro256pp,
+        clusters: usize,
+        per_cluster: usize,
+        dim: usize,
+    ) -> (Vec<Vec<i64>>, Vec<usize>) {
+        // Well-separated ±100 centers with ±5 jitter.
+        let centers: Vec<Vec<i64>> = (0..clusters)
+            .map(|_| (0..dim).map(|_| if rng.bit() { 100 } else { -100 }).collect())
+            .collect();
+        let mut items = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..per_cluster {
+                items.push(c.iter().map(|&v| v + rng.range_i64(-5, 5)).collect());
+                labels.push(ci);
+            }
+        }
+        (items, labels)
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_sized() {
+        let mut rng = Xoshiro256pp::seeded(30);
+        let h = SrpHasher::new(&mut rng, 64, 16);
+        let v: Vec<i64> = rng.ints(16, -100, 100);
+        assert_eq!(h.hash(&v).len(), 64);
+        assert_eq!(h.hash(&v), h.hash(&v));
+    }
+
+    #[test]
+    fn similar_vectors_share_signature_bits() {
+        let mut rng = Xoshiro256pp::seeded(31);
+        let h = SrpHasher::new(&mut rng, 128, 32);
+        let v: Vec<i64> = rng.ints(32, -100, 100);
+        let near: Vec<i64> = v.iter().map(|&x| x + rng.range_i64(-3, 3)).collect();
+        let far: Vec<i64> = v.iter().map(|&x| -x).collect();
+        let sim = |a: &[bool], b: &[bool]| {
+            a.iter().zip(b).filter(|(p, q)| p == q).count()
+        };
+        let s_near = sim(&h.hash(&v), &h.hash(&near));
+        let s_far = sim(&h.hash(&v), &h.hash(&far));
+        assert!(s_near > 115, "near similarity {s_near}");
+        assert!(s_far < 13, "antipode similarity {s_far}");
+    }
+
+    #[test]
+    fn ppac_lsh_recovers_cluster_neighbours() {
+        let mut rng = Xoshiro256pp::seeded(32);
+        let dim = 24;
+        let (items, labels) = cluster_dataset(&mut rng, 4, 8, dim);
+        let cfg = PpacConfig::new(32, 64);
+        let hasher = SrpHasher::new(&mut rng, 64, dim);
+        let mut index = LshIndex::build(cfg, hasher, &items).unwrap();
+
+        // Queries: fresh jittered points from each cluster.
+        let mut hits = 0;
+        let mut queries = Vec::new();
+        let mut expect = Vec::new();
+        for ci in 0..4 {
+            let base = &items[ci * 8];
+            queries.push(base.iter().map(|&v| v + rng.range_i64(-4, 4)).collect());
+            expect.push(ci);
+        }
+        let answers = index.query_nearest(&queries).unwrap();
+        for (ans, &ci) in answers.iter().zip(&expect) {
+            if labels[ans.id] == ci {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 4, "every query must land in its own cluster");
+    }
+
+    #[test]
+    fn radius_query_matches_threshold_semantics() {
+        let mut rng = Xoshiro256pp::seeded(33);
+        let dim = 24;
+        let (items, labels) = cluster_dataset(&mut rng, 2, 8, dim);
+        let cfg = PpacConfig::new(16, 64);
+        let hasher = SrpHasher::new(&mut rng, 64, dim);
+        let mut index = LshIndex::build(cfg, hasher, &items).unwrap();
+        let q = items[0].clone();
+        let within = index.query_radius(&[q], 58).unwrap();
+        assert!(within[0].contains(&0), "item 0 matches itself");
+        // All radius hits must be same-cluster at this tight threshold.
+        for &id in &within[0] {
+            assert_eq!(labels[id], 0, "id {id} from the wrong cluster");
+        }
+        assert!(!within[0].is_empty());
+    }
+
+    #[test]
+    fn lsh_agrees_with_exact_search_on_separated_data() {
+        let mut rng = Xoshiro256pp::seeded(34);
+        let dim = 32;
+        let (items, _) = cluster_dataset(&mut rng, 8, 4, dim);
+        let cfg = PpacConfig::new(32, 128);
+        let hasher = SrpHasher::new(&mut rng, 128, dim);
+        let mut index = LshIndex::build(cfg, hasher, &items).unwrap();
+        let mut agree = 0;
+        let total = 16;
+        let queries: Vec<Vec<i64>> = (0..total)
+            .map(|i| items[i % items.len()].iter().map(|&v| v + rng.range_i64(-2, 2)).collect())
+            .collect();
+        let approx = index.query_nearest(&queries).unwrap();
+        for (q, a) in queries.iter().zip(&approx) {
+            if exact_nearest(&items, q) == a.id {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 14, "LSH agreement {agree}/{total}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Application layer: the workloads the paper motivates (§III), each
+//! mapped onto `PpacUnit` and checked against software golden models.
+//!
+//! - [`bnn`] — binarized neural-network inference (§III-B1/§III-C3);
+//! - [`lsh`] — locality-sensitive hashing / approximate NN search (§III-A);
+//! - [`gf2codes`] — LDPC/polar encoders + AES S-box affine step (§III-D);
+//! - [`hadamard`] — Hadamard transform via oddint matrices (§III-C3);
+//! - [`cam`] — associative lookup tables with fuzzy matching (§III-A);
+//! - [`pla`] — Boolean-function compilation to banks (§III-E).
+
+pub mod bnn;
+pub mod cam;
+pub mod gf2codes;
+pub mod hadamard;
+pub mod lsh;
+pub mod pla;
+pub mod tiled;
+pub mod tracks;
+
+pub use bnn::{BnnLayer, BnnOnPpac, TeacherDataset};
+pub use cam::CamTable;
+pub use gf2codes::{LinearCode, PpacEncoder};
+pub use hadamard::PpacHadamard;
+pub use lsh::{LshIndex, SrpHasher};
+pub use pla::{PlaProgram, SumOfProducts};
+pub use tiled::TiledMvp;
+pub use tracks::{Geometry, PatternBank};

@@ -1,0 +1,242 @@
+//! PLA application layer (§III-E): compile Boolean functions to PPAC
+//! banks.
+//!
+//! Variables and their complements occupy separate columns (the paper:
+//! "we consider the complement X̄ as a different Boolean variable that is
+//! associated with another column"), so a function of V variables uses
+//! 2·V columns; each bank computes one function as a sum of min-terms.
+
+use crate::error::{PpacError, Result};
+use crate::isa::{BankCombine, OpMode, PpacUnit, TermKind};
+use crate::sim::PpacConfig;
+
+/// One literal of a product term.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Literal {
+    /// X_v must be 1.
+    Pos(usize),
+    /// X_v must be 0 (the complement column must be 1).
+    Neg(usize),
+}
+
+/// A Boolean function in sum-of-products form.
+#[derive(Debug, Clone, Default)]
+pub struct SumOfProducts {
+    pub terms: Vec<Vec<Literal>>,
+}
+
+impl SumOfProducts {
+    /// Evaluate in software (the golden model).
+    pub fn eval(&self, vars: &[bool]) -> bool {
+        self.terms.iter().any(|t| {
+            t.iter().all(|lit| match *lit {
+                Literal::Pos(v) => vars[v],
+                Literal::Neg(v) => !vars[v],
+            })
+        })
+    }
+
+    /// Exhaustive truth-table → SOP (one min-term per 1-row); fine for
+    /// the ≤ 8-variable functions a 16-row bank can hold… and a good
+    /// stress for the bank capacity checks.
+    pub fn from_truth_table(vars: usize, table: &[bool]) -> Self {
+        assert_eq!(table.len(), 1 << vars);
+        let mut terms = Vec::new();
+        for (assignment, &out) in table.iter().enumerate() {
+            if out {
+                let term = (0..vars)
+                    .map(|v| {
+                        if (assignment >> v) & 1 == 1 {
+                            Literal::Pos(v)
+                        } else {
+                            Literal::Neg(v)
+                        }
+                    })
+                    .collect();
+                terms.push(term);
+            }
+        }
+        Self { terms }
+    }
+}
+
+/// A set of Boolean functions compiled onto one PPAC array, one function
+/// per bank.
+pub struct PlaProgram {
+    unit: PpacUnit,
+    num_vars: usize,
+    functions: usize,
+}
+
+impl PlaProgram {
+    /// Compile `functions` (each a SOP over `num_vars` variables) onto
+    /// the array: function `f` occupies bank `f`.
+    pub fn compile(
+        cfg: PpacConfig,
+        num_vars: usize,
+        functions: &[SumOfProducts],
+    ) -> Result<Self> {
+        if 2 * num_vars > cfg.n {
+            return Err(PpacError::Config(format!(
+                "{num_vars} variables need {} columns > N = {}",
+                2 * num_vars,
+                cfg.n
+            )));
+        }
+        if functions.len() > cfg.banks() {
+            return Err(PpacError::Config(format!(
+                "{} functions > {} banks",
+                functions.len(),
+                cfg.banks()
+            )));
+        }
+        let mut rows = vec![vec![false; cfg.n]; cfg.m];
+        let mut terms_per_bank = vec![0usize; cfg.banks()];
+        for (f, sop) in functions.iter().enumerate() {
+            if sop.terms.len() > cfg.rows_per_bank {
+                return Err(PpacError::Config(format!(
+                    "function {f}: {} terms > {} rows/bank",
+                    sop.terms.len(),
+                    cfg.rows_per_bank
+                )));
+            }
+            terms_per_bank[f] = sop.terms.len();
+            for (t, term) in sop.terms.iter().enumerate() {
+                let row = &mut rows[f * cfg.rows_per_bank + t];
+                for lit in term {
+                    match *lit {
+                        Literal::Pos(v) => row[2 * v] = true,
+                        Literal::Neg(v) => row[2 * v + 1] = true,
+                    }
+                }
+            }
+        }
+        let mut unit = PpacUnit::new(cfg)?;
+        unit.load_bit_matrix(&rows)?;
+        unit.configure(OpMode::Pla {
+            kind: TermKind::MinTerm,
+            combine: BankCombine::Or,
+            terms_per_bank,
+        })?;
+        Ok(Self { unit, num_vars, functions: functions.len() })
+    }
+
+    /// Expand variable assignments into the (X, X̄) column encoding.
+    fn encode_vars(&self, vars: &[bool]) -> Vec<bool> {
+        let n = self.unit.config().n;
+        let mut x = vec![false; n];
+        for (v, &b) in vars.iter().enumerate() {
+            x[2 * v] = b;
+            x[2 * v + 1] = !b;
+        }
+        x
+    }
+
+    /// Evaluate all compiled functions for each assignment — one cycle
+    /// per assignment, B functions in parallel.
+    pub fn eval_batch(&mut self, assignments: &[Vec<bool>]) -> Result<Vec<Vec<bool>>> {
+        let encoded: Vec<Vec<bool>> = assignments
+            .iter()
+            .map(|v| {
+                assert_eq!(v.len(), self.num_vars);
+                self.encode_vars(v)
+            })
+            .collect();
+        let out = self.unit.pla_batch(&encoded)?;
+        Ok(out
+            .into_iter()
+            .map(|row| row[..self.functions].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn cfg() -> PpacConfig {
+        PpacConfig::new(32, 16) // 2 banks × 16 rows, 16 columns = 8 vars
+    }
+
+    #[test]
+    fn sop_eval_and_truth_table_roundtrip() {
+        // XOR of 3 variables from its truth table.
+        let vars = 3;
+        let table: Vec<bool> = (0..8u32).map(|a| a.count_ones() % 2 == 1).collect();
+        let sop = SumOfProducts::from_truth_table(vars, &table);
+        assert_eq!(sop.terms.len(), 4);
+        for a in 0..8usize {
+            let v: Vec<bool> = (0..3).map(|i| (a >> i) & 1 == 1).collect();
+            assert_eq!(sop.eval(&v), table[a], "assignment {a}");
+        }
+    }
+
+    #[test]
+    fn compiled_pla_matches_golden_exhaustively() {
+        // f0 = X0·X̄1 + X2,  f1 = 3-input XOR.
+        let f0 = SumOfProducts {
+            terms: vec![
+                vec![Literal::Pos(0), Literal::Neg(1)],
+                vec![Literal::Pos(2)],
+            ],
+        };
+        let table: Vec<bool> = (0..8u32).map(|a| a.count_ones() % 2 == 1).collect();
+        let f1 = SumOfProducts::from_truth_table(3, &table);
+        let mut pla = PlaProgram::compile(cfg(), 3, &[f0.clone(), f1.clone()]).unwrap();
+        let assignments: Vec<Vec<bool>> = (0..8usize)
+            .map(|a| (0..3).map(|i| (a >> i) & 1 == 1).collect())
+            .collect();
+        let got = pla.eval_batch(&assignments).unwrap();
+        for (a, vars) in assignments.iter().enumerate() {
+            assert_eq!(got[a], vec![f0.eval(vars), f1.eval(vars)], "assignment {a}");
+        }
+    }
+
+    #[test]
+    fn random_functions_match_golden() {
+        let mut rng = Xoshiro256pp::seeded(70);
+        for _ in 0..10 {
+            let nvars = 4;
+            let table: Vec<bool> = (0..16).map(|_| rng.bit()).collect();
+            let sop = SumOfProducts::from_truth_table(nvars, &table);
+            if sop.terms.len() > 16 {
+                continue; // cannot fit a 16-row bank
+            }
+            let mut pla = PlaProgram::compile(cfg(), nvars, &[sop.clone()]).unwrap();
+            let assignments: Vec<Vec<bool>> = (0..16usize)
+                .map(|a| (0..nvars).map(|i| (a >> i) & 1 == 1).collect())
+                .collect();
+            let got = pla.eval_batch(&assignments).unwrap();
+            for (a, vars) in assignments.iter().enumerate() {
+                assert_eq!(got[a][0], table[a], "assignment {a}: {vars:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_functions() {
+        // Empty SOP = constant 0; empty min-term = constant 1.
+        let zero = SumOfProducts { terms: vec![] };
+        let one = SumOfProducts { terms: vec![vec![]] };
+        let mut pla = PlaProgram::compile(cfg(), 2, &[zero, one]).unwrap();
+        let got = pla.eval_batch(&[vec![false, false], vec![true, true]]).unwrap();
+        assert_eq!(got[0], vec![false, true]);
+        assert_eq!(got[1], vec![false, true]);
+    }
+
+    #[test]
+    fn capacity_checks() {
+        // 9 variables need 18 columns > 16.
+        let f = SumOfProducts { terms: vec![vec![Literal::Pos(8)]] };
+        assert!(PlaProgram::compile(cfg(), 9, &[f]).is_err());
+        // 17 terms exceed one bank.
+        let big = SumOfProducts {
+            terms: (0..17).map(|i| vec![Literal::Pos(i % 3)]).collect(),
+        };
+        assert!(PlaProgram::compile(cfg(), 3, &[big]).is_err());
+        // 3 functions exceed the 2 banks.
+        let f = SumOfProducts { terms: vec![vec![Literal::Pos(0)]] };
+        assert!(PlaProgram::compile(cfg(), 3, &[f.clone(), f.clone(), f]).is_err());
+    }
+}

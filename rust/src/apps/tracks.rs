@@ -1,0 +1,238 @@
+//! Particle track reconstruction on PPAC (§III-A use case; the paper
+//! cites the CMS/ATLAS-style associative-memory trigger chip [7]).
+//!
+//! The associative-memory trigger problem: a detector has `layers`
+//! concentric layers, each divided into coarse bins; a charged particle
+//! leaves one hit bin per layer, and a *track candidate pattern* is the
+//! tuple of bins it crosses. A pattern bank of plausible tracks is stored
+//! in a CAM; every beam crossing, the hit bins are broadcast and every
+//! stored pattern that matches fires — in one cycle, over the whole bank.
+//!
+//! Mapping to PPAC: each pattern row one-hot-encodes its bin per layer
+//! (N = layers × bins columns). With the XNOR operator, a row matches the
+//! event encoding at h̄ = N iff every layer's bin agrees. The programmable
+//! threshold δ = N − 2·missing tolerates `missing` dead/inefficient
+//! layers — exactly the similarity-match feature the trigger chips
+//! implement with majority logic.
+
+use crate::error::{PpacError, Result};
+use crate::isa::{OpMode, PpacUnit};
+use crate::sim::PpacConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// Detector geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub layers: usize,
+    pub bins: usize,
+}
+
+impl Geometry {
+    pub fn width(&self) -> usize {
+        self.layers * self.bins
+    }
+
+    /// One-hot encode a per-layer bin tuple.
+    pub fn encode(&self, bins: &[usize]) -> Result<Vec<bool>> {
+        if bins.len() != self.layers {
+            return Err(PpacError::DimMismatch {
+                context: "track layers",
+                expected: self.layers,
+                got: bins.len(),
+            });
+        }
+        let mut x = vec![false; self.width()];
+        for (layer, &b) in bins.iter().enumerate() {
+            if b >= self.bins {
+                return Err(PpacError::Config(format!("bin {b} out of range")));
+            }
+            x[layer * self.bins + b] = true;
+        }
+        Ok(x)
+    }
+}
+
+/// A pattern bank resident in a PPAC array.
+pub struct PatternBank {
+    unit: PpacUnit,
+    geo: Geometry,
+    patterns: Vec<Vec<usize>>,
+}
+
+impl PatternBank {
+    /// Store a bank of track patterns (bin tuple per pattern).
+    pub fn new(cfg: PpacConfig, geo: Geometry, patterns: Vec<Vec<usize>>) -> Result<Self> {
+        if geo.width() > cfg.n {
+            return Err(PpacError::Config(format!(
+                "geometry needs {} columns > N = {}",
+                geo.width(),
+                cfg.n
+            )));
+        }
+        if patterns.len() > cfg.m {
+            return Err(PpacError::Config("pattern bank overflow".into()));
+        }
+        let mut rows = Vec::with_capacity(cfg.m);
+        for p in &patterns {
+            let mut row = geo.encode(p)?;
+            row.resize(cfg.n, false);
+            rows.push(row);
+        }
+        rows.resize(cfg.m, vec![false; cfg.n]);
+        let mut unit = PpacUnit::new(cfg)?;
+        unit.load_bit_matrix(&rows)?;
+        // Complete match by default; thresholds re-programmed per query.
+        let mut deltas = vec![cfg.n as i64 + 1; cfg.m];
+        for d in deltas.iter_mut().take(patterns.len()) {
+            *d = cfg.n as i64;
+        }
+        unit.configure(OpMode::Cam { deltas })?;
+        Ok(Self { unit, geo, patterns })
+    }
+
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    /// Match events against the bank, tolerating up to `missing` layers
+    /// without a (correct) hit. Returns matching pattern ids per event —
+    /// one PPAC cycle per event regardless of bank size.
+    pub fn match_events(
+        &mut self,
+        events: &[Vec<usize>],
+        missing: usize,
+    ) -> Result<Vec<Vec<usize>>> {
+        let cfg = *self.unit.config();
+        // A wrong/absent layer hit costs 2 similarity (one 1→0 and one
+        // 0→1 against the one-hot pattern), so δ = N − 2·missing.
+        let delta = cfg.n as i64 - 2 * missing as i64;
+        let mut deltas = vec![cfg.n as i64 + 1; cfg.m];
+        for d in deltas.iter_mut().take(self.patterns.len()) {
+            *d = delta;
+        }
+        self.unit.configure(OpMode::Cam { deltas })?;
+        let queries: Vec<Vec<bool>> = events
+            .iter()
+            .map(|e| {
+                let mut x = self.geo.encode(e)?;
+                x.resize(cfg.n, false);
+                Ok(x)
+            })
+            .collect::<Result<_>>()?;
+        let matches = self.unit.cam_batch(&queries)?;
+        Ok(matches
+            .into_iter()
+            .map(|row| {
+                row[..self.patterns.len()]
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &m)| m.then_some(i))
+                    .collect()
+            })
+            .collect())
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.unit.compute_cycles()
+    }
+}
+
+/// Generate a synthetic pattern bank + events: straight tracks with a
+/// random slope/intercept through the binned layers.
+pub fn synthetic_bank(
+    rng: &mut Xoshiro256pp,
+    geo: Geometry,
+    n_patterns: usize,
+) -> Vec<Vec<usize>> {
+    (0..n_patterns)
+        .map(|_| {
+            let b0 = rng.below(geo.bins as u64) as i64;
+            let slope = rng.range_i64(-1, 1);
+            (0..geo.layers)
+                .map(|l| {
+                    (b0 + slope * l as i64).rem_euclid(geo.bins as i64) as usize
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Geometry, PatternBank, Vec<Vec<usize>>) {
+        let geo = Geometry { layers: 8, bins: 16 };
+        let mut rng = Xoshiro256pp::seeded(300);
+        let patterns = synthetic_bank(&mut rng, geo, 48);
+        let cfg = PpacConfig::new(64, 128);
+        let bank = PatternBank::new(cfg, geo, patterns.clone()).unwrap();
+        (geo, bank, patterns)
+    }
+
+    #[test]
+    fn exact_event_fires_its_pattern() {
+        let (_, mut bank, patterns) = setup();
+        let hits = bank.match_events(&[patterns[7].clone()], 0).unwrap();
+        assert!(hits[0].contains(&7));
+        // Every fired pattern must be identical to the event (exact mode).
+        for &id in &hits[0] {
+            assert_eq!(patterns[id], patterns[7]);
+        }
+    }
+
+    #[test]
+    fn one_dead_layer_recovered_with_majority_threshold() {
+        let (geo, mut bank, patterns) = setup();
+        let mut event = patterns[3].clone();
+        event[5] = (event[5] + 1) % geo.bins; // scattered hit on layer 5
+        let exact = bank.match_events(&[event.clone()], 0).unwrap();
+        assert!(!exact[0].contains(&3), "exact match must miss");
+        let fuzzy = bank.match_events(&[event], 1).unwrap();
+        assert!(fuzzy[0].contains(&3), "1-missing-layer match must fire");
+    }
+
+    #[test]
+    fn noise_event_fires_nothing_exact() {
+        let (geo, mut bank, patterns) = setup();
+        // An event whose layer bins are deliberately off every pattern.
+        let mut rng = Xoshiro256pp::seeded(301);
+        'outer: loop {
+            let event: Vec<usize> = (0..geo.layers)
+                .map(|_| rng.below(geo.bins as u64) as usize)
+                .collect();
+            for p in &patterns {
+                if *p == event {
+                    continue 'outer;
+                }
+            }
+            let hits = bank.match_events(&[event], 0).unwrap();
+            assert!(hits[0].is_empty());
+            break;
+        }
+    }
+
+    #[test]
+    fn one_cycle_per_event_regardless_of_bank_size() {
+        let (_, mut bank, patterns) = setup();
+        let before = bank.compute_cycles();
+        let events: Vec<Vec<usize>> = patterns[..32].to_vec();
+        bank.match_events(&events, 0).unwrap();
+        // 32 events + 1 drain (the whole 48-pattern bank searched per
+        // cycle).
+        assert_eq!(bank.compute_cycles() - before, 33);
+    }
+
+    #[test]
+    fn geometry_validation() {
+        let geo = Geometry { layers: 4, bins: 8 };
+        assert!(geo.encode(&[0, 1, 2]).is_err(), "wrong layer count");
+        assert!(geo.encode(&[0, 1, 2, 8]).is_err(), "bin out of range");
+        let cfg = PpacConfig::new(16, 16); // too narrow for 4×8
+        assert!(PatternBank::new(cfg, geo, vec![]).is_err());
+    }
+}

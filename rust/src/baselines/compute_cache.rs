@@ -1,0 +1,209 @@
+//! Bit-serial in-cache computing baseline (Compute Caches [3] /
+//! Neural Cache [4]) — the comparator of the paper's §IV-B cycle-count
+//! argument.
+//!
+//! The paper cites, for the bit-serial in-SRAM approach of [4]:
+//!
+//! * element-wise multiply of two L-bit vectors: **L² + 5L − 2** cycles
+//!   (independent of the vector dimension — bitlines process all elements
+//!   in parallel);
+//! * sum-reduction of an N-vector with L-bit entries: **O(L·log₂ N)**,
+//!   ≥ L·log₂ N cycles (a product of two L-bit numbers is 2L bits wide,
+//!   so the reduction after a multiply runs at 2L bits).
+//!
+//! Hence a 4-bit, 256-dimensional inner product costs at least
+//! 34 + 64 = **98 cycles**, versus **16** on PPAC (K·L with K = L = 4).
+//!
+//! Besides the cost model we implement a *behavioural* transposed
+//! bit-serial SRAM array: data stored bit-planes-in-rows, compute done
+//! only with row-wise AND/XOR/OR (the operations in-SRAM logic provides),
+//! one row operation per cycle. It produces bit-exact results and its
+//! measured cycle counts respect the formulas' lower bounds — evidence
+//! the model is not a strawman.
+
+/// Cycle-cost model for the bit-serial in-cache baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeCacheModel;
+
+impl ComputeCacheModel {
+    /// Element-wise multiply of two L-bit vectors ([4], as cited in §IV-B).
+    pub fn elementwise_mul_cycles(&self, lbits: u32) -> u64 {
+        let l = lbits as u64;
+        l * l + 5 * l - 2
+    }
+
+    /// Sum-reduction of N elements of `width` bits (lower bound).
+    pub fn reduction_cycles(&self, n: usize, width: u32) -> u64 {
+        (width as u64) * (n as f64).log2().ceil() as u64
+    }
+
+    /// Inner product of two L-bit N-vectors: multiply + reduce(2L bits).
+    pub fn inner_product_cycles(&self, n: usize, lbits: u32) -> u64 {
+        self.elementwise_mul_cycles(lbits) + self.reduction_cycles(n, 2 * lbits)
+    }
+
+    /// An M×N MVP: the cache computes one N-dim inner product per array
+    /// occupancy; with enough ways all M rows proceed in parallel, so the
+    /// MVP latency equals the inner-product latency (optimistic for the
+    /// baseline).
+    pub fn mvp_cycles(&self, n: usize, lbits: u32) -> u64 {
+        self.inner_product_cycles(n, lbits)
+    }
+}
+
+/// Behavioural transposed bit-serial SRAM compute array.
+///
+/// `lanes` elements are processed in parallel (one per bitline); values
+/// are stored LSB-first as rows of bits. Every row-level logic operation
+/// (AND/XOR/OR over all lanes) costs one cycle, matching the in-SRAM
+/// compute primitive of [3].
+#[derive(Debug, Clone)]
+pub struct BitSerialCache {
+    lanes: usize,
+    cycles: u64,
+}
+
+impl BitSerialCache {
+    pub fn new(lanes: usize) -> Self {
+        Self { lanes, cycles: 0 }
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn rowop(&mut self) {
+        self.cycles += 1;
+    }
+
+    /// Element-wise multiply of unsigned `a`, `b` (L-bit each) via
+    /// bit-serial shift-and-add with a ripple-carry implemented from
+    /// row-wise AND/XOR: for each multiplier bit l (L passes), AND-gate
+    /// the multiplicand (1 row op) and add it into a 2L-bit accumulator
+    /// (sum + carry per bit: 2 row ops per bit position).
+    pub fn elementwise_mul(&mut self, a: &[u64], b: &[u64], lbits: u32) -> Vec<u64> {
+        assert_eq!(a.len(), b.len());
+        assert!(a.len() <= self.lanes);
+        let width = 2 * lbits;
+        let mut acc = vec![0u64; a.len()];
+        for l in 0..lbits {
+            // Predicate row: multiplier bit l of every lane (1 op).
+            self.rowop();
+            let addend: Vec<u64> = a
+                .iter()
+                .zip(b)
+                .map(|(&av, &bv)| if (bv >> l) & 1 == 1 { av << l } else { 0 })
+                .collect();
+            // Ripple add into the accumulator: per output bit, a sum row
+            // op (XOR) and a carry row op (AND/OR) — 2·width ops, but
+            // carry-save trickery in [4] amortizes to ~width + l; we count
+            // the straightforward 2 ops per *changed* bit span.
+            for _bit in 0..(lbits + l + 1).min(width) {
+                self.rowop(); // sum (XOR)
+                self.rowop(); // carry (MAJ)
+            }
+            for (acc_v, add_v) in acc.iter_mut().zip(&addend) {
+                *acc_v += add_v;
+            }
+        }
+        acc
+    }
+
+    /// Tree sum-reduction: log₂(N) rounds of pairwise adds, each add of
+    /// `width`-bit numbers costing `width` row ops (carry-save).
+    pub fn reduce_sum(&mut self, vals: &[u64], width: u32) -> u64 {
+        let mut cur: Vec<u64> = vals.to_vec();
+        while cur.len() > 1 {
+            let mut next = Vec::with_capacity(cur.len().div_ceil(2));
+            for pair in cur.chunks(2) {
+                if pair.len() == 2 {
+                    next.push(pair[0] + pair[1]);
+                } else {
+                    next.push(pair[0]);
+                }
+            }
+            // One round: all pairwise adds happen lane-parallel; cost =
+            // width row ops.
+            for _ in 0..width {
+                self.rowop();
+            }
+            cur = next;
+        }
+        cur.first().copied().unwrap_or(0)
+    }
+
+    /// Full inner product of two unsigned L-bit vectors.
+    pub fn inner_product(&mut self, a: &[u64], b: &[u64], lbits: u32) -> u64 {
+        let prods = self.elementwise_mul(a, b, lbits);
+        self.reduce_sum(&prods, 2 * lbits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn paper_headline_cycle_counts() {
+        let m = ComputeCacheModel;
+        // §IV-B: 4-bit elementwise multiply = 34 cycles.
+        assert_eq!(m.elementwise_mul_cycles(4), 34);
+        // 256-dim reduction at 8 bits = 64 cycles.
+        assert_eq!(m.reduction_cycles(256, 8), 64);
+        // Total inner product ≥ 98 cycles.
+        assert_eq!(m.inner_product_cycles(256, 4), 98);
+    }
+
+    #[test]
+    fn behavioural_multiply_is_exact() {
+        let mut rng = Xoshiro256pp::seeded(3);
+        let mut cache = BitSerialCache::new(256);
+        for lbits in [1u32, 2, 4, 8] {
+            let hi = (1u64 << lbits) - 1;
+            let a: Vec<u64> = (0..64).map(|_| rng.below(hi + 1)).collect();
+            let b: Vec<u64> = (0..64).map(|_| rng.below(hi + 1)).collect();
+            let got = cache.elementwise_mul(&a, &b, lbits);
+            for i in 0..64 {
+                assert_eq!(got[i], a[i] * b[i], "L={lbits} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn behavioural_inner_product_exact_and_respects_lower_bound() {
+        let mut rng = Xoshiro256pp::seeded(4);
+        let model = ComputeCacheModel;
+        for (n, lbits) in [(256usize, 4u32), (64, 2), (128, 3)] {
+            let hi = (1u64 << lbits) - 1;
+            let a: Vec<u64> = (0..n).map(|_| rng.below(hi + 1)).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.below(hi + 1)).collect();
+            let mut cache = BitSerialCache::new(n);
+            let got = cache.inner_product(&a, &b, lbits);
+            let want: u64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(got, want, "N={n} L={lbits}");
+            // The analytic model is a documented *lower* bound.
+            assert!(
+                cache.cycles() >= model.inner_product_cycles(n, lbits),
+                "N={n} L={lbits}: behavioural {} < model {}",
+                cache.cycles(),
+                model.inner_product_cycles(n, lbits)
+            );
+        }
+    }
+
+    #[test]
+    fn ppac_vs_cache_crossover_grows_with_precision() {
+        // PPAC: K·L cycles; cache: L²+5L−2 + 2L·log₂N. The advantage
+        // must hold for all practical L at N = 256.
+        let m = ComputeCacheModel;
+        for l in 1..=8u32 {
+            let ppac = (l * l) as u64; // K = L
+            let cache = m.inner_product_cycles(256, l);
+            assert!(
+                cache > 3 * ppac,
+                "L={l}: cache {cache} vs ppac {ppac}"
+            );
+        }
+    }
+}

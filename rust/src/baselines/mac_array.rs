@@ -1,0 +1,76 @@
+//! Conventional digital MAC-array baseline (context for the Fig. 1
+//! efficiency–flexibility discussion).
+//!
+//! A weight-stationary P×P systolic array of multiply-accumulate units,
+//! the standard von-Neumann-side comparison point: it needs L×L-bit
+//! multipliers (area/energy grow with precision) but reuses one datapath
+//! for all precisions, whereas PPAC's cycles grow as K·L while its
+//! datapath stays 1-bit.
+
+/// Cycle/energy model of a P×P output-stationary MAC array.
+#[derive(Debug, Clone, Copy)]
+pub struct MacArrayModel {
+    /// Array edge (PEs per side).
+    pub p: usize,
+    /// Clock (GHz) — a synthesized 28 nm MAC array comfortably hits 1 GHz.
+    pub f_ghz: f64,
+    /// Energy per L-bit MAC in fJ at L = 8 (scales ~quadratically with L).
+    pub e_mac8_fj: f64,
+}
+
+impl Default for MacArrayModel {
+    fn default() -> Self {
+        // ~25 fJ for an 8-bit MAC in 28 nm (typical synthesized figure).
+        Self { p: 16, f_ghz: 1.0, e_mac8_fj: 25.0 }
+    }
+}
+
+impl MacArrayModel {
+    /// Cycles for an M×N MVP: M·N MACs over P² PEs (+ pipeline fill).
+    pub fn mvp_cycles(&self, m: usize, n: usize) -> u64 {
+        let macs = (m * n) as u64;
+        let pes = (self.p * self.p) as u64;
+        macs.div_ceil(pes) + 2 * self.p as u64
+    }
+
+    /// Energy for an M×N MVP at `lbits` precision (fJ).
+    pub fn mvp_energy_fj(&self, m: usize, n: usize, lbits: u32) -> f64 {
+        let per_mac = self.e_mac8_fj * (lbits as f64 / 8.0).powi(2).max(0.02);
+        (m * n) as f64 * per_mac
+    }
+
+    /// MVPs per second.
+    pub fn mvps_per_sec(&self, m: usize, n: usize) -> f64 {
+        self.f_ghz * 1e9 / self.mvp_cycles(m, n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mvp_cycles_scale_with_work() {
+        let m = MacArrayModel::default();
+        // 256×256 MVP on a 16×16 array: 65536/256 = 256 cycles + fill.
+        assert_eq!(m.mvp_cycles(256, 256), 256 + 32);
+        assert!(m.mvp_cycles(16, 16) < m.mvp_cycles(256, 256));
+    }
+
+    #[test]
+    fn ppac_throughput_advantage_at_1bit() {
+        // PPAC does a 256×256 1-bit MVP per cycle at 0.703 GHz; the MAC
+        // array needs ~288 cycles at 1 GHz — PPAC is >100× faster.
+        let mac = MacArrayModel::default();
+        let ppac_mvps = 0.703e9;
+        let mac_mvps = mac.mvps_per_sec(256, 256);
+        assert!(ppac_mvps / mac_mvps > 100.0, "ratio {}", ppac_mvps / mac_mvps);
+    }
+
+    #[test]
+    fn energy_grows_with_precision() {
+        let m = MacArrayModel::default();
+        assert!(m.mvp_energy_fj(16, 16, 8) > m.mvp_energy_fj(16, 16, 4));
+        assert!(m.mvp_energy_fj(16, 16, 4) > m.mvp_energy_fj(16, 16, 1));
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline comparators the paper evaluates against:
+//!
+//! - [`compute_cache`] — the bit-serial in-cache model ([3]/[4]) behind
+//!   the §IV-B 98-vs-16-cycle argument, plus a behavioural bit-serial
+//!   SRAM simulator validating it;
+//! - [`accelerators`] — the Table IV BNN-accelerator database with the
+//!   technology-scaling arithmetic;
+//! - [`mac_array`] — a conventional systolic MAC array for the Fig. 1
+//!   efficiency–flexibility context.
+
+pub mod accelerators;
+pub mod compute_cache;
+pub mod mac_array;
+
+pub use accelerators::{Accelerator, COMPARISON, PPAC_ROW};
+pub use compute_cache::{BitSerialCache, ComputeCacheModel};
+pub use mac_array::MacArrayModel;

@@ -1,0 +1,93 @@
+//! Job types flowing through the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Identifier of a registered (resident-able) matrix.
+pub type MatrixId = u64;
+
+/// The payload of one MVP-like request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobInput {
+    /// 1-bit {±1} MVP: N input bits → M int results.
+    Pm1Mvp(Vec<bool>),
+    /// Hamming similarities: N input bits → M counts.
+    Hamming(Vec<bool>),
+    /// GF(2) MVP: N input bits → M result bits.
+    Gf2(Vec<bool>),
+}
+
+impl JobInput {
+    pub fn mode_key(&self) -> ModeKey {
+        match self {
+            JobInput::Pm1Mvp(_) => ModeKey::Pm1Mvp,
+            JobInput::Hamming(_) => ModeKey::Hamming,
+            JobInput::Gf2(_) => ModeKey::Gf2,
+        }
+    }
+
+    pub fn bits(&self) -> &[bool] {
+        match self {
+            JobInput::Pm1Mvp(b) | JobInput::Hamming(b) | JobInput::Gf2(b) => b,
+        }
+    }
+}
+
+/// Batchable operation class (jobs with the same matrix + mode batch
+/// together).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModeKey {
+    Pm1Mvp,
+    Hamming,
+    Gf2,
+}
+
+/// The result payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobOutput {
+    Ints(Vec<i64>),
+    Bits(Vec<bool>),
+}
+
+/// A completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job_id: u64,
+    pub output: JobOutput,
+    /// Wall-clock service latency (submit → result).
+    pub latency_us: f64,
+    /// Simulated-hardware cycles attributed to this job's batch, divided
+    /// evenly over the batch (II = 1 ⇒ ~1 cycle/job for 1-bit modes).
+    pub cycles_share: f64,
+    /// Worker that served it.
+    pub worker: usize,
+    /// Batch size it was served in.
+    pub batch_size: usize,
+}
+
+/// An in-flight request (internal).
+pub struct Job {
+    pub job_id: u64,
+    pub matrix: MatrixId,
+    pub input: JobInput,
+    pub submitted: Instant,
+    pub respond: Sender<JobResult>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_keys_partition_inputs() {
+        assert_eq!(JobInput::Pm1Mvp(vec![true]).mode_key(), ModeKey::Pm1Mvp);
+        assert_eq!(JobInput::Hamming(vec![]).mode_key(), ModeKey::Hamming);
+        assert_eq!(JobInput::Gf2(vec![false]).mode_key(), ModeKey::Gf2);
+    }
+
+    #[test]
+    fn bits_accessor() {
+        let j = JobInput::Gf2(vec![true, false]);
+        assert_eq!(j.bits(), &[true, false]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Coordinator metrics: counters + latency reservoir, shared across
+//! worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+/// Shared metrics (atomics for counters, a mutexed reservoir for
+/// latencies).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    pub matrix_loads: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, jobs: usize, cycles: u64, loaded_matrix: bool) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
+        self.jobs_completed.fetch_add(jobs as u64, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        if loaded_matrix {
+            self.matrix_loads.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_latency(&self, us: f64) {
+        let mut l = self.latencies_us.lock().unwrap();
+        // Bounded reservoir: keep the newest 100k samples.
+        if l.len() >= 100_000 {
+            l.drain(..50_000);
+        }
+        l.push(us);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_jobs.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let l = self.latencies_us.lock().unwrap();
+        stats::percentile(&l, p)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch_size: self.mean_batch_size(),
+            matrix_loads: self.matrix_loads.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            p50_us: self.latency_percentile(50.0),
+            p99_us: self.latency_percentile(99.0),
+        }
+    }
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub matrix_loads: u64,
+    pub sim_cycles: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(8, 9, true);
+        m.record_batch(4, 5, false);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 12);
+        assert_eq!(m.matrix_loads.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sim_cycles.load(Ordering::Relaxed), 14);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::default();
+        for i in 1..=100 {
+            m.record_latency(i as f64);
+        }
+        assert!((m.latency_percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(m.latency_percentile(99.0) > 95.0);
+    }
+
+    #[test]
+    fn snapshot_is_consistent() {
+        let m = Metrics::default();
+        m.jobs_submitted.store(5, Ordering::Relaxed);
+        m.record_batch(5, 6, false);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 5);
+        assert_eq!(s.jobs_completed, 5);
+        assert_eq!(s.batches, 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! L3 coordinator: a multi-tile PPAC serving layer.
+//!
+//! The paper's envisioned deployment keeps the matrix A static while
+//! input vectors stream at high rate (§IV-A). The coordinator turns that
+//! into a service: clients register matrices, then submit MVP-like jobs;
+//! a **residency-aware router** sends each job to a tile that already
+//! holds its matrix (loading a 256-row matrix costs 256 write cycles —
+//! the analogue of a vLLM router's prefix-cache affinity), and each
+//! worker **batches** consecutive same-matrix jobs to exploit the
+//! one-MVP-per-cycle pipeline.
+//!
+//! Threads + channels only (the image vendors no tokio); the public API
+//! is synchronous handles over mpsc.
+
+pub mod job;
+pub mod metrics;
+pub mod worker;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{PpacError, Result};
+use crate::sim::PpacConfig;
+
+pub use job::{JobInput, JobOutput, JobResult, MatrixId, ModeKey};
+pub use metrics::{Metrics, MetricsSnapshot};
+use worker::{MatrixRegistry, Worker, WorkerMsg};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    pub tile: PpacConfig,
+    pub workers: usize,
+    pub max_batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { tile: PpacConfig::new(256, 256), workers: 4, max_batch: 64 }
+    }
+}
+
+/// Handle to an in-flight job.
+pub struct JobHandle {
+    pub job_id: u64,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the result arrives.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| PpacError::Coordinator("worker dropped the job".into()))
+    }
+}
+
+/// The coordinator: owns worker threads and the routing table.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    registry: MatrixRegistry,
+    senders: Vec<Sender<WorkerMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    /// matrix → worker affinity (residency-aware routing).
+    affinity: RwLock<HashMap<MatrixId, usize>>,
+    /// jobs routed per worker (for least-loaded placement).
+    routed: Vec<AtomicU64>,
+    next_matrix: AtomicU64,
+    next_job: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        if cfg.workers == 0 || cfg.max_batch == 0 {
+            return Err(PpacError::Config("workers/max_batch must be ≥ 1".into()));
+        }
+        cfg.tile.validate()?;
+        let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
+        let metrics = Arc::new(Metrics::default());
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for id in 0..cfg.workers {
+            let (tx, rx) = channel();
+            let worker = Worker::new(
+                id,
+                cfg.tile,
+                Arc::clone(&registry),
+                Arc::clone(&metrics),
+                cfg.max_batch,
+            )?;
+            handles.push(std::thread::spawn(move || worker.run(rx)));
+            senders.push(tx);
+        }
+        Ok(Self {
+            registry,
+            senders,
+            handles,
+            affinity: RwLock::new(HashMap::new()),
+            routed: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            next_matrix: AtomicU64::new(1),
+            next_job: AtomicU64::new(1),
+            metrics,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Register a matrix (M×N bit rows) for later jobs.
+    pub fn register_matrix(&self, rows: Vec<Vec<bool>>) -> Result<MatrixId> {
+        let tile = self.cfg.tile;
+        if rows.len() != tile.m {
+            return Err(PpacError::DimMismatch {
+                context: "register_matrix rows",
+                expected: tile.m,
+                got: rows.len(),
+            });
+        }
+        for r in &rows {
+            if r.len() != tile.n {
+                return Err(PpacError::DimMismatch {
+                    context: "register_matrix row width",
+                    expected: tile.n,
+                    got: r.len(),
+                });
+            }
+        }
+        let id = self.next_matrix.fetch_add(1, Ordering::Relaxed);
+        self.registry.write().unwrap().insert(id, Arc::new(rows));
+        Ok(id)
+    }
+
+    /// Pick the worker for a matrix: resident tile if any, else the
+    /// least-loaded worker (and pin the affinity there).
+    fn route(&self, matrix: MatrixId) -> usize {
+        if let Some(&w) = self.affinity.read().unwrap().get(&matrix) {
+            return w;
+        }
+        let mut aff = self.affinity.write().unwrap();
+        *aff.entry(matrix).or_insert_with(|| {
+            self.routed
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+    }
+
+    /// Submit one job; returns a handle to wait on.
+    pub fn submit(&self, matrix: MatrixId, input: JobInput) -> Result<JobHandle> {
+        if !self.registry.read().unwrap().contains_key(&matrix) {
+            return Err(PpacError::Coordinator(format!("unknown matrix {matrix}")));
+        }
+        if input.bits().len() != self.cfg.tile.n {
+            return Err(PpacError::DimMismatch {
+                context: "job input width",
+                expected: self.cfg.tile.n,
+                got: input.bits().len(),
+            });
+        }
+        let worker = self.route(matrix);
+        self.routed[worker].fetch_add(1, Ordering::Relaxed);
+        let job_id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let job = job::Job {
+            job_id,
+            matrix,
+            input,
+            submitted: Instant::now(),
+            respond: tx,
+        };
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.senders[worker]
+            .send(WorkerMsg::Job(job))
+            .map_err(|_| PpacError::Coordinator("worker gone".into()))?;
+        Ok(JobHandle { job_id, rx })
+    }
+
+    /// Submit many jobs and wait for all results (in submission order).
+    pub fn submit_wait_all(
+        &self,
+        matrix: MatrixId,
+        inputs: Vec<JobInput>,
+    ) -> Result<Vec<JobResult>> {
+        let handles: Vec<JobHandle> = inputs
+            .into_iter()
+            .map(|i| self.submit(matrix, i))
+            .collect::<Result<_>>()?;
+        handles.into_iter().map(JobHandle::wait).collect()
+    }
+
+    /// Graceful shutdown: drain queues, join workers.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}

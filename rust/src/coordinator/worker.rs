@@ -1,0 +1,170 @@
+//! Worker: one thread owning one PPAC tile (a `PpacUnit`), serving
+//! batches of jobs against whichever matrix is currently resident.
+//!
+//! The worker drains its queue, groups *consecutive jobs with the same
+//! (matrix, mode)* into a batch (up to `max_batch`), reconfigures / reloads
+//! only on change — mirroring the paper's use case where A stays static
+//! while x streams — and answers each job through its response channel.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::isa::{OpMode, PpacUnit};
+use crate::sim::PpacConfig;
+
+use super::job::{Job, JobOutput, JobResult, MatrixId, ModeKey};
+use super::metrics::Metrics;
+
+/// Messages a worker consumes.
+pub enum WorkerMsg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Shared, read-only matrix registry.
+pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<MatrixId, Arc<Vec<Vec<bool>>>>>>;
+
+pub struct Worker {
+    pub id: usize,
+    unit: PpacUnit,
+    resident: Option<(MatrixId, ModeKey)>,
+    registry: MatrixRegistry,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    /// Simulated cycles consumed by this worker (compute + loads).
+    pub cycles: Arc<AtomicU64>,
+}
+
+impl Worker {
+    pub fn new(
+        id: usize,
+        cfg: PpacConfig,
+        registry: MatrixRegistry,
+        metrics: Arc<Metrics>,
+        max_batch: usize,
+    ) -> Result<Self> {
+        Ok(Self {
+            id,
+            unit: PpacUnit::new(cfg)?,
+            resident: None,
+            registry,
+            metrics,
+            max_batch,
+            cycles: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Blocking worker loop: runs until `Shutdown`.
+    pub fn run(mut self, rx: Receiver<WorkerMsg>) {
+        let mut pending: Option<Job> = None;
+        loop {
+            // Fetch the head job (carried over or fresh).
+            let head = match pending.take() {
+                Some(j) => j,
+                None => match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(WorkerMsg::Job(j)) => j,
+                    Ok(WorkerMsg::Shutdown) => return,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => return,
+                },
+            };
+            // Greedily batch more jobs with the same (matrix, mode).
+            let key = (head.matrix, head.input.mode_key());
+            let mut batch = vec![head];
+            while batch.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(WorkerMsg::Job(j)) => {
+                        if (j.matrix, j.input.mode_key()) == key {
+                            batch.push(j);
+                        } else {
+                            pending = Some(j);
+                            break;
+                        }
+                    }
+                    Ok(WorkerMsg::Shutdown) => {
+                        self.serve_batch(key, batch);
+                        return;
+                    }
+                    Err(_) => break,
+                }
+            }
+            self.serve_batch(key, batch);
+        }
+    }
+
+    fn serve_batch(&mut self, key: (MatrixId, ModeKey), batch: Vec<Job>) {
+        let (matrix_id, mode) = key;
+        // (Re)load + reconfigure if residency changed.
+        let mut loaded = false;
+        if self.resident != Some(key) {
+            let rows = {
+                let reg = self.registry.read().unwrap();
+                reg.get(&matrix_id).cloned()
+            };
+            let Some(rows) = rows else {
+                // Unknown matrix: fail every job by dropping senders.
+                return;
+            };
+            let cyc0 = self.unit.setup_cycles() + self.unit.compute_cycles();
+            if self
+                .unit
+                .load_bit_matrix(&rows)
+                .and_then(|_| {
+                    self.unit.configure(match mode {
+                        ModeKey::Pm1Mvp => OpMode::Pm1Mvp,
+                        ModeKey::Hamming => OpMode::Hamming,
+                        ModeKey::Gf2 => OpMode::Gf2Mvp,
+                    })
+                })
+                .is_err()
+            {
+                return;
+            }
+            let cyc1 = self.unit.setup_cycles() + self.unit.compute_cycles();
+            self.cycles.fetch_add(cyc1 - cyc0, Ordering::Relaxed);
+            self.resident = Some(key);
+            loaded = true;
+        }
+
+        let inputs: Vec<Vec<bool>> =
+            batch.iter().map(|j| j.input.bits().to_vec()).collect();
+        let before = self.unit.compute_cycles();
+        let outputs: Vec<JobOutput> = match mode {
+            ModeKey::Pm1Mvp => match self.unit.mvp1_batch(&inputs) {
+                Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
+                Err(_) => return,
+            },
+            ModeKey::Hamming => match self.unit.hamming_batch(&inputs) {
+                Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
+                Err(_) => return,
+            },
+            ModeKey::Gf2 => match self.unit.gf2_batch(&inputs) {
+                Ok(ys) => ys.into_iter().map(JobOutput::Bits).collect(),
+                Err(_) => return,
+            },
+        };
+        let cycles = self.unit.compute_cycles() - before;
+        self.cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.metrics.record_batch(batch.len(), cycles, loaded);
+
+        let share = cycles as f64 / batch.len() as f64;
+        let bsz = batch.len();
+        for (job, output) in batch.into_iter().zip(outputs) {
+            let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+            self.metrics.record_latency(latency_us);
+            // A dropped receiver just means the client went away.
+            let _ = job.respond.send(JobResult {
+                job_id: job.job_id,
+                output,
+                latency_us,
+                cycles_share: share,
+                worker: self.id,
+                batch_size: bsz,
+            });
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum PpacError {
+    #[error("value {value} not representable as {nbits}-bit {fmt}")]
+    FormatRange {
+        value: i64,
+        nbits: u32,
+        fmt: &'static str,
+    },
+
+    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
+    DimMismatch {
+        context: &'static str,
+        expected: usize,
+        got: usize,
+    },
+
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    #[error("row {row} out of range (M = {m})")]
+    RowOutOfRange { row: usize, m: usize },
+
+    #[error("runtime artifact error: {0}")]
+    Artifact(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error(transparent)]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+pub type Result<T> = std::result::Result<T, PpacError>;

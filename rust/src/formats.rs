@@ -1,0 +1,292 @@
+//! Number formats supported by PPAC (paper Table I) and bit-plane
+//! (de)composition for the bit-serial multi-bit MVP schedules (§III-C).
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — the two sides are
+//! cross-checked through the AOT artifacts at runtime and by unit tests
+//! with fixed vectors here.
+//!
+//! Bit convention: logical HI = 1, LO = 0. In the ±1 interpretation
+//! HI ↦ +1 and LO ↦ −1 (paper §II-A). Planes are MSB-first, matching the
+//! hardware schedule (PPAC consumes the most significant plane first).
+
+use crate::error::PpacError;
+
+/// The three L-bit number formats of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NumberFormat {
+    /// LO=0, HI=1, unsigned: [0, 2^L − 1].
+    Uint,
+    /// LO=0, HI=1, 2's-complement signed: [−2^(L−1), 2^(L−1) − 1].
+    Int,
+    /// LO=−1, HI=+1: signed odd numbers [−2^L + 1, 2^L − 1]; cannot
+    /// represent 0.
+    OddInt,
+}
+
+impl NumberFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            NumberFormat::Uint => "uint",
+            NumberFormat::Int => "int",
+            NumberFormat::OddInt => "oddint",
+        }
+    }
+
+    pub fn is_signed(self) -> bool {
+        !matches!(self, NumberFormat::Uint)
+    }
+
+    /// Inclusive representable range for an `nbits`-bit value (Table I).
+    pub fn range(self, nbits: u32) -> (i64, i64) {
+        match self {
+            NumberFormat::Uint => (0, (1i64 << nbits) - 1),
+            NumberFormat::Int => (-(1i64 << (nbits - 1)), (1i64 << (nbits - 1)) - 1),
+            NumberFormat::OddInt => (-(1i64 << nbits) + 1, (1i64 << nbits) - 1),
+        }
+    }
+
+    /// Check representability (oddint also excludes even values).
+    pub fn contains(self, nbits: u32, v: i64) -> bool {
+        let (lo, hi) = self.range(nbits);
+        if v < lo || v > hi {
+            return false;
+        }
+        match self {
+            NumberFormat::OddInt => v % 2 != 0,
+            _ => true,
+        }
+    }
+
+    /// Encode `v` as its `nbits`-bit pattern (LSB at bit 0 of the result).
+    pub fn encode(self, nbits: u32, v: i64) -> Result<u64, PpacError> {
+        if !self.contains(nbits, v) {
+            return Err(PpacError::FormatRange {
+                value: v,
+                nbits,
+                fmt: self.name(),
+            });
+        }
+        Ok(match self {
+            NumberFormat::Uint => v as u64,
+            // 2's complement within nbits.
+            NumberFormat::Int => (v as u64) & ((1u64 << nbits) - 1),
+            // oddint value = Σ 2^(l−1)·(2 b_l − 1)  ⇒  pattern = (v + 2^L − 1)/2.
+            NumberFormat::OddInt => ((v + (1i64 << nbits) - 1) / 2) as u64,
+        })
+    }
+
+    /// Decode an `nbits`-bit pattern back to its integer value.
+    pub fn decode(self, nbits: u32, pattern: u64) -> i64 {
+        debug_assert!(nbits as u64 <= 32 && pattern < (1u64 << nbits));
+        match self {
+            NumberFormat::Uint => pattern as i64,
+            NumberFormat::Int => {
+                let sign = 1u64 << (nbits - 1);
+                if pattern & sign != 0 {
+                    pattern as i64 - (1i64 << nbits)
+                } else {
+                    pattern as i64
+                }
+            }
+            NumberFormat::OddInt => 2 * pattern as i64 - ((1i64 << nbits) - 1),
+        }
+    }
+
+    /// Per-plane weight in the bit-serial recomposition, MSB-first plane
+    /// index `i` of `nbits` planes. For `Int` the MSB plane is negative
+    /// (row-ALU controls `vAccX-1` / `mAccX-1`); `OddInt` folds its ±1
+    /// mapping into the partial products instead, so its weights are the
+    /// plain powers of two.
+    pub fn plane_weight(self, nbits: u32, i: u32) -> i64 {
+        let w = 1i64 << (nbits - 1 - i);
+        if self == NumberFormat::Int && i == 0 {
+            -w
+        } else {
+            w
+        }
+    }
+}
+
+/// Decompose a slice of integers into MSB-first bit-planes.
+///
+/// Returns `nbits` planes, each a Vec<bool> of the same length as `vals`.
+pub fn decompose(vals: &[i64], nbits: u32, fmt: NumberFormat) -> Result<Vec<Vec<bool>>, PpacError> {
+    let mut planes = vec![vec![false; vals.len()]; nbits as usize];
+    for (j, &v) in vals.iter().enumerate() {
+        let pat = fmt.encode(nbits, v)?;
+        for i in 0..nbits {
+            planes[i as usize][j] = (pat >> (nbits - 1 - i)) & 1 == 1;
+        }
+    }
+    Ok(planes)
+}
+
+/// Recompose MSB-first bit-planes back to integers (inverse of
+/// [`decompose`]).
+pub fn recompose(planes: &[Vec<bool>], fmt: NumberFormat) -> Vec<i64> {
+    let nbits = planes.len() as u32;
+    let len = planes.first().map_or(0, |p| p.len());
+    let mut out = vec![0i64; len];
+    match fmt {
+        NumberFormat::OddInt => {
+            for (i, plane) in planes.iter().enumerate() {
+                let w = 1i64 << (nbits - 1 - i as u32);
+                for (j, &b) in plane.iter().enumerate() {
+                    out[j] += w * (2 * b as i64 - 1);
+                }
+            }
+        }
+        _ => {
+            for (i, plane) in planes.iter().enumerate() {
+                let w = fmt.plane_weight(nbits, i as u32);
+                for (j, &b) in plane.iter().enumerate() {
+                    out[j] += w * b as i64;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Interleave a multi-bit matrix row into PPAC's column layout (§III-C2):
+/// entry `j` of a K-bit row occupies columns `j*K .. j*K+K`, MSB first.
+pub fn interleave_row(vals: &[i64], kbits: u32, fmt: NumberFormat) -> Result<Vec<bool>, PpacError> {
+    let mut bits = vec![false; vals.len() * kbits as usize];
+    for (j, &v) in vals.iter().enumerate() {
+        let pat = fmt.encode(kbits, v)?;
+        for k in 0..kbits {
+            bits[j * kbits as usize + k as usize] = (pat >> (kbits - 1 - k)) & 1 == 1;
+        }
+    }
+    Ok(bits)
+}
+
+/// Build the length-N input vector that selects significance `k` (MSB-first
+/// index) of a K-bit column layout: position `j*K + k` carries
+/// `plane[j]`, all other positions 0 (§III-C2: inactive columns are nulled
+/// via the AND operator with a 0 input).
+pub fn select_plane_input(plane: &[bool], kbits: u32, k: u32) -> Vec<bool> {
+    let mut x = vec![false; plane.len() * kbits as usize];
+    for (j, &b) in plane.iter().enumerate() {
+        x[j * kbits as usize + k as usize] = b;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Runner;
+
+    const FMTS: [NumberFormat; 3] =
+        [NumberFormat::Uint, NumberFormat::Int, NumberFormat::OddInt];
+
+    #[test]
+    fn table1_l2_examples() {
+        // Table I's L=2 rows, verbatim.
+        assert_eq!(NumberFormat::Uint.range(2), (0, 3));
+        assert_eq!(NumberFormat::Int.range(2), (-2, 1));
+        assert_eq!(NumberFormat::OddInt.range(2), (-3, 3));
+        let dec = |f: NumberFormat| -> Vec<i64> { (0..4).map(|p| f.decode(2, p)).collect() };
+        assert_eq!(dec(NumberFormat::Uint), vec![0, 1, 2, 3]);
+        assert_eq!(dec(NumberFormat::Int), vec![0, 1, -2, -1]);
+        assert_eq!(dec(NumberFormat::OddInt), vec![-3, -1, 1, 3]);
+    }
+
+    #[test]
+    fn oddint_excludes_zero_and_evens() {
+        for l in 1..=4u32 {
+            let (lo, hi) = NumberFormat::OddInt.range(l);
+            for v in lo..=hi {
+                assert_eq!(
+                    NumberFormat::OddInt.contains(l, v),
+                    v % 2 != 0,
+                    "l={l} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_exhaustive() {
+        for fmt in FMTS {
+            for nbits in 1..=8u32 {
+                let (lo, hi) = fmt.range(nbits);
+                for v in lo..=hi {
+                    if !fmt.contains(nbits, v) {
+                        continue;
+                    }
+                    let pat = fmt.encode(nbits, v).unwrap();
+                    assert!(pat < (1 << nbits));
+                    assert_eq!(fmt.decode(nbits, pat), v, "{fmt:?} L={nbits} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range() {
+        assert!(NumberFormat::Uint.encode(4, -1).is_err());
+        assert!(NumberFormat::Uint.encode(4, 16).is_err());
+        assert!(NumberFormat::Int.encode(4, 8).is_err());
+        assert!(NumberFormat::OddInt.encode(4, 2).is_err(), "even value");
+    }
+
+    #[test]
+    fn decompose_recompose_property() {
+        Runner::new(64).check("bitplane-roundtrip", |g| {
+            let fmt = *g.choose(&FMTS);
+            let nbits = 1 + g.rng.below(8) as u32;
+            let (lo, hi) = fmt.range(nbits);
+            let n = g.dim(32);
+            let vals: Vec<i64> = (0..n)
+                .map(|_| {
+                    let mut v = g.rng.range_i64(lo, hi);
+                    if fmt == NumberFormat::OddInt {
+                        v |= 1;
+                        if v > hi {
+                            v = hi;
+                        }
+                    }
+                    v
+                })
+                .collect();
+            let planes = decompose(&vals, nbits, fmt).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(planes.len(), nbits as usize);
+            let back = recompose(&planes, fmt);
+            crate::prop_assert_eq!(back, vals, "fmt={fmt:?} nbits={nbits}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planes_are_msb_first() {
+        // 6 = 0b110 as 3-bit uint → planes [1,1,0].
+        let planes = decompose(&[6], 3, NumberFormat::Uint).unwrap();
+        assert_eq!(
+            planes.iter().map(|p| p[0]).collect::<Vec<_>>(),
+            vec![true, true, false]
+        );
+    }
+
+    #[test]
+    fn int_msb_weight_is_negative() {
+        assert_eq!(NumberFormat::Int.plane_weight(4, 0), -8);
+        assert_eq!(NumberFormat::Int.plane_weight(4, 1), 4);
+        assert_eq!(NumberFormat::Uint.plane_weight(4, 0), 8);
+    }
+
+    #[test]
+    fn interleave_layout_matches_paper() {
+        // Two 2-bit uint entries [2, 1] → columns [1,0, 0,1] (MSB first).
+        let row = interleave_row(&[2, 1], 2, NumberFormat::Uint).unwrap();
+        assert_eq!(row, vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn select_plane_nulls_other_columns() {
+        let x = select_plane_input(&[true, true], 2, 1);
+        // plane goes to significance-1 (LSB) columns: [0,1, 0,1]
+        assert_eq!(x, vec![false, true, false, true]);
+    }
+}

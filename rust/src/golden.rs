@@ -1,0 +1,151 @@
+//! Untimed functional reference models ("golden" models).
+//!
+//! Plain integer implementations of every PPAC operation mode, used to
+//! verify the cycle-accurate simulator, the mode schedules, and (through
+//! the runtime) the JAX/Pallas AOT artifacts. Everything is i64 and
+//! exact.
+
+/// Hamming similarity h̄(a, x) = #equal bits between two bit slices.
+pub fn hamming_similarity(a: &[bool], x: &[bool]) -> u32 {
+    assert_eq!(a.len(), x.len());
+    a.iter().zip(x).filter(|(p, q)| p == q).count() as u32
+}
+
+/// 1-bit {±1} inner product: bits are HI=+1 / LO=−1 (paper eq. 1).
+pub fn pm1_inner(a: &[bool], x: &[bool]) -> i64 {
+    2 * hamming_similarity(a, x) as i64 - a.len() as i64
+}
+
+/// 1-bit {0,1} inner product (AND + popcount).
+pub fn and01_inner(a: &[bool], x: &[bool]) -> i64 {
+    assert_eq!(a.len(), x.len());
+    a.iter().zip(x).filter(|(p, q)| **p && **q).count() as i64
+}
+
+/// Mixed ±1-matrix × {0,1}-vector inner product (paper eq. 2).
+pub fn pm1_mat_01_vec_inner(a: &[bool], x: &[bool]) -> i64 {
+    assert_eq!(a.len(), x.len());
+    a.iter()
+        .zip(x)
+        .map(|(&ab, &xb)| if xb { if ab { 1 } else { -1 } } else { 0 })
+        .sum()
+}
+
+/// Mixed {0,1}-matrix × ±1-vector inner product (paper eq. 3).
+pub fn mat01_pm1_vec_inner(a: &[bool], x: &[bool]) -> i64 {
+    assert_eq!(a.len(), x.len());
+    a.iter()
+        .zip(x)
+        .map(|(&ab, &xb)| if ab { if xb { 1 } else { -1 } } else { 0 })
+        .sum()
+}
+
+/// GF(2) inner product: parity of (a AND x).
+pub fn gf2_inner(a: &[bool], x: &[bool]) -> bool {
+    and01_inner(a, x) & 1 == 1
+}
+
+/// Integer matrix-vector product: y = A·x (rows × len(x)).
+pub fn mvp_i64(a: &[Vec<i64>], x: &[i64]) -> Vec<i64> {
+    a.iter()
+        .map(|row| {
+            assert_eq!(row.len(), x.len());
+            row.iter().zip(x).map(|(r, v)| r * v).sum()
+        })
+        .collect()
+}
+
+/// GF(2) matrix-vector product over bit rows.
+pub fn gf2_mvp(a: &[Vec<bool>], x: &[bool]) -> Vec<bool> {
+    a.iter().map(|row| gf2_inner(row, x)).collect()
+}
+
+/// Boolean min-term evaluation: the term (mask over variables) is 1 iff
+/// every selected variable is 1.
+pub fn min_term(mask: &[bool], vars: &[bool]) -> bool {
+    mask.iter().zip(vars).all(|(&m, &v)| !m || v)
+}
+
+/// Boolean max-term evaluation: 1 iff at least one selected variable is 1.
+pub fn max_term(mask: &[bool], vars: &[bool]) -> bool {
+    mask.iter().zip(vars).any(|(&m, &v)| m && v)
+}
+
+/// Sum-of-min-terms (PLA OR plane): 1 iff any min-term fires.
+pub fn sum_of_minterms(masks: &[Vec<bool>], vars: &[bool]) -> bool {
+    masks.iter().any(|m| min_term(m, vars))
+}
+
+/// Product-of-max-terms: 1 iff every max-term fires.
+pub fn product_of_maxterms(masks: &[Vec<bool>], vars: &[bool]) -> bool {
+    masks.iter().all(|m| max_term(m, vars))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn pm1_inner_identity_with_decoded_values() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        for _ in 0..50 {
+            let a = rng.bits(33);
+            let x = rng.bits(33);
+            let decoded: i64 = a
+                .iter()
+                .zip(&x)
+                .map(|(&p, &q)| (2 * p as i64 - 1) * (2 * q as i64 - 1))
+                .sum();
+            assert_eq!(pm1_inner(&a, &x), decoded);
+        }
+    }
+
+    #[test]
+    fn eq2_eq3_identities() {
+        let mut rng = Xoshiro256pp::seeded(2);
+        for _ in 0..50 {
+            let a = rng.bits(17);
+            let x = rng.bits(17);
+            let n = 17i64;
+            // eq (2): ⟨a,x⟩ = h̄(a,x̂) + h̄(a,1) − N
+            let ones = vec![true; 17];
+            assert_eq!(
+                pm1_mat_01_vec_inner(&a, &x),
+                hamming_similarity(&a, &x) as i64 + hamming_similarity(&a, &ones) as i64 - n
+            );
+            // eq (3): ⟨a,x⟩ = 2⟨a,x̃⟩ + h̄(a,0) − N
+            let zeros = vec![false; 17];
+            assert_eq!(
+                mat01_pm1_vec_inner(&a, &x),
+                2 * and01_inner(&a, &x) + hamming_similarity(&a, &zeros) as i64 - n
+            );
+        }
+    }
+
+    #[test]
+    fn gf2_inner_is_parity() {
+        let x = [true, true, true, true];
+        assert!(gf2_inner(&[true, true, false, true], &x)); // 3 ones → odd
+        assert!(!gf2_inner(&[true, true, false, false], &x)); // 2 ones → even
+        assert!(gf2_inner(&[true, false, false, false], &x)); // 1 one → odd
+        assert!(!gf2_inner(&[false, false, false, false], &x)); // 0 → even
+    }
+
+    #[test]
+    fn minterm_maxterm_logic() {
+        let vars = [true, false, true];
+        assert!(min_term(&[true, false, true], &vars)); // X0·X2
+        assert!(!min_term(&[true, true, false], &vars)); // X0·X1
+        assert!(max_term(&[false, true, true], &vars)); // X1+X2
+        assert!(!max_term(&[false, true, false], &vars)); // X1
+        assert!(min_term(&[false, false, false], &vars), "empty product = 1");
+        assert!(!max_term(&[false, false, false], &vars), "empty sum = 0");
+    }
+
+    #[test]
+    fn mvp_matches_hand_example() {
+        let a = vec![vec![1, 2], vec![-3, 4]];
+        assert_eq!(mvp_i64(&a, &[5, 7]), vec![19, 13]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Operation modes and the schedule compiler (paper §III).
+//!
+//! [`mode`] declares the operation modes; [`unit`] compiles them into
+//! per-cycle control-signal schedules and drives the cycle-accurate
+//! array.
+
+pub mod mode;
+pub mod unit;
+
+pub use mode::{BankCombine, MatrixInterp, OpMode, TermKind};
+pub use unit::PpacUnit;

@@ -1,0 +1,170 @@
+//! PPAC operation modes (paper §III) and their static configuration.
+
+use crate::formats::NumberFormat;
+
+/// How the stored 1-bit matrix is interpreted in multi-bit vector modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixInterp {
+    /// Stored bits are ±1 values (HI=+1 / LO=−1) — XNOR-family partials.
+    Pm1,
+    /// Stored bits are {0,1} values — AND-family partials.
+    U01,
+}
+
+/// The PLA second-stage (bank-level) combiner (§III-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankCombine {
+    /// Sum of terms: output 1 iff p_b > 0 (OR plane).
+    Or,
+    /// Product of terms: output 1 iff p_b = #programmed terms (AND plane).
+    And,
+    /// Majority: output 1 iff p_b ≥ ⌈(#terms+1)/2⌉.
+    Majority,
+}
+
+/// The PLA first-stage (row-level) term type (§III-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TermKind {
+    /// Min-term: δ_m = #literals — row fires iff ALL selected inputs are 1.
+    MinTerm,
+    /// Max-term: δ_m = 1 — row fires iff ANY selected input is 1.
+    MaxTerm,
+    /// Majority over the selected literals: δ_m = ⌈(#literals+1)/2⌉.
+    Majority,
+}
+
+/// A PPAC operation mode: everything the schedule builder needs to
+/// configure the array and sequence the control signals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpMode {
+    /// §III-A: y_m = h̄(a_m, x). One cycle per input vector.
+    Hamming,
+    /// §III-A: CAM with per-row similarity thresholds δ_m (δ = N is the
+    /// complete-match CAM); row m matches iff h̄ ≥ δ_m.
+    Cam { deltas: Vec<i64> },
+    /// §III-B1: 1-bit {±1} MVP via eq. (1). One cycle per vector.
+    Pm1Mvp,
+    /// §III-B2: 1-bit {0,1} MVP (AND + popcount). One cycle per vector.
+    And01Mvp,
+    /// §III-B3: {±1} matrix × {0,1} vector via eq. (2). One setup cycle
+    /// (h̄(a,1) → nreg) when the matrix changes; then one cycle per vector.
+    Pm1Mat01Vec,
+    /// §III-B4: {0,1} matrix × {±1} vector via eq. (3). One setup cycle
+    /// (h̄(a,0) → nreg); then one cycle per vector.
+    Mat01Pm1Vec,
+    /// §III-C1: 1-bit matrix × L-bit vector, L cycles per vector.
+    MultibitVector {
+        lbits: u32,
+        x_fmt: NumberFormat,
+        matrix: MatrixInterp,
+    },
+    /// §III-C2: K-bit matrix × L-bit vector, K·L cycles per vector.
+    /// Matrix and vector in uint or int (the AND-partial formats).
+    MultibitMatrix {
+        kbits: u32,
+        lbits: u32,
+        a_fmt: NumberFormat,
+        x_fmt: NumberFormat,
+    },
+    /// §III-D: GF(2) MVP — result is the LSB of y_m. One cycle per vector.
+    Gf2Mvp,
+    /// §III-E: PLA. Each row computes a term over the input variables;
+    /// each bank combines its rows' term outputs.
+    Pla {
+        kind: TermKind,
+        combine: BankCombine,
+        /// Number of programmed terms per bank (rows beyond this count are
+        /// disabled by an impossible threshold).
+        terms_per_bank: Vec<usize>,
+    },
+}
+
+impl OpMode {
+    /// Cycles of *compute* per MVP/lookup (excluding pipeline fill and
+    /// one-off setup) — the paper's throughput accounting.
+    pub fn cycles_per_op(&self) -> u64 {
+        match self {
+            OpMode::MultibitVector { lbits, .. } => *lbits as u64,
+            OpMode::MultibitMatrix { kbits, lbits, .. } => (*kbits * *lbits) as u64,
+            _ => 1,
+        }
+    }
+
+    /// One-off setup cycles when the stored matrix changes.
+    pub fn setup_cycles(&self) -> u64 {
+        match self {
+            OpMode::Pm1Mat01Vec | OpMode::Mat01Pm1Vec => 1,
+            OpMode::MultibitVector { matrix: MatrixInterp::Pm1, x_fmt, .. }
+                if *x_fmt != NumberFormat::OddInt =>
+            {
+                1
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpMode::Hamming => "hamming",
+            OpMode::Cam { .. } => "cam",
+            OpMode::Pm1Mvp => "pm1_mvp",
+            OpMode::And01Mvp => "and01_mvp",
+            OpMode::Pm1Mat01Vec => "pm1_mat_01_vec",
+            OpMode::Mat01Pm1Vec => "mat01_pm1_vec",
+            OpMode::MultibitVector { .. } => "multibit_vector",
+            OpMode::MultibitMatrix { .. } => "multibit_matrix",
+            OpMode::Gf2Mvp => "gf2_mvp",
+            OpMode::Pla { .. } => "pla",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_counts_match_paper() {
+        assert_eq!(OpMode::Pm1Mvp.cycles_per_op(), 1);
+        assert_eq!(OpMode::Gf2Mvp.cycles_per_op(), 1);
+        // §IV-B: a 4-bit × 4-bit 256-entry inner product takes 16 cycles.
+        let mm = OpMode::MultibitMatrix {
+            kbits: 4,
+            lbits: 4,
+            a_fmt: NumberFormat::Int,
+            x_fmt: NumberFormat::Int,
+        };
+        assert_eq!(mm.cycles_per_op(), 16);
+        let mv = OpMode::MultibitVector {
+            lbits: 8,
+            x_fmt: NumberFormat::Int,
+            matrix: MatrixInterp::Pm1,
+        };
+        assert_eq!(mv.cycles_per_op(), 8);
+    }
+
+    #[test]
+    fn setup_cycles_only_for_correction_modes() {
+        assert_eq!(OpMode::Pm1Mvp.setup_cycles(), 0);
+        assert_eq!(OpMode::Pm1Mat01Vec.setup_cycles(), 1);
+        assert_eq!(OpMode::Mat01Pm1Vec.setup_cycles(), 1);
+        let mv_int = OpMode::MultibitVector {
+            lbits: 4,
+            x_fmt: NumberFormat::Int,
+            matrix: MatrixInterp::Pm1,
+        };
+        assert_eq!(mv_int.setup_cycles(), 1, "eq-2 partials need h̄(a,1)");
+        let mv_odd = OpMode::MultibitVector {
+            lbits: 4,
+            x_fmt: NumberFormat::OddInt,
+            matrix: MatrixInterp::Pm1,
+        };
+        assert_eq!(mv_odd.setup_cycles(), 0, "±1 planes use eq. (1) directly");
+        let mv_01 = OpMode::MultibitVector {
+            lbits: 4,
+            x_fmt: NumberFormat::Uint,
+            matrix: MatrixInterp::U01,
+        };
+        assert_eq!(mv_01.setup_cycles(), 0);
+    }
+}

@@ -1,0 +1,592 @@
+//! `PpacUnit` — a configured PPAC array plus the schedule compiler that
+//! turns operation modes into per-cycle control-signal sequences.
+//!
+//! This is the layer a host programs against: load a matrix, pick an
+//! [`OpMode`], stream input vectors, get decoded results — with the
+//! two-stage pipeline, setup cycles (eq. 2/3 correction registers) and
+//! bit-serial schedules (§III-C) handled internally and accounted
+//! cycle-exactly.
+
+use crate::error::{PpacError, Result};
+use crate::formats::{self, NumberFormat};
+use crate::sim::{
+    BitVec, CycleInput, CycleOutput, PpacArray, PpacConfig, RowAluCtrl, WriteCmd,
+};
+
+use super::mode::{BankCombine, MatrixInterp, OpMode, TermKind};
+
+/// One schedule step: an array cycle plus whether its output is a result.
+#[derive(Debug, Clone)]
+struct Step {
+    input: CycleInput,
+    emit: bool,
+}
+
+/// A PPAC array programmed with a matrix and an operation mode.
+pub struct PpacUnit {
+    array: PpacArray,
+    mode: Option<OpMode>,
+    /// Cycles spent in compute schedules (the paper's throughput basis).
+    compute_cycles: u64,
+    /// Cycles spent on setup (correction-register stores, matrix loads).
+    setup_cycles: u64,
+    /// Effective entries per row for the configured multi-bit matrix.
+    n_eff: usize,
+}
+
+impl PpacUnit {
+    pub fn new(cfg: PpacConfig) -> Result<Self> {
+        Ok(Self {
+            array: PpacArray::new(cfg)?,
+            mode: None,
+            compute_cycles: 0,
+            setup_cycles: 0,
+            n_eff: cfg.n,
+        })
+    }
+
+    pub fn config(&self) -> &PpacConfig {
+        self.array.config()
+    }
+
+    pub fn array(&self) -> &PpacArray {
+        &self.array
+    }
+
+    pub fn array_mut(&mut self) -> &mut PpacArray {
+        &mut self.array
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.compute_cycles
+    }
+
+    pub fn setup_cycles(&self) -> u64 {
+        self.setup_cycles
+    }
+
+    /// Entries per row under the current matrix layout (N for 1-bit
+    /// matrices, N/K after a K-bit load).
+    pub fn n_eff(&self) -> usize {
+        self.n_eff
+    }
+
+    pub fn enable_trace(&mut self) {
+        self.array.enable_trace();
+    }
+
+    // -- matrix loading -----------------------------------------------------
+
+    /// Load a 1-bit matrix: M rows of N bits. Writes go through the
+    /// clock-gated write port, one row per cycle (counted as setup).
+    pub fn load_bit_matrix(&mut self, rows: &[Vec<bool>]) -> Result<()> {
+        let (m, n) = (self.config().m, self.config().n);
+        if rows.len() != m {
+            return Err(PpacError::DimMismatch {
+                context: "load_bit_matrix rows",
+                expected: m,
+                got: rows.len(),
+            });
+        }
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != n {
+                return Err(PpacError::DimMismatch {
+                    context: "load_bit_matrix row width",
+                    expected: n,
+                    got: row.len(),
+                });
+            }
+            let step = CycleInput::write_only(n, i, BitVec::from_bools(row));
+            self.array.cycle(&step)?;
+            self.setup_cycles += 1;
+        }
+        self.array.flush_pipeline();
+        self.n_eff = n;
+        Ok(())
+    }
+
+    /// Load a K-bit integer matrix in the §III-C2 column layout (entry j
+    /// occupies columns j·K..j·K+K, MSB first).
+    pub fn load_multibit_matrix(
+        &mut self,
+        vals: &[Vec<i64>],
+        kbits: u32,
+        fmt: NumberFormat,
+    ) -> Result<()> {
+        let (m, n) = (self.config().m, self.config().n);
+        let n_eff = n / kbits as usize;
+        if vals.len() != m {
+            return Err(PpacError::DimMismatch {
+                context: "load_multibit_matrix rows",
+                expected: m,
+                got: vals.len(),
+            });
+        }
+        let mut rows = Vec::with_capacity(m);
+        for row in vals {
+            if row.len() != n_eff {
+                return Err(PpacError::DimMismatch {
+                    context: "load_multibit_matrix row entries",
+                    expected: n_eff,
+                    got: row.len(),
+                });
+            }
+            rows.push(formats::interleave_row(row, kbits, fmt)?);
+        }
+        self.load_bit_matrix(&rows)?;
+        self.n_eff = n_eff;
+        Ok(())
+    }
+
+    // -- mode configuration ---------------------------------------------------
+
+    /// Program the operation mode: offset `c`, thresholds δ_m, and any
+    /// one-off setup cycles (correction-register stores). Must be called
+    /// after the matrix is loaded (setup reads the stored words).
+    pub fn configure(&mut self, mode: OpMode) -> Result<()> {
+        let (m, n) = (self.config().m, self.config().n);
+        self.array.flush_pipeline();
+
+        // Offset c (shared across rows, configuration-time).
+        let c = match &mode {
+            OpMode::Pm1Mvp
+            | OpMode::Pm1Mat01Vec
+            | OpMode::Mat01Pm1Vec => n as i64,
+            OpMode::MultibitVector { matrix: MatrixInterp::Pm1, .. } => n as i64,
+            _ => 0,
+        };
+        self.array.set_offset(c);
+
+        // Thresholds δ_m.
+        let deltas: Vec<i64> = match &mode {
+            OpMode::Cam { deltas } => {
+                if deltas.len() != m {
+                    return Err(PpacError::DimMismatch {
+                        context: "CAM deltas",
+                        expected: m,
+                        got: deltas.len(),
+                    });
+                }
+                deltas.clone()
+            }
+            OpMode::Pla { kind, terms_per_bank, .. } => {
+                self.pla_deltas(*kind, terms_per_bank)?
+            }
+            _ => vec![0; m],
+        };
+        self.array.set_thresholds(&deltas)?;
+
+        // Setup cycles: store the correction register where eqs. (2)/(3)
+        // need it (h̄(a,1) or h̄(a,0), computed in Hamming mode).
+        let setup_input = match &mode {
+            OpMode::Pm1Mat01Vec => Some(BitVec::ones(n)),
+            OpMode::Mat01Pm1Vec => Some(BitVec::zeros(n)),
+            OpMode::MultibitVector { matrix: MatrixInterp::Pm1, x_fmt, .. }
+                if *x_fmt != NumberFormat::OddInt =>
+            {
+                Some(BitVec::ones(n))
+            }
+            _ => None,
+        };
+        if let Some(x) = setup_input {
+            let steps = vec![Step {
+                input: CycleInput::compute(x, BitVec::ones(n), RowAluCtrl::store_correction()),
+                emit: false,
+            }];
+            self.run_steps(steps, /*count_as_setup=*/ true)?;
+        }
+
+        self.mode = Some(mode);
+        Ok(())
+    }
+
+    /// Override per-row thresholds (e.g. BNN biases) after `configure`.
+    pub fn set_thresholds(&mut self, deltas: &[i64]) -> Result<()> {
+        self.array.set_thresholds(deltas)
+    }
+
+    fn pla_deltas(&self, kind: TermKind, terms_per_bank: &[usize]) -> Result<Vec<i64>> {
+        let cfg = *self.config();
+        if terms_per_bank.len() != cfg.banks() {
+            return Err(PpacError::DimMismatch {
+                context: "terms_per_bank",
+                expected: cfg.banks(),
+                got: terms_per_bank.len(),
+            });
+        }
+        let mut deltas = Vec::with_capacity(cfg.m);
+        for (b, &terms) in terms_per_bank.iter().enumerate() {
+            if terms > cfg.rows_per_bank {
+                return Err(PpacError::Config(format!(
+                    "bank {b}: {terms} terms > {} rows",
+                    cfg.rows_per_bank
+                )));
+            }
+            for r in 0..cfg.rows_per_bank {
+                let row = b * cfg.rows_per_bank + r;
+                if r < terms {
+                    let lits = self.array.row(row)?.popcount() as i64;
+                    deltas.push(match kind {
+                        TermKind::MinTerm => lits,
+                        TermKind::MaxTerm => 1,
+                        TermKind::Majority => (lits + 1) / 2,
+                    });
+                } else {
+                    // Disable unused rows: y = r − (N+1) < 0 always.
+                    deltas.push(cfg.n as i64 + 1);
+                }
+            }
+        }
+        Ok(deltas)
+    }
+
+    // -- schedule execution ----------------------------------------------------
+
+    /// Drive the array through `steps`, returning the outputs of the
+    /// steps marked `emit` (pipeline-aligned, drained at the end).
+    fn run_steps(&mut self, steps: Vec<Step>, count_as_setup: bool) -> Result<Vec<CycleOutput>> {
+        let mut outputs = Vec::new();
+        let mut pending_emit = false;
+        let mut cycles = 0u64;
+        for step in &steps {
+            let out = self.array.cycle(&step.input)?;
+            cycles += 1;
+            if pending_emit {
+                outputs.push(out.expect("pipeline must be primed"));
+            }
+            pending_emit = step.emit;
+        }
+        if pending_emit {
+            let out = self.array.drain()?;
+            cycles += 1;
+            outputs.push(out.expect("drain output"));
+        }
+        if count_as_setup {
+            self.setup_cycles += cycles;
+        } else {
+            self.compute_cycles += cycles;
+        }
+        Ok(outputs)
+    }
+
+    fn mode(&self) -> Result<&OpMode> {
+        self.mode
+            .as_ref()
+            .ok_or_else(|| PpacError::Config("configure() a mode first".into()))
+    }
+
+    fn check_width(&self, x: &[bool]) -> Result<()> {
+        if x.len() != self.config().n {
+            return Err(PpacError::DimMismatch {
+                context: "input vector width",
+                expected: self.config().n,
+                got: x.len(),
+            });
+        }
+        Ok(())
+    }
+
+    // -- mode entry points -------------------------------------------------------
+
+    /// Hamming similarities for a batch of query words (§III-A): one
+    /// cycle per query, y_m = h̄(a_m, x).
+    pub fn hamming_batch(&mut self, queries: &[Vec<bool>]) -> Result<Vec<Vec<i64>>> {
+        match self.mode()? {
+            OpMode::Hamming => {}
+            m => return Err(PpacError::Config(format!("mode {} ≠ hamming", m.name()))),
+        }
+        let n = self.config().n;
+        let steps: Vec<Step> = queries
+            .iter()
+            .map(|q| {
+                self.check_width(q)?;
+                Ok(Step {
+                    input: CycleInput::compute(
+                        BitVec::from_bools(q),
+                        BitVec::ones(n),
+                        RowAluCtrl::passthrough(),
+                    ),
+                    emit: true,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+    }
+
+    /// CAM lookups (§III-A): per query, the per-row match flags
+    /// (h̄ ≥ δ_m ⇔ y_m ≥ 0 ⇔ ¬MSB).
+    pub fn cam_batch(&mut self, queries: &[Vec<bool>]) -> Result<Vec<Vec<bool>>> {
+        match self.mode()? {
+            OpMode::Cam { .. } => {}
+            m => return Err(PpacError::Config(format!("mode {} ≠ cam", m.name()))),
+        }
+        let n = self.config().n;
+        let steps: Vec<Step> = queries
+            .iter()
+            .map(|q| {
+                self.check_width(q)?;
+                Ok(Step {
+                    input: CycleInput::compute(
+                        BitVec::from_bools(q),
+                        BitVec::ones(n),
+                        RowAluCtrl::passthrough(),
+                    ),
+                    emit: true,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(self
+            .run_steps(steps, false)?
+            .into_iter()
+            .map(|o| o.matches())
+            .collect())
+    }
+
+    /// 1-bit MVP batch (§III-B, all four format pairings): one cycle per
+    /// vector, y = A·x under the mode's number interpretation.
+    pub fn mvp1_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<Vec<i64>>> {
+        let n = self.config().n;
+        let (s, ctrl) = match self.mode()? {
+            OpMode::Pm1Mvp => (BitVec::ones(n), RowAluCtrl::pm1_mvp()),
+            OpMode::And01Mvp => (BitVec::zeros(n), RowAluCtrl::passthrough()),
+            OpMode::Pm1Mat01Vec => (BitVec::ones(n), RowAluCtrl::eq2_compute()),
+            OpMode::Mat01Pm1Vec => (BitVec::zeros(n), RowAluCtrl::eq3_compute()),
+            m => {
+                return Err(PpacError::Config(format!("mode {} is not a 1-bit MVP", m.name())))
+            }
+        };
+        let steps: Vec<Step> = xs
+            .iter()
+            .map(|x| {
+                self.check_width(x)?;
+                Ok(Step {
+                    input: CycleInput::compute(BitVec::from_bools(x), s.clone(), ctrl),
+                    emit: true,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+    }
+
+    /// GF(2) MVP batch (§III-D): per vector, the LSBs of the row sums.
+    pub fn gf2_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<Vec<bool>>> {
+        match self.mode()? {
+            OpMode::Gf2Mvp => {}
+            m => return Err(PpacError::Config(format!("mode {} ≠ gf2", m.name()))),
+        }
+        let n = self.config().n;
+        let steps: Vec<Step> = xs
+            .iter()
+            .map(|x| {
+                self.check_width(x)?;
+                Ok(Step {
+                    input: CycleInput::compute(
+                        BitVec::from_bools(x),
+                        BitVec::zeros(n),
+                        RowAluCtrl::passthrough(),
+                    ),
+                    emit: true,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(self
+            .run_steps(steps, false)?
+            .into_iter()
+            .map(|o| o.y.iter().map(|&y| y & 1 == 1).collect())
+            .collect())
+    }
+
+    /// Multi-bit MVP batch (§III-C): L (or K·L) cycles per vector,
+    /// bit-serial. Inputs are integer vectors in the mode's format.
+    pub fn mvp_multibit_batch(&mut self, xs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        let mode = self.mode()?.clone();
+        match mode {
+            OpMode::MultibitVector { lbits, x_fmt, matrix } => {
+                self.multibit_vector_batch(xs, lbits, x_fmt, matrix)
+            }
+            OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt } => {
+                self.multibit_matrix_batch(xs, kbits, lbits, a_fmt, x_fmt)
+            }
+            m => Err(PpacError::Config(format!("mode {} is not multi-bit", m.name()))),
+        }
+    }
+
+    fn multibit_vector_batch(
+        &mut self,
+        xs: &[Vec<i64>],
+        lbits: u32,
+        x_fmt: NumberFormat,
+        matrix: MatrixInterp,
+    ) -> Result<Vec<Vec<i64>>> {
+        let n = self.config().n;
+        // Per-plane 1-bit partial configuration.
+        let (s, base): (BitVec, RowAluCtrl) = match (matrix, x_fmt) {
+            // ±1 matrix, {0,1} planes → eq. (2) partials.
+            (MatrixInterp::Pm1, NumberFormat::Uint | NumberFormat::Int) => {
+                (BitVec::ones(n), RowAluCtrl::eq2_compute())
+            }
+            // ±1 matrix, ±1 planes (oddint) → eq. (1) partials.
+            (MatrixInterp::Pm1, NumberFormat::OddInt) => {
+                (BitVec::ones(n), RowAluCtrl::pm1_mvp())
+            }
+            // {0,1} matrix, {0,1} planes → AND partials.
+            (MatrixInterp::U01, NumberFormat::Uint | NumberFormat::Int) => {
+                (BitVec::zeros(n), RowAluCtrl::passthrough())
+            }
+            (MatrixInterp::U01, NumberFormat::OddInt) => {
+                return Err(PpacError::Config(
+                    "oddint vectors require a ±1 matrix interpretation".into(),
+                ))
+            }
+        };
+        let signed = x_fmt == NumberFormat::Int;
+
+        let mut steps = Vec::with_capacity(xs.len() * lbits as usize);
+        for x in xs {
+            if x.len() != n {
+                return Err(PpacError::DimMismatch {
+                    context: "multibit vector length",
+                    expected: n,
+                    got: x.len(),
+                });
+            }
+            let planes = formats::decompose(x, lbits, x_fmt)?;
+            for (l, plane) in planes.iter().enumerate() {
+                let ctrl = RowAluCtrl {
+                    we_v: true,
+                    v_acc: l > 0,
+                    v_acc_neg: l == 0 && signed,
+                    ..base
+                };
+                steps.push(Step {
+                    input: CycleInput::compute(BitVec::from_bools(plane), s.clone(), ctrl),
+                    emit: l as u32 == lbits - 1,
+                });
+            }
+        }
+        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+    }
+
+    fn multibit_matrix_batch(
+        &mut self,
+        xs: &[Vec<i64>],
+        kbits: u32,
+        lbits: u32,
+        a_fmt: NumberFormat,
+        x_fmt: NumberFormat,
+    ) -> Result<Vec<Vec<i64>>> {
+        if !matches!(a_fmt, NumberFormat::Uint | NumberFormat::Int)
+            || !matches!(x_fmt, NumberFormat::Uint | NumberFormat::Int)
+        {
+            return Err(PpacError::Config(
+                "multibit-matrix mode supports uint/int operands".into(),
+            ));
+        }
+        let cfg = *self.config();
+        if kbits > cfg.max_k || lbits > cfg.max_l {
+            return Err(PpacError::Config(format!(
+                "K={kbits}/L={lbits} exceed the row-ALU limits K≤{} L≤{}",
+                cfg.max_k, cfg.max_l
+            )));
+        }
+        let n_eff = cfg.n / kbits as usize;
+        let s = BitVec::zeros(cfg.n); // AND everywhere (§III-C2)
+        let signed_v = x_fmt == NumberFormat::Int;
+        let signed_m = a_fmt == NumberFormat::Int;
+
+        let mut steps = Vec::with_capacity(xs.len() * (kbits * lbits) as usize);
+        for x in xs {
+            if x.len() != n_eff {
+                return Err(PpacError::DimMismatch {
+                    context: "multibit matrix-mode vector length",
+                    expected: n_eff,
+                    got: x.len(),
+                });
+            }
+            let planes = formats::decompose(x, lbits, x_fmt)?;
+            for k in 0..kbits {
+                for (l, plane) in planes.iter().enumerate() {
+                    let last_l = l as u32 == lbits - 1;
+                    let ctrl = RowAluCtrl {
+                        we_v: true,
+                        v_acc: l > 0,
+                        v_acc_neg: l == 0 && signed_v,
+                        we_m: last_l,
+                        m_acc: last_l && k > 0,
+                        m_acc_neg: last_l && k == 0 && signed_m,
+                        ..RowAluCtrl::default()
+                    };
+                    let xin = formats::select_plane_input(plane, kbits, k);
+                    steps.push(Step {
+                        input: CycleInput::compute(BitVec::from_bools(&xin), s.clone(), ctrl),
+                        emit: last_l && k == kbits - 1,
+                    });
+                }
+            }
+        }
+        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+    }
+
+    /// PLA batch (§III-E): per input-variable assignment, one Boolean
+    /// output per bank.
+    pub fn pla_batch(&mut self, var_sets: &[Vec<bool>]) -> Result<Vec<Vec<bool>>> {
+        let (combine, terms) = match self.mode()? {
+            OpMode::Pla { combine, terms_per_bank, .. } => {
+                (*combine, terms_per_bank.clone())
+            }
+            m => return Err(PpacError::Config(format!("mode {} ≠ pla", m.name()))),
+        };
+        let n = self.config().n;
+        let steps: Vec<Step> = var_sets
+            .iter()
+            .map(|v| {
+                self.check_width(v)?;
+                Ok(Step {
+                    input: CycleInput::compute(
+                        BitVec::from_bools(v),
+                        BitVec::zeros(n), // AND operator in every cell
+                        RowAluCtrl::passthrough(),
+                    ),
+                    emit: true,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let outs = self.run_steps(steps, false)?;
+        Ok(outs
+            .into_iter()
+            .map(|o| {
+                o.bank_p
+                    .iter()
+                    .zip(&terms)
+                    .map(|(&p, &t)| match combine {
+                        BankCombine::Or => p > 0,
+                        BankCombine::And => p as usize == t,
+                        BankCombine::Majority => p as usize >= (t + 1) / 2,
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Write one row during operation (CAM update use case) — takes one
+    /// cycle through the write port.
+    pub fn update_row(&mut self, addr: usize, bits: &[bool]) -> Result<()> {
+        let n = self.config().n;
+        if bits.len() != n {
+            return Err(PpacError::DimMismatch {
+                context: "update_row width",
+                expected: n,
+                got: bits.len(),
+            });
+        }
+        let step = CycleInput {
+            x: BitVec::zeros(n),
+            s: BitVec::zeros(n),
+            alu: RowAluCtrl::default(),
+            write: Some(WriteCmd { addr, d: BitVec::from_bools(bits) }),
+        };
+        self.array.cycle(&step)?;
+        self.setup_cycles += 1;
+        Ok(())
+    }
+}

@@ -1,0 +1,46 @@
+//! # PPAC — Parallel Processor in Associative CAM
+//!
+//! Full-system reproduction of *"PPAC: A Versatile In-Memory Accelerator
+//! for Matrix-Vector-Product-Like Operations"* (Castañeda, Bobbett,
+//! Gallyas-Sanhueza, Studer — 2019).
+//!
+//! PPAC is an all-digital processing-in-memory array: M words of N
+//! latch-based bit-cells, each cell with an XNOR and an AND operator, a
+//! per-row population count feeding a small row ALU, and per-bank adders.
+//! It executes Hamming-similarity / CAM lookups, 1-bit and multi-bit
+//! matrix-vector products, GF(2) MVPs and PLA-style Boolean functions —
+//! one 1-bit MVP per clock cycle.
+//!
+//! This crate contains:
+//! - [`sim`] — the cycle-accurate, bit-true array simulator (the "RTL");
+//! - [`formats`] — Table I number formats + bit-plane decomposition;
+//! - [`isa`] — operation modes compiled to per-cycle control schedules;
+//! - [`golden`] — untimed functional reference models;
+//! - [`power`] — area / timing / energy model calibrated to Table II;
+//! - [`apps`] — BNN, LSH, GF(2) codes, Hadamard, CAM, PLA applications;
+//! - [`baselines`] — compute-cache cycle model and the Table IV database;
+//! - [`coordinator`] — multi-tile job router/batcher (the serving layer);
+//! - [`runtime`] — PJRT loader executing the JAX/Pallas AOT artifacts;
+//! - [`util`] — in-repo substrates (PRNG, CLI, bench, prop-test, JSON).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod apps;
+pub mod baselines;
+pub mod coordinator;
+pub mod error;
+pub mod formats;
+pub mod golden;
+pub mod isa;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{PpacError, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

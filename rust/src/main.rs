@@ -1,0 +1,498 @@
+//! `ppac` — the command-line front end.
+//!
+//! Subcommands regenerate the paper's tables, run ad-hoc simulations and
+//! drive the serving layer:
+//!
+//! ```text
+//! ppac table1                      Table I   (number formats)
+//! ppac table2                      Table II  (array-size sweep)
+//! ppac table3 [--vectors 100]      Table III (per-mode power, simulated)
+//! ppac table4                      Table IV  (accelerator comparison)
+//! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
+//! ppac area-breakdown [--m --n]    Fig. 3 area split
+//! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
+//! ppac serve [--workers --batch --jobs]      coordinator demo
+//! ```
+
+use ppac::formats::NumberFormat;
+use ppac::isa::{BankCombine, OpMode, PpacUnit, TermKind};
+use ppac::power::{EnergyModel, ImplModel, ModeReport, TABLE2, TABLE3};
+use ppac::sim::PpacConfig;
+use ppac::util::cli::{subcommand, Spec};
+use ppac::util::rng::Xoshiro256pp;
+use ppac::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let expected = "table1|table2|table3|table4|cycles|ablate|area-breakdown|simulate|serve";
+    let (cmd, rest) = match subcommand(args, expected) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("usage: ppac <{expected}> [options]");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "table1" => table1(),
+        "table2" => table2(rest),
+        "table3" => table3(rest),
+        "table4" => table4(),
+        "cycles" => cycles(rest),
+        "ablate" => ablate(rest),
+        "area-breakdown" => area_breakdown(rest),
+        "simulate" => simulate(rest),
+        "serve" => serve(rest),
+        other => {
+            eprintln!("unknown subcommand {other}; expected {expected}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type AnyResult = Result<(), Box<dyn std::error::Error>>;
+
+fn table1() -> AnyResult {
+    let mut t = Table::new(
+        "Table I — L-bit number formats supported by PPAC",
+        &["name", "LO", "HI", "signed?", "min (L)", "max (L)", "e.g. L=2"],
+    );
+    for fmt in [NumberFormat::Uint, NumberFormat::Int, NumberFormat::OddInt] {
+        let (lo2, hi2) = fmt.range(2);
+        let vals: Vec<String> = (lo2..=hi2)
+            .filter(|&v| fmt.contains(2, v))
+            .map(|v| v.to_string())
+            .collect();
+        let (lo, hi) = fmt.range(8);
+        t.row(&[
+            fmt.name().to_string(),
+            if fmt == NumberFormat::OddInt { "-1" } else { "0" }.into(),
+            "1".into(),
+            if fmt.is_signed() { "yes" } else { "no" }.into(),
+            format!("{lo} (L=8)"),
+            format!("{hi} (L=8)"),
+            format!("{{{}}}", vals.join(",")),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn table2_json(rest: &[String]) -> Option<String> {
+    rest.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn table2(rest: Vec<String>) -> AnyResult {
+    // Optional machine-readable report: `ppac table2 --json out.json`.
+    let json_path = table2_json(&rest);
+    let model = ImplModel::calibrated();
+    if let Some(path) = &json_path {
+        use ppac::util::json::{obj, Json};
+        let rows: Vec<Json> = TABLE2
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("m", Json::Int(p.m as i64)),
+                    ("n", Json::Int(p.n as i64)),
+                    ("kge_model", Json::Num(model.cell_area_kge(p.m, p.n))),
+                    ("kge_paper", Json::Num(p.cell_area_kge)),
+                    ("fmax_ghz_model", Json::Num(model.fmax_ghz(p.m, p.n))),
+                    ("fmax_ghz_paper", Json::Num(p.fmax_ghz)),
+                    ("power_mw_model", Json::Num(model.power_mw(p.m, p.n))),
+                    ("power_mw_paper", Json::Num(p.power_mw)),
+                    ("peak_tops_model", Json::Num(model.peak_tops(p.m, p.n))),
+                    ("peak_tops_paper", Json::Num(p.peak_tops)),
+                    ("fj_per_op_model", Json::Num(model.fj_per_op(p.m, p.n))),
+                    ("fj_per_op_paper", Json::Num(p.energy_fj_per_op)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![("table", Json::Str("II".into())), ("rows", Json::Arr(rows))]);
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    let mut t = Table::new(
+        "Table II — post-layout implementation model vs paper (28 nm)",
+        &[
+            "M", "N", "B", "Bs", "area um2 (paper)", "kGE (paper)",
+            "fmax GHz (paper)", "power mW (paper)", "TOP/s (paper)",
+            "fJ/OP (paper)",
+        ],
+    );
+    for p in TABLE2 {
+        let (m, n) = (p.m, p.n);
+        t.row(&[
+            m.to_string(),
+            n.to_string(),
+            p.banks.to_string(),
+            p.subrows.to_string(),
+            format!("{:.0} ({:.0})", model.area_um2(m, n), p.area_um2),
+            format!("{:.0} ({:.0})", model.cell_area_kge(m, n), p.cell_area_kge),
+            format!("{:.3} ({:.3})", model.fmax_ghz(m, n), p.fmax_ghz),
+            format!("{:.2} ({:.2})", model.power_mw(m, n), p.power_mw),
+            format!("{:.2} ({:.2})", model.peak_tops(m, n), p.peak_tops),
+            format!("{:.2} ({:.2})", model.fj_per_op(m, n), p.energy_fj_per_op),
+        ]);
+    }
+    t.print();
+    println!("\nInterpolation beyond the paper's sizes:");
+    let mut t2 = Table::new("", &["M", "N", "kGE", "fmax GHz", "TOP/s", "fJ/OP"]);
+    for (m, n) in [(64, 64), (128, 128), (512, 512), (1024, 256)] {
+        t2.row(&[
+            m.to_string(),
+            n.to_string(),
+            format!("{:.0}", model.cell_area_kge(m, n)),
+            format!("{:.3}", model.fmax_ghz(m, n)),
+            format!("{:.2}", model.peak_tops(m, n)),
+            format!("{:.2}", model.fj_per_op(m, n)),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn run_table3_mode(name: &str, vectors: usize) -> (PpacConfig, ppac::sim::ActivityStats, u64) {
+    let cfg = PpacConfig::new(256, 256);
+    let mut rng = Xoshiro256pp::seeded(2024);
+    let a: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
+    let mut u = PpacUnit::new(cfg).unwrap();
+    let mut cpo = 1u64;
+    match name {
+        "multibit_4b01" => {
+            let a4: Vec<Vec<i64>> = (0..256).map(|_| rng.ints(64, 0, 15)).collect();
+            u.load_multibit_matrix(&a4, 4, NumberFormat::Uint).unwrap();
+            u.configure(OpMode::MultibitMatrix {
+                kbits: 4,
+                lbits: 4,
+                a_fmt: NumberFormat::Uint,
+                x_fmt: NumberFormat::Uint,
+            })
+            .unwrap();
+            cpo = 16;
+        }
+        _ => {
+            u.load_bit_matrix(&a).unwrap();
+            let mode = match name {
+                "hamming" => OpMode::Hamming,
+                "pm1_mvp" => OpMode::Pm1Mvp,
+                "gf2_mvp" => OpMode::Gf2Mvp,
+                "pla" => OpMode::Pla {
+                    kind: TermKind::MinTerm,
+                    combine: BankCombine::Or,
+                    terms_per_bank: vec![16; 16],
+                },
+                other => panic!("unknown mode {other}"),
+            };
+            u.configure(mode).unwrap();
+        }
+    }
+    u.enable_trace();
+    let qs: Vec<Vec<bool>> = (0..vectors).map(|_| rng.bits(256)).collect();
+    match name {
+        "hamming" => {
+            u.hamming_batch(&qs).unwrap();
+        }
+        "pm1_mvp" => {
+            u.mvp1_batch(&qs).unwrap();
+        }
+        "gf2_mvp" => {
+            u.gf2_batch(&qs).unwrap();
+        }
+        "pla" => {
+            u.pla_batch(&qs).unwrap();
+        }
+        "multibit_4b01" => {
+            let xs: Vec<Vec<i64>> = (0..vectors).map(|_| rng.ints(64, 0, 15)).collect();
+            u.mvp_multibit_batch(&xs).unwrap();
+        }
+        _ => unreachable!(),
+    }
+    let t = u.array_mut().take_trace().unwrap();
+    (cfg, t, cpo)
+}
+
+fn table3(rest: Vec<String>) -> AnyResult {
+    let p = Spec::new().opt("vectors").parse(rest)?;
+    let vectors = p.usize_or("vectors", 100)?;
+    let model = EnergyModel::calibrated();
+    let f = 0.703;
+    let mut t = Table::new(
+        "Table III — per-mode throughput/power/energy on 256×256 (model vs paper)",
+        &["mode", "GMVP/s (paper)", "mW (paper)", "pJ/MVP (paper)"],
+    );
+    for row in TABLE3 {
+        let (cfg, trace, cpo) = run_table3_mode(row.name, vectors);
+        let rep = ModeReport::from_trace(row.name, &cfg, &trace, cpo, f, &model);
+        t.row(&[
+            row.name.to_string(),
+            format!("{:.3} ({:.3})", rep.throughput_gmvps, row.throughput_gmvps),
+            format!("{:.0} ({:.0})", rep.power_mw, row.power_mw),
+            format!("{:.0} ({:.0})", rep.energy_pj_per_mvp, row.energy_pj_per_mvp),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn table4() -> AnyResult {
+    use ppac::baselines::{COMPARISON, PPAC_ROW};
+    let fmt_opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.1}"));
+    let mut t = Table::new(
+        "Table IV — BNN accelerator comparison (raw and scaled to 28 nm, 0.9 V)",
+        &[
+            "design", "PIM?", "mixed?", "tech nm", "Vdd", "area mm2",
+            "GOP/s", "TOP/s/W", "GOP/s @28", "TOP/s/W @28",
+        ],
+    );
+    let all = std::iter::once(&PPAC_ROW).chain(COMPARISON.iter());
+    for a in all {
+        t.row(&[
+            a.name.to_string(),
+            if a.pim { "yes" } else { "no" }.into(),
+            if a.mixed_signal { "yes" } else { "no" }.into(),
+            format!("{:.0}", a.tech_nm),
+            format!("{:.1}", a.vdd),
+            format!("{:.3}", a.area_mm2),
+            fmt_opt(a.peak_gops),
+            fmt_opt(a.tops_per_w),
+            fmt_opt(a.scaled_gops()),
+            fmt_opt(a.scaled_tops_per_w()),
+        ]);
+    }
+    t.print();
+    println!("\nMixed-signal efficiency gap (paper: 7.9x CIMA, 2.3x Bankman):");
+    for (name, gap) in ppac::baselines::accelerators::mixed_signal_gap() {
+        println!("  {name}: {gap:.1}x");
+    }
+    Ok(())
+}
+
+fn cycles(rest: Vec<String>) -> AnyResult {
+    let p = Spec::new().opt("n").parse(rest)?;
+    let n = p.usize_or("n", 256)?;
+    let cc = ppac::baselines::ComputeCacheModel;
+    let mut t = Table::new(
+        "§IV-B — cycles per L-bit N-dim inner product: compute cache [4] vs PPAC",
+        &["L", "cache mul", "cache reduce", "cache total", "PPAC (K·L)", "speedup"],
+    );
+    for l in 1..=8u32 {
+        let mul = cc.elementwise_mul_cycles(l);
+        let red = cc.reduction_cycles(n, 2 * l);
+        let total = mul + red;
+        let ppac = (l * l) as u64;
+        t.row(&[
+            l.to_string(),
+            mul.to_string(),
+            red.to_string(),
+            total.to_string(),
+            ppac.to_string(),
+            format!("{:.1}x", total as f64 / ppac as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper headline (N=256, L=4): cache ≥ 98 cycles, PPAC 16 cycles");
+    Ok(())
+}
+
+/// Ablations of the paper's two structural design choices (§II-B):
+/// subrow partitioning (wire count into the row ALU) and banking (PLA
+/// capacity vs bank-adder hardware).
+fn ablate(rest: Vec<String>) -> AnyResult {
+    let p = Spec::new().opt("n").opt("m").parse(rest)?;
+    let n = p.usize_or("n", 256)?;
+    let m = p.usize_or("m", 256)?;
+
+    let mut t = Table::new(
+        &format!("Ablation A — subrow partitioning of an N = {n} row"),
+        &["Bs", "V", "wires/subrow", "row wires", "vs flat (N)", "local adders"],
+    );
+    let mut bs = 1;
+    while bs <= n / 2 {
+        if n % bs == 0 {
+            let mut cfg = PpacConfig::new(m, n);
+            cfg.subrows = bs;
+            let v = cfg.v();
+            let w = cfg.subrow_wires();
+            let total = bs as u32 * w;
+            t.row(&[
+                bs.to_string(),
+                v.to_string(),
+                w.to_string(),
+                total.to_string(),
+                format!("{:.2}x", n as f64 / total as f64),
+                bs.to_string(),
+            ]);
+        }
+        bs *= 2;
+    }
+    t.print();
+    println!(
+        "paper's choice V = 16 (Bs = {}): {}-wire interfaces instead of {} \
+         wires per subrow — the wiring win that makes large N routable.\n",
+        n / 16,
+        PpacConfig::new(m, n).subrow_wires(),
+        16
+    );
+
+    let mut t2 = Table::new(
+        &format!("Ablation B — banking of M = {m} rows"),
+        &["rows/bank", "banks B", "PLA functions", "min-terms/function", "bank adder width"],
+    );
+    for rpb in [4usize, 8, 16, 32, 64] {
+        if m % rpb == 0 {
+            let banks = m / rpb;
+            let width = ((rpb + 1) as f64).log2().ceil() as u32;
+            t2.row(&[
+                rpb.to_string(),
+                banks.to_string(),
+                banks.to_string(),
+                rpb.to_string(),
+                width.to_string(),
+            ]);
+        }
+    }
+    t2.print();
+    println!(
+        "paper's choice 16 rows/bank: {} parallel Boolean functions of up to \
+         16 min-terms each on the {m}x{n} array.",
+        m / 16
+    );
+    Ok(())
+}
+
+fn area_breakdown(rest: Vec<String>) -> AnyResult {
+    let p = Spec::new().opt("m").opt("n").parse(rest)?;
+    let m = p.usize_or("m", 256)?;
+    let n = p.usize_or("n", 256)?;
+    let model = ImplModel::calibrated();
+    let (mem, alu, bank, periph) = model.area_breakdown_kge(m, n);
+    let total = model.cell_area_kge(m, n);
+    let mut t = Table::new(
+        &format!("Fig. 3 analogue — area breakdown of the {m}x{n} PPAC"),
+        &["block", "kGE", "share"],
+    );
+    for (name, v) in [
+        ("row memories (bit-cells)", mem),
+        ("row ALUs", alu),
+        ("bank adders", bank),
+        ("periphery", periph),
+    ] {
+        t.row(&[name.to_string(), format!("{v:.1}"), format!("{:.1}%", 100.0 * v / total)]);
+    }
+    t.row(&["TOTAL".into(), format!("{total:.1}"), "100.0%".into()]);
+    t.print();
+    Ok(())
+}
+
+fn simulate(rest: Vec<String>) -> AnyResult {
+    let p = Spec::new().opt("m").opt("n").opt("mode").opt("vectors").parse(rest)?;
+    let m = p.usize_or("m", 256)?;
+    let n = p.usize_or("n", 256)?;
+    let mode = p.str_or("mode", "pm1_mvp");
+    let vectors = p.usize_or("vectors", 1000)?;
+    let cfg = PpacConfig::new(m, n);
+    let mut rng = Xoshiro256pp::seeded(7);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let mut u = PpacUnit::new(cfg)?;
+    u.load_bit_matrix(&a)?;
+    u.configure(match mode.as_str() {
+        "hamming" => OpMode::Hamming,
+        "pm1_mvp" => OpMode::Pm1Mvp,
+        "and01_mvp" => OpMode::And01Mvp,
+        "gf2_mvp" => OpMode::Gf2Mvp,
+        other => return Err(format!("unknown mode {other}").into()),
+    })?;
+    u.enable_trace();
+    let xs: Vec<Vec<bool>> = (0..vectors).map(|_| rng.bits(n)).collect();
+    let t0 = std::time::Instant::now();
+    match mode.as_str() {
+        "hamming" => {
+            u.hamming_batch(&xs)?;
+        }
+        "gf2_mvp" => {
+            u.gf2_batch(&xs)?;
+        }
+        _ => {
+            u.mvp1_batch(&xs)?;
+        }
+    }
+    let host_s = t0.elapsed().as_secs_f64();
+    let model = ImplModel::calibrated();
+    let energy = EnergyModel::calibrated();
+    let trace = u.array_mut().take_trace().unwrap();
+    let fmax = model.fmax_ghz(m, n);
+    println!("array            : {m}x{n} (B={}, Bs={})", cfg.banks(), cfg.subrows);
+    println!("mode             : {mode}");
+    println!("vectors          : {vectors}");
+    println!("sim cycles       : {}", u.compute_cycles());
+    println!("host time        : {host_s:.3} s ({:.1} kcycle/s)",
+             u.compute_cycles() as f64 / host_s / 1e3);
+    println!("modelled fmax    : {fmax:.3} GHz");
+    println!("modelled power   : {:.1} mW", energy.power_mw(&cfg, &trace, fmax));
+    println!(
+        "hw throughput    : {:.3} GMVP/s, {:.2} TOP/s",
+        fmax,
+        cfg.ops_per_cycle() as f64 * fmax / 1e3
+    );
+    Ok(())
+}
+
+fn serve(rest: Vec<String>) -> AnyResult {
+    use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+    use ppac::util::config::Config;
+    let p = Spec::new()
+        .opt("workers")
+        .opt("batch")
+        .opt("jobs")
+        .opt("m")
+        .opt("n")
+        .opt("config")
+        .parse(rest)?;
+    // Layering: file config (if given) provides defaults, flags override.
+    let file = match p.str_opt("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let workers = p.usize_or("workers", file.usize_or("coordinator.workers", 4)?)?;
+    let max_batch = p.usize_or("batch", file.usize_or("coordinator.max_batch", 64)?)?;
+    let jobs = p.usize_or("jobs", file.usize_or("workload.jobs", 2000)?)?;
+    let m = p.usize_or("m", file.usize_or("tile.m", 256)?)?;
+    let n = p.usize_or("n", file.usize_or("tile.n", 256)?)?;
+    let tile = PpacConfig::new(m, n);
+    let coord = Coordinator::start(CoordinatorConfig { tile, workers, max_batch })?;
+    let mut rng = Xoshiro256pp::seeded(11);
+    let matrices: Vec<_> = (0..workers)
+        .map(|_| {
+            coord
+                .register_matrix((0..m).map(|_| rng.bits(n)).collect())
+                .unwrap()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let mid = matrices[i % matrices.len()];
+            coord.submit(mid, JobInput::Pm1Mvp(rng.bits(n))).unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    println!("workers          : {workers} (tile {m}x{n}, max batch {max_batch})");
+    println!("jobs             : {} in {dt:.3} s = {:.0} jobs/s", snap.jobs_completed,
+             snap.jobs_completed as f64 / dt);
+    println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch_size);
+    println!("matrix loads     : {}", snap.matrix_loads);
+    println!("latency p50/p99  : {:.0} / {:.0} us", snap.p50_us, snap.p99_us);
+    println!("sim cycles total : {}", snap.sim_cycles);
+    coord.shutdown();
+    Ok(())
+}

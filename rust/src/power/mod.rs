@@ -1,0 +1,17 @@
+//! Area / timing / energy models calibrated to the paper's 28 nm
+//! post-layout results (§IV-A).
+//!
+//! - [`tech`] — the measured data of record (Tables II, III) + scaling
+//!   rules (Table IV footnote);
+//! - [`surface`] — log-bilinear response surfaces over (M, N), exact at
+//!   the four Table II layouts (area, density, fmax, power);
+//! - [`energy`] — activity-based dynamic power: simulator toggle counts ×
+//!   calibrated per-event energies, reproducing Table III per-mode power.
+
+pub mod energy;
+pub mod surface;
+pub mod tech;
+
+pub use energy::{EnergyModel, ModeReport};
+pub use surface::ImplModel;
+pub use tech::{LayoutPoint, ModePoint, TABLE2, TABLE3};

@@ -1,0 +1,221 @@
+//! Calibrated response surfaces over the (M, N) design space.
+//!
+//! The paper gives four post-layout points (Table II). A linear
+//! component model cannot be identified from them (the four points are
+//! rank-deficient for any M-linear parametrization — e.g. the 256×256
+//! array is structurally 16 copies of the 16×256 one, yet its measured
+//! energy/cycle is 27% below 16×, because clock-tree, placement and
+//! control amortize sublinearly). We therefore fit **log-bilinear
+//! response surfaces**
+//!
+//! ```text
+//!   ln v(M, N) = k + a·log₂(M/16) + b·log₂(N/16) + c·log₂(M/16)·log₂(N/16)
+//! ```
+//!
+//! which are *exact* at the four measured points, smooth and monotone in
+//! between, and capture the observed sublinearity through the interaction
+//! term. fmax uses the same form without the log on v (delay grows
+//! additively with tree depth). DESIGN.md §5 records this calibration
+//! contract.
+
+use super::tech::{LayoutPoint, TABLE2, UM2_PER_GE};
+use crate::sim::PpacConfig;
+
+/// A bilinear surface in (log₂(M/16), log₂(N/16)).
+#[derive(Debug, Clone, Copy)]
+pub struct Bilinear {
+    pub k: f64,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Bilinear {
+    /// Fit through the four Table II corners: v00=(16,16), v01=(16,256),
+    /// v10=(256,16), v11=(256,256).
+    pub fn fit(v00: f64, v01: f64, v10: f64, v11: f64) -> Self {
+        let k = v00;
+        let a = (v10 - v00) / 4.0;
+        let b = (v01 - v00) / 4.0;
+        let c = (v11 - v00 - 4.0 * a - 4.0 * b) / 16.0;
+        Self { k, a, b, c }
+    }
+
+    pub fn at(&self, m: usize, n: usize) -> f64 {
+        let lm = (m as f64 / 16.0).log2();
+        let ln = (n as f64 / 16.0).log2();
+        self.k + self.a * lm + self.b * ln + self.c * lm * ln
+    }
+}
+
+/// Log-domain bilinear surface (positive quantities).
+#[derive(Debug, Clone, Copy)]
+pub struct LogBilinear(Bilinear);
+
+impl LogBilinear {
+    pub fn fit(v00: f64, v01: f64, v10: f64, v11: f64) -> Self {
+        Self(Bilinear::fit(v00.ln(), v01.ln(), v10.ln(), v11.ln()))
+    }
+
+    pub fn at(&self, m: usize, n: usize) -> f64 {
+        self.0.at(m, n).exp()
+    }
+}
+
+fn corners(get: impl Fn(&LayoutPoint) -> f64) -> (f64, f64, f64, f64) {
+    (get(&TABLE2[0]), get(&TABLE2[1]), get(&TABLE2[2]), get(&TABLE2[3]))
+}
+
+/// The full implementation model for an arbitrary M×N PPAC (with the
+/// paper's 16-row banks / 16-cell subrows microarchitecture).
+#[derive(Debug, Clone, Copy)]
+pub struct ImplModel {
+    kge: LogBilinear,
+    density: LogBilinear,
+    fmax: Bilinear,
+    /// Energy per clock cycle in fJ under the paper's Table II stimuli
+    /// (random A, random x, 1-bit operation mix).
+    e_cycle_fj: LogBilinear,
+}
+
+impl Default for ImplModel {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+impl ImplModel {
+    /// Calibrate all surfaces from the Table II data of record.
+    pub fn calibrated() -> Self {
+        let (a, b, c, d) = corners(|p| p.cell_area_kge);
+        let kge = LogBilinear::fit(a, b, c, d);
+        let (a, b, c, d) = corners(|p| p.density);
+        let density = LogBilinear::fit(a, b, c, d);
+        let (a, b, c, d) = corners(|p| p.fmax_ghz);
+        let fmax = Bilinear::fit(a, b, c, d);
+        let (a, b, c, d) = corners(|p| p.power_mw / p.fmax_ghz * 1e3); // fJ→ mW/GHz = pJ; ×1e3 = fJ
+        let e_cycle_fj = LogBilinear::fit(a, b, c, d);
+        Self { kge, density, fmax, e_cycle_fj }
+    }
+
+    /// Standard-cell area in kGE.
+    pub fn cell_area_kge(&self, m: usize, n: usize) -> f64 {
+        self.kge.at(m, n)
+    }
+
+    /// Placement density (placed cell area / total area).
+    pub fn density(&self, m: usize, n: usize) -> f64 {
+        self.density.at(m, n).min(0.85)
+    }
+
+    /// Layout area in µm².
+    pub fn area_um2(&self, m: usize, n: usize) -> f64 {
+        self.cell_area_kge(m, n) * 1e3 * UM2_PER_GE / self.density(m, n)
+    }
+
+    /// Maximum clock frequency in GHz.
+    pub fn fmax_ghz(&self, m: usize, n: usize) -> f64 {
+        self.fmax.at(m, n).max(0.05)
+    }
+
+    /// Energy per clock cycle (fJ) under Table II stimuli.
+    pub fn energy_per_cycle_fj(&self, m: usize, n: usize) -> f64 {
+        self.e_cycle_fj.at(m, n)
+    }
+
+    /// Power at fmax (mW) under Table II stimuli.
+    pub fn power_mw(&self, m: usize, n: usize) -> f64 {
+        self.energy_per_cycle_fj(m, n) * self.fmax_ghz(m, n) * 1e-3
+    }
+
+    /// Peak 1-bit throughput in TOP/s: M(2N−1)·fmax.
+    pub fn peak_tops(&self, m: usize, n: usize) -> f64 {
+        let cfg = PpacConfig::new(m, n);
+        cfg.ops_per_cycle() as f64 * self.fmax_ghz(m, n) * 1e9 / 1e12
+    }
+
+    /// Energy efficiency in fJ/OP at peak throughput.
+    pub fn fj_per_op(&self, m: usize, n: usize) -> f64 {
+        self.power_mw(m, n) * 1e-3 / (self.peak_tops(m, n) * 1e12) * 1e15
+    }
+
+    /// Area breakdown mirroring Fig. 3's observation that a row ALU's
+    /// area is comparable to its row memory. Returns (row_memory_kge,
+    /// row_alus_kge, bank_adders_kge, periphery_kge).
+    pub fn area_breakdown_kge(&self, m: usize, n: usize) -> (f64, f64, f64, f64) {
+        let total = self.cell_area_kge(m, n);
+        // Bit-cell: latch + XNOR + AND + mux + clock gate ≈ 10 GE.
+        let mem = (m * n) as f64 * 10.0 / 1e3;
+        // Bank adder: 16-input popcount of row MSBs ≈ 40 GE per bank.
+        let bank = (m as f64 / 16.0) * 40.0 / 1e3;
+        // Periphery (input drivers, config regs) ≈ 2 GE per column + row.
+        let periph = (2 * (m + n)) as f64 / 1e3;
+        let alu = (total - mem - bank - periph).max(0.0);
+        (mem, alu, bank, periph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::tech::TABLE2;
+
+    #[test]
+    fn surfaces_are_exact_at_calibration_points() {
+        let m = ImplModel::calibrated();
+        for p in TABLE2 {
+            let rel = |got: f64, want: f64| (got - want).abs() / want;
+            assert!(rel(m.cell_area_kge(p.m, p.n), p.cell_area_kge) < 1e-9);
+            assert!(rel(m.fmax_ghz(p.m, p.n), p.fmax_ghz) < 1e-9);
+            assert!(rel(m.density(p.m, p.n), p.density) < 1e-9);
+            // Area and power go through derived constants → small tolerance.
+            assert!(
+                rel(m.area_um2(p.m, p.n), p.area_um2) < 0.02,
+                "{}x{} area {} vs {}",
+                p.m,
+                p.n,
+                m.area_um2(p.m, p.n),
+                p.area_um2
+            );
+            assert!(rel(m.power_mw(p.m, p.n), p.power_mw) < 1e-6);
+            assert!(rel(m.peak_tops(p.m, p.n), p.peak_tops) < 0.01);
+            assert!(rel(m.fj_per_op(p.m, p.n), p.energy_fj_per_op) < 0.01);
+        }
+    }
+
+    #[test]
+    fn interpolation_is_monotone_and_sane() {
+        let m = ImplModel::calibrated();
+        // 64×64 must land between the corner behaviours.
+        let f = m.fmax_ghz(64, 64);
+        assert!(f < 1.116 && f > 0.703, "fmax(64,64)={f}");
+        let kge = m.cell_area_kge(64, 64);
+        assert!(kge > 17.0 && kge < 897.0);
+        // Larger arrays: more area, slower clock, better fJ/OP at N-growth.
+        assert!(m.cell_area_kge(128, 256) > m.cell_area_kge(64, 256));
+        assert!(m.fmax_ghz(512, 512) < m.fmax_ghz(256, 256));
+        assert!(m.fj_per_op(16, 256) < m.fj_per_op(16, 16), "N growth amortizes the ALU");
+    }
+
+    #[test]
+    fn area_breakdown_alu_comparable_to_memory() {
+        // Fig. 3 discussion: "adding a new row implies a new row ALU,
+        // whose area can be comparable to that of the row memory".
+        let m = ImplModel::calibrated();
+        let (mem, alu, _, _) = m.area_breakdown_kge(256, 16);
+        // For short rows (N=16) the ALU dominates or matches the memory.
+        assert!(alu > 0.5 * mem, "mem={mem} alu={alu}");
+        let parts = m.area_breakdown_kge(256, 256);
+        let total: f64 = parts.0 + parts.1 + parts.2 + parts.3;
+        assert!((total - m.cell_area_kge(256, 256)).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn bilinear_fit_exactness() {
+        let s = Bilinear::fit(1.0, 2.0, 3.0, 5.0);
+        assert!((s.at(16, 16) - 1.0).abs() < 1e-12);
+        assert!((s.at(16, 256) - 2.0).abs() < 1e-12);
+        assert!((s.at(256, 16) - 3.0).abs() < 1e-12);
+        assert!((s.at(256, 256) - 5.0).abs() < 1e-12);
+    }
+}

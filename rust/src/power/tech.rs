@@ -1,0 +1,216 @@
+//! Technology data of record: the paper's measured points (Tables II and
+//! III) and 28 nm CMOS constants. These are the *calibration inputs*; the
+//! models in [`super::surface`] and [`super::energy`] must reproduce them
+//! (asserted by tests) and interpolate everything else.
+
+/// How a design's numbers were obtained (Table IV "Implementation").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImplKind {
+    /// Post-layout simulation (PPAC, XNE).
+    Layout,
+    /// Measured silicon.
+    Silicon,
+}
+
+/// One Table II row: a post-layout implementation point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayoutPoint {
+    pub m: usize,
+    pub n: usize,
+    pub banks: usize,
+    pub subrows: usize,
+    pub area_um2: f64,
+    pub density: f64,
+    pub cell_area_kge: f64,
+    pub fmax_ghz: f64,
+    pub power_mw: f64,
+    pub peak_tops: f64,
+    pub energy_fj_per_op: f64,
+}
+
+/// Table II, verbatim.
+pub const TABLE2: [LayoutPoint; 4] = [
+    LayoutPoint {
+        m: 16,
+        n: 16,
+        banks: 1,
+        subrows: 1,
+        area_um2: 14_161.0,
+        density: 0.7577,
+        cell_area_kge: 17.0,
+        fmax_ghz: 1.116,
+        power_mw: 6.64,
+        peak_tops: 0.55,
+        energy_fj_per_op: 12.00,
+    },
+    LayoutPoint {
+        m: 16,
+        n: 256,
+        banks: 1,
+        subrows: 16,
+        area_um2: 72_590.0,
+        density: 0.7045,
+        cell_area_kge: 81.0,
+        fmax_ghz: 0.979,
+        power_mw: 45.60,
+        peak_tops: 8.01,
+        energy_fj_per_op: 5.69,
+    },
+    LayoutPoint {
+        m: 256,
+        n: 16,
+        banks: 16,
+        subrows: 1,
+        area_um2: 185_283.0,
+        density: 0.7252,
+        cell_area_kge: 213.0,
+        fmax_ghz: 0.824,
+        power_mw: 78.65,
+        peak_tops: 6.54,
+        energy_fj_per_op: 12.03,
+    },
+    LayoutPoint {
+        m: 256,
+        n: 256,
+        banks: 16,
+        subrows: 16,
+        area_um2: 783_240.0,
+        density: 0.7213,
+        cell_area_kge: 897.0,
+        fmax_ghz: 0.703,
+        power_mw: 381.43,
+        peak_tops: 91.99,
+        energy_fj_per_op: 4.15,
+    },
+];
+
+/// One Table III row: per-mode measurement on the 256×256 array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModePoint {
+    pub name: &'static str,
+    pub throughput_gmvps: f64,
+    pub power_mw: f64,
+    pub energy_pj_per_mvp: f64,
+}
+
+/// Table III, verbatim (256×256 PPAC, 0.9 V, 25 °C, TT corner).
+pub const TABLE3: [ModePoint; 5] = [
+    ModePoint { name: "hamming", throughput_gmvps: 0.703, power_mw: 478.0, energy_pj_per_mvp: 680.0 },
+    ModePoint { name: "pm1_mvp", throughput_gmvps: 0.703, power_mw: 498.0, energy_pj_per_mvp: 709.0 },
+    ModePoint { name: "multibit_4b01", throughput_gmvps: 0.044, power_mw: 226.0, energy_pj_per_mvp: 5137.0 },
+    ModePoint { name: "gf2_mvp", throughput_gmvps: 0.703, power_mw: 353.0, energy_pj_per_mvp: 502.0 },
+    ModePoint { name: "pla", throughput_gmvps: 0.703, power_mw: 352.0, energy_pj_per_mvp: 501.0 },
+];
+
+/// µm² of placed standard cells per gate equivalent in the paper's 28 nm
+/// library (derived: area·density / kGE is 0.62–0.64 across all four
+/// layouts; we use the mean).
+pub const UM2_PER_GE: f64 = 0.630;
+
+/// Nominal supply and temperature of the measurements.
+pub const VDD: f64 = 0.9;
+pub const TECH_NM: f64 = 28.0;
+
+/// Technology scaling to 28 nm / 0.9 V (Table IV footnote):
+/// A ∼ 1/ℓ², t_pd ∼ 1/ℓ, P_dyn ∼ 1/(V²ℓ).
+pub mod scale {
+    use super::{TECH_NM, VDD};
+
+    /// Throughput scaled to 28 nm: × (ℓ/28) (delay shrinks as 1/ℓ).
+    pub fn throughput(raw: f64, tech_nm: f64) -> f64 {
+        raw * tech_nm / TECH_NM
+    }
+
+    /// Energy-efficiency (TOP/s/W) scaled to 28 nm, 0.9 V:
+    /// × (V/0.9)²·(ℓ/28)² — switched capacitance shrinks with area (ℓ²)
+    /// and energy with V².
+    pub fn energy_eff(raw: f64, tech_nm: f64, vdd: f64) -> f64 {
+        raw * (vdd / VDD).powi(2) * (tech_nm / TECH_NM).powi(2)
+    }
+
+    /// Area scaled to 28 nm: × (28/ℓ)².
+    pub fn area(raw_mm2: f64, tech_nm: f64) -> f64 {
+        raw_mm2 * (TECH_NM / tech_nm).powi(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_internal_consistency() {
+        for p in TABLE2 {
+            // Peak TP = M(2N−1)·f.
+            let tops = p.m as f64 * (2.0 * p.n as f64 - 1.0) * p.fmax_ghz / 1e3;
+            assert!(
+                (tops - p.peak_tops).abs() / p.peak_tops < 0.01,
+                "{}x{}: computed {tops} vs table {}",
+                p.m,
+                p.n,
+                p.peak_tops
+            );
+            // fJ/OP = power / TP.
+            let fj = p.power_mw * 1e-3 / (p.peak_tops * 1e12) * 1e15;
+            assert!(
+                (fj - p.energy_fj_per_op).abs() / p.energy_fj_per_op < 0.01,
+                "{}x{}: fJ/OP {fj} vs {}",
+                p.m,
+                p.n,
+                p.energy_fj_per_op
+            );
+            // banks/subrows structure.
+            assert_eq!(p.banks, p.m / 16);
+            assert_eq!(p.subrows, p.n / 16);
+        }
+    }
+
+    #[test]
+    fn um2_per_ge_consistent_across_layouts() {
+        for p in TABLE2 {
+            let per_ge = p.area_um2 * p.density / (p.cell_area_kge * 1e3);
+            assert!(
+                (per_ge - UM2_PER_GE).abs() < 0.02,
+                "{}x{}: {per_ge}",
+                p.m,
+                p.n
+            );
+        }
+    }
+
+    #[test]
+    fn table3_throughput_consistency() {
+        // 1-bit modes run at fmax; the 4-bit mode at fmax/16.
+        let f = TABLE2[3].fmax_ghz;
+        for mp in TABLE3 {
+            let expect = if mp.name == "multibit_4b01" { f / 16.0 } else { f };
+            assert!((mp.throughput_gmvps - expect).abs() < 0.001, "{}", mp.name);
+            // pJ/MVP = mW / GMVP/s (within rounding).
+            let pj = mp.power_mw / mp.throughput_gmvps;
+            assert!(
+                (pj - mp.energy_pj_per_mvp).abs() / mp.energy_pj_per_mvp < 0.01,
+                "{}: {pj} vs {}",
+                mp.name,
+                mp.energy_pj_per_mvp
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_rules_reproduce_table4_scaled_columns() {
+        // CIMA [6]: 65 nm, 1.2 V — 4720 GOP/s → 10 957; 152 → 1456 TOP/s/W.
+        assert!((scale::throughput(4720.0, 65.0) - 10957.0).abs() < 20.0);
+        assert!((scale::energy_eff(152.0, 65.0, 1.2) - 1456.0).abs() < 10.0);
+        // Bankman [19]: 28 nm, 0.8 V — 532 → 420 TOP/s/W.
+        assert!((scale::energy_eff(532.0, 28.0, 0.8) - 420.0).abs() < 2.0);
+        // BRein [10]: 65 nm, 1.0 V — 1.38 → 3.2 GOP/s; 2.3 → 15 TOP/s/W.
+        assert!((scale::throughput(1.38, 65.0) - 3.2).abs() < 0.1);
+        assert!((scale::energy_eff(2.3, 65.0, 1.0) - 15.0).abs() < 0.4);
+        // UNPU [23]: 65 nm, 1.1 V — 7372 → 17 114; 46.7 → 376.
+        assert!((scale::throughput(7372.0, 65.0) - 17114.0).abs() < 20.0);
+        assert!((scale::energy_eff(46.7, 65.0, 1.1) - 376.0).abs() < 2.0);
+        // XNE [24]: 22 nm, 0.8 V — 108 → 84.7; 112 → 54.6.
+        assert!((scale::throughput(108.0, 22.0) - 84.86).abs() < 0.5);
+        assert!((scale::energy_eff(112.0, 22.0, 0.8) - 54.6).abs() < 0.5);
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//!
+//! `make artifacts` lowers the L2 functional models to HLO *text*
+//! (`artifacts/*.hlo.txt` + `manifest.json`); this module compiles them
+//! once on the PJRT CPU client (`xla` crate) and executes them from rust —
+//! Python never runs on this path. The executed artifacts serve as the
+//! golden functional reference the cycle-accurate simulator is
+//! cross-checked against (see `examples/e2e_bnn.rs` and
+//! `rust/tests/runtime_vs_sim.rs`).
+//!
+//! Interchange is HLO text, NOT serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{PpacError, Result};
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| PpacError::Artifact("missing shape".into()))?
+            .iter()
+            .map(|d| d.as_i64().map(|v| v as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| PpacError::Artifact("bad shape".into()))?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PpacError::Artifact("missing dtype".into()))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One manifest entry: an AOT-compiled function.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub m: usize,
+    pub n: usize,
+    pub batch: usize,
+    pub entries: Vec<EntryMeta>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src)?;
+        let arr = j
+            .get("array")
+            .ok_or_else(|| PpacError::Artifact("missing array section".into()))?;
+        let dim = |k: &str| -> Result<usize> {
+            arr.get(k)
+                .and_then(Json::as_i64)
+                .map(|v| v as usize)
+                .ok_or_else(|| PpacError::Artifact(format!("missing array.{k}")))
+        };
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| PpacError::Artifact("missing entries".into()))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| PpacError::Artifact("entry missing name".into()))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| PpacError::Artifact("entry missing file".into()))?
+                .to_string();
+            let metas = |k: &str| -> Result<Vec<TensorMeta>> {
+                e.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| PpacError::Artifact(format!("entry missing {k}")))?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect()
+            };
+            entries.push(EntryMeta {
+                name,
+                file,
+                inputs: metas("inputs")?,
+                outputs: metas("outputs")?,
+            });
+        }
+        Ok(Self { m: dim("m")?, n: dim("n")?, batch: dim("batch")?, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// The PJRT runtime: compiled executables keyed by entry name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifacts directory (relative to the repo root / cwd).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PPAC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load the manifest and lazily compile entries on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            PpacError::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&src)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| PpacError::Artifact(format!("PJRT client: {e:?}")))?;
+        Ok(Self { client, manifest, dir, executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile_entry(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| PpacError::Artifact(format!("unknown entry {name}")))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )
+        .map_err(|e| PpacError::Artifact(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| PpacError::Artifact(format!("compile {name}: {e:?}")))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry on int32 inputs (flattened row-major). Returns the
+    /// flattened int32 outputs.
+    pub fn execute_i32(&mut self, name: &str, inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        self.compile_entry(name)?;
+        let entry = self.manifest.entry(name).unwrap().clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(PpacError::DimMismatch {
+                context: "runtime inputs",
+                expected: entry.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, meta) in inputs.iter().zip(&entry.inputs) {
+            if data.len() != meta.elements() {
+                return Err(PpacError::DimMismatch {
+                    context: "runtime input elements",
+                    expected: meta.elements(),
+                    got: data.len(),
+                });
+            }
+            let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data.as_slice())
+                .reshape(&dims)
+                .map_err(|e| PpacError::Artifact(format!("reshape: {e:?}")))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| PpacError::Artifact(format!("execute {name}: {e:?}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| PpacError::Artifact(format!("fetch {name}: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| PpacError::Artifact(format!("tuple {name}: {e:?}")))?;
+        let mut flat = Vec::with_capacity(outs.len());
+        for (o, meta) in outs.iter().zip(&entry.outputs) {
+            let v = o
+                .to_vec::<i32>()
+                .map_err(|e| PpacError::Artifact(format!("to_vec {name}: {e:?}")))?;
+            if v.len() != meta.elements() {
+                return Err(PpacError::DimMismatch {
+                    context: "runtime output elements",
+                    expected: meta.elements(),
+                    got: v.len(),
+                });
+            }
+            flat.push(v);
+        }
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_the_real_schema() {
+        let src = r#"{
+          "array": {"m": 256, "n": 256, "batch": 16},
+          "bnn_classes": 10,
+          "multibit": {"k": 4, "l": 4, "n_eff": 64},
+          "entries": [
+            {"name": "pm1_mvp", "file": "pm1_mvp.hlo.txt",
+             "inputs": [{"shape": [256, 256], "dtype": "int32"},
+                         {"shape": [256, 16], "dtype": "int32"}],
+             "outputs": [{"shape": [256, 16], "dtype": "int32"}]}
+          ]
+        }"#;
+        let m = Manifest::parse(src).unwrap();
+        assert_eq!((m.m, m.n, m.batch), (256, 256, 16));
+        let e = m.entry("pm1_mvp").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].elements(), 65536);
+        assert_eq!(e.outputs[0].shape, vec![256, 16]);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"array": {"m": 1}}"#).is_err());
+        assert!(
+            Manifest::parse(r#"{"array": {"m":1,"n":1,"batch":1}, "entries": [{}]}"#)
+                .is_err()
+        );
+    }
+}

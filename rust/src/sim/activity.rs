@@ -1,0 +1,112 @@
+//! Switching-activity tracing for the power model (paper §IV-A).
+//!
+//! The paper extracts power from stimuli-based post-layout simulation;
+//! our analogue is exact toggle counting on the simulated netlist
+//! boundaries: bit-cell outputs (split XNOR vs AND — the paper attributes
+//! the power gap between modes to the higher switching activity of XNOR
+//! outputs), the x/s input lines, popcount adder activity, and ALU/output
+//! register writes.
+
+/// Aggregate toggle counters over a simulation run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ActivityStats {
+    /// Clock cycles observed.
+    pub cycles: u64,
+    /// Bit-cell output toggles at cells currently selecting XNOR.
+    pub xnor_toggles: u64,
+    /// Bit-cell output toggles at cells currently selecting AND.
+    pub and_toggles: u64,
+    /// Input-line (x) toggles, fanned out to all M rows by the column.
+    pub x_line_toggles: u64,
+    /// Operator-select (s) line toggles.
+    pub s_line_toggles: u64,
+    /// Row popcount result changes (subrow adder + ALU input activity).
+    pub r_toggled_rows: u64,
+    /// Row-ALU register writes (nreg/acc_v/acc_m).
+    pub alu_reg_writes: u64,
+    /// Row-ALU offset/shift datapath activations (popX2 / cEn / nOZ
+    /// asserted), in row-cycles — the extra adder work of the MVP modes.
+    pub alu_offset_ops: u64,
+    /// Memory (latch) writes: rows written × bits per row.
+    pub latch_bits_written: u64,
+    /// Bit-cells evaluated (M·N per compute cycle) — the leakage base.
+    pub cell_evals: u64,
+}
+
+impl ActivityStats {
+    pub fn add(&mut self, other: &ActivityStats) {
+        self.cycles += other.cycles;
+        self.xnor_toggles += other.xnor_toggles;
+        self.and_toggles += other.and_toggles;
+        self.x_line_toggles += other.x_line_toggles;
+        self.s_line_toggles += other.s_line_toggles;
+        self.r_toggled_rows += other.r_toggled_rows;
+        self.alu_reg_writes += other.alu_reg_writes;
+        self.alu_offset_ops += other.alu_offset_ops;
+        self.latch_bits_written += other.latch_bits_written;
+        self.cell_evals += other.cell_evals;
+    }
+
+    /// Average toggles per bit-cell per cycle (the activity factor α used
+    /// by the dynamic-power model).
+    pub fn cell_activity_factor(&self) -> f64 {
+        if self.cell_evals == 0 {
+            return 0.0;
+        }
+        (self.xnor_toggles + self.and_toggles) as f64 / self.cell_evals as f64
+    }
+
+    /// Fraction of toggles attributable to XNOR-configured cells.
+    pub fn xnor_share(&self) -> f64 {
+        let total = self.xnor_toggles + self.and_toggles;
+        if total == 0 {
+            return 0.0;
+        }
+        self.xnor_toggles as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let a = ActivityStats {
+            cycles: 1,
+            xnor_toggles: 2,
+            and_toggles: 3,
+            x_line_toggles: 4,
+            s_line_toggles: 5,
+            r_toggled_rows: 6,
+            alu_reg_writes: 7,
+            alu_offset_ops: 10,
+            latch_bits_written: 8,
+            cell_evals: 9,
+        };
+        let mut b = a.clone();
+        b.add(&a);
+        assert_eq!(b.cycles, 2);
+        assert_eq!(b.cell_evals, 18);
+        assert_eq!(b.latch_bits_written, 16);
+    }
+
+    #[test]
+    fn activity_factor() {
+        let s = ActivityStats {
+            xnor_toggles: 30,
+            and_toggles: 10,
+            cell_evals: 100,
+            ..Default::default()
+        };
+        assert!((s.cell_activity_factor() - 0.4).abs() < 1e-12);
+        assert!((s.xnor_share() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let s = ActivityStats::default();
+        assert_eq!(s.cell_activity_factor(), 0.0);
+        assert_eq!(s.xnor_share(), 0.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Packed bit vector — the storage/dataflow primitive of the simulator.
+//!
+//! Rows of PPAC bit-cells, input vectors `x` and the per-column operator
+//! select `s` are all length-N bit vectors; packing them into u64 words
+//! lets one machine word evaluate 64 bit-cells (XNOR/AND + mux) at once
+//! while remaining bit-exact with the per-cell semantics (cross-checked by
+//! `sim::scalar` in property tests).
+
+/// Fixed-length packed bit vector.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self::zeros(len);
+        for w in &mut v.words {
+            *w = u64::MAX;
+        }
+        v.mask_tail();
+        v
+    }
+
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from packed u64 words (tail bits beyond `len` are cleared).
+    pub fn from_words(words: &[u64], len: usize) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64));
+        let mut v = Self { words: words.to_vec(), len };
+        v.mask_tail();
+        v
+    }
+
+    pub fn from_fn(len: usize, f: impl Fn(usize) -> bool) -> Self {
+        let mut v = Self::zeros(len);
+        for i in 0..len {
+            if f(i) {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let (w, off) = (i / 64, i % 64);
+        if b {
+            self.words[w] |= 1 << off;
+        } else {
+            self.words[w] &= !(1 << off);
+        }
+    }
+
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Popcount over bit positions [lo, hi).
+    pub fn popcount_range(&self, lo: usize, hi: usize) -> u32 {
+        debug_assert!(lo <= hi && hi <= self.len);
+        let mut count = 0;
+        let (wl, wh) = (lo / 64, hi.div_ceil(64));
+        for w in wl..wh {
+            let mut word = self.words[w];
+            let base = w * 64;
+            if lo > base {
+                word &= u64::MAX << (lo - base);
+            }
+            if hi < base + 64 {
+                word &= (1u64 << (hi - base)) - 1;
+            }
+            count += word.count_ones();
+        }
+        count
+    }
+
+    /// The PPAC bit-cell array operation for one row: per column select
+    /// XNOR (where `s` = 1) or AND (where `s` = 0) of (stored `a`, input
+    /// `x`). Returns the packed bit-cell outputs.
+    #[inline]
+    pub fn cell_outputs(a: &BitVec, x: &BitVec, s: &BitVec) -> BitVec {
+        debug_assert_eq!(a.len, x.len);
+        debug_assert_eq!(a.len, s.len);
+        let mut out = BitVec::zeros(a.len);
+        for (i, o) in out.words.iter_mut().enumerate() {
+            let xnor = !(a.words[i] ^ x.words[i]);
+            let and = a.words[i] & x.words[i];
+            *o = (s.words[i] & xnor) | (!s.words[i] & and);
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Fused bit-cell evaluation + popcount for one row, with NO output
+    /// materialization — the simulator's hot path when activity tracing
+    /// is off. Bit-identical to `cell_outputs(a, x, s).popcount()`.
+    #[inline]
+    pub fn cell_popcount(a: &BitVec, x: &BitVec, s: &BitVec) -> u32 {
+        debug_assert_eq!(a.len, x.len);
+        debug_assert_eq!(a.len, s.len);
+        // The tail bits of `a`/`x`/`s` are kept clear by mask_tail, and
+        // XNOR of two clear bits selected by a clear `s` contributes
+        // nothing: (s & xnor) | (!s & and) = (0) | (tail_and=0) = 0 — so
+        // no tail masking is needed in the loop. Zipped iteration keeps
+        // the loop free of bounds checks (§Perf iteration 2).
+        a.words
+            .iter()
+            .zip(&x.words)
+            .zip(&s.words)
+            .map(|((&aw, &xw), &sw)| {
+                let xnor = !(aw ^ xw);
+                let and = aw & xw;
+                ((sw & xnor) | (!sw & and)).count_ones()
+            })
+            .sum()
+    }
+
+    /// Hamming distance to another BitVec of the same length.
+    pub fn hamming_distance(&self, other: &BitVec) -> u32 {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+
+    /// In-place XOR (used for toggle counting and GF(2) helpers).
+    pub fn xor_with(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(128));
+        assert_eq!(v.popcount(), 3);
+        v.set(64, false);
+        assert_eq!(v.popcount(), 2);
+    }
+
+    #[test]
+    fn ones_masks_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.popcount(), 70);
+        assert_eq!(v.words().len(), 2);
+        assert_eq!(v.words()[1] >> 6, 0, "tail bits must be clear");
+    }
+
+    #[test]
+    fn from_bools_roundtrip() {
+        let bits = vec![true, false, true, true, false];
+        let v = BitVec::from_bools(&bits);
+        assert_eq!(v.to_bools(), bits);
+    }
+
+    #[test]
+    fn popcount_range_matches_naive() {
+        let mut rng = Xoshiro256pp::seeded(5);
+        let bits = rng.bits(200);
+        let v = BitVec::from_bools(&bits);
+        for (lo, hi) in [(0, 200), (3, 64), (64, 128), (60, 70), (199, 200), (5, 5)] {
+            let naive = bits[lo..hi].iter().filter(|&&b| b).count() as u32;
+            assert_eq!(v.popcount_range(lo, hi), naive, "[{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn cell_outputs_match_per_bit_semantics() {
+        let mut rng = Xoshiro256pp::seeded(6);
+        for len in [1usize, 63, 64, 65, 200] {
+            let a_bits = rng.bits(len);
+            let x_bits = rng.bits(len);
+            let s_bits = rng.bits(len);
+            let out = BitVec::cell_outputs(
+                &BitVec::from_bools(&a_bits),
+                &BitVec::from_bools(&x_bits),
+                &BitVec::from_bools(&s_bits),
+            );
+            for i in 0..len {
+                let want = if s_bits[i] {
+                    a_bits[i] == x_bits[i] // XNOR
+                } else {
+                    a_bits[i] && x_bits[i] // AND
+                };
+                assert_eq!(out.get(i), want, "len={len} i={i}");
+            }
+            // Tail must stay clear so popcounts are exact.
+            assert_eq!(out.popcount(), out.to_bools().iter().filter(|&&b| b).count() as u32);
+        }
+    }
+
+    #[test]
+    fn hamming_distance_basics() {
+        let a = BitVec::from_bools(&[true, true, false, false]);
+        let b = BitVec::from_bools(&[true, false, true, false]);
+        assert_eq!(a.hamming_distance(&b), 2);
+        assert_eq!(a.hamming_distance(&a), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! PPAC array configuration (paper §II-B, §IV-A).
+
+use crate::error::{PpacError, Result};
+
+/// Static parameters of a PPAC array instance.
+///
+/// The paper's implementations all use 16 rows per bank and V = 16
+/// bit-cells per subrow; both remain parameters here (the RTL is
+/// "highly parametrizable", §V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PpacConfig {
+    /// M — number of stored words (rows).
+    pub m: usize,
+    /// N — bits per word (columns).
+    pub n: usize,
+    /// Rows per bank (16 in all paper configurations).
+    pub rows_per_bank: usize,
+    /// B_s — subrows per row; each subrow popcounts V = N/B_s cells.
+    pub subrows: usize,
+    /// Maximum vector bits L supported by the row-ALU accumulators.
+    pub max_l: u32,
+    /// Maximum matrix bits K supported by the row-ALU accumulators.
+    pub max_k: u32,
+}
+
+impl PpacConfig {
+    /// The paper's default micro-architecture for a given M×N: banks of 16
+    /// rows, V = 16 cells per subrow, K and L up to 4 bits (§IV-A).
+    pub fn new(m: usize, n: usize) -> Self {
+        Self {
+            m,
+            n,
+            rows_per_bank: 16.min(m.max(1)),
+            subrows: (n / 16).max(1),
+            max_l: 4,
+            max_k: 4,
+        }
+    }
+
+    /// The four arrays of Table II.
+    pub fn table2_sizes() -> [PpacConfig; 4] {
+        [
+            PpacConfig::new(16, 16),
+            PpacConfig::new(16, 256),
+            PpacConfig::new(256, 16),
+            PpacConfig::new(256, 256),
+        ]
+    }
+
+    /// B — number of banks.
+    pub fn banks(&self) -> usize {
+        self.m / self.rows_per_bank
+    }
+
+    /// V — bit-cells per subrow.
+    pub fn v(&self) -> usize {
+        self.n / self.subrows
+    }
+
+    /// Wires from one subrow to the row ALU: ⌈log₂(V+1)⌉ (§II-B).
+    pub fn subrow_wires(&self) -> u32 {
+        ((self.v() + 1) as f64).log2().ceil() as u32
+    }
+
+    /// Row population-count width: ⌈log₂(N+1)⌉ bits.
+    pub fn popcount_width(&self) -> u32 {
+        ((self.n + 1) as f64).log2().ceil() as u32
+    }
+
+    /// Width of the row-ALU accumulator datapath: the popcount plus
+    /// headroom for popX2, the offset and K·L doubling steps plus signs.
+    pub fn alu_width(&self) -> u32 {
+        self.popcount_width() + 1 + self.max_k + self.max_l + 2
+    }
+
+    /// 1-bit operations per cycle: each row does N 1-bit multiplies and
+    /// N−1 additions, so M(2N−1) OP/cycle (§IV-A).
+    pub fn ops_per_cycle(&self) -> u64 {
+        self.m as u64 * (2 * self.n as u64 - 1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.n == 0 {
+            return Err(PpacError::Config("M and N must be positive".into()));
+        }
+        if self.m % self.rows_per_bank != 0 {
+            return Err(PpacError::Config(format!(
+                "M = {} not divisible by rows_per_bank = {}",
+                self.m, self.rows_per_bank
+            )));
+        }
+        if self.n % self.subrows != 0 {
+            return Err(PpacError::Config(format!(
+                "N = {} not divisible by subrows = {}",
+                self.n, self.subrows
+            )));
+        }
+        if self.max_k == 0 || self.max_l == 0 {
+            return Err(PpacError::Config("max_k/max_l must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_microarchitecture() {
+        let c = PpacConfig::new(256, 256);
+        assert_eq!(c.banks(), 16);
+        assert_eq!(c.rows_per_bank, 16);
+        assert_eq!(c.subrows, 16);
+        assert_eq!(c.v(), 16);
+        assert_eq!(c.max_k, 4);
+        assert_eq!(c.max_l, 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn table2_configs_match_paper() {
+        let sizes = PpacConfig::table2_sizes();
+        // Banks B: 1, 1, 16, 16 — Subrows B_s: 1, 16, 1, 16 (Table II).
+        assert_eq!(sizes.map(|c| c.banks()), [1, 1, 16, 16]);
+        assert_eq!(sizes.map(|c| c.subrows), [1, 16, 1, 16]);
+        for c in sizes {
+            c.validate().unwrap();
+            assert_eq!(c.v(), 16, "V = 16 cells per subrow in all configs");
+        }
+    }
+
+    #[test]
+    fn subrow_wire_reduction() {
+        // §II-B: wires drop from V to ⌈log₂(V+1)⌉ = 5 for V = 16.
+        let c = PpacConfig::new(256, 256);
+        assert_eq!(c.subrow_wires(), 5);
+        assert_eq!(c.popcount_width(), 9); // ⌈log₂ 257⌉
+    }
+
+    #[test]
+    fn ops_per_cycle_matches_paper_formula() {
+        // 256×256: M(2N−1) = 256·511 = 130 816 OP/cycle; at 0.703 GHz
+        // that is the paper's 92 TOP/s.
+        let c = PpacConfig::new(256, 256);
+        assert_eq!(c.ops_per_cycle(), 130_816);
+        let tops = c.ops_per_cycle() as f64 * 0.703e9 / 1e12;
+        assert!((tops - 91.96).abs() < 0.1, "tops={tops}");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(PpacConfig::new(0, 16).validate().is_err());
+        let mut c = PpacConfig::new(32, 32);
+        c.rows_per_bank = 5;
+        assert!(c.validate().is_err());
+        let mut c2 = PpacConfig::new(32, 32);
+        c2.subrows = 5;
+        assert!(c2.validate().is_err());
+    }
+}

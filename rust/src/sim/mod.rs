@@ -1,0 +1,25 @@
+//! Cycle-accurate, bit-true simulator of the PPAC array (paper Fig. 2).
+//!
+//! Layering:
+//! - [`bitvec`] — packed bit vectors (the storage/dataflow primitive);
+//! - [`config`] — array geometry (M, N, banks, subrows, K/L support);
+//! - [`signals`] — per-cycle inputs and row-ALU control bundles;
+//! - [`row_alu`] — the register-true row ALU of Fig. 2(c);
+//! - [`array`] — the pipelined array (the fast, packed engine);
+//! - [`scalar`] — per-bit-cell reference model (tests only);
+//! - [`activity`] — switching-activity tracing for the power model.
+
+pub mod activity;
+pub mod array;
+pub mod bitvec;
+pub mod config;
+pub mod row_alu;
+pub mod scalar;
+pub mod signals;
+
+pub use activity::ActivityStats;
+pub use array::PpacArray;
+pub use bitvec::BitVec;
+pub use config::PpacConfig;
+pub use row_alu::{RowAlu, RowAluShared};
+pub use signals::{CycleInput, CycleOutput, RowAluCtrl, WriteCmd};

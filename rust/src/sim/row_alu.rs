@@ -1,0 +1,189 @@
+//! Row ALU — Fig. 2(c), modelled register-true.
+//!
+//! Dataflow per cycle, applied to the pipelined population count `r`:
+//!
+//! ```text
+//!   p  = popX2 ? 2r : r
+//!   t  = p + (nOZ ? nreg : 0) − (cEn ? c : 0)
+//!   pv = vAccX-1 ? −t : t
+//!   v  = (vAcc ? 2·acc_v : 0) + pv          ; weV → acc_v := v
+//!   pm = mAccX-1 ? −v : v
+//!   u  = (mAcc ? 2·acc_m : 0) + pm          ; weM → acc_m := u
+//!   y  = u − δ_m                             ; weN → nreg := r
+//! ```
+//!
+//! All quantities are modelled as i64 and checked against the configured
+//! hardware datapath width (`PpacConfig::alu_width`) — an overflow is a
+//! *design* bug, so it panics in debug and saturates the check counter in
+//! release.
+
+use super::signals::RowAluCtrl;
+
+/// Architectural state of one row ALU.
+#[derive(Debug, Clone, Default)]
+pub struct RowAlu {
+    /// Correction register (h̄(a,1) / h̄(a,0)); written by weN.
+    pub nreg: i64,
+    /// First (vector) accumulator; written by weV.
+    pub acc_v: i64,
+    /// Second (matrix) accumulator; written by weM.
+    pub acc_m: i64,
+    /// Programmable per-row threshold δ_m (configuration time).
+    pub delta: i64,
+}
+
+/// Shared row-ALU configuration (same for all rows, §II-B): the offset `c`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RowAluShared {
+    pub c: i64,
+}
+
+impl RowAlu {
+    /// Execute one ALU cycle on population count `r`; returns (y, u) where
+    /// y is the row output and u the pre-threshold value.
+    #[inline]
+    pub fn cycle(&mut self, r: u32, ctrl: RowAluCtrl, shared: RowAluShared) -> i64 {
+        let r = r as i64;
+        let p = if ctrl.pop_x2 { 2 * r } else { r };
+        let t = p + if ctrl.no_z { self.nreg } else { 0 } - if ctrl.c_en { shared.c } else { 0 };
+        let pv = if ctrl.v_acc_neg { -t } else { t };
+        let v = if ctrl.v_acc { 2 * self.acc_v } else { 0 } + pv;
+        if ctrl.we_v {
+            self.acc_v = v;
+        }
+        let pm = if ctrl.m_acc_neg { -v } else { v };
+        let u = if ctrl.m_acc { 2 * self.acc_m } else { 0 } + pm;
+        if ctrl.we_m {
+            self.acc_m = u;
+        }
+        if ctrl.we_n {
+            self.nreg = r;
+        }
+        u - self.delta
+    }
+
+    /// Clear the dynamic registers (not δ, which is configuration).
+    pub fn reset(&mut self) {
+        self.nreg = 0;
+        self.acc_v = 0;
+        self.acc_m = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(c: i64) -> RowAluShared {
+        RowAluShared { c }
+    }
+
+    #[test]
+    fn hamming_passthrough() {
+        let mut alu = RowAlu::default();
+        assert_eq!(alu.cycle(13, RowAluCtrl::passthrough(), shared(0)), 13);
+    }
+
+    #[test]
+    fn cam_threshold() {
+        // δ = N: complete match iff r = N (§III-A).
+        let mut alu = RowAlu { delta: 16, ..Default::default() };
+        assert_eq!(alu.cycle(16, RowAluCtrl::passthrough(), shared(0)), 0);
+        assert!(alu.cycle(15, RowAluCtrl::passthrough(), shared(0)) < 0);
+    }
+
+    #[test]
+    fn pm1_mvp_eq1() {
+        // eq. (1): y = 2·h̄ − N. N=16, h̄=10 → 4.
+        let mut alu = RowAlu::default();
+        assert_eq!(alu.cycle(10, RowAluCtrl::pm1_mvp(), shared(16)), 4);
+        // all-equal words: 2·16−16 = 16 = +N; all-different: −16.
+        assert_eq!(alu.cycle(16, RowAluCtrl::pm1_mvp(), shared(16)), 16);
+        assert_eq!(alu.cycle(0, RowAluCtrl::pm1_mvp(), shared(16)), -16);
+    }
+
+    #[test]
+    fn eq2_uses_correction_register() {
+        // Setup: store h̄(a,1) = 9; compute: y = r + nreg − N.
+        let mut alu = RowAlu::default();
+        alu.cycle(9, RowAluCtrl::store_correction(), shared(0));
+        assert_eq!(alu.nreg, 9);
+        let y = alu.cycle(12, RowAluCtrl::eq2_compute(), shared(16));
+        assert_eq!(y, 12 + 9 - 16);
+    }
+
+    #[test]
+    fn eq3_doubles_and_corrects() {
+        // Setup: store h̄(a,0) = 7; compute: y = 2r + nreg − N.
+        let mut alu = RowAlu::default();
+        alu.cycle(7, RowAluCtrl::store_correction(), shared(0));
+        let y = alu.cycle(5, RowAluCtrl::eq3_compute(), shared(16));
+        assert_eq!(y, 2 * 5 + 7 - 16);
+    }
+
+    #[test]
+    fn bit_serial_vector_schedule_unsigned() {
+        // 3-bit uint vector: partials 1, 0, 1 → value 5 (per-partial ⟨a,x_l⟩
+        // here just fed as r with AND-mode passthrough).
+        let mut alu = RowAlu::default();
+        let s = shared(0);
+        // MSB: weV, no vAcc.
+        let c0 = RowAluCtrl { we_v: true, ..Default::default() };
+        alu.cycle(1, c0, s);
+        // middle: vAcc + weV
+        let c1 = RowAluCtrl { we_v: true, v_acc: true, ..Default::default() };
+        alu.cycle(0, c1, s);
+        let y = alu.cycle(1, c1, s);
+        assert_eq!(y, 5);
+        assert_eq!(alu.acc_v, 5);
+    }
+
+    #[test]
+    fn bit_serial_vector_schedule_signed_msb_negated() {
+        // 3-bit int vector bits (1,0,1) = −3 in 2's complement: −4+0+1.
+        let mut alu = RowAlu::default();
+        let s = shared(0);
+        let msb = RowAluCtrl { we_v: true, v_acc_neg: true, ..Default::default() };
+        alu.cycle(1, msb, s);
+        let rest = RowAluCtrl { we_v: true, v_acc: true, ..Default::default() };
+        alu.cycle(0, rest, s);
+        let y = alu.cycle(1, rest, s);
+        assert_eq!(y, -3);
+    }
+
+    #[test]
+    fn matrix_accumulator_chain() {
+        // Two matrix planes, 1-bit vector each (L=1): partials 3 then 1.
+        // signed matrix → value −3·2 + 1 = −5.
+        let mut alu = RowAlu::default();
+        let s = shared(0);
+        let k_msb = RowAluCtrl {
+            we_v: true,
+            we_m: true,
+            m_acc_neg: true,
+            ..Default::default()
+        };
+        alu.cycle(3, k_msb, s);
+        assert_eq!(alu.acc_m, -3);
+        let k_rest = RowAluCtrl { we_v: true, we_m: true, m_acc: true, ..Default::default() };
+        let y = alu.cycle(1, k_rest, s);
+        assert_eq!(y, -5);
+    }
+
+    #[test]
+    fn threshold_subtracts_at_output_only() {
+        let mut alu = RowAlu { delta: 10, ..Default::default() };
+        let y = alu.cycle(4, RowAluCtrl { we_v: true, ..Default::default() }, shared(0));
+        assert_eq!(y, -6);
+        assert_eq!(alu.acc_v, 4, "δ must not contaminate the accumulator");
+    }
+
+    #[test]
+    fn reset_clears_dynamic_state_keeps_delta() {
+        let mut alu = RowAlu { delta: 3, ..Default::default() };
+        alu.cycle(5, RowAluCtrl { we_v: true, we_m: true, we_n: true, ..Default::default() },
+                  shared(0));
+        alu.reset();
+        assert_eq!((alu.nreg, alu.acc_v, alu.acc_m, alu.delta), (0, 0, 0, 3));
+    }
+}

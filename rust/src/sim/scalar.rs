@@ -1,0 +1,250 @@
+//! Scalar (per-bit-cell) reference model of the array datapath.
+//!
+//! This is the "obviously correct" translation of Fig. 2(b): one latch,
+//! one XNOR, one AND and one mux per bit-cell, evaluated cell by cell with
+//! plain bools, plus per-subrow local popcounts summed by the row ALU —
+//! exactly the paper's structural decomposition. It shares the
+//! [`RowAlu`](super::row_alu::RowAlu) register model with the packed
+//! array, so property tests comparing the two pin down the bit-packing as
+//! the only difference under test.
+//!
+//! Used only in tests and cross-checks; the packed [`PpacArray`] is the
+//! hot path.
+
+use crate::error::{PpacError, Result};
+
+use super::bitvec::BitVec;
+use super::config::PpacConfig;
+use super::row_alu::{RowAlu, RowAluShared};
+use super::signals::{CycleInput, CycleOutput};
+
+/// One bit-cell: a stored bit and the combinational operators.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BitCell {
+    /// Latch contents a_{m,n} (active-low latch in silicon; we model the
+    /// stored logical value).
+    pub a: bool,
+}
+
+impl BitCell {
+    /// Combinational output for input bit `x` and operator select `s`
+    /// (s = 1 → XNOR, s = 0 → AND) — Fig. 2(b).
+    #[inline]
+    pub fn output(self, x: bool, s: bool) -> bool {
+        if s {
+            self.a == x // XNOR
+        } else {
+            self.a && x // AND
+        }
+    }
+}
+
+/// Scalar PPAC model: a grid of [`BitCell`]s with the same two-stage
+/// pipeline semantics as [`super::array::PpacArray`].
+#[derive(Debug, Clone)]
+pub struct ScalarPpac {
+    cfg: PpacConfig,
+    cells: Vec<Vec<BitCell>>, // [m][n]
+    alus: Vec<RowAlu>,
+    shared: RowAluShared,
+    pipe_r: Vec<u32>,
+    pipe_ctrl: super::signals::RowAluCtrl,
+    pipe_valid: bool,
+}
+
+impl ScalarPpac {
+    pub fn new(cfg: PpacConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            cells: vec![vec![BitCell::default(); cfg.n]; cfg.m],
+            alus: vec![RowAlu::default(); cfg.m],
+            shared: RowAluShared::default(),
+            pipe_r: vec![0; cfg.m],
+            pipe_ctrl: Default::default(),
+            pipe_valid: false,
+            cfg,
+        })
+    }
+
+    pub fn set_offset(&mut self, c: i64) {
+        self.shared.c = c;
+    }
+
+    pub fn set_thresholds(&mut self, deltas: &[i64]) -> Result<()> {
+        if deltas.len() != self.cfg.m {
+            return Err(PpacError::DimMismatch {
+                context: "thresholds",
+                expected: self.cfg.m,
+                got: deltas.len(),
+            });
+        }
+        for (alu, &d) in self.alus.iter_mut().zip(deltas) {
+            alu.delta = d;
+        }
+        Ok(())
+    }
+
+    pub fn write_row(&mut self, addr: usize, d: &BitVec) -> Result<()> {
+        if addr >= self.cfg.m {
+            return Err(PpacError::RowOutOfRange { row: addr, m: self.cfg.m });
+        }
+        for n in 0..self.cfg.n {
+            self.cells[addr][n].a = d.get(n);
+        }
+        Ok(())
+    }
+
+    pub fn load_matrix(&mut self, rows: &[BitVec]) -> Result<()> {
+        for (i, r) in rows.iter().enumerate() {
+            self.write_row(i, r)?;
+        }
+        Ok(())
+    }
+
+    /// One clock edge with the identical contract to `PpacArray::cycle`.
+    pub fn cycle(&mut self, input: &CycleInput) -> Result<Option<CycleOutput>> {
+        // Stage 2.
+        let output = if self.pipe_valid {
+            let mut y = Vec::with_capacity(self.cfg.m);
+            // Match PpacArray's untraced contract: diagnostics empty.
+            let r_out = Vec::new();
+            for (alu, &r) in self.alus.iter_mut().zip(&self.pipe_r) {
+                y.push(alu.cycle(r, self.pipe_ctrl, self.shared));
+            }
+            let bank_p = y
+                .chunks(self.cfg.rows_per_bank)
+                .map(|c| c.iter().filter(|&&v| v >= 0).count() as u32)
+                .collect();
+            Some(CycleOutput { y, r: r_out, bank_p })
+        } else {
+            None
+        };
+
+        // Stage 1: per-cell evaluation with explicit subrow popcounts.
+        let v = self.cfg.v();
+        for m in 0..self.cfg.m {
+            let mut r_total = 0u32;
+            for sub in 0..self.cfg.subrows {
+                // Local subrow adder over its V cells (§II-B).
+                let mut local = 0u32;
+                for j in 0..v {
+                    let n = sub * v + j;
+                    if self.cells[m][n].output(input.x.get(n), input.s.get(n)) {
+                        local += 1;
+                    }
+                }
+                debug_assert!(local <= v as u32);
+                r_total += local;
+            }
+            self.pipe_r[m] = r_total;
+        }
+        self.pipe_ctrl = input.alu;
+        self.pipe_valid = true;
+
+        // Write port.
+        if let Some(w) = &input.write {
+            self.write_row(w.addr, &w.d)?;
+        }
+        Ok(output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::array::PpacArray;
+    use crate::sim::signals::{RowAluCtrl, WriteCmd};
+    use crate::util::prop::Runner;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn bitcell_truth_table() {
+        for a in [false, true] {
+            for x in [false, true] {
+                let cell = BitCell { a };
+                assert_eq!(cell.output(x, true), a == x, "XNOR");
+                assert_eq!(cell.output(x, false), a && x, "AND");
+            }
+        }
+    }
+
+    /// The packed array and the scalar model must agree on every output of
+    /// every cycle for random configurations, schedules and write traffic.
+    #[test]
+    fn packed_equals_scalar_property() {
+        Runner::new(40).check("packed-vs-scalar", |g| {
+            // Random legal config (keep rows_per_bank | m and subrows | n).
+            let m = 4 * g.dim(8); // 4..32
+            let n = 8 * g.dim(6); // 8..48
+            let mut cfg = PpacConfig::new(m, n);
+            cfg.rows_per_bank = if m % 4 == 0 { 4 } else { m };
+            cfg.subrows = if n % 8 == 0 { n / 8 } else { 1 };
+            let mut packed = PpacArray::new(cfg).map_err(|e| e.to_string())?;
+            let mut scalar = ScalarPpac::new(cfg).map_err(|e| e.to_string())?;
+
+            let mut rng = g.rng.fork();
+            let rows: Vec<BitVec> =
+                (0..m).map(|_| BitVec::from_bools(&rng.bits(n))).collect();
+            packed.load_matrix(&rows).map_err(|e| e.to_string())?;
+            scalar.load_matrix(&rows).map_err(|e| e.to_string())?;
+
+            let deltas: Vec<i64> = rng.ints(m, -4, 4);
+            packed.set_thresholds(&deltas).map_err(|e| e.to_string())?;
+            scalar.set_thresholds(&deltas).map_err(|e| e.to_string())?;
+            let c = rng.range_i64(0, n as i64);
+            packed.set_offset(c);
+            scalar.set_offset(c);
+
+            for cycle in 0..12 {
+                let alu = RowAluCtrl {
+                    pop_x2: rng.bit(),
+                    c_en: rng.bit(),
+                    no_z: rng.bit(),
+                    we_n: rng.bit(),
+                    we_v: rng.bit(),
+                    v_acc: rng.bit(),
+                    v_acc_neg: rng.bit(),
+                    we_m: rng.bit(),
+                    m_acc: rng.bit(),
+                    m_acc_neg: rng.bit(),
+                };
+                let mut input = CycleInput::compute(
+                    BitVec::from_bools(&rng.bits(n)),
+                    BitVec::from_bools(&rng.bits(n)),
+                    alu,
+                );
+                if rng.bernoulli(0.3) {
+                    input.write = Some(WriteCmd {
+                        addr: rng.below(m as u64) as usize,
+                        d: BitVec::from_bools(&rng.bits(n)),
+                    });
+                }
+                let a = packed.cycle(&input).map_err(|e| e.to_string())?;
+                let b = scalar.cycle(&input).map_err(|e| e.to_string())?;
+                crate::prop_assert_eq!(a, b, "cycle {cycle} m={m} n={n}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subrow_decomposition_is_transparent() {
+        // Same data with 1 vs many subrows must give identical popcounts.
+        let mut rng = Xoshiro256pp::seeded(4);
+        let n = 32;
+        let rows: Vec<BitVec> = (0..8).map(|_| BitVec::from_bools(&rng.bits(n))).collect();
+        let mut one = ScalarPpac::new(PpacConfig { subrows: 1, ..PpacConfig::new(8, n) }).unwrap();
+        let mut many = ScalarPpac::new(PpacConfig { subrows: 4, ..PpacConfig::new(8, n) }).unwrap();
+        one.load_matrix(&rows).unwrap();
+        many.load_matrix(&rows).unwrap();
+        let input = CycleInput::compute(
+            BitVec::from_bools(&rng.bits(n)),
+            BitVec::ones(n),
+            RowAluCtrl::passthrough(),
+        );
+        one.cycle(&input).unwrap();
+        many.cycle(&input).unwrap();
+        let idle = CycleInput::compute(BitVec::zeros(n), BitVec::zeros(n), Default::default());
+        assert_eq!(one.cycle(&idle).unwrap(), many.cycle(&idle).unwrap());
+    }
+}

@@ -1,0 +1,152 @@
+//! Control signals of the PPAC row ALU and per-cycle array inputs
+//! (paper Fig. 2(b)/(c); orange = control, brown = external data).
+
+use super::bitvec::BitVec;
+
+/// Row-ALU control bundle for one clock cycle.
+///
+/// Applied to the population count that *arrives* at the ALU together with
+/// these controls — the array internally delays them through the pipeline
+/// stage alongside `r_m`, so a schedule describes each input vector and its
+/// ALU treatment in the same step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowAluCtrl {
+    /// popX2 — left-shift the row population count (multiply by two).
+    pub pop_x2: bool,
+    /// cEn — subtract the configured offset `c` from the (shifted) count.
+    pub c_en: bool,
+    /// nOZ — add the stored correction register (h̄(a,1) / h̄(a,0)) instead
+    /// of zero.
+    pub no_z: bool,
+    /// weN — write the correction register from the current `r_m`.
+    pub we_n: bool,
+    /// weV — write the first (vector) accumulator.
+    pub we_v: bool,
+    /// vAcc — feed 2·acc_v into the first accumulator's adder.
+    pub v_acc: bool,
+    /// vAccX-1 — negate the incoming partial product (signed-vector MSB).
+    pub v_acc_neg: bool,
+    /// weM — write the second (matrix) accumulator.
+    pub we_m: bool,
+    /// mAcc — feed 2·acc_m into the second accumulator's adder.
+    pub m_acc: bool,
+    /// mAccX-1 — negate the first accumulator's output (signed-matrix MSB).
+    pub m_acc_neg: bool,
+}
+
+impl RowAluCtrl {
+    /// All-zero controls: y_m = r_m − δ_m (Hamming-similarity mode).
+    pub fn passthrough() -> Self {
+        Self::default()
+    }
+
+    /// 1-bit {±1} MVP (§III-B1): y = 2·r − c with c = N.
+    pub fn pm1_mvp() -> Self {
+        Self { pop_x2: true, c_en: true, ..Self::default() }
+    }
+
+    /// eq. (2) compute step (±1 matrix × {0,1} vector): y = r + nreg − c.
+    pub fn eq2_compute() -> Self {
+        Self { no_z: true, c_en: true, ..Self::default() }
+    }
+
+    /// eq. (3) compute step ({0,1} matrix × ±1 vector): y = 2r + nreg − c.
+    pub fn eq3_compute() -> Self {
+        Self { pop_x2: true, no_z: true, c_en: true, ..Self::default() }
+    }
+
+    /// Store the correction register (setup cycle for eqs. 2/3).
+    pub fn store_correction() -> Self {
+        Self { we_n: true, ..Self::default() }
+    }
+}
+
+/// Write-port command: store word `d` into row `addr` (clock-gated latches;
+/// the write becomes visible at the *next* cycle's compute).
+#[derive(Debug, Clone)]
+pub struct WriteCmd {
+    pub addr: usize,
+    pub d: BitVec,
+}
+
+/// Everything the array consumes in one clock cycle.
+#[derive(Debug, Clone)]
+pub struct CycleInput {
+    /// x — the N-bit input word (brown in Fig. 2(b)).
+    pub x: BitVec,
+    /// s — per-column operator select: 1 = XNOR, 0 = AND.
+    pub s: BitVec,
+    /// Row-ALU controls for this input's population count.
+    pub alu: RowAluCtrl,
+    /// Optional write-port command (addr + wrEn + d lines).
+    pub write: Option<WriteCmd>,
+}
+
+impl CycleInput {
+    pub fn compute(x: BitVec, s: BitVec, alu: RowAluCtrl) -> Self {
+        Self { x, s, alu, write: None }
+    }
+
+    /// A pure write cycle (matrix load phase): input lines idle (zero).
+    pub fn write_only(n: usize, addr: usize, d: BitVec) -> Self {
+        Self {
+            x: BitVec::zeros(n),
+            s: BitVec::zeros(n),
+            alu: RowAluCtrl::default(),
+            write: Some(WriteCmd { addr, d }),
+        }
+    }
+}
+
+/// Outputs of one clock cycle (for the input issued the cycle before —
+/// the row popcount is pipelined, §II-B).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleOutput {
+    /// y_m for every row (row-ALU output after threshold subtraction).
+    pub y: Vec<i64>,
+    /// r_m — the raw row population counts (pre-ALU), for diagnostics.
+    /// Populated only while activity tracing is enabled (hot-path cycles
+    /// skip it).
+    pub r: Vec<u32>,
+    /// p_b per bank — popcount of ¬MSB(y_m), i.e. #rows with y_m ≥ 0.
+    pub bank_p: Vec<u32>,
+}
+
+impl CycleOutput {
+    /// CAM interpretation: row m matches iff y_m ≥ 0 (complement of MSB).
+    pub fn matches(&self) -> Vec<bool> {
+        self.y.iter().map(|&y| y >= 0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_bundles_match_paper_settings() {
+        let pm1 = RowAluCtrl::pm1_mvp();
+        assert!(pm1.pop_x2 && pm1.c_en && !pm1.no_z && !pm1.we_v);
+        let eq2 = RowAluCtrl::eq2_compute();
+        assert!(!eq2.pop_x2 && eq2.c_en && eq2.no_z);
+        let eq3 = RowAluCtrl::eq3_compute();
+        assert!(eq3.pop_x2 && eq3.c_en && eq3.no_z);
+        assert!(RowAluCtrl::store_correction().we_n);
+        assert_eq!(RowAluCtrl::passthrough(), RowAluCtrl::default());
+    }
+
+    #[test]
+    fn write_only_cycle_is_idle_on_compute_lines() {
+        let ci = CycleInput::write_only(8, 3, BitVec::ones(8));
+        assert_eq!(ci.x.popcount(), 0);
+        assert_eq!(ci.s.popcount(), 0);
+        assert!(ci.write.is_some());
+        assert_eq!(ci.write.unwrap().addr, 3);
+    }
+
+    #[test]
+    fn cam_match_is_msb_complement() {
+        let out = CycleOutput { y: vec![0, -1, 5], r: vec![0; 3], bank_p: vec![] };
+        assert_eq!(out.matches(), vec![true, false, true]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Criterion-style micro-benchmark harness (the image vendors no
+//! `criterion`).
+//!
+//! Provides warmup, adaptive iteration counts, robust statistics
+//! (median ± MAD) and throughput reporting. Used by every target under
+//! `rust/benches/`; each bench is a `harness = false` binary.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark's collected result.
+#[derive(Debug, Clone)]
+pub struct Sampled {
+    pub name: String,
+    /// Nanoseconds per iteration, one entry per sample.
+    pub ns_per_iter: Vec<f64>,
+}
+
+impl Sampled {
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.ns_per_iter)
+    }
+
+    pub fn mad_ns(&self) -> f64 {
+        stats::mad(&self.ns_per_iter)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.ns_per_iter.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// items/second given `items` of work per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns() * 1e-9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+    quiet: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            samples: 30,
+            min_sample_time: Duration::from_millis(10),
+            quiet: false,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI / smoke runs (`PPAC_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("PPAC_BENCH_FAST").is_ok() {
+            b.warmup = Duration::from_millis(30);
+            b.samples = 8;
+            b.min_sample_time = Duration::from_millis(2);
+        }
+        b
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Run `f` under the harness; `f` should perform ONE unit of work and
+    /// return a value (passed through `black_box` to defeat DCE).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Sampled {
+        // Warmup and iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut iters_per_sample = 1u64;
+        let mut one = Duration::ZERO;
+        while warm_start.elapsed() < self.warmup {
+            let t = Instant::now();
+            black_box(f());
+            one = t.elapsed();
+        }
+        if one < self.min_sample_time && one.as_nanos() > 0 {
+            iters_per_sample =
+                (self.min_sample_time.as_nanos() / one.as_nanos().max(1)) as u64 + 1;
+        }
+
+        let mut ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            ns.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let out = Sampled { name: name.to_string(), ns_per_iter: ns };
+        if !self.quiet {
+            report_line(&out);
+        }
+        out
+    }
+}
+
+fn human_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn report_line(s: &Sampled) {
+    println!(
+        "bench {:<42} {:>12} ± {:>10}   (min {})",
+        s.name,
+        human_time(s.median_ns()),
+        human_time(s.mad_ns()),
+        human_time(s.min_ns()),
+    );
+}
+
+/// Format an ops/sec figure the way the paper does (TOP/s, GOP/s, ...).
+pub fn human_rate(per_sec: f64, unit: &str) -> String {
+    let (scale, prefix) = if per_sec >= 1e12 {
+        (1e12, "T")
+    } else if per_sec >= 1e9 {
+        (1e9, "G")
+    } else if per_sec >= 1e6 {
+        (1e6, "M")
+    } else if per_sec >= 1e3 {
+        (1e3, "k")
+    } else {
+        (1.0, "")
+    };
+    format!("{:.2} {}{}", per_sec / scale, prefix, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_sample_time: Duration::from_micros(200),
+            quiet: true,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let s = fast().run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median_ns() > 0.0);
+        assert_eq!(s.ns_per_iter.len(), 5);
+        assert!(s.min_ns() <= s.median_ns());
+    }
+
+    #[test]
+    fn throughput_is_items_over_time() {
+        let s = Sampled { name: "t".into(), ns_per_iter: vec![1000.0; 3] };
+        // 1 item per 1000ns = 1e6 items/s
+        assert!((s.throughput(1.0) - 1e6).abs() / 1e6 < 1e-9);
+    }
+
+    #[test]
+    fn human_rate_scales() {
+        assert_eq!(human_rate(91.99e12, "OP/s"), "91.99 TOP/s");
+        assert_eq!(human_rate(0.703e9, "MVP/s"), "703.00 MMVP/s");
+        assert_eq!(human_rate(1.2e9, "MVP/s"), "1.20 GMVP/s");
+        assert_eq!(human_rate(5.0, "OP/s"), "5.00 OP/s");
+    }
+}

@@ -1,0 +1,212 @@
+//! Tiny command-line parser (the image vendors no `clap`).
+//!
+//! Supports the subset the `ppac` binary needs: subcommands, `--flag`,
+//! `--key value` / `--key=value` options with typed accessors and defaults,
+//! and positional arguments. Unknown options are errors so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value {1:?} for --{0}: {2}")]
+    BadValue(String, String, String),
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+    #[error("missing subcommand; expected one of: {0}")]
+    MissingSubcommand(String),
+}
+
+/// Declarative option spec: which `--keys` a command accepts.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    flags: Vec<&'static str>,
+    options: Vec<&'static str>,
+    positional_max: usize,
+}
+
+impl Spec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn flag(mut self, name: &'static str) -> Self {
+        self.flags.push(name);
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str) -> Self {
+        self.options.push(name);
+        self
+    }
+
+    pub fn positionals(mut self, max: usize) -> Self {
+        self.positional_max = max;
+        self
+    }
+
+    /// Parse `args` (without argv[0]) against this spec.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Parsed, CliError> {
+        let mut parsed = Parsed::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if self.flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(CliError::BadValue(
+                            key.clone(),
+                            inline_val.unwrap(),
+                            "flag takes no value".into(),
+                        ));
+                    }
+                    parsed.flags.insert(key, true);
+                } else if self.options.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    parsed.options.insert(key, val);
+                } else {
+                    return Err(CliError::UnknownOption(key));
+                }
+            } else {
+                if parsed.positionals.len() >= self.positional_max {
+                    return Err(CliError::UnexpectedPositional(arg));
+                }
+                parsed.positionals.push(arg);
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+/// Result of parsing; typed accessors with defaults.
+#[derive(Debug, Default, Clone)]
+pub struct Parsed {
+    flags: BTreeMap<String, bool>,
+    options: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        self.parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(raw) => raw.parse::<T>().map_err(|e| {
+                CliError::BadValue(name.to_string(), raw.clone(), e.to_string())
+            }),
+        }
+    }
+}
+
+/// Split argv into (subcommand, rest). `expected` is for the error message.
+pub fn subcommand(
+    mut args: Vec<String>,
+    expected: &str,
+) -> Result<(String, Vec<String>), CliError> {
+    if args.is_empty() || args[0].starts_with("--") {
+        return Err(CliError::MissingSubcommand(expected.to_string()));
+    }
+    let cmd = args.remove(0);
+    Ok((cmd, args))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_options_positionals() {
+        let spec = Spec::new().flag("verbose").opt("size").positionals(1);
+        let p = spec.parse(args(&["--verbose", "--size", "256", "run"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.usize_or("size", 0).unwrap(), 256);
+        assert_eq!(p.positionals, vec!["run"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let spec = Spec::new().opt("m");
+        let p = spec.parse(args(&["--m=16"])).unwrap();
+        assert_eq!(p.usize_or("m", 0).unwrap(), 16);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let spec = Spec::new().opt("m").flag("fast");
+        let p = spec.parse(args(&[])).unwrap();
+        assert_eq!(p.usize_or("m", 256).unwrap(), 256);
+        assert!(!p.flag("fast"));
+        assert_eq!(p.str_or("x", "dft"), "dft");
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        let spec = Spec::new().opt("m");
+        assert!(matches!(
+            spec.parse(args(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        let p = spec.parse(args(&["--m", "abc"])).unwrap();
+        assert!(matches!(p.usize_or("m", 0), Err(CliError::BadValue(..))));
+        assert!(matches!(
+            spec.parse(args(&["--m"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let (cmd, rest) = subcommand(args(&["serve", "--m", "16"]), "serve|bench").unwrap();
+        assert_eq!(cmd, "serve");
+        assert_eq!(rest.len(), 2);
+        assert!(subcommand(args(&["--m"]), "serve").is_err());
+    }
+
+    #[test]
+    fn positional_overflow_rejected() {
+        let spec = Spec::new().positionals(0);
+        assert!(matches!(
+            spec.parse(args(&["stray"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+    }
+}

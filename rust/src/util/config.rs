@@ -1,0 +1,189 @@
+//! Minimal configuration-file parser (the image vendors no `toml`).
+//!
+//! Supports the TOML subset the launcher needs: `[section]` headers,
+//! `key = value` pairs (integers, floats, booleans, bare/quoted strings)
+//! and `#` comments. Typed accessors mirror `util::cli::Parsed` so a
+//! subcommand can be driven from a file, flags, or both (flags win).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key {0}")]
+    Missing(String),
+    #[error("key {0}: expected {1}, got {2:?}")]
+    Type(String, &'static str, String),
+}
+
+/// A parsed config: `section.key` → raw string value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(ln + 1, "unterminated [section]".into()))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError::Parse(ln + 1, "empty section name".into()));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(ln + 1, "expected key = value".into()))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse(ln + 1, "empty key".into()));
+            }
+            let mut value = value.trim().to_string();
+            if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&src).map_err(|e| e.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        self.typed_or(key, default, "integer")
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        self.typed_or(key, default, "float")
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(ConfigError::Type(key.into(), "bool", v.into())),
+        }
+    }
+
+    fn typed_or<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+        ty: &'static str,
+    ) -> Result<T, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError::Type(key.into(), ty, v.into())),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+[tile]
+m = 256
+n = 256
+
+[coordinator]
+workers = 4          # worker threads
+max_batch = 64
+name = "edge pool"
+trace = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("tile.m", 0).unwrap(), 256);
+        assert_eq!(c.usize_or("coordinator.workers", 0).unwrap(), 4);
+        assert_eq!(c.str_or("coordinator.name", ""), "edge pool");
+        assert!(!c.bool_or("coordinator.trace", true).unwrap());
+        // Defaults for absent keys.
+        assert_eq!(c.usize_or("tile.subrows", 16).unwrap(), 16);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(c.usize_or("x", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn hash_inside_quotes_preserved() {
+        let c = Config::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(matches!(
+            Config::parse("[unterminated\n"),
+            Err(ConfigError::Parse(1, _))
+        ));
+        assert!(matches!(
+            Config::parse("\n\nnot a pair\n"),
+            Err(ConfigError::Parse(3, _))
+        ));
+        let c = Config::parse("x = abc").unwrap();
+        assert!(matches!(c.usize_or("x", 0), Err(ConfigError::Type(..))));
+        assert!(matches!(c.bool_or("x", true), Err(ConfigError::Type(..))));
+    }
+
+    #[test]
+    fn later_keys_override_earlier() {
+        let c = Config::parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(c.usize_or("x", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo: the build image vendors only the
+//! `xla` crate's dependency closure, so the usual ecosystem crates
+//! (`rand`, `clap`, `criterion`, `proptest`, `serde`) are reimplemented
+//! here at the scale this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

