@@ -135,4 +135,47 @@ fn main() {
     });
     println!("  -> {:.1} µs median round trip", s.median_ns() / 1e3);
     coord.shutdown();
+
+    // ---- sharded serving: 300×600 over 256×256 tiles (2×3 grid) ---------
+    // The matrix exceeds one tile in both dimensions and is ragged against
+    // the tile size, so every job is a scatter over 6 shards plus a
+    // host-side gather with pad correction.
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: cfg,
+        workers: 4,
+        max_batch: 64,
+    })
+    .unwrap();
+    let mid = coord
+        .register_matrix((0..300).map(|_| rng.bits(600)).collect())
+        .unwrap();
+    let batch: Vec<JobInput> = (0..64)
+        .map(|_| JobInput::Pm1Mvp(rng.bits(600)))
+        .collect();
+    let s = bench.run("coordinator_sharded_300x600_batch64", || {
+        let h = coord.submit_batch(mid, &batch).unwrap();
+        let mut acc = 0i64;
+        for r in h.wait().unwrap() {
+            if let ppac::coordinator::JobOutput::Ints(y) = r.output {
+                acc += y[0];
+            }
+        }
+        acc
+    });
+    println!(
+        "  -> {} (2x3 shard grid, scatter-gather MVPs/s)",
+        human_rate(s.throughput(batch.len() as f64), "MVP/s")
+    );
+    let snap = coord.metrics.snapshot();
+    println!(
+        "  -> fan-out {} shard jobs / {} logical, {} gathers, occupancy {:?}",
+        snap.shard_jobs_submitted,
+        snap.jobs_submitted,
+        snap.gathers,
+        snap.per_worker
+            .iter()
+            .map(|w| w.served)
+            .collect::<Vec<_>>()
+    );
+    coord.shutdown();
 }

@@ -5,70 +5,163 @@
 //! tiles: row blocks map to independent tiles; column blocks are
 //! reduced by the host (each tile contributes a partial inner product
 //! over its N_t columns, and ±1 partials add exactly:
-//! ⟨a, x⟩ = Σ_blocks ⟨a_block, x_block⟩). This is the system-integration
-//! layer a deployment needs — PPAC arrays as fixed-capacity compute
-//! units behind a planner.
+//! ⟨a, x⟩ = Σ_blocks ⟨a_block, x_block⟩). Arbitrary shapes are supported:
+//! boundary blocks are zero-padded onto the tile, and since a padded
+//! column (a = 0, x = 0) matches under XNOR — contributing +1 per padded
+//! column to every row — the exact result is recovered by subtracting the
+//! known pad count after the column-block reduction.
+//!
+//! [`Partition`] is the shared decomposition geometry; the coordinator's
+//! sharded serving layer reuses it for scatter/gather placement.
 
 use crate::error::{PpacError, Result};
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
 
+/// Validate that `matrix` is a non-empty rectangle of bit rows; returns
+/// its (M, N) shape. Ragged rows are an error, never a panic.
+pub fn rect_shape(matrix: &[Vec<bool>]) -> Result<(usize, usize)> {
+    let m = matrix.len();
+    if m == 0 {
+        return Err(PpacError::Config("matrix has no rows".into()));
+    }
+    let n = matrix[0].len();
+    if n == 0 {
+        return Err(PpacError::Config("matrix rows are empty".into()));
+    }
+    for (i, row) in matrix.iter().enumerate() {
+        if row.len() != n {
+            return Err(PpacError::RaggedMatrix { row: i, expected: n, got: row.len() });
+        }
+    }
+    Ok((m, n))
+}
+
+/// Decomposition of a logical M×N matrix onto ⌈M/Mt⌉ × ⌈N/Nt⌉ tiles of a
+/// fixed Mt×Nt array, boundary blocks zero-padded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    /// Logical rows.
+    pub m: usize,
+    /// Logical columns.
+    pub n: usize,
+    /// Tile rows (Mt).
+    pub tile_m: usize,
+    /// Tile columns (Nt).
+    pub tile_n: usize,
+    /// ⌈M/Mt⌉.
+    pub row_blocks: usize,
+    /// ⌈N/Nt⌉.
+    pub col_blocks: usize,
+    /// Zero-padded columns per row summed over all column blocks
+    /// (= col_blocks·Nt − N). Under XNOR each padded column contributes
+    /// +1 to a row's reduced partial; subtract this once per row.
+    pub pad_cols: usize,
+}
+
+impl Partition {
+    pub fn new(m: usize, n: usize, tile_m: usize, tile_n: usize) -> Result<Self> {
+        if m == 0 || n == 0 {
+            return Err(PpacError::Config(format!("matrix {m}x{n} is empty")));
+        }
+        if tile_m == 0 || tile_n == 0 {
+            return Err(PpacError::Config(format!("tile {tile_m}x{tile_n} is empty")));
+        }
+        let row_blocks = m.div_ceil(tile_m);
+        let col_blocks = n.div_ceil(tile_n);
+        Ok(Self {
+            m,
+            n,
+            tile_m,
+            tile_n,
+            row_blocks,
+            col_blocks,
+            pad_cols: col_blocks * tile_n - n,
+        })
+    }
+
+    /// Number of shards (tiles) in the grid.
+    pub fn shards(&self) -> usize {
+        self.row_blocks * self.col_blocks
+    }
+
+    /// Real (unpadded) row range of row block `rb`.
+    pub fn row_range(&self, rb: usize) -> std::ops::Range<usize> {
+        rb * self.tile_m..((rb + 1) * self.tile_m).min(self.m)
+    }
+
+    /// Real (unpadded) column range of column block `cb`.
+    pub fn col_range(&self, cb: usize) -> std::ops::Range<usize> {
+        cb * self.tile_n..((cb + 1) * self.tile_n).min(self.n)
+    }
+
+    /// The (rb, cb) sub-block of `matrix`, clipped at the matrix edges
+    /// (unpadded — tiles pad on load).
+    pub fn block(&self, matrix: &[Vec<bool>], rb: usize, cb: usize) -> Vec<Vec<bool>> {
+        let cols = self.col_range(cb);
+        self.row_range(rb)
+            .map(|r| matrix[r][cols.clone()].to_vec())
+            .collect()
+    }
+
+    /// Column block `cb` of an input vector, zero-padded to the tile width.
+    pub fn split_input(&self, x: &[bool], cb: usize) -> Vec<bool> {
+        let mut out = x[self.col_range(cb)].to_vec();
+        out.resize(self.tile_n, false);
+        out
+    }
+
+    /// Remove the pad contribution from a reduced integer result: each
+    /// zero-padded column (a = 0, x = 0) matches under XNOR and adds +1
+    /// per row to ±1/Hamming partial sums. GF(2) needs no correction
+    /// (pads contribute 0 under AND).
+    pub fn subtract_pad(&self, y: &mut [i64]) {
+        if self.pad_cols > 0 {
+            let p = self.pad_cols as i64;
+            for v in y {
+                *v -= p;
+            }
+        }
+    }
+}
+
 /// A logical matrix spread over a grid of PPAC tiles.
 pub struct TiledMvp {
-    tile_cfg: PpacConfig,
+    part: Partition,
     /// tiles[rb][cb] — row-block × column-block grid.
     tiles: Vec<Vec<PpacUnit>>,
-    m: usize,
-    n: usize,
 }
 
 impl TiledMvp {
-    /// Load an M×N ±1 bit matrix onto ⌈M/Mt⌉ × ⌈N/Nt⌉ tiles.
-    ///
-    /// Partial row/column blocks are zero-padded; zero-padding a ±1
-    /// matrix would skew results (a 0 bit *is* −1), so padded columns are
-    /// neutralized by feeding split inputs whose padded entries replicate
-    /// a +1/−1 cancellation pair… simpler and exact: we require block
-    /// alignment and reject ragged shapes — the planner above chooses
-    /// array-aligned partitions (as real deployments do).
+    /// Load an M×N ±1 bit matrix onto ⌈M/Mt⌉ × ⌈N/Nt⌉ tiles. Any
+    /// rectangular shape is accepted; ragged input returns an error.
     pub fn new(tile_cfg: PpacConfig, matrix: &[Vec<bool>]) -> Result<Self> {
-        let m = matrix.len();
-        let n = matrix.first().map_or(0, |r| r.len());
-        if m == 0 || n == 0 || m % tile_cfg.m != 0 || n % tile_cfg.n != 0 {
-            return Err(PpacError::Config(format!(
-                "matrix {m}x{n} must tile exactly by {}x{}",
-                tile_cfg.m, tile_cfg.n
-            )));
-        }
-        let row_blocks = m / tile_cfg.m;
-        let col_blocks = n / tile_cfg.n;
-        let mut tiles = Vec::with_capacity(row_blocks);
-        for rb in 0..row_blocks {
-            let mut row = Vec::with_capacity(col_blocks);
-            for cb in 0..col_blocks {
+        let (m, n) = rect_shape(matrix)?;
+        let part = Partition::new(m, n, tile_cfg.m, tile_cfg.n)?;
+        let mut tiles = Vec::with_capacity(part.row_blocks);
+        for rb in 0..part.row_blocks {
+            let mut row = Vec::with_capacity(part.col_blocks);
+            for cb in 0..part.col_blocks {
                 let mut unit = PpacUnit::new(tile_cfg)?;
-                let rows: Vec<Vec<bool>> = (0..tile_cfg.m)
-                    .map(|i| {
-                        matrix[rb * tile_cfg.m + i]
-                            [cb * tile_cfg.n..(cb + 1) * tile_cfg.n]
-                            .to_vec()
-                    })
-                    .collect();
-                unit.load_bit_matrix(&rows)?;
+                unit.load_bit_matrix_padded(&part.block(matrix, rb, cb))?;
                 unit.configure(OpMode::Pm1Mvp)?;
                 row.push(unit);
             }
             tiles.push(row);
         }
-        Ok(Self { tile_cfg, tiles, m, n })
+        Ok(Self { part, tiles })
     }
 
     pub fn shape(&self) -> (usize, usize) {
-        (self.m, self.n)
+        (self.part.m, self.part.n)
     }
 
     pub fn grid(&self) -> (usize, usize) {
-        (self.tiles.len(), self.tiles[0].len())
+        (self.part.row_blocks, self.part.col_blocks)
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.part
     }
 
     /// Total simulated compute cycles across all tiles.
@@ -91,30 +184,35 @@ impl TiledMvp {
     }
 
     /// y = A·x for a batch of ±1 vectors (length N bits each); column
-    /// blocks are host-reduced by exact integer addition.
+    /// blocks are host-reduced by exact integer addition, and the known
+    /// pad contribution (+1 per padded column per row) is subtracted.
     pub fn mvp_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<Vec<i64>>> {
         for x in xs {
-            if x.len() != self.n {
+            if x.len() != self.part.n {
                 return Err(PpacError::DimMismatch {
                     context: "tiled input width",
-                    expected: self.n,
+                    expected: self.part.n,
                     got: x.len(),
                 });
             }
         }
-        let nt = self.tile_cfg.n;
-        let mut out = vec![vec![0i64; self.m]; xs.len()];
+        let part = self.part;
+        let mut out = vec![vec![0i64; part.m]; xs.len()];
         for (rb, tile_row) in self.tiles.iter_mut().enumerate() {
+            let rows = part.row_range(rb);
             for (cb, unit) in tile_row.iter_mut().enumerate() {
                 let blocks: Vec<Vec<bool>> =
-                    xs.iter().map(|x| x[cb * nt..(cb + 1) * nt].to_vec()).collect();
+                    xs.iter().map(|x| part.split_input(x, cb)).collect();
                 let partials = unit.mvp1_batch(&blocks)?;
                 for (xi, partial) in partials.iter().enumerate() {
-                    for (i, &p) in partial.iter().enumerate() {
-                        out[xi][rb * self.tile_cfg.m + i] += p;
+                    for (i, row) in rows.clone().enumerate() {
+                        out[xi][row] += partial[i];
                     }
                 }
             }
+        }
+        for y in &mut out {
+            part.subtract_pad(y);
         }
         Ok(out)
     }
@@ -144,12 +242,56 @@ mod tests {
     }
 
     #[test]
-    fn ragged_shapes_rejected() {
+    fn non_aligned_shapes_match_golden() {
+        // The acceptance shape: 100×150 over 64×64 tiles (2×3 grid, both
+        // dimensions padded).
+        let mut rng = Xoshiro256pp::seeded(102);
+        let (m, n) = (100, 150);
+        let matrix: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let tile = PpacConfig::new(64, 64);
+        let mut tiled = TiledMvp::new(tile, &matrix).unwrap();
+        assert_eq!(tiled.grid(), (2, 3));
+        assert_eq!(tiled.partition().pad_cols, 3 * 64 - 150);
+        let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(n)).collect();
+        let got = tiled.mvp_batch(&xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            for (i, row) in matrix.iter().enumerate() {
+                assert_eq!(got[xi][i], golden::pm1_inner(row, x), "x{xi} row{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_smaller_than_one_tile() {
+        let mut rng = Xoshiro256pp::seeded(103);
+        let matrix: Vec<Vec<bool>> = (0..5).map(|_| rng.bits(11)).collect();
+        let mut tiled = TiledMvp::new(PpacConfig::new(16, 16), &matrix).unwrap();
+        assert_eq!(tiled.grid(), (1, 1));
+        let xs = vec![rng.bits(11)];
+        let got = tiled.mvp_batch(&xs).unwrap();
+        for (i, row) in matrix.iter().enumerate() {
+            assert_eq!(got[0][i], golden::pm1_inner(row, &xs[0]));
+        }
+    }
+
+    #[test]
+    fn ragged_rows_rejected_not_panicked() {
+        // Regression: a matrix whose *interior* rows are shorter used to
+        // panic on the block slice; it must return Err.
         let tile = PpacConfig::new(16, 16);
-        let matrix = vec![vec![false; 20]; 16]; // N not divisible
-        assert!(TiledMvp::new(tile, &matrix).is_err());
-        let matrix2 = vec![vec![false; 16]; 20]; // M not divisible
-        assert!(TiledMvp::new(tile, &matrix2).is_err());
+        let mut matrix = vec![vec![false; 20]; 16];
+        matrix[7] = vec![false; 13];
+        assert!(matches!(
+            TiledMvp::new(tile, &matrix),
+            Err(PpacError::RaggedMatrix { row: 7, expected: 20, got: 13 })
+        ));
+        // Empty shapes are configuration errors.
+        assert!(TiledMvp::new(tile, &[]).is_err());
+        assert!(TiledMvp::new(tile, &[vec![]]).is_err());
+        // Wrong input width on a valid grid is an error.
+        let ok = vec![vec![false; 20]; 16];
+        let mut tiled = TiledMvp::new(tile, &ok).unwrap();
+        assert!(tiled.mvp_batch(&[vec![false; 19]]).is_err());
     }
 
     #[test]

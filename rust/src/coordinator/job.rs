@@ -1,10 +1,21 @@
 //! Job types flowing through the coordinator.
+//!
+//! A client-facing *logical* job targets a registered M×N matrix; the
+//! scatter stage fans it out into one *shard job* per resident tile-sized
+//! block. Workers only ever see shard jobs; the gather stage reduces the
+//! column-block partials back into the logical result.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-/// Identifier of a registered (resident-able) matrix.
+use crate::apps::tiled::Partition;
+
+/// Identifier of a registered logical matrix.
 pub type MatrixId = u64;
+
+/// Identifier of one resident-able shard: a tile-sized block of a
+/// registered matrix (a 1×1-grid matrix has exactly one shard).
+pub type ShardId = u64;
 
 /// The payload of one MVP-like request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -31,9 +42,19 @@ impl JobInput {
             JobInput::Pm1Mvp(b) | JobInput::Hamming(b) | JobInput::Gf2(b) => b,
         }
     }
+
+    /// Same mode, different payload — used by the scatter stage to wrap
+    /// the [`Partition::split_input`] column block of this input.
+    pub fn with_bits(&self, bits: Vec<bool>) -> JobInput {
+        match self {
+            JobInput::Pm1Mvp(_) => JobInput::Pm1Mvp(bits),
+            JobInput::Hamming(_) => JobInput::Hamming(bits),
+            JobInput::Gf2(_) => JobInput::Gf2(bits),
+        }
+    }
 }
 
-/// Batchable operation class (jobs with the same matrix + mode batch
+/// Batchable operation class (jobs with the same shard + mode batch
 /// together).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ModeKey {
@@ -49,29 +70,55 @@ pub enum JobOutput {
     Bits(Vec<bool>),
 }
 
-/// A completed job.
+/// A completed job (or, internally, one shard partial of it).
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub job_id: u64,
     pub output: JobOutput,
-    /// Wall-clock service latency (submit → result).
+    /// Wall-clock service latency (submit → result). Gathered results
+    /// report the latency of their slowest shard partial.
     pub latency_us: f64,
     /// Simulated-hardware cycles attributed to this job's batch, divided
-    /// evenly over the batch (II = 1 ⇒ ~1 cycle/job for 1-bit modes).
+    /// evenly over the batch (II = 1 ⇒ ~1 cycle/job for 1-bit modes);
+    /// gathered results sum the shares of all their shard partials.
     pub cycles_share: f64,
-    /// Worker that served it.
+    /// Worker that served it (for gathered results: the worker of shard 0).
     pub worker: usize,
-    /// Batch size it was served in.
+    /// Batch size it was served in (for gathered results: the largest
+    /// batch among the shard partials).
     pub batch_size: usize,
+    /// Linear shard index (rb·col_blocks + cb) of a partial; 0 on final
+    /// gathered results.
+    pub shard: usize,
+    /// Number of shard partials reduced into this result (1 = the matrix
+    /// fit a single tile).
+    pub fan_out: usize,
 }
 
-/// An in-flight request (internal).
+/// An in-flight shard request (internal).
 pub struct Job {
     pub job_id: u64,
-    pub matrix: MatrixId,
+    /// Registry key of the tile-sized block this job computes against.
+    pub shard: ShardId,
+    /// Linear index of that block in its matrix grid (rb·col_blocks + cb).
+    pub shard_index: usize,
     pub input: JobInput,
     pub submitted: Instant,
     pub respond: Sender<JobResult>,
+}
+
+/// Host-side reduction geometry for gathering one matrix's shard
+/// partials: the matrix's partition plus the batch's operation mode.
+#[derive(Debug, Clone, Copy)]
+pub struct GatherPlan {
+    pub part: Partition,
+    pub mode: ModeKey,
+}
+
+impl GatherPlan {
+    pub fn shards(&self) -> usize {
+        self.part.shards()
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +136,16 @@ mod tests {
     fn bits_accessor() {
         let j = JobInput::Gf2(vec![true, false]);
         assert_eq!(j.bits(), &[true, false]);
+    }
+
+    #[test]
+    fn with_bits_preserves_mode() {
+        let j = JobInput::Pm1Mvp(vec![true, false]);
+        let b = j.with_bits(vec![false, false, true]);
+        assert_eq!(b.mode_key(), ModeKey::Pm1Mvp);
+        assert_eq!(b.bits(), &[false, false, true]);
+        let h = JobInput::Hamming(vec![true; 3]).with_bits(vec![false]);
+        assert_eq!(h.mode_key(), ModeKey::Hamming);
+        assert_eq!(h.bits(), &[false]);
     }
 }

@@ -1,32 +1,98 @@
 //! Coordinator metrics: counters + latency reservoir, shared across
 //! worker threads.
+//!
+//! Two levels of accounting exist since sharded serving landed:
+//! *logical* jobs (what clients submit and gather) and *shard* jobs (the
+//! scatter fan-out workers actually serve). Per-worker occupancy —
+//! in-flight shard jobs, served counts, simulated cycles — feeds the
+//! least-loaded placement policy and the `serve` report.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats;
 
+/// Occupancy counters for one worker.
+#[derive(Debug, Default)]
+pub struct WorkerMetrics {
+    /// Shard jobs routed to this worker and not yet served (queue depth +
+    /// in service). Incremented at scatter time, decremented when the
+    /// worker finishes (or drops) the batch containing the job.
+    pub inflight: AtomicU64,
+    /// Shard jobs this worker has answered.
+    pub served: AtomicU64,
+    /// Batches this worker has executed.
+    pub batches: AtomicU64,
+    /// Simulated cycles this worker has consumed (loads + compute).
+    pub sim_cycles: AtomicU64,
+}
+
 /// Shared metrics (atomics for counters, a mutexed reservoir for
 /// latencies).
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Logical jobs accepted by `submit` / `submit_batch`.
     pub jobs_submitted: AtomicU64,
+    /// Logical jobs whose gather completed.
     pub jobs_completed: AtomicU64,
+    /// Shard jobs produced by the scatter stage (the fan-out).
+    pub shard_jobs_submitted: AtomicU64,
+    /// Shard jobs served by workers.
+    pub shard_jobs_completed: AtomicU64,
+    /// Logical jobs that required a host-side reduction of >1 shard.
+    pub gathers: AtomicU64,
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
     pub matrix_loads: AtomicU64,
     pub sim_cycles: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
+    workers: Vec<WorkerMetrics>,
 }
 
 impl Metrics {
-    pub fn record_batch(&self, jobs: usize, cycles: u64, loaded_matrix: bool) {
+    /// Metrics with `n` per-worker occupancy slots.
+    pub fn for_workers(n: usize) -> Self {
+        Self {
+            workers: (0..n).map(|_| WorkerMetrics::default()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Occupancy slot for one worker (None if the slot was never sized,
+    /// e.g. a default-constructed Metrics in unit tests).
+    pub fn worker(&self, id: usize) -> Option<&WorkerMetrics> {
+        self.workers.get(id)
+    }
+
+    /// In-flight shard jobs on one worker (0 for unknown ids).
+    pub fn worker_inflight(&self, id: usize) -> u64 {
+        self.workers
+            .get(id)
+            .map_or(0, |w| w.inflight.load(Ordering::Relaxed))
+    }
+
+    /// Record a served worker batch. `load_cycles` is `Some(cycles)` when
+    /// the batch (re)loaded + reconfigured its shard.
+    pub fn record_batch(
+        &self,
+        worker: usize,
+        jobs: usize,
+        compute_cycles: u64,
+        load_cycles: Option<u64>,
+    ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
-        self.jobs_completed.fetch_add(jobs as u64, Ordering::Relaxed);
+        self.shard_jobs_completed
+            .fetch_add(jobs as u64, Ordering::Relaxed);
+        let cycles = compute_cycles + load_cycles.unwrap_or(0);
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
-        if loaded_matrix {
+        if load_cycles.is_some() {
             self.matrix_loads.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(w) = self.workers.get(worker) {
+            w.served.fetch_add(jobs as u64, Ordering::Relaxed);
+            w.batches.fetch_add(1, Ordering::Relaxed);
+            w.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         }
     }
 
@@ -56,14 +122,36 @@ impl Metrics {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            shard_jobs_submitted: self.shard_jobs_submitted.load(Ordering::Relaxed),
+            shard_jobs_completed: self.shard_jobs_completed.load(Ordering::Relaxed),
+            gathers: self.gathers.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
             matrix_loads: self.matrix_loads.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             p50_us: self.latency_percentile(50.0),
             p99_us: self.latency_percentile(99.0),
+            per_worker: self
+                .workers
+                .iter()
+                .map(|w| WorkerSnapshot {
+                    inflight: w.inflight.load(Ordering::Relaxed),
+                    served: w.served.load(Ordering::Relaxed),
+                    batches: w.batches.load(Ordering::Relaxed),
+                    sim_cycles: w.sim_cycles.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
+}
+
+/// Point-in-time per-worker occupancy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    pub inflight: u64,
+    pub served: u64,
+    pub batches: u64,
+    pub sim_cycles: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -71,12 +159,16 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
+    pub shard_jobs_submitted: u64,
+    pub shard_jobs_completed: u64,
+    pub gathers: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub matrix_loads: u64,
     pub sim_cycles: u64,
     pub p50_us: f64,
     pub p99_us: f64,
+    pub per_worker: Vec<WorkerSnapshot>,
 }
 
 #[cfg(test)]
@@ -85,14 +177,30 @@ mod tests {
 
     #[test]
     fn batch_accounting() {
-        let m = Metrics::default();
-        m.record_batch(8, 9, true);
-        m.record_batch(4, 5, false);
+        let m = Metrics::for_workers(2);
+        m.record_batch(0, 8, 9, Some(3));
+        m.record_batch(1, 4, 5, None);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
-        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 12);
+        assert_eq!(m.shard_jobs_completed.load(Ordering::Relaxed), 12);
         assert_eq!(m.matrix_loads.load(Ordering::Relaxed), 1);
-        assert_eq!(m.sim_cycles.load(Ordering::Relaxed), 14);
+        assert_eq!(m.sim_cycles.load(Ordering::Relaxed), 17);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+        // Per-worker occupancy splits by worker id.
+        let w0 = m.worker(0).unwrap();
+        assert_eq!(w0.served.load(Ordering::Relaxed), 8);
+        assert_eq!(w0.sim_cycles.load(Ordering::Relaxed), 12);
+        let w1 = m.worker(1).unwrap();
+        assert_eq!(w1.served.load(Ordering::Relaxed), 4);
+        assert_eq!(w1.batches.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_worker_slots_are_ignored() {
+        let m = Metrics::default(); // no per-worker slots
+        m.record_batch(7, 2, 1, None);
+        assert_eq!(m.shard_jobs_completed.load(Ordering::Relaxed), 2);
+        assert!(m.worker(7).is_none());
+        assert_eq!(m.worker_inflight(7), 0);
     }
 
     #[test]
@@ -107,12 +215,17 @@ mod tests {
 
     #[test]
     fn snapshot_is_consistent() {
-        let m = Metrics::default();
+        let m = Metrics::for_workers(1);
         m.jobs_submitted.store(5, Ordering::Relaxed);
-        m.record_batch(5, 6, false);
+        m.jobs_completed.store(5, Ordering::Relaxed);
+        m.record_batch(0, 5, 6, None);
         let s = m.snapshot();
         assert_eq!(s.jobs_submitted, 5);
         assert_eq!(s.jobs_completed, 5);
+        assert_eq!(s.shard_jobs_completed, 5);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.per_worker.len(), 1);
+        assert_eq!(s.per_worker[0].served, 5);
+        assert_eq!(s.per_worker[0].inflight, 0);
     }
 }

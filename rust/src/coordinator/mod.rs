@@ -1,13 +1,30 @@
-//! L3 coordinator: a multi-tile PPAC serving layer.
+//! L3 coordinator: a multi-tile PPAC serving layer with sharded matrices.
 //!
 //! The paper's envisioned deployment keeps the matrix A static while
 //! input vectors stream at high rate (§IV-A). The coordinator turns that
-//! into a service: clients register matrices, then submit MVP-like jobs;
-//! a **residency-aware router** sends each job to a tile that already
-//! holds its matrix (loading a 256-row matrix costs 256 write cycles —
-//! the analogue of a vLLM router's prefix-cache affinity), and each
-//! worker **batches** consecutive same-matrix jobs to exploit the
-//! one-MVP-per-cycle pipeline.
+//! into a service for **arbitrary-size** matrices:
+//!
+//! 1. **Register** — `register_matrix` accepts any rectangular M×N bit
+//!    matrix. It is partitioned (via [`crate::apps::tiled::Partition`])
+//!    into ⌈M/Mt⌉ × ⌈N/Nt⌉ tile-sized *shards*; boundary shards are
+//!    zero-padded onto the tile at load time. Each shard is an
+//!    independently resident-able unit with its own worker affinity.
+//! 2. **Scatter** — `submit` / `submit_batch` validate against the
+//!    logical shape, split the input vector into column blocks, and fan
+//!    one shard job per (row block, column block) out to the shards'
+//!    workers. A **residency-aware router** keeps a shard on the tile
+//!    that already holds it (loading a 256-row shard costs 256 write
+//!    cycles — the analogue of a vLLM router's prefix-cache affinity);
+//!    new shards go to the worker with the fewest *in-flight* jobs.
+//!    Workers **batch** consecutive same-(shard, mode) jobs to exploit
+//!    the one-MVP-per-cycle pipeline, which `submit_batch` feeds
+//!    directly by shipping a whole batch through one response channel.
+//! 3. **Gather** — column-block partials add exactly for every supported
+//!    mode (±1 and Hamming partials by integer addition, GF(2) by XOR),
+//!    so the host reduces them into the final y. Zero-padded columns
+//!    (a = 0, x = 0) match under XNOR and contribute +1 per row per pad
+//!    column; the gather subtracts the known pad count deterministically.
+//!    Padded rows are simply truncated.
 //!
 //! Threads + channels only (the image vendors no tokio); the public API
 //! is synchronous handles over mpsc.
@@ -23,11 +40,12 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::apps::tiled::{rect_shape, Partition};
 use crate::error::{PpacError, Result};
 use crate::sim::PpacConfig;
 
-pub use job::{JobInput, JobOutput, JobResult, MatrixId, ModeKey};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use job::{GatherPlan, JobInput, JobOutput, JobResult, MatrixId, ModeKey, ShardId};
+pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 use worker::{MatrixRegistry, Worker, WorkerMsg};
 
 /// Coordinator configuration.
@@ -44,32 +62,162 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Handle to an in-flight job.
+/// A registered matrix: its partition geometry plus the registry ids of
+/// its shards (row-major rb·col_blocks + cb).
+struct ShardedMatrix {
+    part: Partition,
+    shard_ids: Vec<ShardId>,
+}
+
+/// Handle to an in-flight batch: one response channel carries every shard
+/// partial of every job in the batch; `wait` reduces them host-side.
+pub struct BatchHandle {
+    base_job_id: u64,
+    count: usize,
+    plan: GatherPlan,
+    rx: Receiver<JobResult>,
+    metrics: Arc<Metrics>,
+}
+
+impl BatchHandle {
+    /// The logical job ids of this batch, in submission order.
+    pub fn job_ids(&self) -> std::ops::Range<u64> {
+        self.base_job_id..self.base_job_id + self.count as u64
+    }
+
+    /// Block until every shard partial has arrived; reduce column blocks
+    /// (and strip padding) and return one result per input, in submission
+    /// order.
+    pub fn wait(self) -> Result<Vec<JobResult>> {
+        let plan = self.plan;
+        let part = plan.part;
+        let shards = plan.shards();
+        let padded_rows = part.row_blocks * part.tile_m;
+        let count = self.count;
+        let gf2 = plan.mode == ModeKey::Gf2;
+        let mut int_acc = vec![vec![0i64; if gf2 { 0 } else { padded_rows }]; count];
+        let mut bit_acc = vec![vec![false; if gf2 { padded_rows } else { 0 }]; count];
+        let mut cycles = vec![0f64; count];
+        let mut latency = vec![0f64; count];
+        let mut max_batch = vec![0usize; count];
+        let mut worker0 = vec![0usize; count];
+        for _ in 0..shards * count {
+            let partial = self
+                .rx
+                .recv()
+                .map_err(|_| PpacError::Coordinator("worker dropped a shard job".into()))?;
+            let idx = partial.job_id.wrapping_sub(self.base_job_id) as usize;
+            if idx >= count || partial.shard >= shards {
+                return Err(PpacError::Coordinator(format!(
+                    "stray shard partial (job {}, shard {})",
+                    partial.job_id, partial.shard
+                )));
+            }
+            let off = (partial.shard / part.col_blocks) * part.tile_m;
+            match &partial.output {
+                JobOutput::Ints(p) if !gf2 => {
+                    for (i, &v) in p.iter().enumerate() {
+                        int_acc[idx][off + i] += v;
+                    }
+                }
+                JobOutput::Bits(p) if gf2 => {
+                    for (i, &b) in p.iter().enumerate() {
+                        bit_acc[idx][off + i] ^= b;
+                    }
+                }
+                _ => {
+                    return Err(PpacError::Coordinator(
+                        "shard partial mode mismatch".into(),
+                    ))
+                }
+            }
+            cycles[idx] += partial.cycles_share;
+            latency[idx] = latency[idx].max(partial.latency_us);
+            max_batch[idx] = max_batch[idx].max(partial.batch_size);
+            if partial.shard == 0 {
+                worker0[idx] = partial.worker;
+            }
+        }
+
+        let mut out = Vec::with_capacity(count);
+        for idx in 0..count {
+            let output = if gf2 {
+                JobOutput::Bits(bit_acc[idx][..part.m].to_vec())
+            } else {
+                let mut y = int_acc[idx][..part.m].to_vec();
+                part.subtract_pad(&mut y);
+                JobOutput::Ints(y)
+            };
+            out.push(JobResult {
+                job_id: self.base_job_id + idx as u64,
+                output,
+                latency_us: latency[idx],
+                cycles_share: cycles[idx],
+                worker: worker0[idx],
+                batch_size: max_batch[idx],
+                shard: 0,
+                fan_out: shards,
+            });
+        }
+        self.metrics
+            .jobs_completed
+            .fetch_add(count as u64, Ordering::Relaxed);
+        if shards > 1 {
+            self.metrics.gathers.fetch_add(count as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+}
+
+/// Handle to one in-flight job.
 pub struct JobHandle {
     pub job_id: u64,
-    rx: Receiver<JobResult>,
+    inner: BatchHandle,
 }
 
 impl JobHandle {
-    /// Block until the result arrives.
+    /// Block until the (gathered) result arrives.
     pub fn wait(self) -> Result<JobResult> {
-        self.rx
-            .recv()
-            .map_err(|_| PpacError::Coordinator("worker dropped the job".into()))
+        let mut results = self.inner.wait()?;
+        results
+            .pop()
+            .ok_or_else(|| PpacError::Coordinator("empty gather".into()))
     }
+}
+
+/// Least-loaded placement: fewest in-flight shard jobs first, tie-broken
+/// by fewest shards ever placed (spread), then lowest index (determinism).
+///
+/// In-flight counts are decremented when jobs finish, so a worker that
+/// drained its queue competes as idle again — the old cumulative
+/// "least-ever-routed" counter never did, and placement degraded as soon
+/// as traffic was uneven.
+fn pick_worker(inflight: &[u64], placed: &[u64]) -> usize {
+    let mut best = 0;
+    let mut best_key = (u64::MAX, u64::MAX);
+    for i in 0..inflight.len().min(placed.len()) {
+        let key = (inflight[i], placed[i]);
+        if key < best_key {
+            best_key = key;
+            best = i;
+        }
+    }
+    best
 }
 
 /// The coordinator: owns worker threads and the routing table.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: MatrixRegistry,
+    shards: RwLock<HashMap<MatrixId, Arc<ShardedMatrix>>>,
     senders: Vec<Sender<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
-    /// matrix → worker affinity (residency-aware routing).
-    affinity: RwLock<HashMap<MatrixId, usize>>,
-    /// jobs routed per worker (for least-loaded placement).
-    routed: Vec<AtomicU64>,
+    /// shard → worker affinity (residency-aware routing).
+    affinity: RwLock<HashMap<ShardId, usize>>,
+    /// Shards ever placed per worker (placement tie-break).
+    placed: Vec<AtomicU64>,
     next_matrix: AtomicU64,
+    next_shard: AtomicU64,
     next_job: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
@@ -81,7 +229,7 @@ impl Coordinator {
         }
         cfg.tile.validate()?;
         let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
-        let metrics = Arc::new(Metrics::default());
+        let metrics = Arc::new(Metrics::for_workers(cfg.workers));
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         for id in 0..cfg.workers {
@@ -98,11 +246,13 @@ impl Coordinator {
         }
         Ok(Self {
             registry,
+            shards: RwLock::new(HashMap::new()),
             senders,
             handles,
             affinity: RwLock::new(HashMap::new()),
-            routed: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            placed: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             next_matrix: AtomicU64::new(1),
+            next_shard: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
             metrics,
             cfg,
@@ -113,78 +263,181 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Register a matrix (M×N bit rows) for later jobs.
+    /// Register a matrix (M×N bit rows, any rectangular shape) for later
+    /// jobs. Matrices larger than one tile are sharded into row-block ×
+    /// column-block sub-matrices; ragged input is an error.
     pub fn register_matrix(&self, rows: Vec<Vec<bool>>) -> Result<MatrixId> {
-        let tile = self.cfg.tile;
-        if rows.len() != tile.m {
-            return Err(PpacError::DimMismatch {
-                context: "register_matrix rows",
-                expected: tile.m,
-                got: rows.len(),
-            });
-        }
-        for r in &rows {
-            if r.len() != tile.n {
-                return Err(PpacError::DimMismatch {
-                    context: "register_matrix row width",
-                    expected: tile.n,
-                    got: r.len(),
-                });
+        let (m, n) = rect_shape(&rows)?;
+        let part = Partition::new(m, n, self.cfg.tile.m, self.cfg.tile.n)?;
+        // Build every block before taking the registry lock: workers read
+        // it on each residency change, and block extraction is O(M·N).
+        let blocks: Vec<Arc<Vec<Vec<bool>>>> = if part.shards() == 1 {
+            // Single-shard fast path: the block is the whole matrix.
+            vec![Arc::new(rows)]
+        } else {
+            let mut blocks = Vec::with_capacity(part.shards());
+            for rb in 0..part.row_blocks {
+                for cb in 0..part.col_blocks {
+                    blocks.push(Arc::new(part.block(&rows, rb, cb)));
+                }
+            }
+            blocks
+        };
+        let mut shard_ids = Vec::with_capacity(part.shards());
+        {
+            let mut reg = self.registry.write().unwrap();
+            for block in blocks {
+                let id = self.next_shard.fetch_add(1, Ordering::Relaxed);
+                reg.insert(id, block);
+                shard_ids.push(id);
             }
         }
-        let id = self.next_matrix.fetch_add(1, Ordering::Relaxed);
-        self.registry.write().unwrap().insert(id, Arc::new(rows));
-        Ok(id)
+        let mid = self.next_matrix.fetch_add(1, Ordering::Relaxed);
+        self.shards
+            .write()
+            .unwrap()
+            .insert(mid, Arc::new(ShardedMatrix { part, shard_ids }));
+        Ok(mid)
     }
 
-    /// Pick the worker for a matrix: resident tile if any, else the
+    /// Shape of a registered matrix.
+    pub fn matrix_shape(&self, matrix: MatrixId) -> Option<(usize, usize)> {
+        self.shards
+            .read()
+            .unwrap()
+            .get(&matrix)
+            .map(|s| (s.part.m, s.part.n))
+    }
+
+    /// Pick the worker for a shard: resident tile if any, else the
     /// least-loaded worker (and pin the affinity there).
-    fn route(&self, matrix: MatrixId) -> usize {
-        if let Some(&w) = self.affinity.read().unwrap().get(&matrix) {
+    fn route(&self, shard: ShardId) -> usize {
+        if let Some(&w) = self.affinity.read().unwrap().get(&shard) {
             return w;
         }
         let mut aff = self.affinity.write().unwrap();
-        *aff.entry(matrix).or_insert_with(|| {
-            self.routed
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
-                .map(|(i, _)| i)
-                .unwrap_or(0)
+        if let Some(&w) = aff.get(&shard) {
+            return w;
+        }
+        let inflight: Vec<u64> = (0..self.cfg.workers)
+            .map(|i| self.metrics.worker_inflight(i))
+            .collect();
+        let placed: Vec<u64> = self
+            .placed
+            .iter()
+            .map(|p| p.load(Ordering::Relaxed))
+            .collect();
+        let w = pick_worker(&inflight, &placed);
+        self.placed[w].fetch_add(1, Ordering::Relaxed);
+        aff.insert(shard, w);
+        w
+    }
+
+    /// Scatter a batch of same-mode inputs over a matrix's shards; the
+    /// returned handle gathers the partials.
+    fn scatter(&self, matrix: MatrixId, inputs: &[JobInput]) -> Result<BatchHandle> {
+        let sharded = self
+            .shards
+            .read()
+            .unwrap()
+            .get(&matrix)
+            .cloned()
+            .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
+        if inputs.is_empty() {
+            return Err(PpacError::Coordinator("empty batch".into()));
+        }
+        let mode = inputs[0].mode_key();
+        for input in inputs {
+            if input.mode_key() != mode {
+                return Err(PpacError::Coordinator(
+                    "a batch must use a single mode".into(),
+                ));
+            }
+            if input.bits().len() != sharded.part.n {
+                return Err(PpacError::DimMismatch {
+                    context: "job input width",
+                    expected: sharded.part.n,
+                    got: input.bits().len(),
+                });
+            }
+        }
+        let part = sharded.part;
+        let base = self
+            .next_job
+            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let submitted = Instant::now();
+        // Shard-major order keeps each worker's queue runs of the same
+        // (shard, mode) key, so the whole batch serves in few pipeline
+        // batches.
+        for (s_idx, &sid) in sharded.shard_ids.iter().enumerate() {
+            let cb = s_idx % part.col_blocks;
+            let worker = self.route(sid);
+            // In-flight must rise before the first send (the worker
+            // decrements after serving) and is rolled back in full on a
+            // dead worker — its dropped receiver will never serve any of
+            // this scatter's jobs.
+            if let Some(wm) = self.metrics.worker(worker) {
+                wm.inflight
+                    .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+            }
+            let mut send_failed = false;
+            for (j, input) in inputs.iter().enumerate() {
+                let job = job::Job {
+                    job_id: base + j as u64,
+                    shard: sid,
+                    shard_index: s_idx,
+                    input: input.with_bits(part.split_input(input.bits(), cb)),
+                    submitted,
+                    respond: tx.clone(),
+                };
+                if self.senders[worker].send(WorkerMsg::Job(job)).is_err() {
+                    send_failed = true;
+                    break;
+                }
+            }
+            if send_failed {
+                if let Some(wm) = self.metrics.worker(worker) {
+                    wm.inflight
+                        .fetch_sub(inputs.len() as u64, Ordering::Relaxed);
+                }
+                return Err(PpacError::Coordinator("worker gone".into()));
+            }
+            self.metrics
+                .shard_jobs_submitted
+                .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        }
+        self.metrics
+            .jobs_submitted
+            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        Ok(BatchHandle {
+            base_job_id: base,
+            count: inputs.len(),
+            plan: GatherPlan { part, mode },
+            rx,
+            metrics: Arc::clone(&self.metrics),
         })
     }
 
     /// Submit one job; returns a handle to wait on.
     pub fn submit(&self, matrix: MatrixId, input: JobInput) -> Result<JobHandle> {
-        if !self.registry.read().unwrap().contains_key(&matrix) {
-            return Err(PpacError::Coordinator(format!("unknown matrix {matrix}")));
-        }
-        if input.bits().len() != self.cfg.tile.n {
-            return Err(PpacError::DimMismatch {
-                context: "job input width",
-                expected: self.cfg.tile.n,
-                got: input.bits().len(),
-            });
-        }
-        let worker = self.route(matrix);
-        self.routed[worker].fetch_add(1, Ordering::Relaxed);
-        let job_id = self.next_job.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = channel();
-        let job = job::Job {
-            job_id,
-            matrix,
-            input,
-            submitted: Instant::now(),
-            respond: tx,
-        };
-        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-        self.senders[worker]
-            .send(WorkerMsg::Job(job))
-            .map_err(|_| PpacError::Coordinator("worker gone".into()))?;
-        Ok(JobHandle { job_id, rx })
+        let inner = self.scatter(matrix, std::slice::from_ref(&input))?;
+        Ok(JobHandle { job_id: inner.base_job_id, inner })
+    }
+
+    /// Submit a whole same-mode batch through one response channel. The
+    /// scatter ships each shard its full run of inputs back-to-back, so a
+    /// worker drains them in maximal pipeline batches (II = 1).
+    pub fn submit_batch(
+        &self,
+        matrix: MatrixId,
+        inputs: &[JobInput],
+    ) -> Result<BatchHandle> {
+        self.scatter(matrix, inputs)
     }
 
     /// Submit many jobs and wait for all results (in submission order).
+    /// Unlike [`Coordinator::submit_batch`], inputs may mix modes.
     pub fn submit_wait_all(
         &self,
         matrix: MatrixId,
@@ -205,5 +458,31 @@ impl Coordinator {
         for h in self.handles {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_worker_prefers_idle_over_low_historical_count() {
+        // Regression for the cumulative-counter bug: worker 0 routed many
+        // jobs in the past but is idle now; worker 1 is busy. The idle
+        // worker must win even though its historical count is higher.
+        assert_eq!(pick_worker(&[0, 3], &[9, 0]), 0);
+        assert_eq!(pick_worker(&[5, 0, 3], &[0, 9, 0]), 1);
+    }
+
+    #[test]
+    fn pick_worker_ties_spread_by_placement_then_index() {
+        assert_eq!(pick_worker(&[0, 0], &[3, 1]), 1);
+        assert_eq!(pick_worker(&[0, 0, 0], &[0, 0, 0]), 0);
+        assert_eq!(pick_worker(&[2, 2], &[1, 1]), 0);
+    }
+
+    #[test]
+    fn pick_worker_empty_defaults_to_zero() {
+        assert_eq!(pick_worker(&[], &[]), 0);
     }
 }

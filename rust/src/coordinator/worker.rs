@@ -1,13 +1,16 @@
 //! Worker: one thread owning one PPAC tile (a `PpacUnit`), serving
-//! batches of jobs against whichever matrix is currently resident.
+//! batches of shard jobs against whichever shard is currently resident.
 //!
 //! The worker drains its queue, groups *consecutive jobs with the same
-//! (matrix, mode)* into a batch (up to `max_batch`), reconfigures / reloads
+//! (shard, mode)* into a batch (up to `max_batch`), reconfigures / reloads
 //! only on change — mirroring the paper's use case where A stays static
 //! while x streams — and answers each job through its response channel.
+//! Shards are loaded through the padded write path, so boundary blocks of
+//! a large matrix land on the tile as-is; the scatter/gather layer above
+//! corrects for the zero padding.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -16,7 +19,7 @@ use crate::error::Result;
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
 
-use super::job::{Job, JobOutput, JobResult, MatrixId, ModeKey};
+use super::job::{Job, JobOutput, JobResult, ModeKey, ShardId};
 use super::metrics::Metrics;
 
 /// Messages a worker consumes.
@@ -25,18 +28,17 @@ pub enum WorkerMsg {
     Shutdown,
 }
 
-/// Shared, read-only matrix registry.
-pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<MatrixId, Arc<Vec<Vec<bool>>>>>>;
+/// Shared, read-only shard registry: tile-sized (possibly clipped) blocks
+/// of the registered matrices.
+pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<ShardId, Arc<Vec<Vec<bool>>>>>>;
 
 pub struct Worker {
     pub id: usize,
     unit: PpacUnit,
-    resident: Option<(MatrixId, ModeKey)>,
+    resident: Option<(ShardId, ModeKey)>,
     registry: MatrixRegistry,
     metrics: Arc<Metrics>,
     max_batch: usize,
-    /// Simulated cycles consumed by this worker (compute + loads).
-    pub cycles: Arc<AtomicU64>,
 }
 
 impl Worker {
@@ -54,7 +56,6 @@ impl Worker {
             registry,
             metrics,
             max_batch,
-            cycles: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -72,13 +73,14 @@ impl Worker {
                     Err(RecvTimeoutError::Disconnected) => return,
                 },
             };
-            // Greedily batch more jobs with the same (matrix, mode).
-            let key = (head.matrix, head.input.mode_key());
+            // Greedily batch more jobs with the same (shard, mode).
+            let key = (head.shard, head.input.mode_key());
             let mut batch = vec![head];
+            let mut shutdown = false;
             while batch.len() < self.max_batch {
                 match rx.try_recv() {
                     Ok(WorkerMsg::Job(j)) => {
-                        if (j.matrix, j.input.mode_key()) == key {
+                        if (j.shard, j.input.mode_key()) == key {
                             batch.push(j);
                         } else {
                             pending = Some(j);
@@ -86,33 +88,42 @@ impl Worker {
                         }
                     }
                     Ok(WorkerMsg::Shutdown) => {
-                        self.serve_batch(key, batch);
-                        return;
+                        shutdown = true;
+                        break;
                     }
                     Err(_) => break,
                 }
             }
+            let served = batch.len() as u64;
             self.serve_batch(key, batch);
+            // The jobs leave this worker's queue whether they were answered
+            // or dropped on an error path — occupancy must reflect that.
+            if let Some(w) = self.metrics.worker(self.id) {
+                w.inflight.fetch_sub(served, Ordering::Relaxed);
+            }
+            if shutdown {
+                return;
+            }
         }
     }
 
-    fn serve_batch(&mut self, key: (MatrixId, ModeKey), batch: Vec<Job>) {
-        let (matrix_id, mode) = key;
+    fn serve_batch(&mut self, key: (ShardId, ModeKey), batch: Vec<Job>) {
+        let (shard_id, mode) = key;
         // (Re)load + reconfigure if residency changed.
-        let mut loaded = false;
+        let mut load_cycles = None;
         if self.resident != Some(key) {
             let rows = {
                 let reg = self.registry.read().unwrap();
-                reg.get(&matrix_id).cloned()
+                reg.get(&shard_id).cloned()
             };
             let Some(rows) = rows else {
-                // Unknown matrix: fail every job by dropping senders.
+                // Unknown shard: fail every job by dropping senders.
                 return;
             };
             let cyc0 = self.unit.setup_cycles() + self.unit.compute_cycles();
             if self
                 .unit
-                .load_bit_matrix(&rows)
+                .load_bit_matrix_padded(&rows)
                 .and_then(|_| {
                     self.unit.configure(match mode {
                         ModeKey::Pm1Mvp => OpMode::Pm1Mvp,
@@ -125,9 +136,8 @@ impl Worker {
                 return;
             }
             let cyc1 = self.unit.setup_cycles() + self.unit.compute_cycles();
-            self.cycles.fetch_add(cyc1 - cyc0, Ordering::Relaxed);
+            load_cycles = Some(cyc1 - cyc0);
             self.resident = Some(key);
-            loaded = true;
         }
 
         let inputs: Vec<Vec<bool>> =
@@ -148,8 +158,8 @@ impl Worker {
             },
         };
         let cycles = self.unit.compute_cycles() - before;
-        self.cycles.fetch_add(cycles, Ordering::Relaxed);
-        self.metrics.record_batch(batch.len(), cycles, loaded);
+        self.metrics
+            .record_batch(self.id, batch.len(), cycles, load_cycles);
 
         let share = cycles as f64 / batch.len() as f64;
         let bsz = batch.len();
@@ -164,6 +174,8 @@ impl Worker {
                 cycles_share: share,
                 worker: self.id,
                 batch_size: bsz,
+                shard: job.shard_index,
+                fan_out: 1,
             });
         }
     }

@@ -1,40 +1,95 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the image vendors no `thiserror`,
+//! and the crate stays dependency-free so the tier-1 gate needs nothing
+//! beyond a stock toolchain.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum PpacError {
-    #[error("value {value} not representable as {nbits}-bit {fmt}")]
+    /// A value that does not fit the requested number format.
     FormatRange {
         value: i64,
         nbits: u32,
         fmt: &'static str,
     },
 
-    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
+    /// A dimension that does not match what the operation expects.
     DimMismatch {
         context: &'static str,
         expected: usize,
         got: usize,
     },
 
-    #[error("invalid configuration: {0}")]
+    /// A matrix whose rows have inconsistent widths (not rectangular).
+    RaggedMatrix {
+        row: usize,
+        expected: usize,
+        got: usize,
+    },
+
+    /// An invalid static configuration.
     Config(String),
 
-    #[error("row {row} out of range (M = {m})")]
+    /// A row address outside the array.
     RowOutOfRange { row: usize, m: usize },
 
-    #[error("runtime artifact error: {0}")]
+    /// A malformed or missing runtime artifact.
     Artifact(String),
 
-    #[error("coordinator error: {0}")]
+    /// A serving-layer failure (routing, scatter/gather, worker loss).
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error(transparent)]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
+}
+
+impl fmt::Display for PpacError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PpacError::FormatRange { value, nbits, fmt: name } => {
+                write!(f, "value {value} not representable as {nbits}-bit {name}")
+            }
+            PpacError::DimMismatch { context, expected, got } => {
+                write!(f, "dimension mismatch: {context} (expected {expected}, got {got})")
+            }
+            PpacError::RaggedMatrix { row, expected, got } => {
+                write!(f, "ragged matrix: row {row} is {got} bits wide, expected {expected}")
+            }
+            PpacError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            PpacError::RowOutOfRange { row, m } => {
+                write!(f, "row {row} out of range (M = {m})")
+            }
+            PpacError::Artifact(msg) => write!(f, "runtime artifact error: {msg}"),
+            PpacError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            PpacError::Io(e) => write!(f, "{e}"),
+            PpacError::Json(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PpacError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PpacError::Io(e) => Some(e),
+            PpacError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PpacError {
+    fn from(e: std::io::Error) -> Self {
+        PpacError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for PpacError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        PpacError::Json(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, PpacError>;

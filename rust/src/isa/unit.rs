@@ -105,6 +105,51 @@ impl PpacUnit {
         Ok(())
     }
 
+    /// Load a matrix block no larger than the array: up to M rows, each up
+    /// to N bits wide, zero-padded to the full M×N latch plane (remaining
+    /// rows are cleared so stale residents never leak into padded results).
+    ///
+    /// This is the masked/padded load the sharding layers use — a boundary
+    /// block of a large matrix lands on a fixed-size tile as-is. Padded
+    /// cells store 0, which ±1 modes read as −1; the caller corrects for
+    /// the known pad count (host-side subtraction or the offset `c`).
+    pub fn load_bit_matrix_padded(&mut self, rows: &[Vec<bool>]) -> Result<()> {
+        let (m, n) = (self.config().m, self.config().n);
+        if rows.len() > m {
+            return Err(PpacError::DimMismatch {
+                context: "load_bit_matrix_padded rows",
+                expected: m,
+                got: rows.len(),
+            });
+        }
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() > n {
+                return Err(PpacError::DimMismatch {
+                    context: "load_bit_matrix_padded row width",
+                    expected: n,
+                    got: row.len(),
+                });
+            }
+            let mut d = BitVec::zeros(n);
+            for (j, &b) in row.iter().enumerate() {
+                if b {
+                    d.set(j, true);
+                }
+            }
+            let step = CycleInput::write_only(n, i, d);
+            self.array.cycle(&step)?;
+            self.setup_cycles += 1;
+        }
+        for i in rows.len()..m {
+            let step = CycleInput::write_only(n, i, BitVec::zeros(n));
+            self.array.cycle(&step)?;
+            self.setup_cycles += 1;
+        }
+        self.array.flush_pipeline();
+        self.n_eff = n;
+        Ok(())
+    }
+
     /// Load a K-bit integer matrix in the §III-C2 column layout (entry j
     /// occupies columns j·K..j·K+K, MSB first).
     pub fn load_multibit_matrix(
@@ -588,5 +633,63 @@ impl PpacUnit {
         self.array.cycle(&step)?;
         self.setup_cycles += 1;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn padded_load_equals_explicit_zero_padding() {
+        let mut rng = Xoshiro256pp::seeded(42);
+        let cfg = PpacConfig::new(32, 32);
+        let (mr, nr) = (20, 25); // ragged block smaller than the tile
+        let block: Vec<Vec<bool>> = (0..mr).map(|_| rng.bits(nr)).collect();
+        let padded: Vec<Vec<bool>> = (0..32)
+            .map(|i| {
+                let mut row = if i < mr { block[i].clone() } else { Vec::new() };
+                row.resize(32, false);
+                row
+            })
+            .collect();
+
+        let mut a = PpacUnit::new(cfg).unwrap();
+        a.load_bit_matrix_padded(&block).unwrap();
+        a.configure(OpMode::Pm1Mvp).unwrap();
+        let mut b = PpacUnit::new(cfg).unwrap();
+        b.load_bit_matrix(&padded).unwrap();
+        b.configure(OpMode::Pm1Mvp).unwrap();
+
+        let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(32)).collect();
+        assert_eq!(a.mvp1_batch(&xs).unwrap(), b.mvp1_batch(&xs).unwrap());
+        // Both loads cost the full M write cycles.
+        assert_eq!(a.setup_cycles(), b.setup_cycles());
+    }
+
+    #[test]
+    fn padded_load_clears_stale_rows() {
+        let mut rng = Xoshiro256pp::seeded(43);
+        let cfg = PpacConfig::new(16, 16);
+        let mut u = PpacUnit::new(cfg).unwrap();
+        let full: Vec<Vec<bool>> = (0..16).map(|_| rng.bits(16)).collect();
+        u.load_bit_matrix(&full).unwrap();
+        // Reload a smaller block: rows beyond it must read back as zeros.
+        let small: Vec<Vec<bool>> = (0..4).map(|_| rng.bits(10)).collect();
+        u.load_bit_matrix_padded(&small).unwrap();
+        for r in 4..16 {
+            assert_eq!(u.array().row(r).unwrap().popcount(), 0, "row {r} stale");
+        }
+    }
+
+    #[test]
+    fn padded_load_rejects_oversized_blocks() {
+        let cfg = PpacConfig::new(16, 16);
+        let mut u = PpacUnit::new(cfg).unwrap();
+        let too_tall = vec![vec![false; 16]; 17];
+        assert!(u.load_bit_matrix_padded(&too_tall).is_err());
+        let too_wide = [vec![false; 17]];
+        assert!(u.load_bit_matrix_padded(&too_wide).is_err());
     }
 }

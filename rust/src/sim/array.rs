@@ -88,8 +88,11 @@ impl PpacArray {
         self.trace = Some(ActivityStats::default());
     }
 
+    /// Take the accumulated activity trace, resetting the counters while
+    /// keeping tracing enabled. Returns `None` — and leaves tracing (and
+    /// its per-cycle overhead) **off** — when tracing was never enabled.
     pub fn take_trace(&mut self) -> Option<ActivityStats> {
-        self.trace.replace(ActivityStats::default())
+        self.trace.as_mut().map(std::mem::take)
     }
 
     pub fn trace(&self) -> Option<&ActivityStats> {
@@ -432,6 +435,28 @@ mod tests {
         assert_eq!(t.cell_evals, 10 * 16 * 16);
         assert!(t.xnor_toggles > 0, "random stimuli must toggle XNOR cells");
         assert_eq!(t.and_toggles, 0, "all columns are XNOR in hamming mode");
+    }
+
+    #[test]
+    fn take_trace_does_not_enable_tracing() {
+        let cfg = PpacConfig::new(16, 16);
+        let mut arr = PpacArray::new(cfg).unwrap();
+        // Regression: take_trace on an untraced array must not switch the
+        // (per-cycle-overhead) tracing path on.
+        assert!(arr.take_trace().is_none());
+        assert!(arr.trace().is_none(), "take_trace must not enable tracing");
+        arr.cycle(&hamming_input(BitVec::zeros(16), 16)).unwrap();
+        assert!(arr.trace().is_none(), "tracing stays off across cycles");
+
+        // When enabled: take returns the stats, resets the counters, and
+        // keeps tracing on.
+        arr.enable_trace();
+        arr.cycle(&hamming_input(BitVec::zeros(16), 16)).unwrap();
+        let taken = arr.take_trace().unwrap();
+        assert_eq!(taken.cycles, 1);
+        assert_eq!(arr.trace().unwrap().cycles, 0, "take_trace resets");
+        arr.cycle(&hamming_input(BitVec::zeros(16), 16)).unwrap();
+        assert_eq!(arr.trace().unwrap().cycles, 1, "tracing still enabled");
     }
 
     #[test]

@@ -6,19 +6,32 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value {1:?} for --{0}: {2}")]
     BadValue(String, String, String),
-    #[error("unexpected positional argument {0:?}")]
     UnexpectedPositional(String),
-    #[error("missing subcommand; expected one of: {0}")]
     MissingSubcommand(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option --{o}"),
+            CliError::MissingValue(o) => write!(f, "option --{o} expects a value"),
+            CliError::BadValue(k, v, why) => write!(f, "invalid value {v:?} for --{k}: {why}"),
+            CliError::UnexpectedPositional(p) => {
+                write!(f, "unexpected positional argument {p:?}")
+            }
+            CliError::MissingSubcommand(s) => {
+                write!(f, "missing subcommand; expected one of: {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative option spec: which `--keys` a command accepts.
 #[derive(Debug, Clone, Default)]

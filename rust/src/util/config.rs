@@ -7,15 +7,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key {0}")]
     Missing(String),
-    #[error("key {0}: expected {1}, got {2:?}")]
     Type(String, &'static str, String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "config line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing key {key}"),
+            ConfigError::Type(key, want, got) => {
+                write!(f, "key {key}: expected {want}, got {got:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A parsed config: `section.key` → raw string value.
 #[derive(Debug, Clone, Default, PartialEq)]

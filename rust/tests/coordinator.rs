@@ -143,13 +143,173 @@ fn invalid_submissions_rejected() {
     let coord = coordinator(1, 4);
     // Unknown matrix.
     assert!(coord.submit(999, JobInput::Gf2(rng.bits(32))).is_err());
-    // Wrong width.
+    // Wrong input width (validated against the *logical* shape).
     let id = coord.register_matrix(rand_matrix(&mut rng)).unwrap();
     assert!(coord.submit(id, JobInput::Gf2(rng.bits(31))).is_err());
-    // Wrong matrix shape at registration.
-    assert!(coord.register_matrix(vec![vec![false; 32]; 31]).is_err());
-    assert!(coord.register_matrix(vec![vec![false; 31]; 32]).is_err());
+    // Non-tile-aligned shapes are now legal (sharded + padded)…
+    let odd = coord.register_matrix(vec![vec![false; 31]; 33]).unwrap();
+    assert_eq!(coord.matrix_shape(odd), Some((33, 31)));
+    assert!(coord.submit(odd, JobInput::Gf2(rng.bits(31))).is_ok());
+    // …but ragged and empty matrices are rejected, never panicking.
+    let mut ragged = vec![vec![false; 32]; 32];
+    ragged[17] = vec![false; 30];
+    assert!(coord.register_matrix(ragged).is_err());
+    assert!(coord.register_matrix(Vec::new()).is_err());
+    assert!(coord.register_matrix(vec![Vec::new(); 4]).is_err());
+    // Batch-specific rejections: empty batches and mixed modes.
+    assert!(coord.submit_batch(id, &[]).is_err());
+    assert!(coord
+        .submit_batch(
+            id,
+            &[JobInput::Gf2(rng.bits(32)), JobInput::Hamming(rng.bits(32))]
+        )
+        .is_err());
     coord.shutdown();
+}
+
+/// Acceptance: a 100×150 matrix on 64×64 tiles (2×3 shard grid, both
+/// dimensions padded) serves a 32-vector batch bit-exactly via both
+/// `submit` and `submit_batch`.
+#[test]
+fn sharded_100x150_on_64x64_tiles_matches_golden() {
+    let mut rng = Xoshiro256pp::seeded(90);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(64, 64),
+        workers: 3,
+        max_batch: 32,
+    })
+    .unwrap();
+    let a: Vec<Vec<bool>> = (0..100).map(|_| rng.bits(150)).collect();
+    let id = coord.register_matrix(a.clone()).unwrap();
+    let xs: Vec<Vec<bool>> = (0..32).map(|_| rng.bits(150)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+
+    // Path 1: independent submits.
+    let results = coord.submit_wait_all(id, inputs.clone()).unwrap();
+    for (x, r) in xs.iter().zip(&results) {
+        let want: Vec<i64> = a.iter().map(|row| golden::pm1_inner(row, x)).collect();
+        assert_eq!(r.output, JobOutput::Ints(want));
+        assert_eq!(r.fan_out, 6, "2x3 shard grid");
+    }
+
+    // Path 2: one batch through one response channel.
+    let batch = coord.submit_batch(id, &inputs).unwrap();
+    let ids = batch.job_ids();
+    let results = batch.wait().unwrap();
+    assert_eq!(results.len(), 32);
+    for ((x, r), want_id) in xs.iter().zip(&results).zip(ids) {
+        let want: Vec<i64> = a.iter().map(|row| golden::pm1_inner(row, x)).collect();
+        assert_eq!(r.output, JobOutput::Ints(want));
+        assert_eq!(r.job_id, want_id, "results arrive in submission order");
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_submitted, 64);
+    assert_eq!(snap.jobs_completed, 64);
+    assert_eq!(snap.shard_jobs_submitted, 64 * 6, "scatter fan-out");
+    assert_eq!(snap.shard_jobs_completed, 64 * 6);
+    assert_eq!(snap.gathers, 64, "every logical job needed a host reduce");
+    coord.shutdown();
+}
+
+/// Sharded Hamming and GF(2) paths: pad correction (+1/row/pad column
+/// under XNOR) and XOR reduction must both be exact.
+#[test]
+fn sharded_hamming_and_gf2_match_golden() {
+    let mut rng = Xoshiro256pp::seeded(91);
+    let coord = coordinator(2, 8); // 32×32 tiles
+    let a: Vec<Vec<bool>> = (0..40).map(|_| rng.bits(70)).collect();
+    let id = coord.register_matrix(a.clone()).unwrap();
+    for _ in 0..4 {
+        let x = rng.bits(70);
+        let h = coord.submit(id, JobInput::Hamming(x.clone())).unwrap();
+        let want: Vec<i64> = a
+            .iter()
+            .map(|row| golden::hamming_similarity(row, &x) as i64)
+            .collect();
+        assert_eq!(h.wait().unwrap().output, JobOutput::Ints(want));
+
+        let g = coord.submit(id, JobInput::Gf2(x.clone())).unwrap();
+        assert_eq!(g.wait().unwrap().output, JobOutput::Bits(golden::gf2_mvp(&a, &x)));
+    }
+    coord.shutdown();
+}
+
+/// Stress: many matrices of mixed shapes, concurrent submitters; all
+/// results must match golden, every worker must serve work (no
+/// starvation), and in-flight occupancy must drain to zero.
+#[test]
+fn stress_mixed_shapes_concurrent_submitters() {
+    let mut rng = Xoshiro256pp::seeded(92);
+    let workers = 4;
+    let coord = std::sync::Arc::new(coordinator(workers, 16)); // 32×32 tiles
+    let shapes = [(16, 16), (32, 32), (40, 70), (100, 150), (33, 31), (64, 96)];
+    let mats: Vec<(u64, std::sync::Arc<Vec<Vec<bool>>>)> = shapes
+        .iter()
+        .map(|&(m, n)| {
+            let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+            let id = coord.register_matrix(a.clone()).unwrap();
+            (id, std::sync::Arc::new(a))
+        })
+        .collect();
+
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let coord = std::sync::Arc::clone(&coord);
+        let mats = mats.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::seeded(5000 + t);
+            for i in 0..20 {
+                let (id, a) = &mats[rng.below(mats.len() as u64) as usize];
+                let n = a[0].len();
+                let x = rng.bits(n);
+                match i % 3 {
+                    0 => {
+                        let want: Vec<i64> =
+                            a.iter().map(|r| golden::pm1_inner(r, &x)).collect();
+                        let r = coord.submit(*id, JobInput::Pm1Mvp(x)).unwrap();
+                        assert_eq!(r.wait().unwrap().output, JobOutput::Ints(want));
+                    }
+                    1 => {
+                        let want: Vec<i64> = a
+                            .iter()
+                            .map(|r| golden::hamming_similarity(r, &x) as i64)
+                            .collect();
+                        let r = coord.submit(*id, JobInput::Hamming(x)).unwrap();
+                        assert_eq!(r.wait().unwrap().output, JobOutput::Ints(want));
+                    }
+                    _ => {
+                        let want = golden::gf2_mvp(a, &x);
+                        let inputs = vec![JobInput::Gf2(x)];
+                        let batch = coord.submit_batch(*id, &inputs).unwrap();
+                        let rs = batch.wait().unwrap();
+                        assert_eq!(rs[0].output, JobOutput::Bits(want));
+                    }
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    // Join the workers first so every in-flight decrement has landed.
+    if let Ok(c) = std::sync::Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_submitted, 6 * 20);
+    assert_eq!(snap.jobs_completed, 6 * 20);
+    assert_eq!(snap.per_worker.len(), workers);
+    for (w, occ) in snap.per_worker.iter().enumerate() {
+        assert!(occ.served > 0, "worker {w} starved: {occ:?}");
+        assert_eq!(occ.inflight, 0, "worker {w} occupancy must drain");
+    }
+    assert_eq!(
+        snap.per_worker.iter().map(|w| w.served).sum::<u64>(),
+        snap.shard_jobs_completed
+    );
 }
 
 #[test]
@@ -180,5 +340,7 @@ fn concurrent_clients_from_multiple_threads() {
     let snap = coord.metrics.snapshot();
     assert_eq!(snap.jobs_completed, 200);
     assert!(snap.p50_us > 0.0);
-    std::sync::Arc::try_unwrap(coord).ok().map(|c| c.shutdown());
+    if let Ok(c) = std::sync::Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
 }

@@ -136,6 +136,94 @@ fn matrix_worker_affinity_is_stable_per_matrix() {
     });
 }
 
+/// Property: for *arbitrary* rectangular shapes — including ragged
+/// boundaries like 100×150 on 64×64 tiles — sharded serving returns
+/// exactly the golden result in every mode, via both `submit` and
+/// `submit_batch`.
+#[test]
+fn sharded_serving_matches_golden_for_arbitrary_shapes() {
+    Runner::new(10).check("sharded-golden", |g| {
+        let mut rng = g.rng.fork();
+        let tile = PpacConfig::new(16, 16);
+        let workers = 1 + rng.below(3) as usize;
+        let coord = Coordinator::start(CoordinatorConfig {
+            tile,
+            workers,
+            max_batch: 8,
+        })
+        .map_err(|e| e.to_string())?;
+
+        // Shapes deliberately straddle tile boundaries (1..=40 per axis).
+        let m = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(40) as usize;
+        let mat: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let mid = coord.register_matrix(mat.clone()).map_err(|e| e.to_string())?;
+
+        let xs: Vec<Vec<bool>> = (0..1 + rng.below(6) as usize)
+            .map(|_| rng.bits(n))
+            .collect();
+        let (inputs, wants): (Vec<JobInput>, Vec<JobOutput>) = match rng.below(3) {
+            0 => xs
+                .iter()
+                .map(|x| {
+                    (
+                        JobInput::Pm1Mvp(x.clone()),
+                        JobOutput::Ints(
+                            mat.iter().map(|r| golden::pm1_inner(r, x)).collect(),
+                        ),
+                    )
+                })
+                .unzip(),
+            1 => xs
+                .iter()
+                .map(|x| {
+                    (
+                        JobInput::Hamming(x.clone()),
+                        JobOutput::Ints(
+                            mat.iter()
+                                .map(|r| golden::hamming_similarity(r, x) as i64)
+                                .collect(),
+                        ),
+                    )
+                })
+                .unzip(),
+            _ => xs
+                .iter()
+                .map(|x| {
+                    (JobInput::Gf2(x.clone()), JobOutput::Bits(golden::gf2_mvp(&mat, x)))
+                })
+                .unzip(),
+        };
+
+        // submit_batch: one response channel for the whole batch.
+        let batch = coord.submit_batch(mid, &inputs).map_err(|e| e.to_string())?;
+        let results = batch.wait().map_err(|e| e.to_string())?;
+        crate::assert_prop(results.len() == inputs.len(), "batch result count")?;
+        for (r, want) in results.iter().zip(&wants) {
+            crate::assert_prop(
+                &r.output == want,
+                &format!("sharded batch output mismatch ({m}x{n})"),
+            )?;
+        }
+        // submit: the single-job scatter/gather path.
+        let h = coord
+            .submit(mid, inputs[0].clone())
+            .map_err(|e| e.to_string())?;
+        let r = h.wait().map_err(|e| e.to_string())?;
+        crate::assert_prop(
+            r.output == wants[0],
+            &format!("sharded submit output mismatch ({m}x{n})"),
+        )?;
+        let expect_shards = m.div_ceil(16) * n.div_ceil(16);
+        crate::assert_prop(
+            r.fan_out == expect_shards,
+            &format!("fan_out {} != grid {expect_shards}", r.fan_out),
+        )?;
+        coord.shutdown();
+        Ok(())
+    });
+}
+
 /// Small helper: property-friendly assert.
 pub fn assert_prop(cond: bool, msg: &str) -> Result<(), String> {
     if cond {
