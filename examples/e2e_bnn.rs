@@ -150,6 +150,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         tile: cfg,
         workers: 4,
         max_batch: 64,
+        ..Default::default()
     })?;
     let mid = coord.register_matrix(layers[0].weights.clone())?;
     let t_serve = Instant::now();

@@ -1,16 +1,56 @@
-//! Host-side hot-path benchmarks: the packed simulator engine and the
-//! coordinator serving layer. These are the targets of the EXPERIMENTS.md
-//! §Perf optimization log.
+//! Host-side hot-path benchmarks: the packed simulator engine, the
+//! execution-engine backends and the coordinator serving layer. These
+//! are the targets of the EXPERIMENTS.md §Perf optimization log.
+//!
+//! Besides the console report, the run emits a machine-readable
+//! `BENCH_hotpath.json` (override the path with `PPAC_BENCH_JSON`) —
+//! name → {median_ns, mad_ns, per_sec, unit} — so CI can track the perf
+//! trajectory across PRs (`PPAC_BENCH_FAST=1` for the smoke mode).
 
 use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+use ppac::engine::Backend;
 use ppac::isa::{OpMode, PpacUnit};
 use ppac::sim::{BitVec, CycleInput, PpacArray, PpacConfig, RowAluCtrl};
-use ppac::util::bench::{human_rate, Bench};
+use ppac::util::bench::{human_rate, Bench, Sampled};
+use ppac::util::json::{obj, Json};
 use ppac::util::rng::Xoshiro256pp;
+
+/// Collects every benchmark into the JSON report.
+struct Report {
+    entries: Vec<(String, Json)>,
+}
+
+impl Report {
+    fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Record a sampled bench: `items` units of work per iteration.
+    fn add(&mut self, s: &Sampled, items: f64, unit: &str) {
+        self.entries.push((
+            s.name.clone(),
+            obj(vec![
+                ("median_ns", Json::Num(s.median_ns())),
+                ("mad_ns", Json::Num(s.mad_ns())),
+                ("per_sec", Json::Num(s.throughput(items))),
+                ("unit", Json::Str(unit.to_string())),
+            ]),
+        ));
+    }
+
+    fn write(self, path: &str) {
+        let doc = Json::Obj(self.entries.into_iter().collect());
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
     let bench = Bench::from_env();
     let mut rng = Xoshiro256pp::seeded(17);
+    let mut report = Report::new();
 
     // ---- raw array cycle (256×256, tracing off) ------------------------
     let cfg = PpacConfig::new(256, 256);
@@ -40,6 +80,7 @@ fn main() {
         "  -> {} (1-bit MVP cycles/s, one 256x256 array)",
         human_rate(s.throughput(inputs.len() as f64), "cyc/s")
     );
+    report.add(&s, inputs.len() as f64, "cyc/s");
 
     // ---- raw array cycle with activity tracing -------------------------
     let mut arr_t = PpacArray::new(cfg).unwrap();
@@ -60,25 +101,43 @@ fn main() {
         "  -> {} (with exact toggle counting)",
         human_rate(s.throughput(inputs.len() as f64), "cyc/s")
     );
+    report.add(&s, inputs.len() as f64, "cyc/s");
 
-    // ---- PpacUnit batch path (schedule compiler overhead) ---------------
-    let mut unit = PpacUnit::new(cfg).unwrap();
+    // ---- PpacUnit batch path: blocked engine vs cycle-accurate ----------
     let a: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
-    unit.load_bit_matrix(&a).unwrap();
-    unit.configure(OpMode::Pm1Mvp).unwrap();
     let xs: Vec<Vec<bool>> = (0..64).map(|_| rng.bits(256)).collect();
-    let s = bench.run("unit_mvp1_batch64_256x256", || unit.mvp1_batch(&xs).unwrap());
-    println!(
-        "  -> {} (MVPs/s through the mode layer)",
-        human_rate(s.throughput(xs.len() as f64), "MVP/s")
-    );
+    for backend in [Backend::Blocked, Backend::CycleAccurate] {
+        let mut unit = PpacUnit::new(cfg).unwrap();
+        unit.set_backend(backend);
+        unit.load_bit_matrix(&a).unwrap();
+        unit.configure(OpMode::Pm1Mvp).unwrap();
+        // The headline name keeps measuring the serving default so the
+        // perf trajectory stays comparable across PRs; the explicit
+        // cycle-accurate run records the before-number.
+        let name = match backend {
+            Backend::Blocked => "unit_mvp1_batch64_256x256".to_string(),
+            Backend::CycleAccurate => "unit_mvp1_batch64_256x256_cycle".to_string(),
+        };
+        let s = bench.run(&name, || unit.mvp1_batch(&xs).unwrap());
+        println!(
+            "  -> {} (MVPs/s through the mode layer, {} engine)",
+            human_rate(s.throughput(xs.len() as f64), "MVP/s"),
+            backend.name()
+        );
+        report.add(&s, xs.len() as f64, "MVP/s");
+    }
 
     // ---- coordinator end-to-end (submit → wait) -------------------------
-    for workers in [1usize, 4] {
+    for (workers, backend) in [
+        (1usize, Backend::Blocked),
+        (4, Backend::Blocked),
+        (4, Backend::CycleAccurate),
+    ] {
         let coord = Coordinator::start(CoordinatorConfig {
             tile: cfg,
             workers,
             max_batch: 64,
+            backend,
         })
         .unwrap();
         let mids: Vec<_> = (0..workers)
@@ -89,7 +148,13 @@ fn main() {
             })
             .collect();
         let payloads: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
-        let s = bench.run(&format!("coordinator_roundtrip_w{workers}_b256"), || {
+        let name = match backend {
+            Backend::Blocked => format!("coordinator_roundtrip_w{workers}_b256"),
+            Backend::CycleAccurate => {
+                format!("coordinator_roundtrip_w{workers}_b256_cycle")
+            }
+        };
+        let s = bench.run(&name, || {
             let handles: Vec<_> = payloads
                 .iter()
                 .enumerate()
@@ -108,10 +173,12 @@ fn main() {
             acc
         });
         println!(
-            "  -> {} ({} workers, burst of 256 jobs)",
+            "  -> {} ({} workers, burst of 256 jobs, {} engine)",
             human_rate(s.throughput(payloads.len() as f64), "job/s"),
-            workers
+            workers,
+            backend.name()
         );
+        report.add(&s, payloads.len() as f64, "job/s");
         coord.shutdown();
     }
 
@@ -120,6 +187,7 @@ fn main() {
         tile: cfg,
         workers: 1,
         max_batch: 64,
+        backend: Backend::Blocked,
     })
     .unwrap();
     let mid = coord
@@ -134,6 +202,7 @@ fn main() {
             .unwrap()
     });
     println!("  -> {:.1} µs median round trip", s.median_ns() / 1e3);
+    report.add(&s, 1.0, "job/s");
     coord.shutdown();
 
     // ---- sharded serving: 300×600 over 256×256 tiles (2×3 grid) ---------
@@ -144,6 +213,7 @@ fn main() {
         tile: cfg,
         workers: 4,
         max_batch: 64,
+        backend: Backend::Blocked,
     })
     .unwrap();
     let mid = coord
@@ -166,6 +236,7 @@ fn main() {
         "  -> {} (2x3 shard grid, scatter-gather MVPs/s)",
         human_rate(s.throughput(batch.len() as f64), "MVP/s")
     );
+    report.add(&s, batch.len() as f64, "MVP/s");
     let snap = coord.metrics.snapshot();
     println!(
         "  -> fan-out {} shard jobs / {} logical, {} gathers, occupancy {:?}",
@@ -178,4 +249,8 @@ fn main() {
             .collect::<Vec<_>>()
     );
     coord.shutdown();
+
+    let path =
+        std::env::var("PPAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    report.write(&path);
 }

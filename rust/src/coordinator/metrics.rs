@@ -25,6 +25,8 @@ pub struct WorkerMetrics {
     pub batches: AtomicU64,
     /// Simulated cycles this worker has consumed (loads + compute).
     pub sim_cycles: AtomicU64,
+    /// Resident shards this worker dropped on matrix unregistration.
+    pub evictions: AtomicU64,
 }
 
 /// Shared metrics (atomics for counters, a mutexed reservoir for
@@ -41,6 +43,8 @@ pub struct Metrics {
     pub shard_jobs_completed: AtomicU64,
     /// Logical jobs that required a host-side reduction of >1 shard.
     pub gathers: AtomicU64,
+    /// Matrices dropped via `unregister_matrix`.
+    pub matrices_unregistered: AtomicU64,
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
     pub matrix_loads: AtomicU64,
@@ -125,6 +129,7 @@ impl Metrics {
             shard_jobs_submitted: self.shard_jobs_submitted.load(Ordering::Relaxed),
             shard_jobs_completed: self.shard_jobs_completed.load(Ordering::Relaxed),
             gathers: self.gathers.load(Ordering::Relaxed),
+            matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
             matrix_loads: self.matrix_loads.load(Ordering::Relaxed),
@@ -139,6 +144,7 @@ impl Metrics {
                     served: w.served.load(Ordering::Relaxed),
                     batches: w.batches.load(Ordering::Relaxed),
                     sim_cycles: w.sim_cycles.load(Ordering::Relaxed),
+                    evictions: w.evictions.load(Ordering::Relaxed),
                 })
                 .collect(),
         }
@@ -152,6 +158,7 @@ pub struct WorkerSnapshot {
     pub served: u64,
     pub batches: u64,
     pub sim_cycles: u64,
+    pub evictions: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -162,6 +169,7 @@ pub struct MetricsSnapshot {
     pub shard_jobs_submitted: u64,
     pub shard_jobs_completed: u64,
     pub gathers: u64,
+    pub matrices_unregistered: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub matrix_loads: u64,

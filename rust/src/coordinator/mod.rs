@@ -26,6 +26,16 @@
 //!    column; the gather subtracts the known pad count deterministically.
 //!    Padded rows are simply truncated.
 //!
+//! 4. **Unregister** — `unregister_matrix` drops a matrix's shards from
+//!    the registry, releases their worker affinities/placement counts
+//!    and evicts resident copies, so the shard registry no longer grows
+//!    forever (the eviction follow-up from the sharded-serving PR).
+//!
+//! Workers serve 1-bit batches through the execution-engine layer
+//! ([`crate::engine`]); the default [`Backend::Blocked`] kernel answers
+//! bit-exactly at memory-bandwidth speed while hardware cycles are still
+//! accounted by the analytic schedule model.
+//!
 //! Threads + channels only (the image vendors no tokio); the public API
 //! is synchronous handles over mpsc.
 
@@ -41,6 +51,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::apps::tiled::{rect_shape, Partition};
+use crate::engine::Backend;
 use crate::error::{PpacError, Result};
 use crate::sim::PpacConfig;
 
@@ -54,11 +65,21 @@ pub struct CoordinatorConfig {
     pub tile: PpacConfig,
     pub workers: usize,
     pub max_batch: usize,
+    /// Execution engine workers serve 1-bit batches with. Defaults to
+    /// the query-blocked bit-parallel kernel; cycle counts are reported
+    /// via the analytic schedule model either way, and a worker whose
+    /// unit enables tracing is forced onto `CycleAccurate` regardless.
+    pub backend: Backend,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { tile: PpacConfig::new(256, 256), workers: 4, max_batch: 64 }
+        Self {
+            tile: PpacConfig::new(256, 256),
+            workers: 4,
+            max_batch: 64,
+            backend: Backend::Blocked,
+        }
     }
 }
 
@@ -240,6 +261,7 @@ impl Coordinator {
                 Arc::clone(&registry),
                 Arc::clone(&metrics),
                 cfg.max_batch,
+                cfg.backend,
             )?;
             handles.push(std::thread::spawn(move || worker.run(rx)));
             senders.push(tx);
@@ -300,6 +322,43 @@ impl Coordinator {
         Ok(mid)
     }
 
+    /// Unregister a matrix: its shards leave the registry (so nothing
+    /// can reload them), their worker affinities are released, placement
+    /// counts are decremented so freed workers compete for new shards
+    /// again, and the owning workers are told to evict any resident
+    /// copy. Jobs submitted after this call fail with "unknown matrix";
+    /// a scatter that raced the unregister may drop its shard jobs (the
+    /// caller's `wait` reports the lost partial).
+    pub fn unregister_matrix(&self, matrix: MatrixId) -> Result<()> {
+        let sharded = self
+            .shards
+            .write()
+            .unwrap()
+            .remove(&matrix)
+            .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
+        {
+            let mut reg = self.registry.write().unwrap();
+            for sid in &sharded.shard_ids {
+                reg.remove(sid);
+            }
+        }
+        let mut aff = self.affinity.write().unwrap();
+        for &sid in &sharded.shard_ids {
+            if let Some(w) = aff.remove(&sid) {
+                // The placed count rose when the affinity was pinned, so
+                // it is ≥ 1 here; releasing it lets the freed worker win
+                // placement ties again.
+                self.placed[w].fetch_sub(1, Ordering::Relaxed);
+                // A dead worker just means there is nothing to evict.
+                let _ = self.senders[w].send(WorkerMsg::Evict(sid));
+            }
+        }
+        self.metrics
+            .matrices_unregistered
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Shape of a registered matrix.
     pub fn matrix_shape(&self, matrix: MatrixId) -> Option<(usize, usize)> {
         self.shards
@@ -318,6 +377,18 @@ impl Coordinator {
         let mut aff = self.affinity.write().unwrap();
         if let Some(&w) = aff.get(&shard) {
             return w;
+        }
+        // A scatter can race unregister_matrix (it cloned the Sharded
+        // entry before the removal). Never pin an affinity for a shard
+        // that already left the registry: the worker will drop the job
+        // anyway, and a pin here would leak the affinity entry and its
+        // placed count forever (no unregister can reach them again).
+        // Holding the affinity write lock across this check makes the
+        // interleavings safe: either unregister's affinity sweep runs
+        // after our insert (and cleans it up), or the registry entry is
+        // already gone and we skip the pin.
+        if !self.registry.read().unwrap().contains_key(&shard) {
+            return 0;
         }
         let inflight: Vec<u64> = (0..self.cfg.workers)
             .map(|i| self.metrics.worker_inflight(i))

@@ -15,6 +15,7 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::engine::Backend;
 use crate::error::Result;
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
@@ -25,6 +26,8 @@ use super::metrics::Metrics;
 /// Messages a worker consumes.
 pub enum WorkerMsg {
     Job(Job),
+    /// Drop residency of a shard (sent when its matrix unregisters).
+    Evict(ShardId),
     Shutdown,
 }
 
@@ -48,10 +51,13 @@ impl Worker {
         registry: MatrixRegistry,
         metrics: Arc<Metrics>,
         max_batch: usize,
+        backend: Backend,
     ) -> Result<Self> {
+        let mut unit = PpacUnit::new(cfg)?;
+        unit.set_backend(backend);
         Ok(Self {
             id,
-            unit: PpacUnit::new(cfg)?,
+            unit,
             resident: None,
             registry,
             metrics,
@@ -68,6 +74,10 @@ impl Worker {
                 Some(j) => j,
                 None => match rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(WorkerMsg::Job(j)) => j,
+                    Ok(WorkerMsg::Evict(sid)) => {
+                        self.evict(sid);
+                        continue;
+                    }
                     Ok(WorkerMsg::Shutdown) => return,
                     Err(RecvTimeoutError::Timeout) => continue,
                     Err(RecvTimeoutError::Disconnected) => return,
@@ -87,6 +97,7 @@ impl Worker {
                             break;
                         }
                     }
+                    Ok(WorkerMsg::Evict(sid)) => self.evict(sid),
                     Ok(WorkerMsg::Shutdown) => {
                         shutdown = true;
                         break;
@@ -103,6 +114,18 @@ impl Worker {
             }
             if shutdown {
                 return;
+            }
+        }
+    }
+
+    /// Drop residency of `shard` (its matrix unregistered). The tile
+    /// contents are left in place — the next batch overwrites them on
+    /// load — but the occupancy metrics record the freed slot.
+    fn evict(&mut self, shard: ShardId) {
+        if matches!(self.resident, Some((sid, _)) if sid == shard) {
+            self.resident = None;
+            if let Some(w) = self.metrics.worker(self.id) {
+                w.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
     }

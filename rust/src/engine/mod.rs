@@ -1,0 +1,232 @@
+//! Execution-engine layer: *how* a batch of 1-bit operations is
+//! evaluated, decoupled from *what* it computes.
+//!
+//! The paper's serving story (§IV-A) keeps the matrix A static while
+//! input vectors stream at one MVP per clock. Functionally, every 1-bit
+//! mode PPAC serves — Hamming/CAM lookups, the four ±1/{0,1} MVP format
+//! pairings, GF(2) MVPs and PLA terms — reduces to the same kernel: per
+//! row, a population count `r` over XNOR or AND cell outputs, then an
+//! affine row-ALU output
+//!
+//! ```text
+//!   y_m = (popX2 ? 2r : r) + (nOZ ? nreg_m : 0) − (cEn ? c : 0) − δ_m
+//! ```
+//!
+//! (none of these modes write the ALU accumulators, so the array state is
+//! invariant across the batch). That means the *functional answer* does
+//! not require re-enacting the two-stage pipeline cycle by cycle; only
+//! tracing and power accounting do. An [`Engine`] turns a batch of packed
+//! queries into the per-row outputs; the two implementations are
+//! bit-exact by construction and property-checked against each other and
+//! the scalar reference model:
+//!
+//! - [`CycleAccurate`] drives the [`PpacArray`] pipeline exactly as the
+//!   schedule compiler always has — one `cycle()` per query plus the
+//!   drain. It is authoritative for switching-activity traces and the
+//!   power model, and is forced whenever tracing is enabled.
+//! - [`Blocked`] is the serving hot path: a query-blocked bit-parallel
+//!   kernel that streams each stored row's packed words **once per block
+//!   of queries**, evaluating XNOR/AND + popcount against the whole block
+//!   while the row sits in registers/L1 — no per-query matrix re-stream,
+//!   no pipeline bookkeeping, no per-query allocations. Hardware cycles
+//!   are still reported through the analytic schedule model (one cycle
+//!   per query at II = 1, plus one drain), so throughput and energy
+//!   accounting stay paper-faithful.
+//!
+//! Selection is by [`Backend`], threaded through `PpacUnit`, the
+//! coordinator workers and the `ppac serve` CLI (`--backend
+//! blocked|cycle`).
+
+pub mod blocked;
+pub mod cycle_accurate;
+
+pub use blocked::Blocked;
+pub use cycle_accurate::CycleAccurate;
+
+use crate::error::{PpacError, Result};
+use crate::sim::{BitVec, PpacArray, RowAluCtrl};
+
+/// Which execution engine serves 1-bit batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Replay the full two-stage pipeline (verification, tracing, power).
+    CycleAccurate,
+    /// Query-blocked bit-parallel kernel (the serving default).
+    #[default]
+    Blocked,
+}
+
+impl Backend {
+    /// The engine implementing this backend.
+    pub fn engine(self) -> &'static dyn Engine {
+        match self {
+            Backend::CycleAccurate => &CycleAccurate,
+            Backend::Blocked => &Blocked,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::CycleAccurate => "cycle",
+            Backend::Blocked => "blocked",
+        }
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = PpacError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "blocked" => Ok(Backend::Blocked),
+            "cycle" | "cycle-accurate" | "cycle_accurate" => Ok(Backend::CycleAccurate),
+            other => Err(PpacError::Config(format!(
+                "unknown backend {other:?} (expected blocked|cycle)"
+            ))),
+        }
+    }
+}
+
+/// The uniform-operator 1-bit operation class both engines serve: a
+/// popcount over XNOR (`xnor = true`) or AND cell outputs, then the
+/// affine row-ALU combination. Mirrors the `(s, RowAluCtrl)` pair the
+/// schedule compiler would issue, restricted to the control bits the
+/// 1-bit modes use (no accumulator writes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpKernel {
+    /// Operator select for every column: true = XNOR, false = AND.
+    pub xnor: bool,
+    /// popX2 — double the population count.
+    pub pop_x2: bool,
+    /// nOZ — add the stored correction register nreg_m.
+    pub use_nreg: bool,
+    /// cEn — subtract the shared offset c.
+    pub use_c: bool,
+}
+
+impl OpKernel {
+    /// Hamming similarity / CAM lookup (§III-A): y = r − δ.
+    pub fn hamming() -> Self {
+        Self { xnor: true, pop_x2: false, use_nreg: false, use_c: false }
+    }
+
+    /// {±1} MVP, eq. (1) (§III-B1): y = 2r − c.
+    pub fn pm1_mvp() -> Self {
+        Self { xnor: true, pop_x2: true, use_nreg: false, use_c: true }
+    }
+
+    /// {0,1} MVP (AND + popcount, §III-B2): y = r.
+    pub fn and01_mvp() -> Self {
+        Self { xnor: false, pop_x2: false, use_nreg: false, use_c: false }
+    }
+
+    /// {±1} matrix × {0,1} vector, eq. (2) (§III-B3): y = r + nreg − c.
+    pub fn eq2() -> Self {
+        Self { xnor: true, pop_x2: false, use_nreg: true, use_c: true }
+    }
+
+    /// {0,1} matrix × {±1} vector, eq. (3) (§III-B4): y = 2r + nreg − c.
+    pub fn eq3() -> Self {
+        Self { xnor: false, pop_x2: true, use_nreg: true, use_c: true }
+    }
+
+    /// GF(2) MVP (§III-D): y = r, result is its LSB.
+    pub fn gf2() -> Self {
+        Self::and01_mvp()
+    }
+
+    /// PLA term evaluation (§III-E): y = r − δ, term fires iff y ≥ 0.
+    pub fn pla() -> Self {
+        Self::and01_mvp()
+    }
+
+    /// The per-cycle signals the schedule compiler issues for this
+    /// kernel: the column operator-select word and the ALU control
+    /// bundle.
+    pub fn signals(&self, n: usize) -> (BitVec, RowAluCtrl) {
+        let s = if self.xnor { BitVec::ones(n) } else { BitVec::zeros(n) };
+        let ctrl = RowAluCtrl {
+            pop_x2: self.pop_x2,
+            no_z: self.use_nreg,
+            c_en: self.use_c,
+            ..RowAluCtrl::default()
+        };
+        (s, ctrl)
+    }
+}
+
+/// Result of serving one batch through an engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineBatch {
+    /// Per query, the row-ALU outputs y_m for every row.
+    pub ys: Vec<Vec<i64>>,
+    /// Hardware cycles the batch costs under the paper's schedule model
+    /// (II = 1: one cycle per query, plus one pipeline drain).
+    pub cycles: u64,
+}
+
+/// A bit-exact evaluator for uniform-operator 1-bit batches.
+///
+/// Both implementations must produce identical `EngineBatch` contents
+/// for the same array state; they differ only in host execution
+/// strategy (and in whether the array's pipeline/trace state advances).
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Serve `queries` (each N bits, matching the array width) under
+    /// `kernel`, reading the array's stored matrix and ALU
+    /// configuration. Takes the packed batch by value so the
+    /// cycle-accurate replay can move each query into its `CycleInput`
+    /// without re-cloning.
+    fn serve(
+        &self,
+        array: &mut PpacArray,
+        kernel: OpKernel,
+        queries: Vec<BitVec>,
+    ) -> Result<EngineBatch>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses_and_names_roundtrip() {
+        for (s, want) in [
+            ("blocked", Backend::Blocked),
+            ("cycle", Backend::CycleAccurate),
+            ("cycle-accurate", Backend::CycleAccurate),
+            ("cycle_accurate", Backend::CycleAccurate),
+        ] {
+            assert_eq!(s.parse::<Backend>().unwrap(), want);
+        }
+        assert!("warp".parse::<Backend>().is_err());
+        assert_eq!(Backend::Blocked.name(), "blocked");
+        assert_eq!(Backend::CycleAccurate.name(), "cycle");
+        assert_eq!(Backend::default(), Backend::Blocked);
+    }
+
+    #[test]
+    fn kernel_signals_match_schedule_compiler_presets() {
+        let n = 16;
+        let (s, ctrl) = OpKernel::hamming().signals(n);
+        assert_eq!(s, BitVec::ones(n));
+        assert_eq!(ctrl, RowAluCtrl::passthrough());
+
+        let (s, ctrl) = OpKernel::pm1_mvp().signals(n);
+        assert_eq!(s, BitVec::ones(n));
+        assert_eq!(ctrl, RowAluCtrl::pm1_mvp());
+
+        let (s, ctrl) = OpKernel::and01_mvp().signals(n);
+        assert_eq!(s, BitVec::zeros(n));
+        assert_eq!(ctrl, RowAluCtrl::passthrough());
+
+        let (s, ctrl) = OpKernel::eq2().signals(n);
+        assert_eq!(s, BitVec::ones(n));
+        assert_eq!(ctrl, RowAluCtrl::eq2_compute());
+
+        let (s, ctrl) = OpKernel::eq3().signals(n);
+        assert_eq!(s, BitVec::zeros(n));
+        assert_eq!(ctrl, RowAluCtrl::eq3_compute());
+    }
+}

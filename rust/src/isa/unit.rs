@@ -7,6 +7,7 @@
 //! bit-serial schedules (§III-C) handled internally and accounted
 //! cycle-exactly.
 
+use crate::engine::{Backend, OpKernel};
 use crate::error::{PpacError, Result};
 use crate::formats::{self, NumberFormat};
 use crate::sim::{
@@ -26,6 +27,9 @@ struct Step {
 pub struct PpacUnit {
     array: PpacArray,
     mode: Option<OpMode>,
+    /// Execution engine for 1-bit batches (multi-bit schedules always
+    /// run cycle-accurately; tracing forces [`Backend::CycleAccurate`]).
+    backend: Backend,
     /// Cycles spent in compute schedules (the paper's throughput basis).
     compute_cycles: u64,
     /// Cycles spent on setup (correction-register stores, matrix loads).
@@ -39,6 +43,7 @@ impl PpacUnit {
         Ok(Self {
             array: PpacArray::new(cfg)?,
             mode: None,
+            backend: Backend::default(),
             compute_cycles: 0,
             setup_cycles: 0,
             n_eff: cfg.n,
@@ -73,6 +78,46 @@ impl PpacUnit {
 
     pub fn enable_trace(&mut self) {
         self.array.enable_trace();
+    }
+
+    // -- execution-engine selection ------------------------------------------
+
+    /// Select the execution engine for 1-bit batch serving.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+    }
+
+    /// The configured backend selector.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// The backend that will actually serve the next 1-bit batch:
+    /// switching-activity tracing (and therefore the power model) needs
+    /// every pipeline cycle, so an enabled trace overrides the selector.
+    pub fn effective_backend(&self) -> Backend {
+        if self.array.trace_enabled() {
+            Backend::CycleAccurate
+        } else {
+            self.backend
+        }
+    }
+
+    /// Pack, validate and serve a uniform-operator 1-bit batch through
+    /// the selected engine, charging the analytic cycle cost (Q at
+    /// II = 1 plus one drain — identical for both engines).
+    fn serve_1bit(&mut self, queries: &[Vec<bool>], kernel: OpKernel) -> Result<Vec<Vec<i64>>> {
+        let mut packed = Vec::with_capacity(queries.len());
+        for q in queries {
+            self.check_width(q)?;
+            packed.push(BitVec::from_bools(q));
+        }
+        let batch = self
+            .effective_backend()
+            .engine()
+            .serve(&mut self.array, kernel, packed)?;
+        self.compute_cycles += batch.cycles;
+        Ok(batch.ys)
     }
 
     // -- matrix loading -----------------------------------------------------
@@ -239,6 +284,21 @@ impl PpacUnit {
                 emit: false,
             }];
             self.run_steps(steps, /*count_as_setup=*/ true)?;
+            // Commit the pipelined correction-register write now: in
+            // hardware it retires in the shadow of the first compute
+            // cycle, but the Blocked engine reads nreg directly, so the
+            // architectural state must be final when configure returns.
+            // Not charged to any counter — the mode's single setup cycle
+            // was counted above (eq. 2/3 accounting, §III-B). Skipped
+            // under tracing: there the CycleAccurate engine is forced
+            // (and tracing cannot be disabled), so the write retires
+            // naturally and an extra traced idle cycle would inflate
+            // the activity statistics.
+            if !self.array.trace_enabled() {
+                if let Some(out) = self.array.drain()? {
+                    self.array.recycle(out);
+                }
+            }
         }
 
         self.mode = Some(mode);
@@ -298,6 +358,10 @@ impl PpacUnit {
             cycles += 1;
             if pending_emit {
                 outputs.push(out.expect("pipeline must be primed"));
+            } else if let Some(out) = out {
+                // Dropped intermediate (bit-serial partials, setup
+                // cycles): hand the buffers back for stage-2 reuse.
+                self.array.recycle(out);
             }
             pending_emit = step.emit;
         }
@@ -340,22 +404,7 @@ impl PpacUnit {
             OpMode::Hamming => {}
             m => return Err(PpacError::Config(format!("mode {} ≠ hamming", m.name()))),
         }
-        let n = self.config().n;
-        let steps: Vec<Step> = queries
-            .iter()
-            .map(|q| {
-                self.check_width(q)?;
-                Ok(Step {
-                    input: CycleInput::compute(
-                        BitVec::from_bools(q),
-                        BitVec::ones(n),
-                        RowAluCtrl::passthrough(),
-                    ),
-                    emit: true,
-                })
-            })
-            .collect::<Result<_>>()?;
-        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+        self.serve_1bit(queries, OpKernel::hamming())
     }
 
     /// CAM lookups (§III-A): per query, the per-row match flags
@@ -365,52 +414,26 @@ impl PpacUnit {
             OpMode::Cam { .. } => {}
             m => return Err(PpacError::Config(format!("mode {} ≠ cam", m.name()))),
         }
-        let n = self.config().n;
-        let steps: Vec<Step> = queries
-            .iter()
-            .map(|q| {
-                self.check_width(q)?;
-                Ok(Step {
-                    input: CycleInput::compute(
-                        BitVec::from_bools(q),
-                        BitVec::ones(n),
-                        RowAluCtrl::passthrough(),
-                    ),
-                    emit: true,
-                })
-            })
-            .collect::<Result<_>>()?;
         Ok(self
-            .run_steps(steps, false)?
+            .serve_1bit(queries, OpKernel::hamming())?
             .into_iter()
-            .map(|o| o.matches())
+            .map(|y| y.into_iter().map(|v| v >= 0).collect())
             .collect())
     }
 
     /// 1-bit MVP batch (§III-B, all four format pairings): one cycle per
     /// vector, y = A·x under the mode's number interpretation.
     pub fn mvp1_batch(&mut self, xs: &[Vec<bool>]) -> Result<Vec<Vec<i64>>> {
-        let n = self.config().n;
-        let (s, ctrl) = match self.mode()? {
-            OpMode::Pm1Mvp => (BitVec::ones(n), RowAluCtrl::pm1_mvp()),
-            OpMode::And01Mvp => (BitVec::zeros(n), RowAluCtrl::passthrough()),
-            OpMode::Pm1Mat01Vec => (BitVec::ones(n), RowAluCtrl::eq2_compute()),
-            OpMode::Mat01Pm1Vec => (BitVec::zeros(n), RowAluCtrl::eq3_compute()),
+        let kernel = match self.mode()? {
+            OpMode::Pm1Mvp => OpKernel::pm1_mvp(),
+            OpMode::And01Mvp => OpKernel::and01_mvp(),
+            OpMode::Pm1Mat01Vec => OpKernel::eq2(),
+            OpMode::Mat01Pm1Vec => OpKernel::eq3(),
             m => {
                 return Err(PpacError::Config(format!("mode {} is not a 1-bit MVP", m.name())))
             }
         };
-        let steps: Vec<Step> = xs
-            .iter()
-            .map(|x| {
-                self.check_width(x)?;
-                Ok(Step {
-                    input: CycleInput::compute(BitVec::from_bools(x), s.clone(), ctrl),
-                    emit: true,
-                })
-            })
-            .collect::<Result<_>>()?;
-        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+        self.serve_1bit(xs, kernel)
     }
 
     /// GF(2) MVP batch (§III-D): per vector, the LSBs of the row sums.
@@ -419,25 +442,10 @@ impl PpacUnit {
             OpMode::Gf2Mvp => {}
             m => return Err(PpacError::Config(format!("mode {} ≠ gf2", m.name()))),
         }
-        let n = self.config().n;
-        let steps: Vec<Step> = xs
-            .iter()
-            .map(|x| {
-                self.check_width(x)?;
-                Ok(Step {
-                    input: CycleInput::compute(
-                        BitVec::from_bools(x),
-                        BitVec::zeros(n),
-                        RowAluCtrl::passthrough(),
-                    ),
-                    emit: true,
-                })
-            })
-            .collect::<Result<_>>()?;
         Ok(self
-            .run_steps(steps, false)?
+            .serve_1bit(xs, OpKernel::gf2())?
             .into_iter()
-            .map(|o| o.y.iter().map(|&y| y & 1 == 1).collect())
+            .map(|y| y.into_iter().map(|v| v & 1 == 1).collect())
             .collect())
     }
 
@@ -581,32 +589,23 @@ impl PpacUnit {
             }
             m => return Err(PpacError::Config(format!("mode {} ≠ pla", m.name()))),
         };
-        let n = self.config().n;
-        let steps: Vec<Step> = var_sets
-            .iter()
-            .map(|v| {
-                self.check_width(v)?;
-                Ok(Step {
-                    input: CycleInput::compute(
-                        BitVec::from_bools(v),
-                        BitVec::zeros(n), // AND operator in every cell
-                        RowAluCtrl::passthrough(),
-                    ),
-                    emit: true,
-                })
-            })
-            .collect::<Result<_>>()?;
-        let outs = self.run_steps(steps, false)?;
-        Ok(outs
+        let rpb = self.config().rows_per_bank;
+        let ys = self.serve_1bit(var_sets, OpKernel::pla())?;
+        // Bank adders: p_b = #rows in the bank with y ≥ 0, then the
+        // configured second-stage combine — identical to the array's
+        // bank_p reduction.
+        Ok(ys
             .into_iter()
-            .map(|o| {
-                o.bank_p
-                    .iter()
+            .map(|y| {
+                y.chunks(rpb)
                     .zip(&terms)
-                    .map(|(&p, &t)| match combine {
-                        BankCombine::Or => p > 0,
-                        BankCombine::And => p as usize == t,
-                        BankCombine::Majority => p as usize >= (t + 1) / 2,
+                    .map(|(chunk, &t)| {
+                        let p = chunk.iter().filter(|&&v| v >= 0).count();
+                        match combine {
+                            BankCombine::Or => p > 0,
+                            BankCombine::And => p == t,
+                            BankCombine::Majority => p >= (t + 1) / 2,
+                        }
                     })
                     .collect()
             })
@@ -681,6 +680,42 @@ mod tests {
         for r in 4..16 {
             assert_eq!(u.array().row(r).unwrap().popcount(), 0, "row {r} stale");
         }
+    }
+
+    #[test]
+    fn tracing_overrides_the_backend_selector() {
+        use crate::engine::Backend;
+        let mut u = PpacUnit::new(PpacConfig::new(16, 16)).unwrap();
+        assert_eq!(u.backend(), Backend::Blocked, "serving default");
+        assert_eq!(u.effective_backend(), Backend::Blocked);
+        u.set_backend(Backend::CycleAccurate);
+        assert_eq!(u.effective_backend(), Backend::CycleAccurate);
+        u.set_backend(Backend::Blocked);
+        u.enable_trace();
+        assert_eq!(
+            u.effective_backend(),
+            Backend::CycleAccurate,
+            "tracing needs every pipeline cycle"
+        );
+    }
+
+    #[test]
+    fn traced_batches_still_count_activity_under_blocked_selector() {
+        // A unit left on the Blocked selector but with tracing enabled
+        // must fall back to the pipeline so the power model sees real
+        // per-cycle activity.
+        let mut rng = Xoshiro256pp::seeded(44);
+        let cfg = PpacConfig::new(16, 16);
+        let mut u = PpacUnit::new(cfg).unwrap();
+        let a: Vec<Vec<bool>> = (0..16).map(|_| rng.bits(16)).collect();
+        u.load_bit_matrix(&a).unwrap();
+        u.configure(OpMode::Hamming).unwrap();
+        u.enable_trace();
+        let qs: Vec<Vec<bool>> = (0..10).map(|_| rng.bits(16)).collect();
+        u.hamming_batch(&qs).unwrap();
+        let t = u.array_mut().take_trace().unwrap();
+        assert_eq!(t.cycles, 11, "10 queries + drain, all traced");
+        assert_eq!(t.cell_evals, 11 * 16 * 16);
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //!
 //! This crate contains:
 //! - [`sim`] — the cycle-accurate, bit-true array simulator (the "RTL");
+//! - [`engine`] — execution engines: the query-blocked bit-parallel
+//!   serving kernel and the cycle-accurate replay, behind one trait;
 //! - [`formats`] — Table I number formats + bit-plane decomposition;
 //! - [`isa`] — operation modes compiled to per-cycle control schedules;
 //! - [`golden`] — untimed functional reference models;
@@ -29,6 +31,7 @@
 pub mod apps;
 pub mod baselines;
 pub mod coordinator;
+pub mod engine;
 pub mod error;
 pub mod formats;
 pub mod golden;

@@ -11,7 +11,7 @@
 //! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
-//! ppac serve [--workers --batch --jobs]      coordinator demo
+//! ppac serve [--workers --batch --jobs --backend blocked|cycle]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -445,6 +445,7 @@ fn simulate(rest: Vec<String>) -> AnyResult {
 
 fn serve(rest: Vec<String>) -> AnyResult {
     use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+    use ppac::engine::Backend;
     use ppac::util::config::Config;
     let p = Spec::new()
         .opt("workers")
@@ -452,6 +453,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("jobs")
         .opt("m")
         .opt("n")
+        .opt("backend")
         .opt("config")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
@@ -464,8 +466,11 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let jobs = p.usize_or("jobs", file.usize_or("workload.jobs", 2000)?)?;
     let m = p.usize_or("m", file.usize_or("tile.m", 256)?)?;
     let n = p.usize_or("n", file.usize_or("tile.n", 256)?)?;
+    let backend: Backend = p
+        .str_or("backend", &file.str_or("coordinator.backend", "blocked"))
+        .parse()?;
     let tile = PpacConfig::new(m, n);
-    let coord = Coordinator::start(CoordinatorConfig { tile, workers, max_batch })?;
+    let coord = Coordinator::start(CoordinatorConfig { tile, workers, max_batch, backend })?;
     let mut rng = Xoshiro256pp::seeded(11);
     let matrices: Vec<_> = (0..workers)
         .map(|_| {
@@ -487,12 +492,20 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let dt = t0.elapsed().as_secs_f64();
     let snap = coord.metrics.snapshot();
     println!("workers          : {workers} (tile {m}x{n}, max batch {max_batch})");
+    println!("backend          : {}", backend.name());
     println!("jobs             : {} in {dt:.3} s = {:.0} jobs/s", snap.jobs_completed,
              snap.jobs_completed as f64 / dt);
     println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch_size);
     println!("matrix loads     : {}", snap.matrix_loads);
     println!("latency p50/p99  : {:.0} / {:.0} us", snap.p50_us, snap.p99_us);
     println!("sim cycles total : {}", snap.sim_cycles);
+    println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight)");
+    for (i, w) in snap.per_worker.iter().enumerate() {
+        println!(
+            "  worker {i:<2}      : {:>6} served / {:>5} batches / {:>9} cycles / {} in-flight",
+            w.served, w.batches, w.sim_cycles, w.inflight
+        );
+    }
     coord.shutdown();
     Ok(())
 }

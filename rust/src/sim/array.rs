@@ -56,6 +56,12 @@ pub struct PpacArray {
     /// Activity tracing (None = tracing disabled, zero overhead path).
     trace: Option<ActivityStats>,
     cycles: u64,
+    /// Recycled stage-2 output buffers: callers that drop a
+    /// [`CycleOutput`] can hand its vectors back via
+    /// [`PpacArray::recycle`], and the next cycle's stage 2 reuses their
+    /// capacity instead of allocating fresh ones.
+    spare_y: Vec<i64>,
+    spare_bank: Vec<u32>,
 }
 
 impl PpacArray {
@@ -75,6 +81,8 @@ impl PpacArray {
             prev_s: BitVec::zeros(cfg.n),
             trace: None,
             cycles: 0,
+            spare_y: Vec::new(),
+            spare_bank: Vec::new(),
             cfg,
         })
     }
@@ -101,6 +109,52 @@ impl PpacArray {
 
     pub fn cycles(&self) -> u64 {
         self.cycles
+    }
+
+    /// Whether switching-activity tracing is enabled (forces the
+    /// cycle-accurate execution engine).
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    // -- read-only views for the functional execution engines ---------------
+
+    /// u64 words per stored row in [`PpacArray::mem_words`].
+    pub fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    /// The packed latch plane: M × `words_per_row()` u64 words,
+    /// row-major and contiguous (tail bits beyond N are always clear).
+    pub fn mem_words(&self) -> &[u64] {
+        &self.mem
+    }
+
+    /// The per-row ALU state (thresholds δ_m, correction registers).
+    pub fn alus(&self) -> &[RowAlu] {
+        &self.alus
+    }
+
+    /// The shared row-ALU configuration (offset c).
+    pub fn shared(&self) -> RowAluShared {
+        self.shared
+    }
+
+    /// Hand a dropped output's buffers back for stage-2 reuse. Keeping
+    /// only the larger-capacity vector makes this idempotent and
+    /// monotone — recycling never shrinks the scratch.
+    pub fn recycle_buffers(&mut self, y: Vec<i64>, bank_p: Vec<u32>) {
+        if y.capacity() > self.spare_y.capacity() {
+            self.spare_y = y;
+        }
+        if bank_p.capacity() > self.spare_bank.capacity() {
+            self.spare_bank = bank_p;
+        }
+    }
+
+    /// Recycle a whole unconsumed [`CycleOutput`].
+    pub fn recycle(&mut self, out: CycleOutput) {
+        self.recycle_buffers(out.y, out.bank_p);
     }
 
     // -- configuration-time programming ------------------------------------
@@ -233,7 +287,11 @@ impl PpacArray {
         // ---- Stage 2: row ALUs consume the pipelined popcounts ----------
         let output = if self.pipe_any_valid {
             let ctrl = self.pipe_ctrl;
-            let mut y = Vec::with_capacity(self.cfg.m);
+            // Recycled scratch (see `recycle`): after the first cycle of
+            // a recycling caller, stage 2 stops allocating.
+            let mut y = std::mem::take(&mut self.spare_y);
+            y.clear();
+            y.reserve(self.cfg.m);
             // The raw popcounts are diagnostic; materialize them only
             // when tracing (§Perf iteration 4 — saves an allocation and
             // a copy per cycle on the hot path).
@@ -254,10 +312,12 @@ impl PpacArray {
             }
             // Bank adders: p_b = #rows in bank with ¬MSB(y) (y ≥ 0).
             let rpb = self.cfg.rows_per_bank;
-            let bank_p = y
-                .chunks(rpb)
-                .map(|chunk| chunk.iter().filter(|&&v| v >= 0).count() as u32)
-                .collect();
+            let mut bank_p = std::mem::take(&mut self.spare_bank);
+            bank_p.clear();
+            bank_p.extend(
+                y.chunks(rpb)
+                    .map(|chunk| chunk.iter().filter(|&&v| v >= 0).count() as u32),
+            );
             Some(CycleOutput { y, r: r_out, bank_p })
         } else {
             None
@@ -457,6 +517,42 @@ mod tests {
         assert_eq!(arr.trace().unwrap().cycles, 0, "take_trace resets");
         arr.cycle(&hamming_input(BitVec::zeros(16), 16)).unwrap();
         assert_eq!(arr.trace().unwrap().cycles, 1, "tracing still enabled");
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_without_reallocation() {
+        let cfg = PpacConfig::new(16, 16);
+        let mut arr = PpacArray::new(cfg).unwrap();
+        arr.cycle(&hamming_input(BitVec::zeros(16), 16)).unwrap();
+        let out = arr
+            .cycle(&hamming_input(BitVec::zeros(16), 16))
+            .unwrap()
+            .unwrap();
+        let y_ptr = out.y.as_ptr();
+        arr.recycle(out);
+        let out2 = arr.drain().unwrap().unwrap();
+        assert_eq!(out2.y.as_ptr(), y_ptr, "stage 2 must reuse recycled capacity");
+        assert_eq!(out2.y.len(), 16);
+        assert_eq!(out2.bank_p.len(), 1);
+    }
+
+    #[test]
+    fn engine_views_expose_packed_state() {
+        let cfg = PpacConfig::new(16, 70);
+        let mut arr = PpacArray::new(cfg).unwrap();
+        assert_eq!(arr.words_per_row(), 2);
+        assert_eq!(arr.mem_words().len(), 16 * 2);
+        assert_eq!(arr.alus().len(), 16);
+        arr.set_offset(7);
+        assert_eq!(arr.shared().c, 7);
+        arr.set_threshold(3, -2).unwrap();
+        assert_eq!(arr.alus()[3].delta, -2);
+        let row = BitVec::ones(70);
+        arr.write_row(5, row.clone()).unwrap();
+        assert_eq!(&arr.mem_words()[10..12], row.words());
+        assert!(!arr.trace_enabled());
+        arr.enable_trace();
+        assert!(arr.trace_enabled());
     }
 
     #[test]

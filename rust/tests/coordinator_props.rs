@@ -20,8 +20,13 @@ fn random_job_mixes_conserve_metrics_and_results() {
         let max_batch = 1 + rng.below(32) as usize;
         let n = 32;
         let tile = PpacConfig::new(32, n);
-        let coord = Coordinator::start(CoordinatorConfig { tile, workers, max_batch })
-            .map_err(|e| e.to_string())?;
+        let coord = Coordinator::start(CoordinatorConfig {
+            tile,
+            workers,
+            max_batch,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
 
         // Random registry of 1..4 matrices.
         let n_mats = 1 + rng.below(4) as usize;
@@ -112,6 +117,7 @@ fn matrix_worker_affinity_is_stable_per_matrix() {
             tile,
             workers,
             max_batch: 8,
+            ..Default::default()
         })
         .map_err(|e| e.to_string())?;
         let mid = coord
@@ -146,10 +152,16 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
         let mut rng = g.rng.fork();
         let tile = PpacConfig::new(16, 16);
         let workers = 1 + rng.below(3) as usize;
+        // Random backend: sharded serving must be bit-exact either way.
+        let backend = *g.choose(&[
+            ppac::engine::Backend::Blocked,
+            ppac::engine::Backend::CycleAccurate,
+        ]);
         let coord = Coordinator::start(CoordinatorConfig {
             tile,
             workers,
             max_batch: 8,
+            backend,
         })
         .map_err(|e| e.to_string())?;
 

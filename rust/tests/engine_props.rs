@@ -1,0 +1,263 @@
+//! Execution-engine equivalence: the query-blocked bit-parallel kernel
+//! must be bit-exact against both the cycle-accurate pipeline replay and
+//! the per-bit-cell `sim::scalar` reference — across ragged widths
+//! (N = 1, 63, 64, 65, 200 straddle every u64 packing boundary), every
+//! served op mode, and random thresholds/offsets.
+
+use ppac::engine::Backend;
+use ppac::isa::{BankCombine, OpMode, PpacUnit, TermKind};
+use ppac::sim::scalar::ScalarPpac;
+use ppac::sim::{BitVec, CycleInput, PpacConfig, RowAluCtrl};
+use ppac::util::prop::Runner;
+use ppac::util::rng::Xoshiro256pp;
+
+/// A legal config for arbitrary (possibly ragged) M×N.
+fn cfg(m: usize, n: usize) -> PpacConfig {
+    let mut c = PpacConfig::new(m, n);
+    c.rows_per_bank = if m % 16 == 0 { 16 } else { m };
+    c.subrows = if n % 16 == 0 { n / 16 } else { 1 };
+    c
+}
+
+/// Build + program one unit on the given backend.
+fn unit_with(
+    backend: Backend,
+    c: PpacConfig,
+    a: &[Vec<bool>],
+    mode: &OpMode,
+) -> PpacUnit {
+    let mut u = PpacUnit::new(c).unwrap();
+    u.set_backend(backend);
+    u.load_bit_matrix(a).unwrap();
+    u.configure(mode.clone()).unwrap();
+    u
+}
+
+/// Serve a batch in `mode`, canonicalized to i64 (bools as 0/1).
+fn run_mode(u: &mut PpacUnit, mode: &OpMode, qs: &[Vec<bool>]) -> Vec<Vec<i64>> {
+    fn from_bools(vs: Vec<Vec<bool>>) -> Vec<Vec<i64>> {
+        vs.into_iter()
+            .map(|v| v.into_iter().map(i64::from).collect())
+            .collect()
+    }
+    match mode {
+        OpMode::Hamming => u.hamming_batch(qs).unwrap(),
+        OpMode::Cam { .. } => from_bools(u.cam_batch(qs).unwrap()),
+        OpMode::Pm1Mvp | OpMode::And01Mvp | OpMode::Pm1Mat01Vec | OpMode::Mat01Pm1Vec => {
+            u.mvp1_batch(qs).unwrap()
+        }
+        OpMode::Gf2Mvp => from_bools(u.gf2_batch(qs).unwrap()),
+        OpMode::Pla { .. } => from_bools(u.pla_batch(qs).unwrap()),
+        other => panic!("not a served 1-bit mode: {}", other.name()),
+    }
+}
+
+/// Raw row-ALU outputs from the per-bit-cell scalar model, configured
+/// identically to `unit` (thresholds/offset read back from its array,
+/// the eq. 2/3 correction register reproduced via a real setup cycle).
+fn scalar_ys(unit: &PpacUnit, a: &[Vec<bool>], mode: &OpMode, qs: &[Vec<bool>]) -> Vec<Vec<i64>> {
+    let c = *unit.config();
+    let n = c.n;
+    let mut sc = ScalarPpac::new(c).unwrap();
+    let rows: Vec<BitVec> = a.iter().map(|r| BitVec::from_bools(r)).collect();
+    sc.load_matrix(&rows).unwrap();
+    let deltas: Vec<i64> = unit.array().alus().iter().map(|al| al.delta).collect();
+    sc.set_thresholds(&deltas).unwrap();
+    sc.set_offset(unit.array().shared().c);
+    let (s, ctrl, setup_x) = match mode {
+        OpMode::Hamming | OpMode::Cam { .. } => {
+            (BitVec::ones(n), RowAluCtrl::passthrough(), None)
+        }
+        OpMode::Pm1Mvp => (BitVec::ones(n), RowAluCtrl::pm1_mvp(), None),
+        OpMode::And01Mvp => (BitVec::zeros(n), RowAluCtrl::passthrough(), None),
+        OpMode::Pm1Mat01Vec => {
+            (BitVec::ones(n), RowAluCtrl::eq2_compute(), Some(BitVec::ones(n)))
+        }
+        OpMode::Mat01Pm1Vec => {
+            (BitVec::zeros(n), RowAluCtrl::eq3_compute(), Some(BitVec::zeros(n)))
+        }
+        OpMode::Gf2Mvp | OpMode::Pla { .. } => {
+            (BitVec::zeros(n), RowAluCtrl::passthrough(), None)
+        }
+        other => panic!("not a served 1-bit mode: {}", other.name()),
+    };
+    let mut outs: Vec<Vec<i64>> = Vec::new();
+    if let Some(x) = setup_x {
+        sc.cycle(&CycleInput::compute(x, BitVec::ones(n), RowAluCtrl::store_correction()))
+            .unwrap();
+    }
+    for q in qs {
+        let input = CycleInput::compute(BitVec::from_bools(q), s.clone(), ctrl);
+        if let Some(out) = sc.cycle(&input).unwrap() {
+            outs.push(out.y);
+        }
+    }
+    let idle = CycleInput::compute(BitVec::zeros(n), BitVec::zeros(n), RowAluCtrl::default());
+    if let Some(out) = sc.cycle(&idle).unwrap() {
+        outs.push(out.y);
+    }
+    // With a setup cycle present its (discarded) output is also emitted;
+    // the batch outputs are the last |qs|.
+    outs.split_off(outs.len() - qs.len())
+}
+
+/// Decode the scalar model's raw y into the mode's client-facing form.
+fn decode(mode: &OpMode, cfg: &PpacConfig, ys: Vec<Vec<i64>>) -> Vec<Vec<i64>> {
+    match mode {
+        OpMode::Cam { .. } => ys
+            .into_iter()
+            .map(|y| y.into_iter().map(|v| i64::from(v >= 0)).collect())
+            .collect(),
+        OpMode::Gf2Mvp => ys
+            .into_iter()
+            .map(|y| y.into_iter().map(|v| v & 1).collect())
+            .collect(),
+        OpMode::Pla { combine, terms_per_bank, .. } => ys
+            .into_iter()
+            .map(|y| {
+                y.chunks(cfg.rows_per_bank)
+                    .zip(terms_per_bank)
+                    .map(|(chunk, &t)| {
+                        let p = chunk.iter().filter(|&&v| v >= 0).count();
+                        i64::from(match combine {
+                            BankCombine::Or => p > 0,
+                            BankCombine::And => p == t,
+                            BankCombine::Majority => p >= (t + 1) / 2,
+                        })
+                    })
+                    .collect()
+            })
+            .collect(),
+        _ => ys,
+    }
+}
+
+/// The served mode zoo for a given geometry, with randomized
+/// thresholds where the mode carries them.
+fn modes_for(rng: &mut Xoshiro256pp, c: &PpacConfig) -> Vec<OpMode> {
+    let banks = c.m / c.rows_per_bank;
+    vec![
+        OpMode::Hamming,
+        OpMode::Cam { deltas: rng.ints(c.m, -2, c.n as i64 + 2) },
+        OpMode::Pm1Mvp,
+        OpMode::And01Mvp,
+        OpMode::Pm1Mat01Vec,
+        OpMode::Mat01Pm1Vec,
+        OpMode::Gf2Mvp,
+        OpMode::Pla {
+            kind: TermKind::MinTerm,
+            combine: BankCombine::Or,
+            terms_per_bank: (0..banks)
+                .map(|_| rng.below(c.rows_per_bank as u64 + 1) as usize)
+                .collect(),
+        },
+    ]
+}
+
+/// Ragged widths straddling every packing boundary, every served mode:
+/// Blocked == CycleAccurate == scalar reference, and both backends
+/// charge identical analytic cycle counts.
+#[test]
+fn blocked_matches_cycle_and_scalar_across_ragged_widths() {
+    let mut rng = Xoshiro256pp::seeded(600);
+    for n in [1usize, 63, 64, 65, 200] {
+        for m in [16usize, 48] {
+            let c = cfg(m, n);
+            let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+            let qs: Vec<Vec<bool>> = (0..5).map(|_| rng.bits(n)).collect();
+            for mode in modes_for(&mut rng, &c) {
+                let mut blocked = unit_with(Backend::Blocked, c, &a, &mode);
+                let mut cycle = unit_with(Backend::CycleAccurate, c, &a, &mode);
+                let got_b = run_mode(&mut blocked, &mode, &qs);
+                let got_c = run_mode(&mut cycle, &mode, &qs);
+                assert_eq!(
+                    got_b,
+                    got_c,
+                    "blocked vs cycle-accurate: {} m={m} n={n}",
+                    mode.name()
+                );
+                assert_eq!(
+                    blocked.compute_cycles(),
+                    cycle.compute_cycles(),
+                    "cycle accounting: {} m={m} n={n}",
+                    mode.name()
+                );
+                let want = decode(&mode, &c, scalar_ys(&blocked, &a, &mode, &qs));
+                assert_eq!(got_b, want, "blocked vs scalar: {} m={m} n={n}", mode.name());
+            }
+        }
+    }
+}
+
+/// Randomized geometry, thresholds, offsets and query mixes: the two
+/// backends must stay bit-exact (and agree with the scalar model) even
+/// under post-configure threshold/offset overrides.
+#[test]
+fn blocked_equals_cycle_property() {
+    Runner::new(24).check("blocked-vs-cycle", |g| {
+        let mut rng = g.rng.fork();
+        let m = 4 * g.dim(12); // 4..48
+        let n = 1 + rng.below(96) as usize; // 1..96, packing-ragged
+        let c = {
+            let mut c = cfg(m, n);
+            c.rows_per_bank = if m % 4 == 0 { 4 } else { m };
+            c
+        };
+        let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let qs: Vec<Vec<bool>> =
+            (0..1 + rng.below(40) as usize).map(|_| rng.bits(n)).collect();
+        let modes = modes_for(&mut rng, &c);
+        let mode = &modes[rng.below(modes.len() as u64) as usize];
+
+        let mut blocked = unit_with(Backend::Blocked, c, &a, mode);
+        let mut cycle = unit_with(Backend::CycleAccurate, c, &a, mode);
+        // Random post-configure overrides (BNN biases, tuned offsets).
+        let deltas = rng.ints(m, -3, 3);
+        let offset = rng.range_i64(-2, n as i64);
+        for u in [&mut blocked, &mut cycle] {
+            u.set_thresholds(&deltas).map_err(|e| e.to_string())?;
+            u.array_mut().set_offset(offset);
+        }
+
+        let got_b = run_mode(&mut blocked, mode, &qs);
+        let got_c = run_mode(&mut cycle, mode, &qs);
+        ppac::prop_assert_eq!(got_b, got_c, "{} m={m} n={n}", mode.name());
+        let want = decode(mode, &c, scalar_ys(&blocked, &a, mode, &qs));
+        ppac::prop_assert_eq!(got_b, want, "scalar {} m={m} n={n}", mode.name());
+        Ok(())
+    });
+}
+
+/// A row update through the write port must be visible to the blocked
+/// engine exactly as it is to the pipeline (the CAM-update use case).
+#[test]
+fn update_row_visible_to_both_backends() {
+    let mut rng = Xoshiro256pp::seeded(601);
+    let (m, n) = (16, 65);
+    let c = cfg(m, n);
+    let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+    let mode = OpMode::Cam { deltas: vec![n as i64; m] };
+    let mut blocked = unit_with(Backend::Blocked, c, &a, &mode);
+    let mut cycle = unit_with(Backend::CycleAccurate, c, &a, &mode);
+    let fresh = rng.bits(n);
+    for u in [&mut blocked, &mut cycle] {
+        u.update_row(7, &fresh).unwrap();
+    }
+    let got_b = blocked.cam_batch(std::slice::from_ref(&fresh)).unwrap();
+    let got_c = cycle.cam_batch(std::slice::from_ref(&fresh)).unwrap();
+    assert_eq!(got_b, got_c);
+    assert!(got_b[0][7], "updated row must complete-match its own word");
+}
+
+/// Empty batches are free on both backends.
+#[test]
+fn empty_batches_cost_nothing() {
+    let c = cfg(16, 16);
+    let a = vec![vec![false; 16]; 16];
+    for backend in [Backend::Blocked, Backend::CycleAccurate] {
+        let mut u = unit_with(backend, c, &a, &OpMode::Hamming);
+        let before = u.compute_cycles();
+        assert_eq!(u.hamming_batch(&[]).unwrap(), Vec::<Vec<i64>>::new());
+        assert_eq!(u.compute_cycles(), before);
+    }
+}
