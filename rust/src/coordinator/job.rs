@@ -9,6 +9,8 @@ use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use crate::apps::tiled::Partition;
+use crate::formats::NumberFormat;
+use crate::isa::MatrixInterp;
 
 /// Identifier of a registered logical matrix.
 pub type MatrixId = u64;
@@ -16,6 +18,52 @@ pub type MatrixId = u64;
 /// Identifier of one resident-able shard: a tile-sized block of a
 /// registered matrix (a 1×1-grid matrix has exactly one shard).
 pub type ShardId = u64;
+
+/// Static shape of a multi-bit vector-mode job (§III-C1): L-bit input
+/// vectors in `x_fmt` against the registered 1-bit matrix interpreted
+/// as `matrix`. Part of the batching key — only jobs with identical
+/// specs share a pipeline batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MultibitSpec {
+    /// Vector bits L (L schedule cycles per job). Bounded to 1..=32 at
+    /// submit time; like `PpacUnit`'s vector mode (the Hadamard §III-C3
+    /// use case), L is deliberately not clamped to the tile's row-ALU
+    /// `max_l`.
+    pub lbits: u32,
+    /// Number format of the input entries (Table I).
+    pub x_fmt: NumberFormat,
+    /// Interpretation of the stored bits (±1 or {0,1}).
+    pub matrix: MatrixInterp,
+}
+
+impl MultibitSpec {
+    /// Fill value for zero-padded boundary columns of the input vector.
+    /// 0 everywhere except oddint — which cannot represent 0 — where +1
+    /// is used; [`MultibitSpec::pad_correction`] removes its
+    /// contribution deterministically at gather time.
+    pub fn pad_value(self) -> i64 {
+        if self.x_fmt == NumberFormat::OddInt {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Per-row correction the gather adds for each zero-padded column.
+    ///
+    /// Uint/int planes are self-correcting: a pad column (a = 0, plane
+    /// bit 0) contributes +1 to every eq.-2 plane popcount, exactly the
+    /// +1 the per-plane `− N_tile` offset over-subtracts. The ±1-plane
+    /// (oddint) pairing pads with +1, whose per-plane error folds to
+    /// exactly −1 per pad column independent of L, so the gather adds
+    /// `pad_cols` back.
+    pub fn pad_correction(self) -> i64 {
+        match (self.matrix, self.x_fmt) {
+            (MatrixInterp::Pm1, NumberFormat::OddInt) => 1,
+            _ => 0,
+        }
+    }
+}
 
 /// The payload of one MVP-like request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -26,6 +74,11 @@ pub enum JobInput {
     Hamming(Vec<bool>),
     /// GF(2) MVP: N input bits → M result bits.
     Gf2(Vec<bool>),
+    /// Multi-bit vector-mode MVP (§III-C1): N L-bit entries → M ints.
+    Multibit {
+        x: Vec<i64>,
+        spec: MultibitSpec,
+    },
 }
 
 impl JobInput {
@@ -34,22 +87,44 @@ impl JobInput {
             JobInput::Pm1Mvp(_) => ModeKey::Pm1Mvp,
             JobInput::Hamming(_) => ModeKey::Hamming,
             JobInput::Gf2(_) => ModeKey::Gf2,
+            JobInput::Multibit { spec, .. } => ModeKey::Multibit(*spec),
         }
     }
 
-    pub fn bits(&self) -> &[bool] {
+    /// Entries in the payload (bits for the 1-bit modes, integers for
+    /// multi-bit jobs) — what must match the registered matrix width.
+    pub fn len(&self) -> usize {
         match self {
-            JobInput::Pm1Mvp(b) | JobInput::Hamming(b) | JobInput::Gf2(b) => b,
+            JobInput::Pm1Mvp(b) | JobInput::Hamming(b) | JobInput::Gf2(b) => b.len(),
+            JobInput::Multibit { x, .. } => x.len(),
         }
     }
 
-    /// Same mode, different payload — used by the scatter stage to wrap
-    /// the [`Partition::split_input`] column block of this input.
-    pub fn with_bits(&self, bits: Vec<bool>) -> JobInput {
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The bit payload of the three 1-bit modes (`None` for multi-bit
+    /// jobs).
+    pub fn bits(&self) -> Option<&[bool]> {
         match self {
-            JobInput::Pm1Mvp(_) => JobInput::Pm1Mvp(bits),
-            JobInput::Hamming(_) => JobInput::Hamming(bits),
-            JobInput::Gf2(_) => JobInput::Gf2(bits),
+            JobInput::Pm1Mvp(b) | JobInput::Hamming(b) | JobInput::Gf2(b) => Some(b),
+            JobInput::Multibit { .. } => None,
+        }
+    }
+
+    /// Column block `cb` of this input, zero-padded onto the tile width
+    /// — what the scatter stage ships to the block's worker.
+    pub fn split(&self, part: &Partition, cb: usize) -> JobInput {
+        match self {
+            JobInput::Pm1Mvp(b) => JobInput::Pm1Mvp(part.split_input(b, cb)),
+            JobInput::Hamming(b) => JobInput::Hamming(part.split_input(b, cb)),
+            JobInput::Gf2(b) => JobInput::Gf2(part.split_input(b, cb)),
+            JobInput::Multibit { x, spec } => {
+                let mut block = x[part.col_range(cb)].to_vec();
+                block.resize(part.tile_n, spec.pad_value());
+                JobInput::Multibit { x: block, spec: *spec }
+            }
         }
     }
 }
@@ -61,6 +136,7 @@ pub enum ModeKey {
     Pm1Mvp,
     Hamming,
     Gf2,
+    Multibit(MultibitSpec),
 }
 
 /// The result payload.
@@ -125,27 +201,78 @@ impl GatherPlan {
 mod tests {
     use super::*;
 
+    fn spec(x_fmt: NumberFormat, matrix: MatrixInterp) -> MultibitSpec {
+        MultibitSpec { lbits: 3, x_fmt, matrix }
+    }
+
     #[test]
     fn mode_keys_partition_inputs() {
         assert_eq!(JobInput::Pm1Mvp(vec![true]).mode_key(), ModeKey::Pm1Mvp);
         assert_eq!(JobInput::Hamming(vec![]).mode_key(), ModeKey::Hamming);
         assert_eq!(JobInput::Gf2(vec![false]).mode_key(), ModeKey::Gf2);
+        let s = spec(NumberFormat::Int, MatrixInterp::Pm1);
+        let j = JobInput::Multibit { x: vec![1, -2], spec: s };
+        assert_eq!(j.mode_key(), ModeKey::Multibit(s));
+        // Different specs must not batch together.
+        let t = spec(NumberFormat::Uint, MatrixInterp::Pm1);
+        assert_ne!(ModeKey::Multibit(s), ModeKey::Multibit(t));
     }
 
     #[test]
-    fn bits_accessor() {
+    fn len_and_bits_accessors() {
         let j = JobInput::Gf2(vec![true, false]);
-        assert_eq!(j.bits(), &[true, false]);
+        assert_eq!(j.bits(), Some([true, false].as_slice()));
+        assert_eq!(j.len(), 2);
+        assert!(!j.is_empty());
+        let m = JobInput::Multibit {
+            x: vec![1, 2, 3],
+            spec: spec(NumberFormat::Uint, MatrixInterp::U01),
+        };
+        assert_eq!(m.bits(), None);
+        assert_eq!(m.len(), 3);
     }
 
     #[test]
-    fn with_bits_preserves_mode() {
-        let j = JobInput::Pm1Mvp(vec![true, false]);
-        let b = j.with_bits(vec![false, false, true]);
-        assert_eq!(b.mode_key(), ModeKey::Pm1Mvp);
-        assert_eq!(b.bits(), &[false, false, true]);
-        let h = JobInput::Hamming(vec![true; 3]).with_bits(vec![false]);
-        assert_eq!(h.mode_key(), ModeKey::Hamming);
-        assert_eq!(h.bits(), &[false]);
+    fn split_pads_each_mode_with_its_neutral_value() {
+        let part = Partition::new(4, 10, 4, 8).unwrap(); // 2 col blocks
+        let j = JobInput::Pm1Mvp(vec![true; 10]);
+        let tail = j.split(&part, 1);
+        let mut want = vec![true; 2];
+        want.resize(8, false);
+        assert_eq!(tail.bits(), Some(want.as_slice()));
+        let m = JobInput::Multibit {
+            x: (0..10).collect(),
+            spec: spec(NumberFormat::Int, MatrixInterp::Pm1),
+        };
+        if let JobInput::Multibit { x, .. } = m.split(&part, 1) {
+            assert_eq!(x, vec![8, 9, 0, 0, 0, 0, 0, 0]);
+        } else {
+            panic!("split must preserve the mode");
+        }
+        // oddint cannot represent 0: pads are +1 (gather corrects them).
+        let o = JobInput::Multibit {
+            x: vec![1; 10],
+            spec: spec(NumberFormat::OddInt, MatrixInterp::Pm1),
+        };
+        if let JobInput::Multibit { x, spec } = o.split(&part, 1) {
+            assert_eq!(x, vec![1; 8]);
+            assert_eq!(spec.pad_value(), 1);
+            assert_eq!(spec.pad_correction(), 1);
+        } else {
+            panic!("split must preserve the mode");
+        }
+    }
+
+    #[test]
+    fn pad_corrections_only_for_the_oddint_pairing() {
+        for (x_fmt, matrix, want) in [
+            (NumberFormat::Uint, MatrixInterp::Pm1, 0i64),
+            (NumberFormat::Int, MatrixInterp::Pm1, 0),
+            (NumberFormat::OddInt, MatrixInterp::Pm1, 1),
+            (NumberFormat::Uint, MatrixInterp::U01, 0),
+            (NumberFormat::Int, MatrixInterp::U01, 0),
+        ] {
+            assert_eq!(spec(x_fmt, matrix).pad_correction(), want, "{x_fmt:?}/{matrix:?}");
+        }
     }
 }

@@ -31,10 +31,14 @@
 //!    and evicts resident copies, so the shard registry no longer grows
 //!    forever (the eviction follow-up from the sharded-serving PR).
 //!
-//! Workers serve 1-bit batches through the execution-engine layer
+//! Workers serve every batch — the three 1-bit modes *and* the §III-C1
+//! multi-bit vector modes ([`JobInput::Multibit`], all three Table I
+//! format pairings) — through the execution-engine layer
 //! ([`crate::engine`]); the default [`Backend::Blocked`] kernel answers
 //! bit-exactly at memory-bandwidth speed while hardware cycles are still
-//! accounted by the analytic schedule model.
+//! accounted by the analytic schedule model. Multi-bit partials add
+//! across column blocks exactly like their 1-bit counterparts; pad
+//! handling is mode-aware (oddint pads with +1, corrected at gather).
 //!
 //! Threads + channels only (the image vendors no tokio); the public API
 //! is synchronous handles over mpsc.
@@ -51,11 +55,13 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::apps::tiled::{rect_shape, Partition};
-use crate::engine::Backend;
+use crate::engine::{Backend, EngineOpts};
 use crate::error::{PpacError, Result};
 use crate::sim::PpacConfig;
 
-pub use job::{GatherPlan, JobInput, JobOutput, JobResult, MatrixId, ModeKey, ShardId};
+pub use job::{
+    GatherPlan, JobInput, JobOutput, JobResult, MatrixId, ModeKey, MultibitSpec, ShardId,
+};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 use worker::{MatrixRegistry, Worker, WorkerMsg};
 
@@ -65,11 +71,14 @@ pub struct CoordinatorConfig {
     pub tile: PpacConfig,
     pub workers: usize,
     pub max_batch: usize,
-    /// Execution engine workers serve 1-bit batches with. Defaults to
-    /// the query-blocked bit-parallel kernel; cycle counts are reported
-    /// via the analytic schedule model either way, and a worker whose
-    /// unit enables tracing is forced onto `CycleAccurate` regardless.
+    /// Execution engine workers serve batches with. Defaults to the
+    /// query-blocked bit-parallel kernel; cycle counts are reported via
+    /// the analytic schedule model either way, and a worker whose unit
+    /// enables tracing is forced onto `CycleAccurate` regardless.
     pub backend: Backend,
+    /// Engine build options (sweep threads per worker, row-split
+    /// threshold) handed to the [`Backend::build`] factory.
+    pub engine: EngineOpts,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,6 +88,7 @@ impl Default for CoordinatorConfig {
             workers: 4,
             max_batch: 64,
             backend: Backend::Blocked,
+            engine: EngineOpts::default(),
         }
     }
 }
@@ -160,13 +170,29 @@ impl BatchHandle {
             }
         }
 
+        // Per-row gather correction for the zero-padded boundary
+        // columns, per pad column: ±1 Hamming/MVP partials over-count by
+        // +1 (a = 0, x = 0 matches under XNOR); multi-bit planes are
+        // self-correcting except the oddint pairing, whose +1 pads fold
+        // to −1 (see `MultibitSpec::pad_correction`); GF(2) pads
+        // contribute 0 under AND.
+        let pad_adjust: i64 = match plan.mode {
+            ModeKey::Pm1Mvp | ModeKey::Hamming => -1,
+            ModeKey::Multibit(spec) => spec.pad_correction(),
+            ModeKey::Gf2 => 0,
+        };
         let mut out = Vec::with_capacity(count);
         for idx in 0..count {
             let output = if gf2 {
                 JobOutput::Bits(bit_acc[idx][..part.m].to_vec())
             } else {
                 let mut y = int_acc[idx][..part.m].to_vec();
-                part.subtract_pad(&mut y);
+                let p = pad_adjust * part.pad_cols as i64;
+                if p != 0 {
+                    for v in &mut y {
+                        *v += p;
+                    }
+                }
                 JobOutput::Ints(y)
             };
             out.push(JobResult {
@@ -262,6 +288,7 @@ impl Coordinator {
                 Arc::clone(&metrics),
                 cfg.max_batch,
                 cfg.backend,
+                cfg.engine,
             )?;
             handles.push(std::thread::spawn(move || worker.run(rx)));
             senders.push(tx);
@@ -424,12 +451,35 @@ impl Coordinator {
                     "a batch must use a single mode".into(),
                 ));
             }
-            if input.bits().len() != sharded.part.n {
+            if input.len() != sharded.part.n {
                 return Err(PpacError::DimMismatch {
                     context: "job input width",
                     expected: sharded.part.n,
-                    got: input.bits().len(),
+                    got: input.len(),
                 });
+            }
+            // Reject malformed multibit jobs here, before the scatter:
+            // a worker-side plan/decompose failure would silently drop
+            // the whole shard batch ("worker dropped a shard job").
+            if let JobInput::Multibit { x, spec } = input {
+                if spec.lbits == 0 || spec.lbits > 32 {
+                    return Err(PpacError::Config(format!(
+                        "multibit L = {} outside the supported 1..=32",
+                        spec.lbits
+                    )));
+                }
+                // Same plan the workers will compile — catches illegal
+                // pairings (oddint × {0,1} matrix) at submit time.
+                crate::engine::MultibitPlan::vector(spec.lbits, spec.x_fmt, spec.matrix)?;
+                for &v in x {
+                    if !spec.x_fmt.contains(spec.lbits, v) {
+                        return Err(PpacError::FormatRange {
+                            value: v,
+                            nbits: spec.lbits,
+                            fmt: spec.x_fmt.name(),
+                        });
+                    }
+                }
             }
         }
         let part = sharded.part;
@@ -458,7 +508,7 @@ impl Coordinator {
                     job_id: base + j as u64,
                     shard: sid,
                     shard_index: s_idx,
-                    input: input.with_bits(part.split_input(input.bits(), cb)),
+                    input: input.split(&part, cb),
                     submitted,
                     respond: tx.clone(),
                 };

@@ -15,13 +15,19 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::engine::Backend;
+use crate::engine::{Backend, EngineOpts};
 use crate::error::Result;
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
 
-use super::job::{Job, JobOutput, JobResult, ModeKey, ShardId};
+use super::job::{Job, JobInput, JobOutput, JobResult, ModeKey, ShardId};
 use super::metrics::Metrics;
+
+/// The packed bit payloads of a 1-bit batch (`None` if a multi-bit job
+/// slipped into it, which the mode-key grouping rules out).
+fn collect_bits(batch: &[Job]) -> Option<Vec<Vec<bool>>> {
+    batch.iter().map(|j| j.input.bits().map(<[bool]>::to_vec)).collect()
+}
 
 /// Messages a worker consumes.
 pub enum WorkerMsg {
@@ -52,9 +58,10 @@ impl Worker {
         metrics: Arc<Metrics>,
         max_batch: usize,
         backend: Backend,
+        engine: EngineOpts,
     ) -> Result<Self> {
         let mut unit = PpacUnit::new(cfg)?;
-        unit.set_backend(backend);
+        unit.configure_engine(backend, engine);
         Ok(Self {
             id,
             unit,
@@ -152,6 +159,11 @@ impl Worker {
                         ModeKey::Pm1Mvp => OpMode::Pm1Mvp,
                         ModeKey::Hamming => OpMode::Hamming,
                         ModeKey::Gf2 => OpMode::Gf2Mvp,
+                        ModeKey::Multibit(spec) => OpMode::MultibitVector {
+                            lbits: spec.lbits,
+                            x_fmt: spec.x_fmt,
+                            matrix: spec.matrix,
+                        },
                     })
                 })
                 .is_err()
@@ -163,22 +175,41 @@ impl Worker {
             self.resident = Some(key);
         }
 
-        let inputs: Vec<Vec<bool>> =
-            batch.iter().map(|j| j.input.bits().to_vec()).collect();
         let before = self.unit.compute_cycles();
         let outputs: Vec<JobOutput> = match mode {
-            ModeKey::Pm1Mvp => match self.unit.mvp1_batch(&inputs) {
-                Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
-                Err(_) => return,
-            },
-            ModeKey::Hamming => match self.unit.hamming_batch(&inputs) {
-                Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
-                Err(_) => return,
-            },
-            ModeKey::Gf2 => match self.unit.gf2_batch(&inputs) {
-                Ok(ys) => ys.into_iter().map(JobOutput::Bits).collect(),
-                Err(_) => return,
-            },
+            ModeKey::Pm1Mvp => {
+                let Some(inputs) = collect_bits(&batch) else { return };
+                match self.unit.mvp1_batch(&inputs) {
+                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
+                    Err(_) => return,
+                }
+            }
+            ModeKey::Hamming => {
+                let Some(inputs) = collect_bits(&batch) else { return };
+                match self.unit.hamming_batch(&inputs) {
+                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
+                    Err(_) => return,
+                }
+            }
+            ModeKey::Gf2 => {
+                let Some(inputs) = collect_bits(&batch) else { return };
+                match self.unit.gf2_batch(&inputs) {
+                    Ok(ys) => ys.into_iter().map(JobOutput::Bits).collect(),
+                    Err(_) => return,
+                }
+            }
+            ModeKey::Multibit(_) => {
+                let mut xs = Vec::with_capacity(batch.len());
+                for j in &batch {
+                    // Grouping by mode key guarantees this shape.
+                    let JobInput::Multibit { x, .. } = &j.input else { return };
+                    xs.push(x.clone());
+                }
+                match self.unit.mvp_multibit_batch(&xs) {
+                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
+                    Err(_) => return,
+                }
+            }
         };
         let cycles = self.unit.compute_cycles() - before;
         self.metrics

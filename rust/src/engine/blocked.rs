@@ -15,17 +15,32 @@
 //! memory traffic — and there is no pipeline bookkeeping and no
 //! per-query allocation beyond the output vectors the API returns.
 //!
+//! Two further levers on top of the blocking (both behind
+//! [`EngineOpts`]):
+//!
+//! - **Row-split threading**: tall tiles (M ≥ `split_rows`) fan their
+//!   row range out across a scoped thread pool
+//!   (`std::thread::scope`). Each thread owns a disjoint contiguous
+//!   slice of the row-major output buffer, so the merge is free and the
+//!   hot path takes no locks.
+//! - **SIMD popcount** (`--features simd`): the inner loop evaluates the
+//!   stored row against four queries at a time with a word-level SWAR
+//!   popcount written so LLVM autovectorizes it; the default build uses
+//!   the scalar `count_ones` loop. Results are bit-identical.
+//!
 //! Bit-exactness: the per-row math is exactly the row-ALU dataflow for
 //! the 1-bit modes (`y = k·r + base_m` with `k ∈ {1,2}` and `base_m`
 //! folding nreg/c/δ — see [`OpKernel`](super::OpKernel)), and the XNOR
 //! tail handling reproduces the array's masked operator-select word.
 //! Property tests pit this kernel against both `CycleAccurate` and
-//! `sim::scalar` across ragged widths and all served modes.
+//! `sim::scalar` across ragged widths and all served modes. Multi-bit
+//! schedules reuse the same sweep once per (k, l) plane pair — see
+//! [`blocked_planes`](super::blocked_planes).
 
 use crate::error::{PpacError, Result};
 use crate::sim::{BitVec, PpacArray};
 
-use super::{Engine, EngineBatch, OpKernel};
+use super::{Engine, EngineBatch, EngineOpts, MultibitPlan, OpKernel};
 
 /// Queries evaluated per block. Each block keeps B×wpr packed query
 /// words hot (≤ 2 KiB at N = 512) while a row's words are reused B
@@ -35,49 +50,230 @@ use super::{Engine, EngineBatch, OpKernel};
 /// measurably slower).
 pub const BLOCK_QUERIES: usize = 32;
 
+/// Query lanes the SIMD sweep processes per step.
+#[cfg(feature = "simd")]
+const LANES: usize = 4;
+
 /// Query-blocked bit-parallel engine.
-pub struct Blocked;
+pub struct Blocked {
+    opts: EngineOpts,
+}
+
+impl Default for Blocked {
+    fn default() -> Self {
+        Self::new(EngineOpts::default())
+    }
+}
+
+impl Blocked {
+    pub fn new(opts: EngineOpts) -> Self {
+        Self { opts }
+    }
+
+    pub fn opts(&self) -> EngineOpts {
+        self.opts
+    }
+
+    /// Threads a sweep over `m` rows actually uses: 1 below the
+    /// row-split threshold (spawn overhead would dominate), else the
+    /// configured pool size.
+    fn plan_threads(&self, m: usize) -> usize {
+        if self.opts.threads <= 1 || m < self.opts.split_rows {
+            1
+        } else {
+            self.opts.threads.min(m)
+        }
+    }
+
+    /// One weighted sweep of the whole packed query batch against every
+    /// row, fanning tall tiles across a scoped thread pool. Each thread
+    /// writes a disjoint contiguous row range of the row-major output
+    /// buffer — no locks on the hot path, merging is free.
+    pub(crate) fn sweep(&self, sweep: &Sweep<'_>, qwords: &[u64], nq: usize, out: &mut [i64]) {
+        let m = sweep.bases.len();
+        let threads = self.plan_threads(m);
+        if threads <= 1 {
+            sweep.accumulate_rows(0..m, qwords, nq, out);
+            return;
+        }
+        let rows_per = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest = out;
+            for lo in (0..m).step_by(rows_per) {
+                let hi = (lo + rows_per).min(m);
+                let (chunk, tail) = rest.split_at_mut((hi - lo) * nq);
+                rest = tail;
+                scope.spawn(move || sweep.accumulate_rows(lo..hi, qwords, nq, chunk));
+            }
+        });
+    }
+}
 
 /// Batch-invariant sweep parameters, hoisted out of the block loop.
-struct Sweep<'a> {
+pub(crate) struct Sweep<'a> {
     /// The packed latch plane (M × wpr words, row-major).
-    mem: &'a [u64],
+    pub mem: &'a [u64],
     /// u64 words per row (and per packed query).
-    wpr: usize,
+    pub wpr: usize,
     /// Clears the pad bits of a row's last word on the XNOR path (an
     /// XNOR of two clear pad bits would otherwise count as a match).
-    tail_mask: u64,
-    /// Per-row affine base: (nreg?) − (c?) − δ, folded once per batch.
-    bases: Vec<i64>,
+    pub tail_mask: u64,
+    /// Operator select for every column: true = XNOR, false = AND.
+    pub xnor: bool,
     /// Popcount multiplier (2 with popX2, else 1).
-    k: i64,
+    pub k: i64,
+    /// Fold weight applied to the whole per-plane term (±2^{k+l} on the
+    /// multi-bit path, 1 on the 1-bit path).
+    pub weight: i64,
+    /// Per-row affine base added under the weight (nreg/c on the
+    /// multi-bit path; nreg/c/δ folded once per batch on the 1-bit
+    /// path).
+    pub bases: &'a [i64],
 }
 
 impl Sweep<'_> {
-    /// One block sweep: evaluate every row against the packed query
-    /// block `qb` (wpr words per query), writing `y = k·r + base` into
-    /// the per-query output rows starting at `start`. The const generic
-    /// operator select lets the compiler specialize both inner loops.
-    fn run<const XNOR: bool>(&self, qb: &[u64], ys: &mut [Vec<i64>], start: usize) {
+    /// Accumulate `weight · (k·r + base_row)` into the row-major output
+    /// slice `out[local_row · nq + q]` for every (row, query) pair of
+    /// the given global row range.
+    fn accumulate_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        qwords: &[u64],
+        nq: usize,
+        out: &mut [i64],
+    ) {
+        if self.xnor {
+            self.run::<true>(rows, qwords, nq, out);
+        } else {
+            self.run::<false>(rows, qwords, nq, out);
+        }
+    }
+
+    /// Block sweep: the const generic operator select lets the compiler
+    /// specialize both inner loops.
+    fn run<const XNOR: bool>(
+        &self,
+        rows: std::ops::Range<usize>,
+        qwords: &[u64],
+        nq: usize,
+        out: &mut [i64],
+    ) {
         let wpr = self.wpr;
-        for (row, rw) in self.mem.chunks_exact(wpr).enumerate() {
-            let base = self.bases[row];
-            for (qi, qw) in qb.chunks_exact(wpr).enumerate() {
-                let mut r = 0u32;
-                if XNOR {
-                    for w in 0..wpr - 1 {
-                        r += (!(rw[w] ^ qw[w])).count_ones();
-                    }
-                    r += ((!(rw[wpr - 1] ^ qw[wpr - 1])) & self.tail_mask).count_ones();
-                } else {
-                    for w in 0..wpr {
-                        r += (rw[w] & qw[w]).count_ones();
-                    }
-                }
-                ys[start + qi][row] = self.k * r as i64 + base;
+        debug_assert_eq!(qwords.len(), nq * wpr);
+        debug_assert_eq!(out.len(), rows.len() * nq);
+        for (b, qb) in qwords.chunks(BLOCK_QUERIES * wpr).enumerate() {
+            let q0 = b * BLOCK_QUERIES;
+            let bq = qb.len() / wpr;
+            for (i, row) in rows.clone().enumerate() {
+                let rw = &self.mem[row * wpr..(row + 1) * wpr];
+                let base = self.bases[row];
+                let orow = &mut out[i * nq + q0..i * nq + q0 + bq];
+                self.row_block::<XNOR>(rw, qb, orow, base);
             }
         }
     }
+
+    /// Evaluate one stored row against a packed query block (scalar
+    /// fallback: one `count_ones` popcount per query word).
+    #[cfg(not(feature = "simd"))]
+    #[inline]
+    fn row_block<const XNOR: bool>(&self, rw: &[u64], qb: &[u64], orow: &mut [i64], base: i64) {
+        for (o, qw) in orow.iter_mut().zip(qb.chunks_exact(self.wpr)) {
+            let r = popcount_row::<XNOR>(rw, qw, self.tail_mask);
+            *o += self.weight * (self.k * r as i64 + base);
+        }
+    }
+
+    /// Evaluate one stored row against a packed query block, four query
+    /// lanes at a time: per matrix word, the XNOR/AND outputs of all
+    /// four lanes are counted with a straight-line SWAR popcount that
+    /// LLVM autovectorizes (one vector popcount per four queries instead
+    /// of four scalar `popcnt` + extract chains).
+    #[cfg(feature = "simd")]
+    #[inline]
+    fn row_block<const XNOR: bool>(&self, rw: &[u64], qb: &[u64], orow: &mut [i64], base: i64) {
+        let wpr = self.wpr;
+        let nq = orow.len();
+        let mut qi = 0;
+        while qi + LANES <= nq {
+            let mut acc = [0u64; LANES];
+            for (w, &rword) in rw.iter().enumerate() {
+                let mask = if w == wpr - 1 { self.tail_mask } else { u64::MAX };
+                let mut v = [0u64; LANES];
+                for (lane, vv) in v.iter_mut().enumerate() {
+                    let x = qb[(qi + lane) * wpr + w];
+                    *vv = if XNOR { !(rword ^ x) & mask } else { rword & x };
+                }
+                let c = swar_popcount(v);
+                for (a, &cv) in acc.iter_mut().zip(&c) {
+                    *a += cv;
+                }
+            }
+            for (lane, &a) in acc.iter().enumerate() {
+                orow[qi + lane] += self.weight * (self.k * a as i64 + base);
+            }
+            qi += LANES;
+        }
+        while qi < nq {
+            let qw = &qb[qi * wpr..(qi + 1) * wpr];
+            let r = popcount_row::<XNOR>(rw, qw, self.tail_mask);
+            orow[qi] += self.weight * (self.k * r as i64 + base);
+            qi += 1;
+        }
+    }
+}
+
+/// Scalar popcount of one row against one packed query.
+#[inline]
+fn popcount_row<const XNOR: bool>(rw: &[u64], qw: &[u64], tail_mask: u64) -> u32 {
+    let wpr = rw.len();
+    let mut r = 0u32;
+    if XNOR {
+        for w in 0..wpr - 1 {
+            r += (!(rw[w] ^ qw[w])).count_ones();
+        }
+        r += ((!(rw[wpr - 1] ^ qw[wpr - 1])) & tail_mask).count_ones();
+    } else {
+        // Tail bits of both operands are kept clear, so AND needs no mask.
+        for (a, x) in rw.iter().zip(qw) {
+            r += (a & x).count_ones();
+        }
+    }
+    r
+}
+
+/// Branch-free 64-bit population count over four lanes at once (the
+/// classic SWAR reduction), written element-wise so LLVM vectorizes the
+/// whole array. Exact for every input — bit-identical to `count_ones`.
+#[cfg(feature = "simd")]
+#[inline]
+fn swar_popcount(mut v: [u64; LANES]) -> [u64; LANES] {
+    for x in &mut v {
+        let mut t = *x;
+        t -= (t >> 1) & 0x5555_5555_5555_5555;
+        t = (t & 0x3333_3333_3333_3333) + ((t >> 2) & 0x3333_3333_3333_3333);
+        t = (t + (t >> 4)) & 0x0f0f_0f0f_0f0f_0f0f;
+        *x = t.wrapping_mul(0x0101_0101_0101_0101) >> 56;
+    }
+    v
+}
+
+/// Tail mask for an N-column row: clears packing pad bits of the last
+/// word.
+pub(crate) fn tail_mask(n: usize) -> u64 {
+    if n % 64 == 0 {
+        u64::MAX
+    } else {
+        (1u64 << (n % 64)) - 1
+    }
+}
+
+/// Transpose the row-major sweep buffer `flat[row · nq + q]` into the
+/// per-query output vectors the engine API returns.
+pub(crate) fn unflatten(flat: &[i64], m: usize, nq: usize) -> Vec<Vec<i64>> {
+    (0..nq)
+        .map(|q| (0..m).map(|row| flat[row * nq + q]).collect())
+        .collect()
 }
 
 impl Engine for Blocked {
@@ -89,14 +285,14 @@ impl Engine for Blocked {
         &self,
         array: &mut PpacArray,
         kernel: OpKernel,
-        queries: Vec<BitVec>,
+        queries: &[BitVec],
     ) -> Result<EngineBatch> {
         if queries.is_empty() {
             return Ok(EngineBatch { ys: Vec::new(), cycles: 0 });
         }
         let cfg = *array.config();
         let (m, n) = (cfg.m, cfg.n);
-        for q in &queries {
+        for q in queries {
             if q.len() != n {
                 return Err(PpacError::DimMismatch {
                     context: "engine query width",
@@ -118,37 +314,39 @@ impl Engine for Blocked {
                     - alu.delta
             })
             .collect();
+        let nq = queries.len();
+        // Contiguous packed batch: the inner loop is bounds-check-free
+        // chunked iteration and threads share it read-only.
+        let mut qwords = vec![0u64; nq * wpr];
+        for (slot, q) in qwords.chunks_exact_mut(wpr).zip(queries) {
+            slot.copy_from_slice(q.words());
+        }
         let sweep = Sweep {
             mem: array.mem_words(),
             wpr,
-            tail_mask: if n % 64 == 0 { u64::MAX } else { (1u64 << (n % 64)) - 1 },
-            bases,
+            tail_mask: tail_mask(n),
+            xnor: kernel.xnor,
             k: if kernel.pop_x2 { 2 } else { 1 },
+            weight: 1,
+            bases: &bases,
         };
-
-        let mut ys: Vec<Vec<i64>> = queries.iter().map(|_| vec![0i64; m]).collect();
-        // Reusable packed block: B×wpr contiguous words so the inner
-        // loop is bounds-check-free chunked iteration.
-        let mut qbuf = vec![0u64; BLOCK_QUERIES.min(queries.len()) * wpr];
-        let mut start = 0;
-        for block in queries.chunks(BLOCK_QUERIES) {
-            for (qi, q) in block.iter().enumerate() {
-                qbuf[qi * wpr..(qi + 1) * wpr].copy_from_slice(q.words());
-            }
-            let qb = &qbuf[..block.len() * wpr];
-            if kernel.xnor {
-                sweep.run::<true>(qb, &mut ys, start);
-            } else {
-                sweep.run::<false>(qb, &mut ys, start);
-            }
-            start += block.len();
-        }
+        let mut flat = vec![0i64; m * nq];
+        self.sweep(&sweep, &qwords, nq, &mut flat);
 
         // Analytic schedule model (paper §II-B): every 1-bit operation
         // issues at II = 1 with a two-cycle latency, so a batch of Q
         // costs Q cycles plus one pipeline drain — exactly what the
         // cycle-accurate replay counts.
-        Ok(EngineBatch { ys, cycles: queries.len() as u64 + 1 })
+        Ok(EngineBatch { ys: unflatten(&flat, m, nq), cycles: nq as u64 + 1 })
+    }
+
+    fn serve_multibit(
+        &self,
+        array: &mut PpacArray,
+        plan: &MultibitPlan,
+        xs: &[Vec<i64>],
+    ) -> Result<EngineBatch> {
+        self.serve_planes(array, plan, xs)
     }
 }
 
@@ -172,8 +370,8 @@ mod tests {
         // query matches on every *real* column only.
         for n in [1usize, 63, 64, 65, 200] {
             let mut arr = array_with(&[BitVec::zeros(n)], n);
-            let out = Blocked
-                .serve(&mut arr, OpKernel::hamming(), vec![BitVec::zeros(n)])
+            let out = Blocked::default()
+                .serve(&mut arr, OpKernel::hamming(), &[BitVec::zeros(n)])
                 .unwrap();
             assert_eq!(out.ys, vec![vec![n as i64]], "n={n}");
         }
@@ -185,9 +383,7 @@ mod tests {
         let row = BitVec::from_fn(n, |i| i % 2 == 0); // 35 even columns
         let mut arr = array_with(&[row], n);
         let q = BitVec::from_fn(n, |i| i % 4 == 0); // 18 of them ⊆ evens
-        let out = Blocked
-            .serve(&mut arr, OpKernel::and01_mvp(), vec![q])
-            .unwrap();
+        let out = Blocked::default().serve(&mut arr, OpKernel::and01_mvp(), &[q]).unwrap();
         assert_eq!(out.ys, vec![vec![18]]);
     }
 
@@ -196,15 +392,12 @@ mod tests {
         let n = 16;
         let mut arr = array_with(&[BitVec::zeros(n)], n);
         assert_eq!(
-            Blocked
-                .serve(&mut arr, OpKernel::hamming(), Vec::new())
-                .unwrap()
-                .cycles,
+            Blocked::default().serve(&mut arr, OpKernel::hamming(), &[]).unwrap().cycles,
             0
         );
         let qs: Vec<BitVec> = (0..5).map(|_| BitVec::zeros(n)).collect();
         assert_eq!(
-            Blocked.serve(&mut arr, OpKernel::hamming(), qs).unwrap().cycles,
+            Blocked::default().serve(&mut arr, OpKernel::hamming(), &qs).unwrap().cycles,
             6,
             "Q at II=1 plus one drain"
         );
@@ -213,8 +406,8 @@ mod tests {
     #[test]
     fn width_mismatch_rejected() {
         let mut arr = array_with(&[BitVec::zeros(16)], 16);
-        assert!(Blocked
-            .serve(&mut arr, OpKernel::hamming(), vec![BitVec::zeros(15)])
+        assert!(Blocked::default()
+            .serve(&mut arr, OpKernel::hamming(), &[BitVec::zeros(15)])
             .is_err());
     }
 
@@ -230,12 +423,56 @@ mod tests {
         let qs: Vec<BitVec> = (0..BLOCK_QUERIES + 7)
             .map(|i| BitVec::from_fn(n, |j| (i * 5 + j) % 7 < 3))
             .collect();
-        let all = Blocked.serve(&mut arr, OpKernel::pm1_mvp(), qs.clone()).unwrap();
+        let all = Blocked::default().serve(&mut arr, OpKernel::pm1_mvp(), &qs).unwrap();
         for (i, q) in qs.iter().enumerate() {
-            let one = Blocked
-                .serve(&mut arr, OpKernel::pm1_mvp(), vec![q.clone()])
+            let one = Blocked::default()
+                .serve(&mut arr, OpKernel::pm1_mvp(), std::slice::from_ref(q))
                 .unwrap();
             assert_eq!(all.ys[i], one.ys[0], "query {i}");
+        }
+    }
+
+    #[test]
+    fn threaded_row_split_is_bit_exact() {
+        // A tile past the split threshold served with a thread pool must
+        // match the single-threaded sweep exactly, including when the
+        // row count does not divide evenly across threads.
+        let n = 65;
+        let rows: Vec<BitVec> = (0..67)
+            .map(|i| BitVec::from_fn(n, |j| (i * 7 + j) % 5 < 2))
+            .collect();
+        let mut arr = array_with(&rows, n);
+        let qs: Vec<BitVec> = (0..40)
+            .map(|i| BitVec::from_fn(n, |j| (i + 3 * j) % 4 == 0))
+            .collect();
+        let single = Blocked::default().serve(&mut arr, OpKernel::pm1_mvp(), &qs).unwrap();
+        for threads in [2usize, 3, 4, 8] {
+            let eng = Blocked::new(EngineOpts { threads, split_rows: 8 });
+            let got = eng.serve(&mut arr, OpKernel::pm1_mvp(), &qs).unwrap();
+            assert_eq!(got.ys, single.ys, "threads={threads}");
+            assert_eq!(got.cycles, single.cycles);
+        }
+    }
+
+    #[test]
+    fn short_tiles_stay_on_the_calling_thread() {
+        let eng = Blocked::new(EngineOpts { threads: 8, split_rows: 512 });
+        assert_eq!(eng.plan_threads(256), 1, "below the split threshold");
+        assert_eq!(eng.plan_threads(512), 8);
+        assert_eq!(Blocked::default().plan_threads(4096), 1, "threads=1 default");
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn swar_popcount_matches_count_ones() {
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..64 {
+            let v = [x, !x, x.rotate_left(13), x ^ 0xFFFF];
+            let got = swar_popcount(v);
+            for (g, s) in got.iter().zip(&v) {
+                assert_eq!(*g, s.count_ones() as u64, "x={s:#x}");
+            }
+            x = x.wrapping_mul(0x2545_F491_4F6C_DD1D).wrapping_add(1);
         }
     }
 }

@@ -1,0 +1,369 @@
+//! Bit-plane blocked execution of the §III-C multi-bit schedules.
+//!
+//! PPAC decomposes a K×L-bit MVP into K·L 1-bit passes with shifted
+//! accumulation: the row ALU folds the per-plane popcounts as
+//! `v ← 2v ± t` over the vector planes and `u ← 2u ± v` over the matrix
+//! planes, which is exactly the Horner evaluation of
+//!
+//! ```text
+//!   y = Σ_k Σ_l ±2^{(K−1−k)+(L−1−l)} · y_{k,l}    (− δ once at the end)
+//! ```
+//!
+//! with the signs carrying the 2's-complement MSB negation of `Int`
+//! operands ([`NumberFormat::plane_weight`]). Nothing about that fold
+//! needs the pipeline: each plane pair (k, l) is an ordinary
+//! uniform-operator 1-bit batch, so the blocked engine serves it with
+//! the same query-blocked sweep as the 1-bit modes — the stored row's
+//! packed words are loaded once per 32-query block *per plane pair*
+//! instead of the matrix being re-streamed K·L times per query — and
+//! the partials are folded host-side into a flat accumulator with the
+//! per-plane weights. Hardware cycles are still charged by the analytic
+//! bit-serial schedule (K·L·Q + one drain), identical to the
+//! cycle-accurate replay, so throughput/energy accounting stays
+//! paper-faithful.
+//!
+//! [`MultibitPlan`] is the compiled shape of such a schedule; both
+//! engines consume it, which pins the two implementations to the same
+//! kernel selection, plane decomposition and validation.
+
+use crate::error::{PpacError, Result};
+use crate::formats::{self, NumberFormat};
+use crate::isa::MatrixInterp;
+use crate::sim::{BitVec, PpacArray};
+
+use super::blocked::{tail_mask, unflatten, Sweep};
+use super::{Blocked, EngineBatch, OpKernel};
+
+/// The compiled shape of a §III-C multi-bit schedule: which 1-bit
+/// kernel every plane pass runs, how many matrix/vector significance
+/// planes there are, and the number formats that weight the fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MultibitPlan {
+    /// Per-plane 1-bit kernel (operator select + ALU affine tail).
+    pub kernel: OpKernel,
+    /// Matrix significance planes K (1 in the 1-bit-matrix vector mode).
+    pub kbits: u32,
+    /// Vector significance planes L.
+    pub lbits: u32,
+    /// Matrix number format — weights the per-k fold (`Uint`, weight +1,
+    /// in vector mode).
+    pub a_fmt: NumberFormat,
+    /// Vector number format — decomposes the queries and weights the
+    /// per-l fold.
+    pub x_fmt: NumberFormat,
+    /// §III-C2 interleaved-column layout: entry j of a K-bit row
+    /// occupies columns j·K..j·K+K, plane inputs are spread to the
+    /// significance-k columns, and the cycle-accurate replay engages the
+    /// row ALU's matrix-accumulator chain.
+    pub interleaved: bool,
+}
+
+impl MultibitPlan {
+    /// §III-C1: 1-bit matrix × L-bit vector.
+    pub fn vector(lbits: u32, x_fmt: NumberFormat, matrix: MatrixInterp) -> Result<Self> {
+        let kernel = match (matrix, x_fmt) {
+            // ±1 matrix, {0,1} planes → eq. (2) partials.
+            (MatrixInterp::Pm1, NumberFormat::Uint | NumberFormat::Int) => OpKernel::eq2(),
+            // ±1 matrix, ±1 planes (oddint) → eq. (1) partials.
+            (MatrixInterp::Pm1, NumberFormat::OddInt) => OpKernel::pm1_mvp(),
+            // {0,1} matrix, {0,1} planes → AND partials.
+            (MatrixInterp::U01, NumberFormat::Uint | NumberFormat::Int) => OpKernel::and01_mvp(),
+            (MatrixInterp::U01, NumberFormat::OddInt) => {
+                return Err(PpacError::Config(
+                    "oddint vectors require a ±1 matrix interpretation".into(),
+                ))
+            }
+        };
+        if lbits == 0 {
+            return Err(PpacError::Config("multibit L must be ≥ 1".into()));
+        }
+        Ok(Self { kernel, kbits: 1, lbits, a_fmt: NumberFormat::Uint, x_fmt, interleaved: false })
+    }
+
+    /// §III-C2: K-bit matrix × L-bit vector (uint/int operands only).
+    pub fn matrix(
+        kbits: u32,
+        lbits: u32,
+        a_fmt: NumberFormat,
+        x_fmt: NumberFormat,
+    ) -> Result<Self> {
+        if !matches!(a_fmt, NumberFormat::Uint | NumberFormat::Int)
+            || !matches!(x_fmt, NumberFormat::Uint | NumberFormat::Int)
+        {
+            return Err(PpacError::Config(
+                "multibit-matrix mode supports uint/int operands".into(),
+            ));
+        }
+        if kbits == 0 || lbits == 0 {
+            return Err(PpacError::Config("multibit K/L must be ≥ 1".into()));
+        }
+        Ok(Self { kernel: OpKernel::and01_mvp(), kbits, lbits, a_fmt, x_fmt, interleaved: true })
+    }
+
+    /// Schedule cycles per query — the paper's K·L bit-serial cost.
+    pub fn cycles_per_query(&self) -> u64 {
+        self.kbits as u64 * self.lbits as u64
+    }
+
+    /// Entries per query vector for an N-column array.
+    pub fn entries(&self, n: usize) -> usize {
+        if self.interleaved {
+            n / self.kbits as usize
+        } else {
+            n
+        }
+    }
+
+    /// Host fold weight of plane pair (k, l): ±2^{(K−1−k)+(L−1−l)}, the
+    /// sign carrying the 2's-complement MSB negation of `Int` operands.
+    pub fn weight(&self, k: u32, l: u32) -> i64 {
+        self.a_fmt.plane_weight(self.kbits, k) * self.x_fmt.plane_weight(self.lbits, l)
+    }
+
+    /// The interleaved layout needs K to divide the array width so every
+    /// entry owns a full K-column group.
+    pub(crate) fn check_geometry(&self, n: usize) -> Result<()> {
+        if self.interleaved && n % self.kbits as usize != 0 {
+            return Err(PpacError::Config(format!(
+                "array width {n} not divisible by K = {} (interleaved layout)",
+                self.kbits
+            )));
+        }
+        Ok(())
+    }
+
+    /// Validate the batch and decompose every query into packed
+    /// MSB-first planes (`planes[q][l]`, each `entries` bits).
+    pub(crate) fn decompose_batch(&self, xs: &[Vec<i64>], n: usize) -> Result<Vec<Vec<BitVec>>> {
+        let entries = self.entries(n);
+        let mut planes = Vec::with_capacity(xs.len());
+        for x in xs {
+            if x.len() != entries {
+                return Err(PpacError::DimMismatch {
+                    context: "multibit vector length",
+                    expected: entries,
+                    got: x.len(),
+                });
+            }
+            planes.push(formats::decompose_packed(x, self.lbits, self.x_fmt)?);
+        }
+        Ok(planes)
+    }
+}
+
+impl Blocked {
+    /// Serve a multi-bit batch as K·L weighted 1-bit plane sweeps (one
+    /// blocked sweep per plane pair, the row resident in registers),
+    /// folding the partials host-side.
+    pub(crate) fn serve_planes(
+        &self,
+        array: &mut PpacArray,
+        plan: &MultibitPlan,
+        xs: &[Vec<i64>],
+    ) -> Result<EngineBatch> {
+        if xs.is_empty() {
+            return Ok(EngineBatch { ys: Vec::new(), cycles: 0 });
+        }
+        let cfg = *array.config();
+        let (m, n) = (cfg.m, cfg.n);
+        plan.check_geometry(n)?;
+        let planes = plan.decompose_batch(xs, n)?;
+        let wpr = array.words_per_row();
+        let shared_c = array.shared().c;
+        let kernel = plan.kernel;
+        // Per-row affine base of every plane pass, WITHOUT the threshold:
+        // the pipeline subtracts δ only at the emitting cycle, so the
+        // fold applies it once per final output, not once per plane.
+        let bases: Vec<i64> = array
+            .alus()
+            .iter()
+            .map(|alu| {
+                (if kernel.use_nreg { alu.nreg } else { 0 })
+                    - (if kernel.use_c { shared_c } else { 0 })
+            })
+            .collect();
+        let deltas: Vec<i64> = array.alus().iter().map(|alu| alu.delta).collect();
+
+        let nq = xs.len();
+        let mem = array.mem_words();
+        let k_pop = if kernel.pop_x2 { 2 } else { 1 };
+        let mask = tail_mask(n);
+        let mut flat = vec![0i64; m * nq];
+        let mut qwords = vec![0u64; nq * wpr];
+        for l in 0..plan.lbits {
+            for k in 0..plan.kbits {
+                // Pack this plane pair's query block: the L-plane as-is
+                // in vector mode, spread to the significance-k columns
+                // of the K-bit layout in interleaved mode.
+                for (slot, qp) in qwords.chunks_exact_mut(wpr).zip(&planes) {
+                    let plane = &qp[l as usize];
+                    if plan.interleaved {
+                        plane.spread_into(plan.kbits as usize, k as usize, slot);
+                    } else {
+                        slot.copy_from_slice(plane.words());
+                    }
+                }
+                let sweep = Sweep {
+                    mem,
+                    wpr,
+                    tail_mask: mask,
+                    xnor: kernel.xnor,
+                    k: k_pop,
+                    weight: plan.weight(k, l),
+                    bases: &bases,
+                };
+                self.sweep(&sweep, &qwords, nq, &mut flat);
+            }
+        }
+        // Threshold subtraction, once per (row, query).
+        for (row, d) in deltas.iter().enumerate() {
+            if *d != 0 {
+                for v in &mut flat[row * nq..(row + 1) * nq] {
+                    *v -= d;
+                }
+            }
+        }
+        let cycles = plan.cycles_per_query() * nq as u64 + 1;
+        Ok(EngineBatch { ys: unflatten(&flat, m, nq), cycles })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::golden;
+    use crate::sim::{CycleInput, PpacConfig, RowAluCtrl};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn array_with(rows: &[BitVec], n: usize) -> PpacArray {
+        let mut cfg = PpacConfig::new(rows.len(), n);
+        cfg.rows_per_bank = rows.len();
+        cfg.subrows = 1;
+        cfg.max_k = 8;
+        cfg.max_l = 8;
+        let mut arr = PpacArray::new(cfg).unwrap();
+        arr.load_matrix(rows).unwrap();
+        arr
+    }
+
+    #[test]
+    fn plan_constructors_reject_illegal_shapes() {
+        assert!(MultibitPlan::vector(0, NumberFormat::Uint, MatrixInterp::U01).is_err());
+        assert!(MultibitPlan::vector(4, NumberFormat::OddInt, MatrixInterp::U01).is_err());
+        assert!(MultibitPlan::matrix(4, 4, NumberFormat::OddInt, NumberFormat::Int).is_err());
+        assert!(MultibitPlan::matrix(0, 4, NumberFormat::Int, NumberFormat::Int).is_err());
+        let p = MultibitPlan::matrix(3, 2, NumberFormat::Int, NumberFormat::Uint).unwrap();
+        assert!(p.check_geometry(10).is_err(), "10 % 3 != 0");
+        assert!(p.check_geometry(12).is_ok());
+        assert_eq!(p.cycles_per_query(), 6);
+        assert_eq!(p.entries(12), 4);
+    }
+
+    #[test]
+    fn weights_are_shifted_signed_powers_of_two() {
+        let p = MultibitPlan::matrix(2, 3, NumberFormat::Int, NumberFormat::Int).unwrap();
+        // k=0 is the (negative) matrix MSB, l=0 the (negative) vector MSB.
+        assert_eq!(p.weight(0, 0), 8, "(−2)·(−4)");
+        assert_eq!(p.weight(0, 2), -2, "(−2)·1");
+        assert_eq!(p.weight(1, 0), -4, "1·(−4)");
+        assert_eq!(p.weight(1, 2), 1);
+        let v = MultibitPlan::vector(3, NumberFormat::OddInt, MatrixInterp::Pm1).unwrap();
+        // oddint folds its ±1 mapping into the partials: plain powers.
+        assert_eq!((v.weight(0, 0), v.weight(0, 1), v.weight(0, 2)), (4, 2, 1));
+    }
+
+    #[test]
+    fn vector_planes_match_golden_pm1_uint() {
+        let mut rng = Xoshiro256pp::seeded(70);
+        let (m, n, lbits) = (8usize, 70usize, 3u32);
+        let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let rows: Vec<BitVec> = a.iter().map(|r| BitVec::from_bools(r)).collect();
+        let mut arr = array_with(&rows, n);
+        // eq-2 partials need c = N and nreg = h̄(a, 1); program nreg
+        // through a real store-correction cycle, as `configure` does.
+        arr.set_offset(n as i64);
+        arr.cycle(&CycleInput::compute(
+            BitVec::ones(n),
+            BitVec::ones(n),
+            RowAluCtrl::store_correction(),
+        ))
+        .unwrap();
+        let out = arr.drain().unwrap().unwrap();
+        arr.recycle(out);
+
+        let plan = MultibitPlan::vector(lbits, NumberFormat::Uint, MatrixInterp::Pm1).unwrap();
+        let xs: Vec<Vec<i64>> = (0..5).map(|_| rng.ints(n, 0, 7)).collect();
+        let got = Blocked::default().serve_multibit(&mut arr, &plan, &xs).unwrap();
+        let a_int: Vec<Vec<i64>> = a
+            .iter()
+            .map(|row| row.iter().map(|&b| 2 * b as i64 - 1).collect())
+            .collect();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got.ys[xi], golden::mvp_i64(&a_int, x), "x{xi}");
+        }
+        assert_eq!(got.cycles, 5 * 3 + 1, "L·Q plus one drain");
+    }
+
+    #[test]
+    fn interleaved_planes_match_golden_int_matrix() {
+        let mut rng = Xoshiro256pp::seeded(71);
+        let (m, kbits, lbits, n_eff) = (6usize, 3u32, 2u32, 11usize);
+        let n = n_eff * kbits as usize;
+        let a_int: Vec<Vec<i64>> = (0..m).map(|_| rng.ints(n_eff, -4, 3)).collect();
+        let rows: Vec<BitVec> = a_int
+            .iter()
+            .map(|r| {
+                BitVec::from_bools(&formats::interleave_row(r, kbits, NumberFormat::Int).unwrap())
+            })
+            .collect();
+        let mut arr = array_with(&rows, n);
+        let plan =
+            MultibitPlan::matrix(kbits, lbits, NumberFormat::Int, NumberFormat::Int).unwrap();
+        let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.ints(n_eff, -2, 1)).collect();
+        let got = Blocked::default().serve_multibit(&mut arr, &plan, &xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got.ys[xi], golden::mvp_i64(&a_int, x), "x{xi}");
+        }
+        assert_eq!(got.cycles, 4 * 6 + 1, "K·L·Q plus one drain");
+    }
+
+    #[test]
+    fn thresholds_subtract_once_not_per_plane() {
+        // δ must hit the final fold exactly once — a per-plane
+        // subtraction would scale it by Σ weights.
+        let mut rng = Xoshiro256pp::seeded(72);
+        let (m, n, lbits) = (4usize, 20usize, 4u32);
+        let rows: Vec<BitVec> = (0..m).map(|_| BitVec::from_bools(&rng.bits(n))).collect();
+        let mut arr = array_with(&rows, n);
+        let plan = MultibitPlan::vector(lbits, NumberFormat::Uint, MatrixInterp::U01).unwrap();
+        let xs = vec![rng.ints(n, 0, 15)];
+        let base = Blocked::default().serve_multibit(&mut arr, &plan, &xs).unwrap();
+        arr.set_thresholds(&vec![7i64; m]).unwrap();
+        let shifted = Blocked::default().serve_multibit(&mut arr, &plan, &xs).unwrap();
+        for (b, s) in base.ys[0].iter().zip(&shifted.ys[0]) {
+            assert_eq!(*s, b - 7);
+        }
+    }
+
+    #[test]
+    fn empty_batches_are_free() {
+        let rows = vec![BitVec::zeros(8)];
+        let mut arr = array_with(&rows, 8);
+        let plan = MultibitPlan::vector(2, NumberFormat::Uint, MatrixInterp::U01).unwrap();
+        let out = Blocked::default().serve_multibit(&mut arr, &plan, &[]).unwrap();
+        assert!(out.ys.is_empty());
+        assert_eq!(out.cycles, 0);
+    }
+
+    #[test]
+    fn out_of_range_values_are_rejected_before_any_output() {
+        let rows = vec![BitVec::zeros(8)];
+        let mut arr = array_with(&rows, 8);
+        let plan = MultibitPlan::vector(2, NumberFormat::Uint, MatrixInterp::U01).unwrap();
+        let xs = vec![vec![9i64; 8]]; // > 2-bit uint max
+        assert!(Blocked::default().serve_multibit(&mut arr, &plan, &xs).is_err());
+        let short = vec![vec![1i64; 7]];
+        assert!(Blocked::default().serve_multibit(&mut arr, &plan, &short).is_err());
+    }
+}

@@ -1,17 +1,19 @@
 //! The cycle-accurate engine: today's `PpacArray` pipeline path behind
 //! the [`Engine`](super::Engine) interface.
 //!
-//! One `cycle()` per query plus a drain, exactly the schedule the
-//! compiler always issued for 1-bit batches. This engine advances the
-//! array's pipeline registers, cycle counter and (when enabled) the
-//! switching-activity trace, which is why it remains authoritative for
-//! verification and the power model: the `Blocked` engine produces the
-//! same numbers but no per-cycle activity.
+//! One `cycle()` per query plus a drain for 1-bit batches, and the full
+//! K·L bit-serial accumulator schedule (§III-C) for multi-bit batches —
+//! exactly what the schedule compiler always issued. This engine
+//! advances the array's pipeline registers, cycle counter and (when
+//! enabled) the switching-activity trace, which is why it remains
+//! authoritative for verification and the power model: the `Blocked`
+//! engine produces the same numbers but no per-cycle activity.
 
 use crate::error::Result;
-use crate::sim::{BitVec, CycleInput, PpacArray};
+use crate::formats::NumberFormat;
+use crate::sim::{BitVec, CycleInput, PpacArray, RowAluCtrl};
 
-use super::{Engine, EngineBatch, OpKernel};
+use super::{Engine, EngineBatch, MultibitPlan, OpKernel};
 
 /// Pipeline-replay engine (verification / tracing backend).
 pub struct CycleAccurate;
@@ -25,7 +27,7 @@ impl Engine for CycleAccurate {
         &self,
         array: &mut PpacArray,
         kernel: OpKernel,
-        queries: Vec<BitVec>,
+        queries: &[BitVec],
     ) -> Result<EngineBatch> {
         if queries.is_empty() {
             return Ok(EngineBatch { ys: Vec::new(), cycles: 0 });
@@ -36,7 +38,10 @@ impl Engine for CycleAccurate {
         let mut cycles = 0u64;
         let mut pending = false;
         for q in queries {
-            let out = array.cycle(&CycleInput::compute(q, s.clone(), ctrl))?;
+            // The clone per query (the borrowed batch lets serving-path
+            // callers keep a scratch pool) is a few words — noise next
+            // to the M·wpr-word cell sweep each cycle performs.
+            let out = array.cycle(&CycleInput::compute(q.clone(), s.clone(), ctrl))?;
             cycles += 1;
             if pending {
                 let out = out.expect("pipeline must be primed");
@@ -53,12 +58,77 @@ impl Engine for CycleAccurate {
         array.recycle_buffers(Vec::new(), out.bank_p);
         Ok(EngineBatch { ys, cycles })
     }
+
+    fn serve_multibit(
+        &self,
+        array: &mut PpacArray,
+        plan: &MultibitPlan,
+        xs: &[Vec<i64>],
+    ) -> Result<EngineBatch> {
+        if xs.is_empty() {
+            return Ok(EngineBatch { ys: Vec::new(), cycles: 0 });
+        }
+        let n = array.config().n;
+        plan.check_geometry(n)?;
+        let planes = plan.decompose_batch(xs, n)?;
+        let (s, base_ctrl) = plan.kernel.signals(n);
+        let signed_v = plan.x_fmt == NumberFormat::Int;
+        let signed_m = plan.a_fmt == NumberFormat::Int;
+        let mut ys = Vec::with_capacity(xs.len());
+        let mut cycles = 0u64;
+        let mut pending_emit = false;
+        for qp in &planes {
+            for k in 0..plan.kbits {
+                for (l, plane) in qp.iter().enumerate() {
+                    let last_l = l as u32 == plan.lbits - 1;
+                    // The bit-serial accumulator chain (§III-C): Horner
+                    // folding over vector planes (vAcc, signed MSB
+                    // negated) and — in the interleaved layout — over
+                    // matrix planes (mAcc) at each vector-fold boundary.
+                    let ctrl = RowAluCtrl {
+                        we_v: true,
+                        v_acc: l > 0,
+                        v_acc_neg: l == 0 && signed_v,
+                        we_m: plan.interleaved && last_l,
+                        m_acc: plan.interleaved && last_l && k > 0,
+                        m_acc_neg: plan.interleaved && last_l && k == 0 && signed_m,
+                        ..base_ctrl
+                    };
+                    let xin = if plan.interleaved {
+                        plane.spread(plan.kbits as usize, k as usize)
+                    } else {
+                        plane.clone()
+                    };
+                    let out = array.cycle(&CycleInput::compute(xin, s.clone(), ctrl))?;
+                    cycles += 1;
+                    if pending_emit {
+                        let out = out.expect("pipeline must be primed");
+                        ys.push(out.y);
+                        array.recycle_buffers(Vec::new(), out.bank_p);
+                    } else if let Some(out) = out {
+                        // Dropped bit-serial partial: hand the buffers
+                        // back for stage-2 reuse.
+                        array.recycle(out);
+                    }
+                    pending_emit = last_l && k == plan.kbits - 1;
+                }
+            }
+        }
+        let out = array.drain()?.expect("drain output");
+        cycles += 1;
+        ys.push(out.y);
+        array.recycle_buffers(Vec::new(), out.bank_p);
+        Ok(EngineBatch { ys, cycles })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::golden;
+    use crate::isa::MatrixInterp;
     use crate::sim::PpacConfig;
+    use crate::util::rng::Xoshiro256pp;
 
     #[test]
     fn replays_the_two_stage_pipeline() {
@@ -71,9 +141,7 @@ mod tests {
         let qs: Vec<BitVec> =
             (0..3).map(|i| BitVec::from_fn(n, |j| (i * j) % 3 == 0)).collect();
         let before = arr.cycles();
-        let batch = CycleAccurate
-            .serve(&mut arr, OpKernel::hamming(), qs.clone())
-            .unwrap();
+        let batch = CycleAccurate.serve(&mut arr, OpKernel::hamming(), &qs).unwrap();
         assert_eq!(batch.ys.len(), 3);
         assert_eq!(batch.cycles, 4, "3 queries + drain");
         assert_eq!(arr.cycles() - before, 4, "the array really cycled");
@@ -82,6 +150,30 @@ mod tests {
                 let want = n as i64 - row.hamming_distance(q) as i64;
                 assert_eq!(batch.ys[qi][mi], want, "q{qi} row{mi}");
             }
+        }
+    }
+
+    #[test]
+    fn multibit_replay_really_cycles_the_array() {
+        let mut rng = Xoshiro256pp::seeded(80);
+        let (m, n, lbits) = (8usize, 24usize, 3u32);
+        let cfg = PpacConfig::new(m, n);
+        let mut arr = PpacArray::new(cfg).unwrap();
+        let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+        let rows: Vec<BitVec> = a.iter().map(|r| BitVec::from_bools(r)).collect();
+        arr.load_matrix(&rows).unwrap();
+        let plan = MultibitPlan::vector(lbits, NumberFormat::Uint, MatrixInterp::U01).unwrap();
+        let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.ints(n, 0, 7)).collect();
+        let before = arr.cycles();
+        let batch = CycleAccurate.serve_multibit(&mut arr, &plan, &xs).unwrap();
+        assert_eq!(batch.cycles, 4 * 3 + 1, "L·Q plus one drain");
+        assert_eq!(arr.cycles() - before, batch.cycles, "every cycle replayed");
+        let a_int: Vec<Vec<i64>> = a
+            .iter()
+            .map(|row| row.iter().map(|&b| b as i64).collect())
+            .collect();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(batch.ys[xi], golden::mvp_i64(&a_int, x), "x{xi}");
         }
     }
 }

@@ -33,20 +33,30 @@
 //!   per query at II = 1, plus one drain), so throughput and energy
 //!   accounting stay paper-faithful.
 //!
-//! Selection is by [`Backend`], threaded through `PpacUnit`, the
-//! coordinator workers and the `ppac serve` CLI (`--backend
-//! blocked|cycle`).
+//! Multi-bit schedules (§III-C) go through the same layer:
+//! [`Engine::serve_multibit`] serves a batch of integer vectors as K·L
+//! 1-bit plane passes. The cycle-accurate engine replays the bit-serial
+//! accumulator schedule; the blocked engine runs one query-blocked sweep
+//! per (k, l) plane pair and folds the partials host-side with the
+//! per-plane shift/sign weights (see [`blocked_planes`]).
+//!
+//! Selection is by [`Backend`], built into an engine instance by
+//! [`Backend::build`] with [`EngineOpts`] (thread count, row-split
+//! threshold), threaded through `PpacUnit`, the coordinator workers and
+//! the `ppac serve` CLI (`--backend blocked|cycle --threads T`).
 
 pub mod blocked;
+pub mod blocked_planes;
 pub mod cycle_accurate;
 
 pub use blocked::Blocked;
+pub use blocked_planes::MultibitPlan;
 pub use cycle_accurate::CycleAccurate;
 
 use crate::error::{PpacError, Result};
 use crate::sim::{BitVec, PpacArray, RowAluCtrl};
 
-/// Which execution engine serves 1-bit batches.
+/// Which execution engine serves batches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Replay the full two-stage pipeline (verification, tracing, power).
@@ -56,12 +66,39 @@ pub enum Backend {
     Blocked,
 }
 
+/// Options the [`Backend::build`] factory hands the engine it
+/// constructs. A plain `&'static dyn Engine` accessor could not carry
+/// per-deployment configuration like a thread count, which is why the
+/// factory exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineOpts {
+    /// Threads for row-split sweeps in the blocked kernel (1 = stay on
+    /// the calling thread).
+    pub threads: usize,
+    /// Minimum tile rows M before a sweep fans out across threads —
+    /// short tiles are memory-light enough that spawn overhead dominates.
+    pub split_rows: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        Self { threads: 1, split_rows: 512 }
+    }
+}
+
+impl EngineOpts {
+    /// Default options with the given thread count.
+    pub fn threaded(threads: usize) -> Self {
+        Self { threads, ..Self::default() }
+    }
+}
+
 impl Backend {
-    /// The engine implementing this backend.
-    pub fn engine(self) -> &'static dyn Engine {
+    /// Build the engine implementing this backend.
+    pub fn build(self, opts: EngineOpts) -> Box<dyn Engine + Send + Sync> {
         match self {
-            Backend::CycleAccurate => &CycleAccurate,
-            Backend::Blocked => &Blocked,
+            Backend::CycleAccurate => Box::new(CycleAccurate),
+            Backend::Blocked => Box::new(Blocked::new(opts)),
         }
     }
 
@@ -165,7 +202,8 @@ pub struct EngineBatch {
     pub cycles: u64,
 }
 
-/// A bit-exact evaluator for uniform-operator 1-bit batches.
+/// A bit-exact evaluator for uniform-operator 1-bit batches and their
+/// bit-serial multi-bit extensions.
 ///
 /// Both implementations must produce identical `EngineBatch` contents
 /// for the same array state; they differ only in host execution
@@ -175,14 +213,27 @@ pub trait Engine {
 
     /// Serve `queries` (each N bits, matching the array width) under
     /// `kernel`, reading the array's stored matrix and ALU
-    /// configuration. Takes the packed batch by value so the
-    /// cycle-accurate replay can move each query into its `CycleInput`
-    /// without re-cloning.
+    /// configuration. Borrows the packed batch so callers can keep a
+    /// reusable scratch pool across batches.
     fn serve(
         &self,
         array: &mut PpacArray,
         kernel: OpKernel,
-        queries: Vec<BitVec>,
+        queries: &[BitVec],
+    ) -> Result<EngineBatch>;
+
+    /// Serve a multi-bit batch (§III-C): each integer vector in `xs` is
+    /// decomposed into `plan.lbits` MSB-first bit-planes
+    /// (`formats::decompose`) and evaluated as `plan.kbits · plan.lbits`
+    /// 1-bit plane passes whose partials fold with the per-plane
+    /// shift/sign weights `y = Σ_k Σ_l ±2^{(K−1−k)+(L−1−l)} · y_{k,l}`.
+    /// Cycles are charged by the analytic schedule (K·L·Q + one drain)
+    /// on every implementation.
+    fn serve_multibit(
+        &self,
+        array: &mut PpacArray,
+        plan: &MultibitPlan,
+        xs: &[Vec<i64>],
     ) -> Result<EngineBatch>;
 }
 
@@ -204,6 +255,16 @@ mod tests {
         assert_eq!(Backend::Blocked.name(), "blocked");
         assert_eq!(Backend::CycleAccurate.name(), "cycle");
         assert_eq!(Backend::default(), Backend::Blocked);
+    }
+
+    #[test]
+    fn build_factory_constructs_the_selected_engine() {
+        let opts = EngineOpts::threaded(4);
+        assert_eq!(opts.threads, 4);
+        assert_eq!(opts.split_rows, EngineOpts::default().split_rows);
+        assert_eq!(Backend::Blocked.build(opts).name(), "blocked");
+        assert_eq!(Backend::CycleAccurate.build(opts).name(), "cycle");
+        assert_eq!(EngineOpts::default().threads, 1, "single-threaded default");
     }
 
     #[test]

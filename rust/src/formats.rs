@@ -10,6 +10,7 @@
 //! hardware schedule (PPAC consumes the most significant plane first).
 
 use crate::error::PpacError;
+use crate::sim::BitVec;
 
 /// The three L-bit number formats of Table I.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -92,6 +93,21 @@ impl NumberFormat {
         }
     }
 
+    /// A uniformly random representable `nbits`-bit value (oddint draws
+    /// are forced odd). Shared by the property/integration tests so the
+    /// format-aware generation logic lives in one place.
+    pub fn sample(self, rng: &mut crate::util::rng::Xoshiro256pp, nbits: u32) -> i64 {
+        let (lo, hi) = self.range(nbits);
+        let mut v = rng.range_i64(lo, hi);
+        if self == NumberFormat::OddInt {
+            v |= 1;
+            if v > hi {
+                v = hi;
+            }
+        }
+        v
+    }
+
     /// Per-plane weight in the bit-serial recomposition, MSB-first plane
     /// index `i` of `nbits` planes. For `Int` the MSB plane is negative
     /// (row-ALU controls `vAccX-1` / `mAccX-1`); `OddInt` folds its ±1
@@ -116,6 +132,26 @@ pub fn decompose(vals: &[i64], nbits: u32, fmt: NumberFormat) -> Result<Vec<Vec<
         let pat = fmt.encode(nbits, v)?;
         for i in 0..nbits {
             planes[i as usize][j] = (pat >> (nbits - 1 - i)) & 1 == 1;
+        }
+    }
+    Ok(planes)
+}
+
+/// Like [`decompose`], but straight into packed [`BitVec`] planes — the
+/// form the execution engines consume (no per-query bool
+/// materialization).
+pub fn decompose_packed(
+    vals: &[i64],
+    nbits: u32,
+    fmt: NumberFormat,
+) -> Result<Vec<BitVec>, PpacError> {
+    let mut planes = vec![BitVec::zeros(vals.len()); nbits as usize];
+    for (j, &v) in vals.iter().enumerate() {
+        let pat = fmt.encode(nbits, v)?;
+        for i in 0..nbits {
+            if (pat >> (nbits - 1 - i)) & 1 == 1 {
+                planes[i as usize].set(j, true);
+            }
         }
     }
     Ok(planes)
@@ -159,18 +195,6 @@ pub fn interleave_row(vals: &[i64], kbits: u32, fmt: NumberFormat) -> Result<Vec
         }
     }
     Ok(bits)
-}
-
-/// Build the length-N input vector that selects significance `k` (MSB-first
-/// index) of a K-bit column layout: position `j*K + k` carries
-/// `plane[j]`, all other positions 0 (§III-C2: inactive columns are nulled
-/// via the AND operator with a 0 input).
-pub fn select_plane_input(plane: &[bool], kbits: u32, k: u32) -> Vec<bool> {
-    let mut x = vec![false; plane.len() * kbits as usize];
-    for (j, &b) in plane.iter().enumerate() {
-        x[j * kbits as usize + k as usize] = b;
-    }
-    x
 }
 
 #[cfg(test)]
@@ -233,28 +257,46 @@ mod tests {
     }
 
     #[test]
+    fn sample_stays_in_format() {
+        let mut rng = crate::util::rng::Xoshiro256pp::seeded(9);
+        for fmt in FMTS {
+            for nbits in 1..=8u32 {
+                for _ in 0..50 {
+                    let v = fmt.sample(&mut rng, nbits);
+                    assert!(fmt.contains(nbits, v), "{fmt:?} L={nbits} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn decompose_recompose_property() {
         Runner::new(64).check("bitplane-roundtrip", |g| {
             let fmt = *g.choose(&FMTS);
             let nbits = 1 + g.rng.below(8) as u32;
-            let (lo, hi) = fmt.range(nbits);
             let n = g.dim(32);
-            let vals: Vec<i64> = (0..n)
-                .map(|_| {
-                    let mut v = g.rng.range_i64(lo, hi);
-                    if fmt == NumberFormat::OddInt {
-                        v |= 1;
-                        if v > hi {
-                            v = hi;
-                        }
-                    }
-                    v
-                })
-                .collect();
+            let vals: Vec<i64> = (0..n).map(|_| fmt.sample(&mut g.rng, nbits)).collect();
             let planes = decompose(&vals, nbits, fmt).map_err(|e| e.to_string())?;
             crate::prop_assert_eq!(planes.len(), nbits as usize);
             let back = recompose(&planes, fmt);
             crate::prop_assert_eq!(back, vals, "fmt={fmt:?} nbits={nbits}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decompose_packed_matches_bool_planes() {
+        Runner::new(32).check("decompose-packed", |g| {
+            let fmt = *g.choose(&FMTS);
+            let nbits = 1 + g.rng.below(8) as u32;
+            let n = g.dim(40);
+            let vals: Vec<i64> = (0..n).map(|_| fmt.sample(&mut g.rng, nbits)).collect();
+            let bools = decompose(&vals, nbits, fmt).map_err(|e| e.to_string())?;
+            let packed = decompose_packed(&vals, nbits, fmt).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(packed.len(), bools.len());
+            for (l, plane) in packed.iter().enumerate() {
+                crate::prop_assert_eq!(plane.to_bools(), bools[l], "plane {l}");
+            }
             Ok(())
         });
     }
@@ -283,10 +325,4 @@ mod tests {
         assert_eq!(row, vec![true, false, false, true]);
     }
 
-    #[test]
-    fn select_plane_nulls_other_columns() {
-        let x = select_plane_input(&[true, true], 2, 1);
-        // plane goes to significance-1 (LSB) columns: [0,1, 0,1]
-        assert_eq!(x, vec![false, true, false, true]);
-    }
 }

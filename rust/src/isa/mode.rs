@@ -3,7 +3,7 @@
 use crate::formats::NumberFormat;
 
 /// How the stored 1-bit matrix is interpreted in multi-bit vector modes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MatrixInterp {
     /// Stored bits are ±1 values (HI=+1 / LO=−1) — XNOR-family partials.
     Pm1,

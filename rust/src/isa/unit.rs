@@ -7,7 +7,7 @@
 //! bit-serial schedules (§III-C) handled internally and accounted
 //! cycle-exactly.
 
-use crate::engine::{Backend, OpKernel};
+use crate::engine::{Backend, CycleAccurate, Engine, EngineOpts, MultibitPlan, OpKernel};
 use crate::error::{PpacError, Result};
 use crate::formats::{self, NumberFormat};
 use crate::sim::{
@@ -27,9 +27,17 @@ struct Step {
 pub struct PpacUnit {
     array: PpacArray,
     mode: Option<OpMode>,
-    /// Execution engine for 1-bit batches (multi-bit schedules always
-    /// run cycle-accurately; tracing forces [`Backend::CycleAccurate`]).
+    /// Selected execution backend (tracing forces
+    /// [`Backend::CycleAccurate`] regardless).
     backend: Backend,
+    /// Engine build options (threads, row-split threshold).
+    engine_opts: EngineOpts,
+    /// The built engine serving 1-bit and multi-bit batches.
+    engine: Box<dyn Engine + Send + Sync>,
+    /// Packed-query scratch pool: refilled in place per batch so
+    /// steady-state serving does zero allocations for query packing
+    /// (mirrors `PpacArray::recycle` for the stage-2 buffers).
+    qscratch: Vec<BitVec>,
     /// Cycles spent in compute schedules (the paper's throughput basis).
     compute_cycles: u64,
     /// Cycles spent on setup (correction-register stores, matrix loads).
@@ -40,10 +48,15 @@ pub struct PpacUnit {
 
 impl PpacUnit {
     pub fn new(cfg: PpacConfig) -> Result<Self> {
+        let backend = Backend::default();
+        let engine_opts = EngineOpts::default();
         Ok(Self {
             array: PpacArray::new(cfg)?,
             mode: None,
-            backend: Backend::default(),
+            backend,
+            engine_opts,
+            engine: backend.build(engine_opts),
+            qscratch: Vec::new(),
             compute_cycles: 0,
             setup_cycles: 0,
             n_eff: cfg.n,
@@ -82,9 +95,18 @@ impl PpacUnit {
 
     // -- execution-engine selection ------------------------------------------
 
-    /// Select the execution engine for 1-bit batch serving.
+    /// Select the execution engine for batch serving (rebuilds it with
+    /// the current [`EngineOpts`]).
     pub fn set_backend(&mut self, backend: Backend) {
+        self.configure_engine(backend, self.engine_opts);
+    }
+
+    /// Select backend *and* build options (thread count, row-split
+    /// threshold) in one step — the factory path deployments configure.
+    pub fn configure_engine(&mut self, backend: Backend, opts: EngineOpts) {
         self.backend = backend;
+        self.engine_opts = opts;
+        self.engine = backend.build(opts);
     }
 
     /// The configured backend selector.
@@ -92,7 +114,12 @@ impl PpacUnit {
         self.backend
     }
 
-    /// The backend that will actually serve the next 1-bit batch:
+    /// The engine build options in effect.
+    pub fn engine_opts(&self) -> EngineOpts {
+        self.engine_opts
+    }
+
+    /// The backend that will actually serve the next batch:
     /// switching-activity tracing (and therefore the power model) needs
     /// every pipeline cycle, so an enabled trace overrides the selector.
     pub fn effective_backend(&self) -> Backend {
@@ -103,19 +130,43 @@ impl PpacUnit {
         }
     }
 
+    /// The single dispatch point implementing [`PpacUnit::effective_backend`]'s
+    /// policy: an enabled trace forces the pipeline replay. Free-standing
+    /// over the two fields so callers can still borrow `self.array`
+    /// mutably for the serve itself.
+    fn select_engine<'a>(
+        array: &PpacArray,
+        engine: &'a (dyn Engine + Send + Sync),
+    ) -> &'a dyn Engine {
+        if array.trace_enabled() {
+            &CycleAccurate
+        } else {
+            engine
+        }
+    }
+
     /// Pack, validate and serve a uniform-operator 1-bit batch through
     /// the selected engine, charging the analytic cycle cost (Q at
-    /// II = 1 plus one drain — identical for both engines).
+    /// II = 1 plus one drain — identical for both engines). Queries are
+    /// packed into the unit's reusable scratch pool, so steady-state
+    /// serving allocates nothing here.
     fn serve_1bit(&mut self, queries: &[Vec<bool>], kernel: OpKernel) -> Result<Vec<Vec<i64>>> {
-        let mut packed = Vec::with_capacity(queries.len());
+        let n = self.config().n;
         for q in queries {
             self.check_width(q)?;
-            packed.push(BitVec::from_bools(q));
         }
-        let batch = self
-            .effective_backend()
-            .engine()
-            .serve(&mut self.array, kernel, packed)?;
+        if self.qscratch.first().is_some_and(|b| b.len() != n) {
+            self.qscratch.clear();
+        }
+        while self.qscratch.len() < queries.len() {
+            self.qscratch.push(BitVec::zeros(n));
+        }
+        for (buf, q) in self.qscratch.iter_mut().zip(queries) {
+            buf.copy_from_bools(q);
+        }
+        let packed = &self.qscratch[..queries.len()];
+        let engine = Self::select_engine(&self.array, self.engine.as_ref());
+        let batch = engine.serve(&mut self.array, kernel, packed)?;
         self.compute_cycles += batch.cycles;
         Ok(batch.ys)
     }
@@ -449,135 +500,34 @@ impl PpacUnit {
             .collect())
     }
 
-    /// Multi-bit MVP batch (§III-C): L (or K·L) cycles per vector,
-    /// bit-serial. Inputs are integer vectors in the mode's format.
+    /// Multi-bit MVP batch (§III-C): L (or K·L) schedule cycles per
+    /// vector, bit-serial. Inputs are integer vectors in the mode's
+    /// format. Served through the execution-engine layer: the blocked
+    /// backend runs one query-blocked sweep per (k, l) plane pair with
+    /// host-side weight folding, the cycle-accurate backend replays the
+    /// accumulator schedule — both charge the analytic K·L·Q + drain
+    /// cycle cost.
     pub fn mvp_multibit_batch(&mut self, xs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
-        let mode = self.mode()?.clone();
-        match mode {
+        let plan = match self.mode()? {
             OpMode::MultibitVector { lbits, x_fmt, matrix } => {
-                self.multibit_vector_batch(xs, lbits, x_fmt, matrix)
+                MultibitPlan::vector(*lbits, *x_fmt, *matrix)?
             }
             OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt } => {
-                self.multibit_matrix_batch(xs, kbits, lbits, a_fmt, x_fmt)
-            }
-            m => Err(PpacError::Config(format!("mode {} is not multi-bit", m.name()))),
-        }
-    }
-
-    fn multibit_vector_batch(
-        &mut self,
-        xs: &[Vec<i64>],
-        lbits: u32,
-        x_fmt: NumberFormat,
-        matrix: MatrixInterp,
-    ) -> Result<Vec<Vec<i64>>> {
-        let n = self.config().n;
-        // Per-plane 1-bit partial configuration.
-        let (s, base): (BitVec, RowAluCtrl) = match (matrix, x_fmt) {
-            // ±1 matrix, {0,1} planes → eq. (2) partials.
-            (MatrixInterp::Pm1, NumberFormat::Uint | NumberFormat::Int) => {
-                (BitVec::ones(n), RowAluCtrl::eq2_compute())
-            }
-            // ±1 matrix, ±1 planes (oddint) → eq. (1) partials.
-            (MatrixInterp::Pm1, NumberFormat::OddInt) => {
-                (BitVec::ones(n), RowAluCtrl::pm1_mvp())
-            }
-            // {0,1} matrix, {0,1} planes → AND partials.
-            (MatrixInterp::U01, NumberFormat::Uint | NumberFormat::Int) => {
-                (BitVec::zeros(n), RowAluCtrl::passthrough())
-            }
-            (MatrixInterp::U01, NumberFormat::OddInt) => {
-                return Err(PpacError::Config(
-                    "oddint vectors require a ±1 matrix interpretation".into(),
-                ))
-            }
-        };
-        let signed = x_fmt == NumberFormat::Int;
-
-        let mut steps = Vec::with_capacity(xs.len() * lbits as usize);
-        for x in xs {
-            if x.len() != n {
-                return Err(PpacError::DimMismatch {
-                    context: "multibit vector length",
-                    expected: n,
-                    got: x.len(),
-                });
-            }
-            let planes = formats::decompose(x, lbits, x_fmt)?;
-            for (l, plane) in planes.iter().enumerate() {
-                let ctrl = RowAluCtrl {
-                    we_v: true,
-                    v_acc: l > 0,
-                    v_acc_neg: l == 0 && signed,
-                    ..base
-                };
-                steps.push(Step {
-                    input: CycleInput::compute(BitVec::from_bools(plane), s.clone(), ctrl),
-                    emit: l as u32 == lbits - 1,
-                });
-            }
-        }
-        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
-    }
-
-    fn multibit_matrix_batch(
-        &mut self,
-        xs: &[Vec<i64>],
-        kbits: u32,
-        lbits: u32,
-        a_fmt: NumberFormat,
-        x_fmt: NumberFormat,
-    ) -> Result<Vec<Vec<i64>>> {
-        if !matches!(a_fmt, NumberFormat::Uint | NumberFormat::Int)
-            || !matches!(x_fmt, NumberFormat::Uint | NumberFormat::Int)
-        {
-            return Err(PpacError::Config(
-                "multibit-matrix mode supports uint/int operands".into(),
-            ));
-        }
-        let cfg = *self.config();
-        if kbits > cfg.max_k || lbits > cfg.max_l {
-            return Err(PpacError::Config(format!(
-                "K={kbits}/L={lbits} exceed the row-ALU limits K≤{} L≤{}",
-                cfg.max_k, cfg.max_l
-            )));
-        }
-        let n_eff = cfg.n / kbits as usize;
-        let s = BitVec::zeros(cfg.n); // AND everywhere (§III-C2)
-        let signed_v = x_fmt == NumberFormat::Int;
-        let signed_m = a_fmt == NumberFormat::Int;
-
-        let mut steps = Vec::with_capacity(xs.len() * (kbits * lbits) as usize);
-        for x in xs {
-            if x.len() != n_eff {
-                return Err(PpacError::DimMismatch {
-                    context: "multibit matrix-mode vector length",
-                    expected: n_eff,
-                    got: x.len(),
-                });
-            }
-            let planes = formats::decompose(x, lbits, x_fmt)?;
-            for k in 0..kbits {
-                for (l, plane) in planes.iter().enumerate() {
-                    let last_l = l as u32 == lbits - 1;
-                    let ctrl = RowAluCtrl {
-                        we_v: true,
-                        v_acc: l > 0,
-                        v_acc_neg: l == 0 && signed_v,
-                        we_m: last_l,
-                        m_acc: last_l && k > 0,
-                        m_acc_neg: last_l && k == 0 && signed_m,
-                        ..RowAluCtrl::default()
-                    };
-                    let xin = formats::select_plane_input(plane, kbits, k);
-                    steps.push(Step {
-                        input: CycleInput::compute(BitVec::from_bools(&xin), s.clone(), ctrl),
-                        emit: last_l && k == kbits - 1,
-                    });
+                let cfg = *self.config();
+                if *kbits > cfg.max_k || *lbits > cfg.max_l {
+                    return Err(PpacError::Config(format!(
+                        "K={kbits}/L={lbits} exceed the row-ALU limits K≤{} L≤{}",
+                        cfg.max_k, cfg.max_l
+                    )));
                 }
+                MultibitPlan::matrix(*kbits, *lbits, *a_fmt, *x_fmt)?
             }
-        }
-        Ok(self.run_steps(steps, false)?.into_iter().map(|o| o.y).collect())
+            m => return Err(PpacError::Config(format!("mode {} is not multi-bit", m.name()))),
+        };
+        let engine = Self::select_engine(&self.array, self.engine.as_ref());
+        let batch = engine.serve_multibit(&mut self.array, &plan, xs)?;
+        self.compute_cycles += batch.cycles;
+        Ok(batch.ys)
     }
 
     /// PLA batch (§III-E): per input-variable assignment, one Boolean
@@ -716,6 +666,69 @@ mod tests {
         let t = u.array_mut().take_trace().unwrap();
         assert_eq!(t.cycles, 11, "10 queries + drain, all traced");
         assert_eq!(t.cell_evals, 11 * 16 * 16);
+    }
+
+    #[test]
+    fn scratch_pool_reuse_does_not_leak_stale_query_bits() {
+        // The packed-query pool is refilled in place per batch; a
+        // shorter follow-up batch of all-zero queries must not see the
+        // previous batch's set bits.
+        let mut rng = Xoshiro256pp::seeded(45);
+        let cfg = PpacConfig::new(16, 40);
+        let mut u = PpacUnit::new(cfg).unwrap();
+        let a: Vec<Vec<bool>> = (0..16).map(|_| rng.bits(40)).collect();
+        u.load_bit_matrix(&a).unwrap();
+        u.configure(OpMode::Hamming).unwrap();
+        let dense: Vec<Vec<bool>> = (0..8).map(|_| vec![true; 40]).collect();
+        let sparse: Vec<Vec<bool>> = (0..4).map(|_| vec![false; 40]).collect();
+        let first = u.hamming_batch(&dense).unwrap();
+        let second = u.hamming_batch(&sparse).unwrap();
+        let mut fresh = PpacUnit::new(cfg).unwrap();
+        fresh.load_bit_matrix(&a).unwrap();
+        fresh.configure(OpMode::Hamming).unwrap();
+        assert_eq!(fresh.hamming_batch(&dense).unwrap(), first);
+        assert_eq!(fresh.hamming_batch(&sparse).unwrap(), second);
+    }
+
+    #[test]
+    fn configure_engine_carries_options_through_the_factory() {
+        use crate::engine::{Backend, EngineOpts};
+        let mut u = PpacUnit::new(PpacConfig::new(16, 16)).unwrap();
+        assert_eq!(u.engine_opts(), EngineOpts::default());
+        u.configure_engine(Backend::Blocked, EngineOpts::threaded(4));
+        assert_eq!(u.engine_opts().threads, 4);
+        assert_eq!(u.backend(), Backend::Blocked);
+        // set_backend keeps the options in place.
+        u.set_backend(Backend::CycleAccurate);
+        assert_eq!(u.engine_opts().threads, 4);
+        assert_eq!(u.backend(), Backend::CycleAccurate);
+    }
+
+    #[test]
+    fn multibit_served_identically_by_both_backends() {
+        use crate::engine::Backend;
+        use crate::formats::NumberFormat;
+        let mut rng = Xoshiro256pp::seeded(46);
+        let cfg = PpacConfig::new(16, 32);
+        let a: Vec<Vec<bool>> = (0..16).map(|_| rng.bits(32)).collect();
+        let xs: Vec<Vec<i64>> = (0..6).map(|_| rng.ints(32, -4, 3)).collect();
+        let mode = OpMode::MultibitVector {
+            lbits: 3,
+            x_fmt: NumberFormat::Int,
+            matrix: MatrixInterp::Pm1,
+        };
+        let mut outs = Vec::new();
+        for backend in [Backend::Blocked, Backend::CycleAccurate] {
+            let mut u = PpacUnit::new(cfg).unwrap();
+            u.set_backend(backend);
+            u.load_bit_matrix(&a).unwrap();
+            u.configure(mode.clone()).unwrap();
+            let ys = u.mvp_multibit_batch(&xs).unwrap();
+            outs.push((ys, u.compute_cycles()));
+        }
+        assert_eq!(outs[0].0, outs[1].0, "bit-exact across backends");
+        assert_eq!(outs[0].1, outs[1].1, "identical analytic cycle count");
+        assert_eq!(outs[0].1, 6 * 3 + 1, "L·Q plus one drain");
     }
 
     #[test]

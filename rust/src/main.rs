@@ -11,7 +11,7 @@
 //! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
-//! ppac serve [--workers --batch --jobs --backend blocked|cycle]   coordinator demo
+//! ppac serve [--workers --batch --jobs --backend blocked|cycle --threads T]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -445,7 +445,7 @@ fn simulate(rest: Vec<String>) -> AnyResult {
 
 fn serve(rest: Vec<String>) -> AnyResult {
     use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
-    use ppac::engine::Backend;
+    use ppac::engine::{Backend, EngineOpts};
     use ppac::util::config::Config;
     let p = Spec::new()
         .opt("workers")
@@ -454,6 +454,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("m")
         .opt("n")
         .opt("backend")
+        .opt("threads")
         .opt("config")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
@@ -469,8 +470,11 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let backend: Backend = p
         .str_or("backend", &file.str_or("coordinator.backend", "blocked"))
         .parse()?;
+    let threads = p.usize_or("threads", file.usize_or("engine.threads", 1)?)?;
+    let engine = EngineOpts::threaded(threads);
     let tile = PpacConfig::new(m, n);
-    let coord = Coordinator::start(CoordinatorConfig { tile, workers, max_batch, backend })?;
+    let coord =
+        Coordinator::start(CoordinatorConfig { tile, workers, max_batch, backend, engine })?;
     let mut rng = Xoshiro256pp::seeded(11);
     let matrices: Vec<_> = (0..workers)
         .map(|_| {
@@ -492,7 +496,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let dt = t0.elapsed().as_secs_f64();
     let snap = coord.metrics.snapshot();
     println!("workers          : {workers} (tile {m}x{n}, max batch {max_batch})");
-    println!("backend          : {}", backend.name());
+    println!("backend          : {} ({} sweep thread(s))", backend.name(), threads);
     println!("jobs             : {} in {dt:.3} s = {:.0} jobs/s", snap.jobs_completed,
              snap.jobs_completed as f64 / dt);
     println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch_size);

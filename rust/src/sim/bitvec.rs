@@ -45,6 +45,45 @@ impl BitVec {
         v
     }
 
+    /// Overwrite the contents from a bool slice of the same length — the
+    /// allocation-free refill used by scratch pools (packed-query reuse
+    /// in `PpacUnit::serve_1bit`).
+    pub fn copy_from_bools(&mut self, bits: &[bool]) {
+        debug_assert_eq!(bits.len(), self.len);
+        self.words.fill(0);
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                self.words[i / 64] |= 1 << (i % 64);
+            }
+        }
+    }
+
+    /// Spread the bits to strided positions: bit `j` of `self` lands at
+    /// position `j·stride + offset` of the result (all other positions
+    /// 0). This is the §III-C2 plane-input packing — an L-bit plane of
+    /// n_eff entries becomes the length-N input word that activates only
+    /// the significance-`offset` columns of a K-bit column layout.
+    pub fn spread(&self, stride: usize, offset: usize) -> BitVec {
+        let mut out = BitVec::zeros(self.len * stride);
+        self.spread_into(stride, offset, &mut out.words);
+        out
+    }
+
+    /// Allocation-free form of [`BitVec::spread`]: overwrite a
+    /// caller-provided packed word buffer of length
+    /// `(len·stride).div_ceil(64)`.
+    pub fn spread_into(&self, stride: usize, offset: usize, out: &mut [u64]) {
+        debug_assert!(offset < stride);
+        debug_assert_eq!(out.len(), (self.len * stride).div_ceil(64));
+        out.fill(0);
+        for j in 0..self.len {
+            if self.get(j) {
+                let pos = j * stride + offset;
+                out[pos / 64] |= 1 << (pos % 64);
+            }
+        }
+    }
+
     pub fn from_fn(len: usize, f: impl Fn(usize) -> bool) -> Self {
         let mut v = Self::zeros(len);
         for i in 0..len {
@@ -248,6 +287,44 @@ mod tests {
             }
             // Tail must stay clear so popcounts are exact.
             assert_eq!(out.popcount(), out.to_bools().iter().filter(|&&b| b).count() as u32);
+        }
+    }
+
+    #[test]
+    fn copy_from_bools_overwrites_all_words() {
+        let mut rng = Xoshiro256pp::seeded(7);
+        let mut v = BitVec::from_bools(&rng.bits(130));
+        let fresh = rng.bits(130);
+        v.copy_from_bools(&fresh);
+        assert_eq!(v, BitVec::from_bools(&fresh), "stale bits must not survive");
+    }
+
+    #[test]
+    fn spread_matches_per_bit_select_plane_semantics() {
+        // plane [1,0,1] spread to stride 4, offset 1: bits at 1, 9.
+        let plane = BitVec::from_bools(&[true, false, true]);
+        let x = plane.spread(4, 1);
+        assert_eq!(x.len(), 12);
+        let want: Vec<usize> = vec![1, 9];
+        for i in 0..12 {
+            assert_eq!(x.get(i), want.contains(&i), "bit {i}");
+        }
+        // spread_into agrees and clears stale words.
+        let mut words = vec![u64::MAX; 1];
+        plane.spread_into(4, 1, &mut words);
+        assert_eq!(words.as_slice(), x.words());
+    }
+
+    #[test]
+    fn spread_straddles_word_boundaries() {
+        let mut rng = Xoshiro256pp::seeded(8);
+        let bits = rng.bits(40);
+        let plane = BitVec::from_bools(&bits);
+        let x = plane.spread(3, 2); // 120 bits, crosses one word boundary
+        for (j, &b) in bits.iter().enumerate() {
+            assert_eq!(x.get(j * 3 + 2), b, "entry {j}");
+            assert!(!x.get(j * 3), "inactive column {j}");
+            assert!(!x.get(j * 3 + 1), "inactive column {j}");
         }
     }
 

@@ -333,6 +333,7 @@ fn backends_agree_through_the_serving_stack() {
             workers: 2,
             max_batch: 16,
             backend,
+            ..Default::default()
         })
         .unwrap();
         let id = coord.register_matrix(a.clone()).unwrap();
@@ -346,6 +347,82 @@ fn backends_agree_through_the_serving_stack() {
         let want: Vec<i64> = a.iter().map(|row| golden::pm1_inner(row, x)).collect();
         assert_eq!(out, &JobOutput::Ints(want));
     }
+}
+
+/// Multi-bit vector-mode jobs end to end: sharded 100×150 matrix over
+/// 64×64 tiles (2×3 grid, both dimensions padded), every Table I format
+/// pairing — including oddint, whose +1 pads the gather must correct.
+#[test]
+fn sharded_multibit_jobs_match_golden_across_format_pairings() {
+    use ppac::coordinator::MultibitSpec;
+    use ppac::formats::NumberFormat;
+    use ppac::isa::MatrixInterp;
+
+    let mut rng = Xoshiro256pp::seeded(91);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(64, 64),
+        workers: 3,
+        max_batch: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let a: Vec<Vec<bool>> = (0..100).map(|_| rng.bits(150)).collect();
+    let id = coord.register_matrix(a.clone()).unwrap();
+
+    for (x_fmt, matrix) in [
+        (NumberFormat::Uint, MatrixInterp::Pm1),
+        (NumberFormat::Int, MatrixInterp::Pm1),
+        (NumberFormat::OddInt, MatrixInterp::Pm1),
+        (NumberFormat::Uint, MatrixInterp::U01),
+        (NumberFormat::Int, MatrixInterp::U01),
+    ] {
+        let lbits = 4u32;
+        let spec = MultibitSpec { lbits, x_fmt, matrix };
+        let xs: Vec<Vec<i64>> = (0..12)
+            .map(|_| (0..150).map(|_| x_fmt.sample(&mut rng, lbits)).collect())
+            .collect();
+        let inputs: Vec<JobInput> = xs
+            .iter()
+            .map(|x| JobInput::Multibit { x: x.clone(), spec })
+            .collect();
+        let results = coord.submit_batch(id, &inputs).unwrap().wait().unwrap();
+        let a_int: Vec<Vec<i64>> = a
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&b| match matrix {
+                        MatrixInterp::Pm1 => 2 * b as i64 - 1,
+                        MatrixInterp::U01 => b as i64,
+                    })
+                    .collect()
+            })
+            .collect();
+        for (x, r) in xs.iter().zip(&results) {
+            let want = golden::mvp_i64(&a_int, x);
+            assert_eq!(r.output, JobOutput::Ints(want), "fmt={x_fmt:?} matrix={matrix:?}");
+            assert_eq!(r.fan_out, 6, "2x3 shard grid");
+        }
+    }
+
+    // Malformed multibit jobs are rejected at submit time, not dropped
+    // by a worker mid-scatter: out-of-format values, overflowing L, and
+    // the illegal oddint × {0,1}-matrix pairing.
+    let bad = JobInput::Multibit {
+        x: vec![99i64; 150],
+        spec: MultibitSpec { lbits: 4, x_fmt: NumberFormat::Uint, matrix: MatrixInterp::U01 },
+    };
+    assert!(coord.submit(id, bad).is_err());
+    let wide = JobInput::Multibit {
+        x: vec![0i64; 150],
+        spec: MultibitSpec { lbits: 40, x_fmt: NumberFormat::Uint, matrix: MatrixInterp::U01 },
+    };
+    assert!(coord.submit(id, wide).is_err());
+    let odd01 = JobInput::Multibit {
+        x: vec![1i64; 150],
+        spec: MultibitSpec { lbits: 4, x_fmt: NumberFormat::OddInt, matrix: MatrixInterp::U01 },
+    };
+    assert!(coord.submit(id, odd01).is_err());
+    coord.shutdown();
 }
 
 #[test]

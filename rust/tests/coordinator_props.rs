@@ -162,6 +162,7 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
             workers,
             max_batch: 8,
             backend,
+            ..Default::default()
         })
         .map_err(|e| e.to_string())?;
 

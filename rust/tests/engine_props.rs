@@ -4,8 +4,10 @@
 //! (N = 1, 63, 64, 65, 200 straddle every u64 packing boundary), every
 //! served op mode, and random thresholds/offsets.
 
-use ppac::engine::Backend;
-use ppac::isa::{BankCombine, OpMode, PpacUnit, TermKind};
+use ppac::engine::{Backend, EngineOpts};
+use ppac::formats::NumberFormat;
+use ppac::golden;
+use ppac::isa::{BankCombine, MatrixInterp, OpMode, PpacUnit, TermKind};
 use ppac::sim::scalar::ScalarPpac;
 use ppac::sim::{BitVec, CycleInput, PpacConfig, RowAluCtrl};
 use ppac::util::prop::Runner;
@@ -247,6 +249,229 @@ fn update_row_visible_to_both_backends() {
     let got_c = cycle.cam_batch(std::slice::from_ref(&fresh)).unwrap();
     assert_eq!(got_b, got_c);
     assert!(got_b[0][7], "updated row must complete-match its own word");
+}
+
+/// A legal config for multi-bit tests: K/L headroom up to 8 bits.
+fn multibit_cfg(m: usize, n: usize) -> PpacConfig {
+    let mut c = cfg(m, n);
+    c.max_k = 8;
+    c.max_l = 8;
+    c
+}
+
+/// Random values representable in (fmt, lbits).
+fn rand_vals(rng: &mut Xoshiro256pp, n: usize, lbits: u32, fmt: NumberFormat) -> Vec<i64> {
+    (0..n).map(|_| fmt.sample(rng, lbits)).collect()
+}
+
+/// Blocked-planes == cycle-accurate == golden for the §III-C1 vector
+/// modes: L ∈ {1, 2, 4, 8}, ragged widths straddling every u64 packing
+/// boundary, all three Table I format pairings, 1 and 4 sweep threads.
+/// Both backends must also charge the identical analytic L·Q + drain
+/// cycle count.
+#[test]
+fn multibit_vector_blocked_planes_match_cycle_and_golden() {
+    let mut rng = Xoshiro256pp::seeded(602);
+    let m = 16;
+    for n in [1usize, 63, 64, 65, 200] {
+        for lbits in [1u32, 2, 4, 8] {
+            for (x_fmt, matrix) in [
+                (NumberFormat::Uint, MatrixInterp::Pm1),
+                (NumberFormat::Int, MatrixInterp::Pm1),
+                (NumberFormat::OddInt, MatrixInterp::Pm1),
+                (NumberFormat::Uint, MatrixInterp::U01),
+                (NumberFormat::Int, MatrixInterp::U01),
+            ] {
+                let c = multibit_cfg(m, n);
+                let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+                let mode = OpMode::MultibitVector { lbits, x_fmt, matrix };
+                let xs: Vec<Vec<i64>> =
+                    (0..3).map(|_| rand_vals(&mut rng, n, lbits, x_fmt)).collect();
+
+                let mut cycle = unit_with(Backend::CycleAccurate, c, &a, &mode);
+                let want_ys = cycle.mvp_multibit_batch(&xs).unwrap();
+                let want_cycles = cycle.compute_cycles();
+                let ctx = format!("L={lbits} {x_fmt:?}/{matrix:?} n={n}");
+
+                let a_int: Vec<Vec<i64>> = a
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .map(|&b| match matrix {
+                                MatrixInterp::Pm1 => 2 * b as i64 - 1,
+                                MatrixInterp::U01 => b as i64,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                for (xi, x) in xs.iter().enumerate() {
+                    assert_eq!(want_ys[xi], golden::mvp_i64(&a_int, x), "golden {ctx} x{xi}");
+                }
+
+                for threads in [1usize, 4] {
+                    let mut blocked = unit_with(Backend::Blocked, c, &a, &mode);
+                    blocked.configure_engine(
+                        Backend::Blocked,
+                        EngineOpts { threads, split_rows: 8 },
+                    );
+                    let got = blocked.mvp_multibit_batch(&xs).unwrap();
+                    assert_eq!(got, want_ys, "blocked vs cycle: {ctx} threads={threads}");
+                    assert_eq!(
+                        blocked.compute_cycles(),
+                        want_cycles,
+                        "cycle accounting: {ctx} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Blocked-planes == cycle-accurate == golden for the §III-C2
+/// interleaved K-bit-matrix modes: K, L ∈ {1, 2, 4, 8}, uint/int
+/// operand pairings, ragged entry counts, 1 and 4 sweep threads.
+#[test]
+fn multibit_matrix_blocked_planes_match_cycle_and_golden() {
+    let mut rng = Xoshiro256pp::seeded(603);
+    let m = 16;
+    for (kbits, lbits) in [(1u32, 1u32), (1, 8), (2, 4), (4, 2), (4, 4), (8, 1), (8, 8)] {
+        for (a_fmt, x_fmt) in [
+            (NumberFormat::Uint, NumberFormat::Uint),
+            (NumberFormat::Uint, NumberFormat::Int),
+            (NumberFormat::Int, NumberFormat::Uint),
+            (NumberFormat::Int, NumberFormat::Int),
+        ] {
+            for n_eff in [1usize, 21] {
+                let n = n_eff * kbits as usize;
+                let c = multibit_cfg(m, n);
+                let a_int: Vec<Vec<i64>> =
+                    (0..m).map(|_| rand_vals(&mut rng, n_eff, kbits, a_fmt)).collect();
+                let mode = OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt };
+                let xs: Vec<Vec<i64>> =
+                    (0..3).map(|_| rand_vals(&mut rng, n_eff, lbits, x_fmt)).collect();
+                let ctx = format!("K={kbits} L={lbits} {a_fmt:?}x{x_fmt:?} n_eff={n_eff}");
+
+                let load = |backend: Backend| -> PpacUnit {
+                    let mut u = PpacUnit::new(c).unwrap();
+                    u.set_backend(backend);
+                    u.load_multibit_matrix(&a_int, kbits, a_fmt).unwrap();
+                    u.configure(mode.clone()).unwrap();
+                    u
+                };
+                let mut cycle = load(Backend::CycleAccurate);
+                let want_ys = cycle.mvp_multibit_batch(&xs).unwrap();
+                let want_cycles = cycle.compute_cycles();
+                assert_eq!(
+                    want_cycles,
+                    3 * (kbits * lbits) as u64 + 1,
+                    "analytic K·L·Q + drain: {ctx}"
+                );
+                for (xi, x) in xs.iter().enumerate() {
+                    assert_eq!(want_ys[xi], golden::mvp_i64(&a_int, x), "golden {ctx} x{xi}");
+                }
+
+                for threads in [1usize, 4] {
+                    let mut blocked = load(Backend::Blocked);
+                    blocked.configure_engine(
+                        Backend::Blocked,
+                        EngineOpts { threads, split_rows: 8 },
+                    );
+                    let got = blocked.mvp_multibit_batch(&xs).unwrap();
+                    assert_eq!(got, want_ys, "blocked vs cycle: {ctx} threads={threads}");
+                    assert_eq!(
+                        blocked.compute_cycles(),
+                        want_cycles,
+                        "cycle accounting: {ctx} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Randomized multi-bit equivalence: random geometry, K/L, formats,
+/// batch sizes and thread counts — the blocked-planes fold must stay
+/// bit-exact against the pipeline replay.
+#[test]
+fn multibit_blocked_equals_cycle_property() {
+    Runner::new(16).check("multibit-blocked-vs-cycle", |g| {
+        let mut rng = g.rng.fork();
+        let m = 4 * g.dim(8); // 4..32
+        let interleaved = rng.bit();
+        let (mode, n) = if interleaved {
+            let kbits = 1 + rng.below(8) as u32;
+            let lbits = 1 + rng.below(8) as u32;
+            let n_eff = 1 + rng.below(24) as usize;
+            let a_fmt = *g.choose(&[NumberFormat::Uint, NumberFormat::Int]);
+            let x_fmt = *g.choose(&[NumberFormat::Uint, NumberFormat::Int]);
+            (OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt }, n_eff * kbits as usize)
+        } else {
+            let lbits = 1 + rng.below(8) as u32;
+            let (x_fmt, matrix) = *g.choose(&[
+                (NumberFormat::Uint, MatrixInterp::Pm1),
+                (NumberFormat::Int, MatrixInterp::Pm1),
+                (NumberFormat::OddInt, MatrixInterp::Pm1),
+                (NumberFormat::Uint, MatrixInterp::U01),
+                (NumberFormat::Int, MatrixInterp::U01),
+            ]);
+            (OpMode::MultibitVector { lbits, x_fmt, matrix }, 1 + rng.below(96) as usize)
+        };
+        let c = {
+            let mut c = multibit_cfg(m, n);
+            c.rows_per_bank = if m % 4 == 0 { 4 } else { m };
+            c
+        };
+        let q = 1 + rng.below(12) as usize;
+        let threads = *g.choose(&[1usize, 4]);
+
+        let build = |backend: Backend| -> PpacUnit {
+            let mut u = PpacUnit::new(c).unwrap();
+            u.configure_engine(backend, EngineOpts { threads, split_rows: 8 });
+            u
+        };
+        let (mut blocked, mut cycle) = match &mode {
+            OpMode::MultibitMatrix { kbits, a_fmt, .. } => {
+                let n_eff = n / *kbits as usize;
+                let a_int: Vec<Vec<i64>> =
+                    (0..m).map(|_| rand_vals(&mut rng, n_eff, *kbits, *a_fmt)).collect();
+                let mut b = build(Backend::Blocked);
+                let mut cy = build(Backend::CycleAccurate);
+                for u in [&mut b, &mut cy] {
+                    u.load_multibit_matrix(&a_int, *kbits, *a_fmt).unwrap();
+                    u.configure(mode.clone()).unwrap();
+                }
+                (b, cy)
+            }
+            _ => {
+                let a: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
+                let mut b = build(Backend::Blocked);
+                let mut cy = build(Backend::CycleAccurate);
+                for u in [&mut b, &mut cy] {
+                    u.load_bit_matrix(&a).unwrap();
+                    u.configure(mode.clone()).unwrap();
+                }
+                (b, cy)
+            }
+        };
+        let (lbits, x_fmt, n_in) = match &mode {
+            OpMode::MultibitMatrix { kbits, lbits, x_fmt, .. } => {
+                (*lbits, *x_fmt, n / *kbits as usize)
+            }
+            OpMode::MultibitVector { lbits, x_fmt, .. } => (*lbits, *x_fmt, n),
+            _ => unreachable!(),
+        };
+        let xs: Vec<Vec<i64>> = (0..q).map(|_| rand_vals(&mut rng, n_in, lbits, x_fmt)).collect();
+        let got_b = blocked.mvp_multibit_batch(&xs).map_err(|e| e.to_string())?;
+        let got_c = cycle.mvp_multibit_batch(&xs).map_err(|e| e.to_string())?;
+        ppac::prop_assert_eq!(got_b, got_c, "{} m={m} n={n} q={q}", mode.name());
+        ppac::prop_assert_eq!(
+            blocked.compute_cycles(),
+            cycle.compute_cycles(),
+            "cycles {} m={m} n={n}",
+            mode.name()
+        );
+        Ok(())
+    });
 }
 
 /// Empty batches are free on both backends.
