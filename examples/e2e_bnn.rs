@@ -22,7 +22,7 @@
 use std::time::Instant;
 
 use ppac::apps::{BnnLayer, BnnOnPpac, TeacherDataset};
-use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput};
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput, MatrixSpec};
 use ppac::isa::{OpMode, PpacUnit};
 use ppac::power::{EnergyModel, ImplModel};
 use ppac::runtime::Runtime;
@@ -152,7 +152,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         max_batch: 64,
         ..Default::default()
     })?;
-    let mid = coord.register_matrix(layers[0].weights.clone())?;
+    let mid = coord.register(MatrixSpec::Bit1 { rows: layers[0].weights.clone() })?;
     let t_serve = Instant::now();
     let handles: Vec<_> = ds
         .inputs
@@ -162,7 +162,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut served = 0usize;
     for (i, h) in handles.into_iter().enumerate() {
         let r = h.wait()?;
-        let JobOutput::Ints(y) = r.output else { panic!("wrong output kind") };
+        let Ok(JobOutput::Ints(y)) = r.output else { panic!("wrong output kind") };
         // The coordinator's raw MVP plus the bias must equal the layer's
         // golden pre-activation.
         let want = layers[0].preact(&ds.inputs[i]);

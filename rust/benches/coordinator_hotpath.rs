@@ -7,7 +7,7 @@
 //! name → {median_ns, mad_ns, per_sec, unit} — so CI can track the perf
 //! trajectory across PRs (`PPAC_BENCH_FAST=1` for the smoke mode).
 
-use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, MatrixSpec};
 use ppac::engine::{Backend, Blocked, Engine, EngineOpts, OpKernel};
 use ppac::formats::NumberFormat;
 use ppac::isa::{OpMode, PpacUnit};
@@ -217,7 +217,9 @@ fn main() {
         let mids: Vec<_> = (0..workers)
             .map(|_| {
                 coord
-                    .register_matrix((0..256).map(|_| rng.bits(256)).collect())
+                    .register(MatrixSpec::Bit1 {
+                        rows: (0..256).map(|_| rng.bits(256)).collect(),
+                    })
                     .unwrap()
             })
             .collect();
@@ -240,7 +242,7 @@ fn main() {
                 .collect();
             let mut acc = 0i64;
             for h in handles {
-                if let ppac::coordinator::JobOutput::Ints(y) = h.wait().unwrap().output {
+                if let Ok(ppac::coordinator::JobOutput::Ints(y)) = h.wait().unwrap().output {
                     acc += y[0];
                 }
             }
@@ -266,7 +268,7 @@ fn main() {
     })
     .unwrap();
     let mid = coord
-        .register_matrix((0..256).map(|_| rng.bits(256)).collect())
+        .register(MatrixSpec::Bit1 { rows: (0..256).map(|_| rng.bits(256)).collect() })
         .unwrap();
     let x = rng.bits(256);
     let s = bench.run("coordinator_single_job_latency", || {
@@ -293,7 +295,7 @@ fn main() {
     })
     .unwrap();
     let mid = coord
-        .register_matrix((0..300).map(|_| rng.bits(600)).collect())
+        .register(MatrixSpec::Bit1 { rows: (0..300).map(|_| rng.bits(600)).collect() })
         .unwrap();
     let batch: Vec<JobInput> = (0..64)
         .map(|_| JobInput::Pm1Mvp(rng.bits(600)))
@@ -302,7 +304,7 @@ fn main() {
         let h = coord.submit_batch(mid, &batch).unwrap();
         let mut acc = 0i64;
         for r in h.wait().unwrap() {
-            if let ppac::coordinator::JobOutput::Ints(y) = r.output {
+            if let Ok(ppac::coordinator::JobOutput::Ints(y)) = r.output {
                 acc += y[0];
             }
         }

@@ -18,9 +18,10 @@ use crate::error::{PpacError, Result};
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
 
-/// Validate that `matrix` is a non-empty rectangle of bit rows; returns
-/// its (M, N) shape. Ragged rows are an error, never a panic.
-pub fn rect_shape(matrix: &[Vec<bool>]) -> Result<(usize, usize)> {
+/// Validate that `matrix` is a non-empty rectangle of rows (bits or
+/// integer entries); returns its (M, N) shape. Ragged rows are an
+/// error, never a panic.
+pub fn rect_shape<T>(matrix: &[Vec<T>]) -> Result<(usize, usize)> {
     let m = matrix.len();
     if m == 0 {
         return Err(PpacError::Config("matrix has no rows".into()));
@@ -96,8 +97,10 @@ impl Partition {
     }
 
     /// The (rb, cb) sub-block of `matrix`, clipped at the matrix edges
-    /// (unpadded — tiles pad on load).
-    pub fn block(&self, matrix: &[Vec<bool>], rb: usize, cb: usize) -> Vec<Vec<bool>> {
+    /// (unpadded — tiles pad on load). Generic over the cell type: bit
+    /// rows for 1-bit matrices, integer entries for K-bit matrices
+    /// partitioned entry-aligned.
+    pub fn block<T: Clone>(&self, matrix: &[Vec<T>], rb: usize, cb: usize) -> Vec<Vec<T>> {
         let cols = self.col_range(cb);
         self.row_range(rb)
             .map(|r| matrix[r][cols.clone()].to_vec())

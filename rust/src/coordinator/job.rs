@@ -5,10 +5,12 @@
 //! block. Workers only ever see shard jobs; the gather stage reduces the
 //! column-block partials back into the logical result.
 
+use std::fmt;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use crate::apps::tiled::Partition;
+use crate::error::PpacError;
 use crate::formats::NumberFormat;
 use crate::isa::MatrixInterp;
 
@@ -18,6 +20,134 @@ pub type MatrixId = u64;
 /// Identifier of one resident-able shard: a tile-sized block of a
 /// registered matrix (a 1×1-grid matrix has exactly one shard).
 pub type ShardId = u64;
+
+/// What a client registers with
+/// [`Coordinator::register`](crate::coordinator::Coordinator::register):
+/// the unified entry point for every matrix kind the array serves.
+///
+/// - [`MatrixSpec::Bit1`] — an M×N bit matrix; serves the three 1-bit
+///   modes and §III-C1 multi-bit *vector* jobs (the stored bits
+///   interpreted per-job as ±1 or {0,1}).
+/// - [`MatrixSpec::Multibit`] — an M×N K-bit integer matrix in a Table I
+///   `format`; shards are stored in the §III-C2 interleaved column
+///   layout (entry j owns K physical columns) with **entry-aligned
+///   column blocking**: each group of `tile_n / k` logical entries maps
+///   to exactly `tile_n` physical columns, so no entry ever straddles a
+///   shard boundary. Serves [`JobInput::Multibit`] jobs only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MatrixSpec {
+    /// An M×N 1-bit matrix (any rectangular shape; ragged rows are an
+    /// error).
+    Bit1 { rows: Vec<Vec<bool>> },
+    /// An M×N matrix of K-bit integers in `format` (any rectangular
+    /// shape). `k` must divide the tile width and fit the tile's
+    /// row-ALU limit `max_k`; values must be representable as K-bit
+    /// `format` numbers.
+    Multibit {
+        rows: Vec<Vec<i64>>,
+        k: u32,
+        format: NumberFormat,
+    },
+}
+
+/// The registered storage kind of a matrix — what the scatter stage
+/// checks jobs against and the gather stage derives its pad algebra
+/// from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixKind {
+    /// 1-bit rows (from [`MatrixSpec::Bit1`]).
+    Bit1,
+    /// K-bit interleaved rows (from [`MatrixSpec::Multibit`]).
+    Multibit { kbits: u32, a_fmt: NumberFormat },
+}
+
+impl MatrixKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixKind::Bit1 => "bit1",
+            MatrixKind::Multibit { .. } => "multibit",
+        }
+    }
+}
+
+/// Why a job failed — carried end-to-end from the worker (or the
+/// engine layer beneath it) through the gather into
+/// [`JobResult::output`], so a client sees *what* went wrong instead of
+/// a generic dropped-shard error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// The shard left the registry between scatter and serve — the
+    /// submit raced
+    /// [`Coordinator::unregister_matrix`](crate::coordinator::Coordinator::unregister_matrix)
+    /// or a TTL sweep.
+    UnknownShard { shard: ShardId },
+    /// The job's operation cannot run against the registered matrix
+    /// kind (e.g. a 1-bit mode against a K-bit matrix).
+    KindMismatch {
+        matrix: &'static str,
+        job: &'static str,
+    },
+    /// An input value not representable in the job's number format
+    /// (engine-layer range check).
+    FormatRange {
+        value: i64,
+        nbits: u32,
+        fmt: &'static str,
+    },
+    /// A dimension the engine rejected (shard-level shape mismatch).
+    DimMismatch {
+        context: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// An unsupported configuration: illegal format pairing, L outside
+    /// 1..=32, K/L beyond the tile's row-ALU limits, bad geometry.
+    Unsupported { reason: String },
+    /// The worker thread disappeared before every shard partial
+    /// arrived.
+    WorkerLost,
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::UnknownShard { shard } => {
+                write!(f, "shard {shard} left the registry before serving (unregistered?)")
+            }
+            JobError::KindMismatch { matrix, job } => {
+                write!(f, "job kind {job} cannot run against a {matrix} matrix")
+            }
+            JobError::FormatRange { value, nbits, fmt: name } => {
+                write!(f, "value {value} not representable as {nbits}-bit {name}")
+            }
+            JobError::DimMismatch { context, expected, got } => {
+                write!(f, "dimension mismatch: {context} (expected {expected}, got {got})")
+            }
+            JobError::Unsupported { reason } => write!(f, "unsupported job: {reason}"),
+            JobError::WorkerLost => write!(f, "a worker disappeared before answering"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<PpacError> for JobError {
+    /// Collapse an engine/unit-layer error into the typed job error the
+    /// serving stack ships to clients (this is what makes the old
+    /// submit-time re-validation redundant).
+    fn from(e: PpacError) -> Self {
+        match e {
+            PpacError::FormatRange { value, nbits, fmt } => {
+                JobError::FormatRange { value, nbits, fmt }
+            }
+            PpacError::DimMismatch { context, expected, got } => {
+                JobError::DimMismatch { context, expected, got }
+            }
+            PpacError::Config(reason) => JobError::Unsupported { reason },
+            other => JobError::Unsupported { reason: other.to_string() },
+        }
+    }
+}
 
 /// Static shape of a multi-bit vector-mode job (§III-C1): L-bit input
 /// vectors in `x_fmt` against the registered 1-bit matrix interpreted
@@ -32,7 +162,10 @@ pub struct MultibitSpec {
     pub lbits: u32,
     /// Number format of the input entries (Table I).
     pub x_fmt: NumberFormat,
-    /// Interpretation of the stored bits (±1 or {0,1}).
+    /// Interpretation of the stored bits (±1 or {0,1}) when the job
+    /// targets a 1-bit matrix. Ignored for matrices registered via
+    /// [`MatrixSpec::Multibit`], whose stored format is part of the
+    /// registration.
     pub matrix: MatrixInterp,
 }
 
@@ -139,6 +272,17 @@ pub enum ModeKey {
     Multibit(MultibitSpec),
 }
 
+impl ModeKey {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModeKey::Pm1Mvp => "pm1_mvp",
+            ModeKey::Hamming => "hamming",
+            ModeKey::Gf2 => "gf2",
+            ModeKey::Multibit(_) => "multibit",
+        }
+    }
+}
+
 /// The result payload.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum JobOutput {
@@ -150,7 +294,11 @@ pub enum JobOutput {
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub job_id: u64,
-    pub output: JobOutput,
+    /// The job's payload — or the typed reason it failed. Workers ship
+    /// a `Result` per shard partial, and the gather marks a logical job
+    /// failed if *any* of its shard partials errored (first error
+    /// wins).
+    pub output: Result<JobOutput, JobError>,
     /// Wall-clock service latency (submit → result). Gathered results
     /// report the latency of their slowest shard partial.
     pub latency_us: f64,
@@ -184,11 +332,18 @@ pub struct Job {
 }
 
 /// Host-side reduction geometry for gathering one matrix's shard
-/// partials: the matrix's partition plus the batch's operation mode.
+/// partials: the matrix's partition, the batch's operation mode, and
+/// the per-row correction each zero-padded boundary column contributes.
 #[derive(Debug, Clone, Copy)]
 pub struct GatherPlan {
     pub part: Partition,
     pub mode: ModeKey,
+    /// Added per padded column per row after the reduction. Resolved at
+    /// scatter time from the matrix kind and the job mode: −1 for
+    /// ±1/Hamming partials (a pad matches under XNOR), the oddint
+    /// corrections for multi-bit jobs (`−Z_a · pad_x`, the pad entry's
+    /// decoded product), 0 for GF(2) and the self-correcting pairings.
+    pub pad_adjust: i64,
 }
 
 impl GatherPlan {

@@ -37,6 +37,9 @@ pub struct Metrics {
     pub jobs_submitted: AtomicU64,
     /// Logical jobs whose gather completed.
     pub jobs_completed: AtomicU64,
+    /// Completed logical jobs whose output was a typed `JobError`
+    /// (subset of `jobs_completed`).
+    pub jobs_failed: AtomicU64,
     /// Shard jobs produced by the scatter stage (the fan-out).
     pub shard_jobs_submitted: AtomicU64,
     /// Shard jobs served by workers.
@@ -45,6 +48,10 @@ pub struct Metrics {
     pub gathers: AtomicU64,
     /// Matrices dropped via `unregister_matrix`.
     pub matrices_unregistered: AtomicU64,
+    /// Matrices swept by the registry TTL (idle longer than
+    /// `CoordinatorConfig::registry_ttl`; not counted in
+    /// `matrices_unregistered`).
+    pub auto_evictions: AtomicU64,
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
     pub matrix_loads: AtomicU64,
@@ -126,10 +133,12 @@ impl Metrics {
         MetricsSnapshot {
             jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             shard_jobs_submitted: self.shard_jobs_submitted.load(Ordering::Relaxed),
             shard_jobs_completed: self.shard_jobs_completed.load(Ordering::Relaxed),
             gathers: self.gathers.load(Ordering::Relaxed),
             matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
+            auto_evictions: self.auto_evictions.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
             matrix_loads: self.matrix_loads.load(Ordering::Relaxed),
@@ -166,10 +175,12 @@ pub struct WorkerSnapshot {
 pub struct MetricsSnapshot {
     pub jobs_submitted: u64,
     pub jobs_completed: u64,
+    pub jobs_failed: u64,
     pub shard_jobs_submitted: u64,
     pub shard_jobs_completed: u64,
     pub gathers: u64,
     pub matrices_unregistered: u64,
+    pub auto_evictions: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub matrix_loads: u64,

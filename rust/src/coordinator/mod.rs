@@ -2,12 +2,17 @@
 //!
 //! The paper's envisioned deployment keeps the matrix A static while
 //! input vectors stream at high rate (§IV-A). The coordinator turns that
-//! into a service for **arbitrary-size** matrices:
+//! into a service for **arbitrary-size** matrices of either storage
+//! kind:
 //!
-//! 1. **Register** — `register_matrix` accepts any rectangular M×N bit
-//!    matrix. It is partitioned (via [`crate::apps::tiled::Partition`])
-//!    into ⌈M/Mt⌉ × ⌈N/Nt⌉ tile-sized *shards*; boundary shards are
-//!    zero-padded onto the tile at load time. Each shard is an
+//! 1. **Register** — [`Coordinator::register`] accepts a [`MatrixSpec`]:
+//!    an M×N bit matrix ([`MatrixSpec::Bit1`]) or an M×N K-bit integer
+//!    matrix ([`MatrixSpec::Multibit`], §III-C2 interleaved layout). The
+//!    matrix is partitioned (via [`crate::apps::tiled::Partition`]) into
+//!    tile-sized *shards*, zero-padded at the boundary; K-bit matrices
+//!    shard with **entry-aligned column blocking** (each group of
+//!    `tile_n / K` entries maps to K·(tile_n/K) = tile_n physical
+//!    columns), so an entry never straddles shards. Each shard is an
 //!    independently resident-able unit with its own worker affinity.
 //! 2. **Scatter** — `submit` / `submit_batch` validate against the
 //!    logical shape, split the input vector into column blocks, and fan
@@ -20,25 +25,36 @@
 //!    the one-MVP-per-cycle pipeline, which `submit_batch` feeds
 //!    directly by shipping a whole batch through one response channel.
 //! 3. **Gather** — column-block partials add exactly for every supported
-//!    mode (±1 and Hamming partials by integer addition, GF(2) by XOR),
-//!    so the host reduces them into the final y. Zero-padded columns
-//!    (a = 0, x = 0) match under XNOR and contribute +1 per row per pad
-//!    column; the gather subtracts the known pad count deterministically.
-//!    Padded rows are simply truncated.
+//!    mode (±1/Hamming/multi-bit partials by integer addition, GF(2) by
+//!    XOR), and the known pad contribution is corrected per row
+//!    ([`GatherPlan::pad_adjust`]). The reduction runs **off the caller
+//!    thread** on a small reducer pool: partials fold as they arrive, so
+//!    a client can scatter its next batch while the previous one
+//!    gathers, and [`BatchHandle`]/[`JobHandle`] offer non-blocking
+//!    `try_wait` / bounded `wait_timeout` polling on top of the blocking
+//!    `wait`.
+//! 4. **Unregister** — [`Coordinator::unregister_matrix`] drops a
+//!    matrix's shards from the registry, releases affinities/placement
+//!    counts and evicts resident copies. With
+//!    [`CoordinatorConfig::registry_ttl`] set, matrices idle longer than
+//!    the TTL are swept automatically on registry/submit activity (the
+//!    `auto_evictions` metric counts them).
 //!
-//! 4. **Unregister** — `unregister_matrix` drops a matrix's shards from
-//!    the registry, releases their worker affinities/placement counts
-//!    and evicts resident copies, so the shard registry no longer grows
-//!    forever (the eviction follow-up from the sharded-serving PR).
+//! **Errors are typed end-to-end.** Workers answer every job: a serve
+//! failure ships a [`JobError`] (unknown shard, kind mismatch, format
+//! range, illegal pairing, K/L limits) through the same channel as a
+//! result, the gather marks the affected logical jobs, and
+//! [`JobResult::output`] delivers `Result<JobOutput, JobError>` to the
+//! client. Submit-time validation is structural only (shape, mode
+//! uniformity, matrix kind); everything else is enforced once, in the
+//! engine layer beneath the workers.
 //!
-//! Workers serve every batch — the three 1-bit modes *and* the §III-C1
-//! multi-bit vector modes ([`JobInput::Multibit`], all three Table I
-//! format pairings) — through the execution-engine layer
+//! Workers serve every batch through the execution-engine layer
 //! ([`crate::engine`]); the default [`Backend::Blocked`] kernel answers
 //! bit-exactly at memory-bandwidth speed while hardware cycles are still
-//! accounted by the analytic schedule model. Multi-bit partials add
-//! across column blocks exactly like their 1-bit counterparts; pad
-//! handling is mode-aware (oddint pads with +1, corrected at gather).
+//! accounted by the analytic schedule model. Per-worker engine options
+//! (sweep threads, row-split threshold) come from
+//! [`CoordinatorBuilder::worker_engine`].
 //!
 //! Threads + channels only (the image vendors no tokio); the public API
 //! is synchronous handles over mpsc.
@@ -49,21 +65,24 @@ pub mod worker;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, RwLock};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::apps::tiled::{rect_shape, Partition};
+use crate::engine::blocked_planes::zero_pattern_value;
 use crate::engine::{Backend, EngineOpts};
 use crate::error::{PpacError, Result};
+use crate::formats::NumberFormat;
 use crate::sim::PpacConfig;
 
 pub use job::{
-    GatherPlan, JobInput, JobOutput, JobResult, MatrixId, ModeKey, MultibitSpec, ShardId,
+    GatherPlan, JobError, JobInput, JobOutput, JobResult, MatrixId, MatrixKind, MatrixSpec,
+    ModeKey, MultibitSpec, ShardId,
 };
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
-use worker::{MatrixRegistry, Worker, WorkerMsg};
+use worker::{MatrixRegistry, ShardData, Worker, WorkerMsg};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone, Copy)]
@@ -77,8 +96,18 @@ pub struct CoordinatorConfig {
     /// enables tracing is forced onto `CycleAccurate` regardless.
     pub backend: Backend,
     /// Engine build options (sweep threads per worker, row-split
-    /// threshold) handed to the [`Backend::build`] factory.
+    /// threshold) handed to the [`Backend::build`] factory. Per-worker
+    /// overrides: [`CoordinatorBuilder::worker_engine`].
     pub engine: EngineOpts,
+    /// Reducer threads gathering shard partials off the caller thread
+    /// (overlapping gather with the next scatter). Small is right: a
+    /// reduction is a few integer adds per partial.
+    pub reducers: usize,
+    /// If set, matrices idle (no submit) for at least this long are
+    /// unregistered automatically. The sweep is opportunistic — it runs
+    /// on registry/submit activity, not on a dedicated timer thread —
+    /// and each sweep counts into the `auto_evictions` metric.
+    pub registry_ttl: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
@@ -89,25 +118,308 @@ impl Default for CoordinatorConfig {
             max_batch: 64,
             backend: Backend::Blocked,
             engine: EngineOpts::default(),
+            reducers: 2,
+            registry_ttl: None,
         }
     }
 }
 
-/// A registered matrix: its partition geometry plus the registry ids of
-/// its shards (row-major rb·col_blocks + cb).
-struct ShardedMatrix {
-    part: Partition,
-    shard_ids: Vec<ShardId>,
+/// Fluent construction of a [`Coordinator`], including the per-worker
+/// engine overrides a plain [`CoordinatorConfig`] (one setting for all
+/// workers) cannot express — e.g. extra sweep threads on the workers of
+/// a big-core/little-core part, or a NUMA-aware thread count per
+/// socket.
+///
+/// ```no_run
+/// use ppac::coordinator::Coordinator;
+/// use ppac::engine::EngineOpts;
+///
+/// let coord = Coordinator::builder()
+///     .workers(4)
+///     .engine(EngineOpts::threaded(1))
+///     .worker_engine(0, EngineOpts::threaded(4)) // worker 0: tall-tile pool
+///     .build()
+///     .unwrap();
+/// # coord.shutdown();
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorBuilder {
+    cfg: CoordinatorConfig,
+    worker_engine: Vec<(usize, EngineOpts)>,
 }
 
-/// Handle to an in-flight batch: one response channel carries every shard
-/// partial of every job in the batch; `wait` reduces them host-side.
+impl CoordinatorBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from an existing config (flags still override fluently).
+    pub fn from_config(cfg: CoordinatorConfig) -> Self {
+        Self { cfg, worker_engine: Vec::new() }
+    }
+
+    pub fn tile(mut self, tile: PpacConfig) -> Self {
+        self.cfg.tile = tile;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Default engine options for every worker without an override.
+    pub fn engine(mut self, opts: EngineOpts) -> Self {
+        self.cfg.engine = opts;
+        self
+    }
+
+    pub fn reducers(mut self, reducers: usize) -> Self {
+        self.cfg.reducers = reducers;
+        self
+    }
+
+    pub fn registry_ttl(mut self, ttl: Option<Duration>) -> Self {
+        self.cfg.registry_ttl = ttl;
+        self
+    }
+
+    /// Override the engine options of one worker (later calls for the
+    /// same worker win). `build` rejects indices outside `0..workers`.
+    pub fn worker_engine(mut self, worker: usize, opts: EngineOpts) -> Self {
+        self.worker_engine.push((worker, opts));
+        self
+    }
+
+    pub fn build(self) -> Result<Coordinator> {
+        Coordinator::start_with(self.cfg, &self.worker_engine)
+    }
+}
+
+/// A registered matrix: its partition geometry, storage kind, the
+/// registry ids of its shards (row-major rb·col_blocks + cb), and its
+/// last-use stamp for the TTL sweep.
+struct ShardedMatrix {
+    part: Partition,
+    kind: MatrixKind,
+    shard_ids: Vec<ShardId>,
+    last_used: Mutex<Instant>,
+    /// Batches scattered but not yet fully gathered. The TTL sweep
+    /// skips matrices with outstanding gathers, so a worker backlog
+    /// longer than the TTL cannot get its matrix evicted from under
+    /// queued jobs.
+    gathers_inflight: Arc<AtomicU64>,
+}
+
+/// Incremental host-side reduction of one batch's shard partials.
+/// Partials are absorbed one at a time (on a reducer thread), so the
+/// gather overlaps both the workers still serving and the client's next
+/// scatter.
+struct GatherState {
+    plan: GatherPlan,
+    base_job_id: u64,
+    count: usize,
+    int_acc: Vec<Vec<i64>>,
+    bit_acc: Vec<Vec<bool>>,
+    errors: Vec<Option<JobError>>,
+    recvd: Vec<usize>,
+    cycles: Vec<f64>,
+    latency: Vec<f64>,
+    max_batch: Vec<usize>,
+    worker0: Vec<usize>,
+    received: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl GatherState {
+    fn new(plan: GatherPlan, base_job_id: u64, count: usize, metrics: Arc<Metrics>) -> Self {
+        let padded_rows = plan.part.row_blocks * plan.part.tile_m;
+        let gf2 = plan.mode == ModeKey::Gf2;
+        Self {
+            plan,
+            base_job_id,
+            count,
+            int_acc: vec![vec![0i64; if gf2 { 0 } else { padded_rows }]; count],
+            bit_acc: vec![vec![false; if gf2 { padded_rows } else { 0 }]; count],
+            errors: vec![None; count],
+            recvd: vec![0; count],
+            cycles: vec![0f64; count],
+            latency: vec![0f64; count],
+            max_batch: vec![0usize; count],
+            worker0: vec![0usize; count],
+            received: 0,
+            metrics,
+        }
+    }
+
+    fn expected(&self) -> usize {
+        self.plan.shards() * self.count
+    }
+
+    fn complete(&self) -> bool {
+        self.received >= self.expected()
+    }
+
+    /// Fold one shard partial in. A malformed partial (stray id, wrong
+    /// payload kind) aborts the whole gather.
+    fn absorb(&mut self, partial: JobResult) -> Result<()> {
+        let part = self.plan.part;
+        let shards = self.plan.shards();
+        let gf2 = self.plan.mode == ModeKey::Gf2;
+        let idx = partial.job_id.wrapping_sub(self.base_job_id) as usize;
+        if idx >= self.count || partial.shard >= shards {
+            return Err(PpacError::Coordinator(format!(
+                "stray shard partial (job {}, shard {})",
+                partial.job_id, partial.shard
+            )));
+        }
+        let off = (partial.shard / part.col_blocks) * part.tile_m;
+        match &partial.output {
+            Ok(JobOutput::Ints(p)) if !gf2 => {
+                for (i, &v) in p.iter().enumerate() {
+                    self.int_acc[idx][off + i] += v;
+                }
+            }
+            Ok(JobOutput::Bits(p)) if gf2 => {
+                for (i, &b) in p.iter().enumerate() {
+                    self.bit_acc[idx][off + i] ^= b;
+                }
+            }
+            Ok(_) => {
+                return Err(PpacError::Coordinator("shard partial mode mismatch".into()))
+            }
+            Err(je) => {
+                // First typed error wins; the job is marked failed even
+                // if its other shards answered.
+                if self.errors[idx].is_none() {
+                    self.errors[idx] = Some(je.clone());
+                }
+            }
+        }
+        self.cycles[idx] += partial.cycles_share;
+        self.latency[idx] = self.latency[idx].max(partial.latency_us);
+        self.max_batch[idx] = self.max_batch[idx].max(partial.batch_size);
+        if partial.shard == 0 {
+            self.worker0[idx] = partial.worker;
+        }
+        self.recvd[idx] += 1;
+        self.received += 1;
+        Ok(())
+    }
+
+    /// The response channel disconnected early (worker thread gone):
+    /// every job still missing partials fails typed, instead of the
+    /// whole batch aborting.
+    fn mark_lost(&mut self) {
+        let shards = self.plan.shards();
+        for (idx, &got) in self.recvd.iter().enumerate() {
+            if got < shards && self.errors[idx].is_none() {
+                self.errors[idx] = Some(JobError::WorkerLost);
+            }
+        }
+        self.received = self.expected();
+    }
+
+    /// Strip padding, apply the pad correction, and emit one result per
+    /// job in submission order.
+    fn finish(&mut self) -> Vec<JobResult> {
+        let part = self.plan.part;
+        let shards = self.plan.shards();
+        let gf2 = self.plan.mode == ModeKey::Gf2;
+        let pad = self.plan.pad_adjust * part.pad_cols as i64;
+        let mut out = Vec::with_capacity(self.count);
+        let mut failed = 0u64;
+        for idx in 0..self.count {
+            let output = if let Some(je) = self.errors[idx].take() {
+                failed += 1;
+                Err(je)
+            } else if gf2 {
+                Ok(JobOutput::Bits(self.bit_acc[idx][..part.m].to_vec()))
+            } else {
+                let mut y = self.int_acc[idx][..part.m].to_vec();
+                if pad != 0 {
+                    for v in &mut y {
+                        *v += pad;
+                    }
+                }
+                Ok(JobOutput::Ints(y))
+            };
+            out.push(JobResult {
+                job_id: self.base_job_id + idx as u64,
+                output,
+                latency_us: self.latency[idx],
+                cycles_share: self.cycles[idx],
+                worker: self.worker0[idx],
+                batch_size: self.max_batch[idx],
+                shard: 0,
+                fan_out: shards,
+            });
+        }
+        self.metrics
+            .jobs_completed
+            .fetch_add(self.count as u64, Ordering::Relaxed);
+        if failed > 0 {
+            self.metrics.jobs_failed.fetch_add(failed, Ordering::Relaxed);
+        }
+        if shards > 1 {
+            self.metrics
+                .gathers
+                .fetch_add(self.count as u64, Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// One gather handed to the reducer pool.
+struct ReduceTask {
+    rx: Receiver<JobResult>,
+    state: GatherState,
+    done: Sender<Result<Vec<JobResult>>>,
+    /// The matrix's outstanding-gather count, released when this gather
+    /// ends (however it ends) — the TTL sweep's eviction guard.
+    inflight: Arc<AtomicU64>,
+}
+
+/// Reducer loop: drain each task's partials as they arrive, then ship
+/// the finished batch to its handle.
+fn run_reducer(tasks: Receiver<ReduceTask>) {
+    while let Ok(mut task) = tasks.recv() {
+        let outcome = (|| {
+            while !task.state.complete() {
+                match task.rx.recv() {
+                    Ok(partial) => task.state.absorb(partial)?,
+                    Err(_) => {
+                        task.state.mark_lost();
+                        break;
+                    }
+                }
+            }
+            Ok(task.state.finish())
+        })();
+        task.inflight.fetch_sub(1, Ordering::Relaxed);
+        // A dropped handle just means the client stopped caring.
+        let _ = task.done.send(outcome);
+    }
+}
+
+/// Handle to an in-flight batch. The reduction itself runs on the
+/// coordinator's reducer pool; the handle only waits for (or polls) the
+/// finished results, in submission order.
 pub struct BatchHandle {
     base_job_id: u64,
     count: usize,
-    plan: GatherPlan,
-    rx: Receiver<JobResult>,
-    metrics: Arc<Metrics>,
+    done: Receiver<Result<Vec<JobResult>>>,
+    taken: bool,
 }
 
 impl BatchHandle {
@@ -116,103 +428,57 @@ impl BatchHandle {
         self.base_job_id..self.base_job_id + self.count as u64
     }
 
-    /// Block until every shard partial has arrived; reduce column blocks
-    /// (and strip padding) and return one result per input, in submission
-    /// order.
-    pub fn wait(self) -> Result<Vec<JobResult>> {
-        let plan = self.plan;
-        let part = plan.part;
-        let shards = plan.shards();
-        let padded_rows = part.row_blocks * part.tile_m;
-        let count = self.count;
-        let gf2 = plan.mode == ModeKey::Gf2;
-        let mut int_acc = vec![vec![0i64; if gf2 { 0 } else { padded_rows }]; count];
-        let mut bit_acc = vec![vec![false; if gf2 { padded_rows } else { 0 }]; count];
-        let mut cycles = vec![0f64; count];
-        let mut latency = vec![0f64; count];
-        let mut max_batch = vec![0usize; count];
-        let mut worker0 = vec![0usize; count];
-        for _ in 0..shards * count {
-            let partial = self
-                .rx
-                .recv()
-                .map_err(|_| PpacError::Coordinator("worker dropped a shard job".into()))?;
-            let idx = partial.job_id.wrapping_sub(self.base_job_id) as usize;
-            if idx >= count || partial.shard >= shards {
-                return Err(PpacError::Coordinator(format!(
-                    "stray shard partial (job {}, shard {})",
-                    partial.job_id, partial.shard
-                )));
-            }
-            let off = (partial.shard / part.col_blocks) * part.tile_m;
-            match &partial.output {
-                JobOutput::Ints(p) if !gf2 => {
-                    for (i, &v) in p.iter().enumerate() {
-                        int_acc[idx][off + i] += v;
-                    }
-                }
-                JobOutput::Bits(p) if gf2 => {
-                    for (i, &b) in p.iter().enumerate() {
-                        bit_acc[idx][off + i] ^= b;
-                    }
-                }
-                _ => {
-                    return Err(PpacError::Coordinator(
-                        "shard partial mode mismatch".into(),
-                    ))
-                }
-            }
-            cycles[idx] += partial.cycles_share;
-            latency[idx] = latency[idx].max(partial.latency_us);
-            max_batch[idx] = max_batch[idx].max(partial.batch_size);
-            if partial.shard == 0 {
-                worker0[idx] = partial.worker;
-            }
-        }
+    fn already_taken() -> PpacError {
+        PpacError::Coordinator("batch results already collected".into())
+    }
 
-        // Per-row gather correction for the zero-padded boundary
-        // columns, per pad column: ±1 Hamming/MVP partials over-count by
-        // +1 (a = 0, x = 0 matches under XNOR); multi-bit planes are
-        // self-correcting except the oddint pairing, whose +1 pads fold
-        // to −1 (see `MultibitSpec::pad_correction`); GF(2) pads
-        // contribute 0 under AND.
-        let pad_adjust: i64 = match plan.mode {
-            ModeKey::Pm1Mvp | ModeKey::Hamming => -1,
-            ModeKey::Multibit(spec) => spec.pad_correction(),
-            ModeKey::Gf2 => 0,
-        };
-        let mut out = Vec::with_capacity(count);
-        for idx in 0..count {
-            let output = if gf2 {
-                JobOutput::Bits(bit_acc[idx][..part.m].to_vec())
-            } else {
-                let mut y = int_acc[idx][..part.m].to_vec();
-                let p = pad_adjust * part.pad_cols as i64;
-                if p != 0 {
-                    for v in &mut y {
-                        *v += p;
-                    }
-                }
-                JobOutput::Ints(y)
-            };
-            out.push(JobResult {
-                job_id: self.base_job_id + idx as u64,
-                output,
-                latency_us: latency[idx],
-                cycles_share: cycles[idx],
-                worker: worker0[idx],
-                batch_size: max_batch[idx],
-                shard: 0,
-                fan_out: shards,
-            });
+    fn reducer_gone() -> PpacError {
+        PpacError::Coordinator("reducer pool disappeared before the gather finished".into())
+    }
+
+    /// Non-blocking poll: `Ok(None)` while shard partials are still
+    /// outstanding, `Ok(Some(results))` exactly once when the gather
+    /// completed.
+    pub fn try_wait(&mut self) -> Result<Option<Vec<JobResult>>> {
+        if self.taken {
+            return Err(Self::already_taken());
         }
-        self.metrics
-            .jobs_completed
-            .fetch_add(count as u64, Ordering::Relaxed);
-        if shards > 1 {
-            self.metrics.gathers.fetch_add(count as u64, Ordering::Relaxed);
+        match self.done.try_recv() {
+            Ok(outcome) => {
+                self.taken = true;
+                outcome.map(Some)
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(Self::reducer_gone()),
         }
-        Ok(out)
+    }
+
+    /// Bounded wait: like [`BatchHandle::try_wait`], but blocks up to
+    /// `timeout` for the gather to finish.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<JobResult>>> {
+        if self.taken {
+            return Err(Self::already_taken());
+        }
+        match self.done.recv_timeout(timeout) {
+            Ok(outcome) => {
+                self.taken = true;
+                outcome.map(Some)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Self::reducer_gone()),
+        }
+    }
+
+    /// Block until every shard partial has been reduced; returns one
+    /// result per input, in submission order. Per-job failures are
+    /// *not* errors of the wait — they arrive typed in each
+    /// [`JobResult::output`].
+    pub fn wait(mut self) -> Result<Vec<JobResult>> {
+        if self.taken {
+            return Err(Self::already_taken());
+        }
+        self.taken = true;
+        self.done.recv().map_err(|_| Self::reducer_gone())?
     }
 }
 
@@ -223,7 +489,30 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
-    /// Block until the (gathered) result arrives.
+    fn single(results: Option<Vec<JobResult>>) -> Result<Option<JobResult>> {
+        match results {
+            None => Ok(None),
+            Some(mut v) => v
+                .pop()
+                .map(Some)
+                .ok_or_else(|| PpacError::Coordinator("empty gather".into())),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` until the gathered result is
+    /// ready.
+    pub fn try_wait(&mut self) -> Result<Option<JobResult>> {
+        Self::single(self.inner.try_wait()?)
+    }
+
+    /// Bounded wait for the gathered result.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Option<JobResult>> {
+        Self::single(self.inner.wait_timeout(timeout)?)
+    }
+
+    /// Block until the (gathered) result arrives. A failed job is an
+    /// `Ok` result whose [`JobResult::output`] carries the typed
+    /// [`JobError`].
     pub fn wait(self) -> Result<JobResult> {
         let mut results = self.inner.wait()?;
         results
@@ -252,13 +541,19 @@ fn pick_worker(inflight: &[u64], placed: &[u64]) -> usize {
     best
 }
 
-/// The coordinator: owns worker threads and the routing table.
+/// The coordinator: owns worker + reducer threads and the routing table.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: MatrixRegistry,
     shards: RwLock<HashMap<MatrixId, Arc<ShardedMatrix>>>,
     senders: Vec<Sender<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
+    reducer_txs: Vec<Sender<ReduceTask>>,
+    reducer_handles: Vec<JoinHandle<()>>,
+    next_reducer: AtomicU64,
+    /// Engine options each worker was built with (defaults + builder
+    /// overrides), for introspection.
+    engine_opts: Vec<EngineOpts>,
     /// shard → worker affinity (residency-aware routing).
     affinity: RwLock<HashMap<ShardId, usize>>,
     /// Shards ever placed per worker (placement tie-break).
@@ -266,20 +561,44 @@ pub struct Coordinator {
     next_matrix: AtomicU64,
     next_shard: AtomicU64,
     next_job: AtomicU64,
+    /// TTL sweep pacing (millis since `epoch` of the last sweep).
+    epoch: Instant,
+    last_sweep_ms: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
+    /// Fluent construction with per-worker engine overrides.
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder::new()
+    }
+
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
-        if cfg.workers == 0 || cfg.max_batch == 0 {
-            return Err(PpacError::Config("workers/max_batch must be ≥ 1".into()));
+        Self::start_with(cfg, &[])
+    }
+
+    fn start_with(cfg: CoordinatorConfig, overrides: &[(usize, EngineOpts)]) -> Result<Self> {
+        if cfg.workers == 0 || cfg.max_batch == 0 || cfg.reducers == 0 {
+            return Err(PpacError::Config(
+                "workers/max_batch/reducers must be ≥ 1".into(),
+            ));
         }
         cfg.tile.validate()?;
+        let mut engine_opts = vec![cfg.engine; cfg.workers];
+        for &(worker, opts) in overrides {
+            if worker >= cfg.workers {
+                return Err(PpacError::Config(format!(
+                    "engine override for worker {worker}, but only {} workers",
+                    cfg.workers
+                )));
+            }
+            engine_opts[worker] = opts;
+        }
         let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::for_workers(cfg.workers));
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
-        for id in 0..cfg.workers {
+        for (id, &opts) in engine_opts.iter().enumerate() {
             let (tx, rx) = channel();
             let worker = Worker::new(
                 id,
@@ -288,21 +607,34 @@ impl Coordinator {
                 Arc::clone(&metrics),
                 cfg.max_batch,
                 cfg.backend,
-                cfg.engine,
+                opts,
             )?;
             handles.push(std::thread::spawn(move || worker.run(rx)));
             senders.push(tx);
+        }
+        let mut reducer_txs = Vec::with_capacity(cfg.reducers);
+        let mut reducer_handles = Vec::with_capacity(cfg.reducers);
+        for _ in 0..cfg.reducers {
+            let (tx, rx) = channel();
+            reducer_handles.push(std::thread::spawn(move || run_reducer(rx)));
+            reducer_txs.push(tx);
         }
         Ok(Self {
             registry,
             shards: RwLock::new(HashMap::new()),
             senders,
             handles,
+            reducer_txs,
+            reducer_handles,
+            next_reducer: AtomicU64::new(0),
+            engine_opts,
             affinity: RwLock::new(HashMap::new()),
             placed: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             next_matrix: AtomicU64::new(1),
             next_shard: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
+            epoch: Instant::now(),
+            last_sweep_ms: AtomicU64::new(0),
             metrics,
             cfg,
         })
@@ -312,27 +644,113 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Register a matrix (M×N bit rows, any rectangular shape) for later
-    /// jobs. Matrices larger than one tile are sharded into row-block ×
-    /// column-block sub-matrices; ragged input is an error.
+    /// The engine options worker `id` was built with (config default or
+    /// builder override).
+    pub fn worker_engine_opts(&self, id: usize) -> Option<EngineOpts> {
+        self.engine_opts.get(id).copied()
+    }
+
+    /// Register a matrix for later jobs — the single entry point for
+    /// both storage kinds (see [`MatrixSpec`]). Matrices larger than one
+    /// tile are sharded into row-block × column-block sub-matrices;
+    /// ragged input, empty shapes, out-of-format values and K that does
+    /// not fit the tile are errors.
+    pub fn register(&self, spec: MatrixSpec) -> Result<MatrixId> {
+        self.maybe_sweep();
+        match spec {
+            MatrixSpec::Bit1 { rows } => self.register_bit1(rows),
+            MatrixSpec::Multibit { rows, k, format } => self.register_multibit(rows, k, format),
+        }
+    }
+
+    /// Deprecated shim for the pre-v2 registration call.
+    #[deprecated(note = "use Coordinator::register(MatrixSpec::Bit1 { rows }); \
+                         kept one release for migration")]
     pub fn register_matrix(&self, rows: Vec<Vec<bool>>) -> Result<MatrixId> {
+        self.register(MatrixSpec::Bit1 { rows })
+    }
+
+    fn register_bit1(&self, rows: Vec<Vec<bool>>) -> Result<MatrixId> {
         let (m, n) = rect_shape(&rows)?;
         let part = Partition::new(m, n, self.cfg.tile.m, self.cfg.tile.n)?;
         // Build every block before taking the registry lock: workers read
         // it on each residency change, and block extraction is O(M·N).
-        let blocks: Vec<Arc<Vec<Vec<bool>>>> = if part.shards() == 1 {
+        let blocks: Vec<Arc<ShardData>> = if part.shards() == 1 {
             // Single-shard fast path: the block is the whole matrix.
-            vec![Arc::new(rows)]
+            vec![Arc::new(ShardData::Bit1(rows))]
         } else {
             let mut blocks = Vec::with_capacity(part.shards());
             for rb in 0..part.row_blocks {
                 for cb in 0..part.col_blocks {
-                    blocks.push(Arc::new(part.block(&rows, rb, cb)));
+                    blocks.push(Arc::new(ShardData::Bit1(part.block(&rows, rb, cb))));
                 }
             }
             blocks
         };
-        let mut shard_ids = Vec::with_capacity(part.shards());
+        Ok(self.insert_matrix(part, MatrixKind::Bit1, blocks))
+    }
+
+    fn register_multibit(
+        &self,
+        rows: Vec<Vec<i64>>,
+        k: u32,
+        format: NumberFormat,
+    ) -> Result<MatrixId> {
+        let (m, n_eff) = rect_shape(&rows)?;
+        let tile = self.cfg.tile;
+        if k == 0 || k > 32 {
+            return Err(PpacError::Config(format!(
+                "multibit K = {k} outside the supported 1..=32"
+            )));
+        }
+        if tile.n % k as usize != 0 {
+            return Err(PpacError::Config(format!(
+                "tile width {} not divisible by K = {k} (entry-aligned sharding)",
+                tile.n
+            )));
+        }
+        if k > tile.max_k {
+            return Err(PpacError::Config(format!(
+                "K = {k} exceeds the tile row-ALU limit max_k = {}",
+                tile.max_k
+            )));
+        }
+        // Fail registration (not every later job) on unrepresentable
+        // values.
+        for row in &rows {
+            for &v in row {
+                if !format.contains(k, v) {
+                    return Err(PpacError::FormatRange { value: v, nbits: k, fmt: format.name() });
+                }
+            }
+        }
+        // Entry-aligned column blocking: partition over *entries* with
+        // tile_n/K entries per column block, so each block occupies
+        // exactly the tile's physical columns after interleaving.
+        let part = Partition::new(m, n_eff, tile.m, tile.n / k as usize)?;
+        let kind = MatrixKind::Multibit { kbits: k, a_fmt: format };
+        let shard = |rows: Vec<Vec<i64>>| ShardData::Multibit { rows, kbits: k, a_fmt: format };
+        let blocks: Vec<Arc<ShardData>> = if part.shards() == 1 {
+            vec![Arc::new(shard(rows))]
+        } else {
+            let mut blocks = Vec::with_capacity(part.shards());
+            for rb in 0..part.row_blocks {
+                for cb in 0..part.col_blocks {
+                    blocks.push(Arc::new(shard(part.block(&rows, rb, cb))));
+                }
+            }
+            blocks
+        };
+        Ok(self.insert_matrix(part, kind, blocks))
+    }
+
+    fn insert_matrix(
+        &self,
+        part: Partition,
+        kind: MatrixKind,
+        blocks: Vec<Arc<ShardData>>,
+    ) -> MatrixId {
+        let mut shard_ids = Vec::with_capacity(blocks.len());
         {
             let mut reg = self.registry.write().unwrap();
             for block in blocks {
@@ -342,11 +760,17 @@ impl Coordinator {
             }
         }
         let mid = self.next_matrix.fetch_add(1, Ordering::Relaxed);
-        self.shards
-            .write()
-            .unwrap()
-            .insert(mid, Arc::new(ShardedMatrix { part, shard_ids }));
-        Ok(mid)
+        self.shards.write().unwrap().insert(
+            mid,
+            Arc::new(ShardedMatrix {
+                part,
+                kind,
+                shard_ids,
+                last_used: Mutex::new(Instant::now()),
+                gathers_inflight: Arc::new(AtomicU64::new(0)),
+            }),
+        );
+        mid
     }
 
     /// Unregister a matrix: its shards leave the registry (so nothing
@@ -354,9 +778,17 @@ impl Coordinator {
     /// counts are decremented so freed workers compete for new shards
     /// again, and the owning workers are told to evict any resident
     /// copy. Jobs submitted after this call fail with "unknown matrix";
-    /// a scatter that raced the unregister may drop its shard jobs (the
-    /// caller's `wait` reports the lost partial).
+    /// a scatter that raced the unregister reports a typed
+    /// [`JobError::UnknownShard`] per affected job.
     pub fn unregister_matrix(&self, matrix: MatrixId) -> Result<()> {
+        self.remove_matrix(matrix)?;
+        self.metrics
+            .matrices_unregistered
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn remove_matrix(&self, matrix: MatrixId) -> Result<()> {
         let sharded = self
             .shards
             .write()
@@ -380,13 +812,48 @@ impl Coordinator {
                 let _ = self.senders[w].send(WorkerMsg::Evict(sid));
             }
         }
-        self.metrics
-            .matrices_unregistered
-            .fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
-    /// Shape of a registered matrix.
+    /// Opportunistic TTL sweep (rate-limited to half the TTL): drop
+    /// every matrix idle for at least `registry_ttl`. Runs on
+    /// registration and submission, so an idle coordinator holds its
+    /// registry until the next activity.
+    fn maybe_sweep(&self) {
+        let Some(ttl) = self.cfg.registry_ttl else { return };
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let interval = ((ttl.as_millis() as u64) / 2).max(1);
+        let last = self.last_sweep_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < interval {
+            return;
+        }
+        if self
+            .last_sweep_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // another thread is sweeping
+        }
+        let expired: Vec<MatrixId> = self
+            .shards
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(_, s)| {
+                s.gathers_inflight.load(Ordering::Relaxed) == 0
+                    && s.last_used.lock().unwrap().elapsed() >= ttl
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            // A concurrent unregister may have beaten us to it.
+            if self.remove_matrix(id).is_ok() {
+                self.metrics.auto_evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Shape of a registered matrix (logical rows × entries).
     pub fn matrix_shape(&self, matrix: MatrixId) -> Option<(usize, usize)> {
         self.shards
             .read()
@@ -407,13 +874,14 @@ impl Coordinator {
         }
         // A scatter can race unregister_matrix (it cloned the Sharded
         // entry before the removal). Never pin an affinity for a shard
-        // that already left the registry: the worker will drop the job
-        // anyway, and a pin here would leak the affinity entry and its
-        // placed count forever (no unregister can reach them again).
-        // Holding the affinity write lock across this check makes the
-        // interleavings safe: either unregister's affinity sweep runs
-        // after our insert (and cleans it up), or the registry entry is
-        // already gone and we skip the pin.
+        // that already left the registry: the worker will answer the job
+        // with a typed UnknownShard error anyway, and a pin here would
+        // leak the affinity entry and its placed count forever (no
+        // unregister can reach them again). Holding the affinity write
+        // lock across this check makes the interleavings safe: either
+        // unregister's affinity sweep runs after our insert (and cleans
+        // it up), or the registry entry is already gone and we skip the
+        // pin.
         if !self.registry.read().unwrap().contains_key(&shard) {
             return 0;
         }
@@ -431,8 +899,9 @@ impl Coordinator {
         w
     }
 
-    /// Scatter a batch of same-mode inputs over a matrix's shards; the
-    /// returned handle gathers the partials.
+    /// Scatter a batch of same-mode inputs over a matrix's shards and
+    /// hand the gather to a reducer; the returned handle waits on the
+    /// reduced results.
     fn scatter(&self, matrix: MatrixId, inputs: &[JobInput]) -> Result<BatchHandle> {
         let sharded = self
             .shards
@@ -441,10 +910,25 @@ impl Coordinator {
             .get(&matrix)
             .cloned()
             .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
+        // Touch before sweeping, so a submit can never evict the matrix
+        // it is about to use.
+        *sharded.last_used.lock().unwrap() = Instant::now();
+        self.maybe_sweep();
         if inputs.is_empty() {
             return Err(PpacError::Coordinator("empty batch".into()));
         }
         let mode = inputs[0].mode_key();
+        // Structural validation only: shape, mode uniformity, matrix
+        // kind. Value ranges, pairings and K/L limits are the engine
+        // layer's job — its verdict comes back as a typed JobError.
+        if matches!(sharded.kind, MatrixKind::Multibit { .. })
+            && !matches!(mode, ModeKey::Multibit(_))
+        {
+            return Err(PpacError::Job(JobError::KindMismatch {
+                matrix: sharded.kind.name(),
+                job: mode.name(),
+            }));
+        }
         for input in inputs {
             if input.mode_key() != mode {
                 return Err(PpacError::Coordinator(
@@ -458,31 +942,21 @@ impl Coordinator {
                     got: input.len(),
                 });
             }
-            // Reject malformed multibit jobs here, before the scatter:
-            // a worker-side plan/decompose failure would silently drop
-            // the whole shard batch ("worker dropped a shard job").
-            if let JobInput::Multibit { x, spec } = input {
-                if spec.lbits == 0 || spec.lbits > 32 {
-                    return Err(PpacError::Config(format!(
-                        "multibit L = {} outside the supported 1..=32",
-                        spec.lbits
-                    )));
-                }
-                // Same plan the workers will compile — catches illegal
-                // pairings (oddint × {0,1} matrix) at submit time.
-                crate::engine::MultibitPlan::vector(spec.lbits, spec.x_fmt, spec.matrix)?;
-                for &v in x {
-                    if !spec.x_fmt.contains(spec.lbits, v) {
-                        return Err(PpacError::FormatRange {
-                            value: v,
-                            nbits: spec.lbits,
-                            fmt: spec.x_fmt.name(),
-                        });
-                    }
-                }
-            }
         }
         let part = sharded.part;
+        let pad_adjust = match (sharded.kind, mode) {
+            (MatrixKind::Bit1, ModeKey::Pm1Mvp | ModeKey::Hamming) => -1,
+            (MatrixKind::Bit1, ModeKey::Gf2) => 0,
+            (MatrixKind::Bit1, ModeKey::Multibit(spec)) => spec.pad_correction(),
+            // A pad entry stores the all-zero pattern (value Z_a) and
+            // meets the pad input value; its decoded product is removed
+            // per pad entry. Nonzero only for the oddint·oddint pairing.
+            (MatrixKind::Multibit { kbits, a_fmt }, ModeKey::Multibit(spec)) => {
+                -zero_pattern_value(a_fmt, kbits) * spec.pad_value()
+            }
+            // Rejected above.
+            (MatrixKind::Multibit { .. }, _) => 0,
+        };
         let base = self
             .next_job
             .fetch_add(inputs.len() as u64, Ordering::Relaxed);
@@ -528,15 +1002,31 @@ impl Coordinator {
                 .shard_jobs_submitted
                 .fetch_add(inputs.len() as u64, Ordering::Relaxed);
         }
+        drop(tx);
         self.metrics
             .jobs_submitted
             .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+
+        // Hand the gather to a reducer so it overlaps the serving and
+        // whatever the client scatters next. The in-flight count pins
+        // the matrix against the TTL sweep until the gather ends.
+        let plan = GatherPlan { part, mode, pad_adjust };
+        let state = GatherState::new(plan, base, inputs.len(), Arc::clone(&self.metrics));
+        let (done_tx, done_rx) = channel();
+        let inflight = Arc::clone(&sharded.gathers_inflight);
+        inflight.fetch_add(1, Ordering::Relaxed);
+        let r = self.next_reducer.fetch_add(1, Ordering::Relaxed) as usize
+            % self.reducer_txs.len();
+        let task = ReduceTask { rx, state, done: done_tx, inflight: Arc::clone(&inflight) };
+        if self.reducer_txs[r].send(task).is_err() {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(PpacError::Coordinator("reducer pool shut down".into()));
+        }
         Ok(BatchHandle {
             base_job_id: base,
             count: inputs.len(),
-            plan: GatherPlan { part, mode },
-            rx,
-            metrics: Arc::clone(&self.metrics),
+            done: done_rx,
+            taken: false,
         })
     }
 
@@ -571,12 +1061,19 @@ impl Coordinator {
         handles.into_iter().map(JobHandle::wait).collect()
     }
 
-    /// Graceful shutdown: drain queues, join workers.
+    /// Graceful shutdown: drain queues, join workers, then retire the
+    /// reducer pool (it finishes any gather still in flight first).
     pub fn shutdown(self) {
-        for tx in &self.senders {
+        let Coordinator { senders, handles, reducer_txs, reducer_handles, .. } = self;
+        for tx in &senders {
             let _ = tx.send(WorkerMsg::Shutdown);
         }
-        for h in self.handles {
+        for h in handles {
+            let _ = h.join();
+        }
+        drop(senders);
+        drop(reducer_txs);
+        for h in reducer_handles {
             let _ = h.join();
         }
     }
@@ -605,5 +1102,90 @@ mod tests {
     #[test]
     fn pick_worker_empty_defaults_to_zero() {
         assert_eq!(pick_worker(&[], &[]), 0);
+    }
+
+    fn test_plan(m: usize, n: usize) -> GatherPlan {
+        GatherPlan {
+            part: Partition::new(m, n, m, n).unwrap(),
+            mode: ModeKey::Pm1Mvp,
+            pad_adjust: -1,
+        }
+    }
+
+    fn partial(job_id: u64, y: Vec<i64>) -> JobResult {
+        JobResult {
+            job_id,
+            output: Ok(JobOutput::Ints(y)),
+            latency_us: 1.0,
+            cycles_share: 1.0,
+            worker: 0,
+            batch_size: 1,
+            shard: 0,
+            fan_out: 1,
+        }
+    }
+
+    /// `try_wait` is deterministic at the handle level: None while the
+    /// reducer has not delivered, Some exactly once afterwards, and an
+    /// error on re-polling.
+    #[test]
+    fn try_wait_is_none_until_the_gather_completes() {
+        let metrics = Arc::new(Metrics::for_workers(1));
+        let plan = test_plan(2, 4); // single shard, pad_cols = 0
+        let (tx, rx) = channel();
+        let (done_tx, done_rx) = channel();
+        let state = GatherState::new(plan, 7, 1, Arc::clone(&metrics));
+        let mut handle = BatchHandle { base_job_id: 7, count: 1, done: done_rx, taken: false };
+        assert!(handle.try_wait().unwrap().is_none(), "nothing reduced yet");
+        assert!(handle
+            .wait_timeout(Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+
+        let inflight = Arc::new(AtomicU64::new(1));
+        let pinned = Arc::clone(&inflight);
+        let reducer = std::thread::spawn(move || {
+            let tasks_rx = {
+                let (ttx, trx) = channel();
+                ttx.send(ReduceTask { rx, state, done: done_tx, inflight: pinned })
+                    .unwrap();
+                trx
+            };
+            run_reducer(tasks_rx);
+        });
+        tx.send(partial(7, vec![3, 4])).unwrap();
+        drop(tx);
+        reducer.join().unwrap();
+
+        let results = handle
+            .wait_timeout(Duration::from_secs(5))
+            .unwrap()
+            .expect("gather finished");
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].output, Ok(JobOutput::Ints(vec![3, 4])));
+        assert!(handle.try_wait().is_err(), "results already collected");
+        assert_eq!(metrics.jobs_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            inflight.load(Ordering::Relaxed),
+            0,
+            "the gather released its TTL-sweep pin"
+        );
+    }
+
+    /// A disconnected response channel fails the *incomplete* jobs
+    /// typed, not the whole batch.
+    #[test]
+    fn lost_worker_marks_incomplete_jobs_typed() {
+        let metrics = Arc::new(Metrics::for_workers(1));
+        let plan = test_plan(2, 4);
+        let mut state = GatherState::new(plan, 0, 2, Arc::clone(&metrics));
+        state.absorb(partial(0, vec![1, 2])).unwrap();
+        assert!(!state.complete());
+        state.mark_lost();
+        assert!(state.complete());
+        let results = state.finish();
+        assert_eq!(results[0].output, Ok(JobOutput::Ints(vec![1, 2])));
+        assert_eq!(results[1].output, Err(JobError::WorkerLost));
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 1);
     }
 }

@@ -5,9 +5,18 @@
 //! (shard, mode)* into a batch (up to `max_batch`), reconfigures / reloads
 //! only on change — mirroring the paper's use case where A stays static
 //! while x streams — and answers each job through its response channel.
-//! Shards are loaded through the padded write path, so boundary blocks of
-//! a large matrix land on the tile as-is; the scatter/gather layer above
+//! Shards are loaded through the padded write paths (1-bit rows or the
+//! §III-C2 interleaved K-bit layout), so boundary blocks of a large
+//! matrix land on the tile as-is; the scatter/gather layer above
 //! corrects for the zero padding.
+//!
+//! **Every job is answered.** A serve failure — unknown shard, illegal
+//! pairing, out-of-format values, K/L limits — ships a typed
+//! [`JobError`] through the same response channel instead of dropping
+//! the senders, so clients learn *what* failed (the old behavior turned
+//! every cause into a generic dropped-shard error at gather time). A
+//! failing batch is re-served job by job, so a poisoned payload cannot
+//! take down valid jobs that merely coalesced into the same batch.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -17,10 +26,11 @@ use std::time::Duration;
 
 use crate::engine::{Backend, EngineOpts};
 use crate::error::Result;
+use crate::formats::NumberFormat;
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
 
-use super::job::{Job, JobInput, JobOutput, JobResult, ModeKey, ShardId};
+use super::job::{Job, JobError, JobInput, JobOutput, JobResult, ModeKey, ShardId};
 use super::metrics::Metrics;
 
 /// The packed bit payloads of a 1-bit batch (`None` if a multi-bit job
@@ -37,9 +47,24 @@ pub enum WorkerMsg {
     Shutdown,
 }
 
+/// One resident-able block of a registered matrix, in the form its
+/// worker loads it: 1-bit rows or K-bit integer entries (interleaved at
+/// load time).
+pub enum ShardData {
+    /// Rows of a [`super::MatrixSpec::Bit1`] matrix.
+    Bit1(Vec<Vec<bool>>),
+    /// Rows of a [`super::MatrixSpec::Multibit`] matrix: integer
+    /// entries, stored on the tile in the interleaved column layout.
+    Multibit {
+        rows: Vec<Vec<i64>>,
+        kbits: u32,
+        a_fmt: NumberFormat,
+    },
+}
+
 /// Shared, read-only shard registry: tile-sized (possibly clipped) blocks
 /// of the registered matrices.
-pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<ShardId, Arc<Vec<Vec<bool>>>>>>;
+pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<ShardId, Arc<ShardData>>>>;
 
 pub struct Worker {
     pub id: usize,
@@ -114,8 +139,8 @@ impl Worker {
             }
             let served = batch.len() as u64;
             self.serve_batch(key, batch);
-            // The jobs leave this worker's queue whether they were answered
-            // or dropped on an error path — occupancy must reflect that.
+            // The jobs leave this worker's queue whether they carried an
+            // answer or a typed error — occupancy must reflect that.
             if let Some(w) = self.metrics.worker(self.id) {
                 w.inflight.fetch_sub(served, Ordering::Relaxed);
             }
@@ -137,100 +162,168 @@ impl Worker {
         }
     }
 
-    fn serve_batch(&mut self, key: (ShardId, ModeKey), batch: Vec<Job>) {
+    /// Reload + reconfigure (if residency changed) and execute the
+    /// batch, returning one output per job or the typed error the whole
+    /// batch shares. `load_cycles` reports the reload cost if one
+    /// happened.
+    fn execute(
+        &mut self,
+        key: (ShardId, ModeKey),
+        batch: &[Job],
+        load_cycles: &mut Option<u64>,
+    ) -> std::result::Result<Vec<JobOutput>, JobError> {
         let (shard_id, mode) = key;
-        // (Re)load + reconfigure if residency changed.
-        let mut load_cycles = None;
         if self.resident != Some(key) {
-            let rows = {
+            let data = {
                 let reg = self.registry.read().unwrap();
                 reg.get(&shard_id).cloned()
             };
-            let Some(rows) = rows else {
-                // Unknown shard: fail every job by dropping senders.
-                return;
+            let Some(data) = data else {
+                return Err(JobError::UnknownShard { shard: shard_id });
+            };
+            // The load below overwrites the latch plane; if it (or the
+            // configure) fails midway, the previous resident is gone, so
+            // the residency marker must drop *before* the attempt.
+            self.resident = None;
+            let op_mode = match (&*data, mode) {
+                (ShardData::Bit1(_), ModeKey::Pm1Mvp) => OpMode::Pm1Mvp,
+                (ShardData::Bit1(_), ModeKey::Hamming) => OpMode::Hamming,
+                (ShardData::Bit1(_), ModeKey::Gf2) => OpMode::Gf2Mvp,
+                (ShardData::Bit1(_), ModeKey::Multibit(spec)) => OpMode::MultibitVector {
+                    lbits: spec.lbits,
+                    x_fmt: spec.x_fmt,
+                    matrix: spec.matrix,
+                },
+                (ShardData::Multibit { kbits, a_fmt, .. }, ModeKey::Multibit(spec)) => {
+                    OpMode::MultibitMatrix {
+                        kbits: *kbits,
+                        lbits: spec.lbits,
+                        a_fmt: *a_fmt,
+                        x_fmt: spec.x_fmt,
+                    }
+                }
+                (ShardData::Multibit { .. }, other) => {
+                    return Err(JobError::KindMismatch {
+                        matrix: "multibit",
+                        job: other.name(),
+                    })
+                }
             };
             let cyc0 = self.unit.setup_cycles() + self.unit.compute_cycles();
-            if self
-                .unit
-                .load_bit_matrix_padded(&rows)
-                .and_then(|_| {
-                    self.unit.configure(match mode {
-                        ModeKey::Pm1Mvp => OpMode::Pm1Mvp,
-                        ModeKey::Hamming => OpMode::Hamming,
-                        ModeKey::Gf2 => OpMode::Gf2Mvp,
-                        ModeKey::Multibit(spec) => OpMode::MultibitVector {
-                            lbits: spec.lbits,
-                            x_fmt: spec.x_fmt,
-                            matrix: spec.matrix,
-                        },
-                    })
-                })
-                .is_err()
-            {
-                return;
+            match &*data {
+                ShardData::Bit1(rows) => self.unit.load_bit_matrix_padded(rows)?,
+                ShardData::Multibit { rows, kbits, a_fmt } => {
+                    self.unit.load_multibit_matrix_padded(rows, *kbits, *a_fmt)?
+                }
             }
+            self.unit.configure(op_mode)?;
             let cyc1 = self.unit.setup_cycles() + self.unit.compute_cycles();
-            load_cycles = Some(cyc1 - cyc0);
+            *load_cycles = Some(cyc1 - cyc0);
             self.resident = Some(key);
         }
 
-        let before = self.unit.compute_cycles();
-        let outputs: Vec<JobOutput> = match mode {
+        let mixed = || JobError::Unsupported { reason: "mixed payloads in one batch".into() };
+        match mode {
             ModeKey::Pm1Mvp => {
-                let Some(inputs) = collect_bits(&batch) else { return };
-                match self.unit.mvp1_batch(&inputs) {
-                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
-                    Err(_) => return,
-                }
+                let inputs = collect_bits(batch).ok_or_else(mixed)?;
+                Ok(self.unit.mvp1_batch(&inputs)?.into_iter().map(JobOutput::Ints).collect())
             }
             ModeKey::Hamming => {
-                let Some(inputs) = collect_bits(&batch) else { return };
-                match self.unit.hamming_batch(&inputs) {
-                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
-                    Err(_) => return,
-                }
+                let inputs = collect_bits(batch).ok_or_else(mixed)?;
+                Ok(self
+                    .unit
+                    .hamming_batch(&inputs)?
+                    .into_iter()
+                    .map(JobOutput::Ints)
+                    .collect())
             }
             ModeKey::Gf2 => {
-                let Some(inputs) = collect_bits(&batch) else { return };
-                match self.unit.gf2_batch(&inputs) {
-                    Ok(ys) => ys.into_iter().map(JobOutput::Bits).collect(),
-                    Err(_) => return,
-                }
+                let inputs = collect_bits(batch).ok_or_else(mixed)?;
+                Ok(self.unit.gf2_batch(&inputs)?.into_iter().map(JobOutput::Bits).collect())
             }
             ModeKey::Multibit(_) => {
                 let mut xs = Vec::with_capacity(batch.len());
-                for j in &batch {
+                for j in batch {
                     // Grouping by mode key guarantees this shape.
-                    let JobInput::Multibit { x, .. } = &j.input else { return };
+                    let JobInput::Multibit { x, .. } = &j.input else { return Err(mixed()) };
                     xs.push(x.clone());
                 }
-                match self.unit.mvp_multibit_batch(&xs) {
-                    Ok(ys) => ys.into_iter().map(JobOutput::Ints).collect(),
-                    Err(_) => return,
+                Ok(self
+                    .unit
+                    .mvp_multibit_batch(&xs)?
+                    .into_iter()
+                    .map(JobOutput::Ints)
+                    .collect())
+            }
+        }
+    }
+
+    fn serve_batch(&mut self, key: (ShardId, ModeKey), batch: Vec<Job>) {
+        let mut load_cycles = None;
+        let before = self.unit.compute_cycles();
+        let outputs = self.execute(key, &batch, &mut load_cycles);
+
+        // Failure isolation: the mode key does not include payload
+        // values, so a batch can coalesce a poisoned job (e.g. an
+        // out-of-format entry) with valid ones from other clients. Serve
+        // the jobs one by one so only the offenders fail — residency is
+        // already settled, so the retry costs no reloads.
+        if outputs.is_err() && batch.len() > 1 {
+            // A reload that succeeded before the serve error must still
+            // be accounted (the shard *is* resident now).
+            if load_cycles.is_some() {
+                self.metrics.record_batch(self.id, 0, 0, load_cycles);
+            }
+            for job in batch {
+                self.serve_batch(key, vec![job]);
+            }
+            return;
+        }
+
+        let bsz = batch.len();
+        match outputs {
+            Ok(outputs) => {
+                let cycles = self.unit.compute_cycles() - before;
+                self.metrics.record_batch(self.id, bsz, cycles, load_cycles);
+                let share = cycles as f64 / bsz as f64;
+                for (job, output) in batch.into_iter().zip(outputs) {
+                    let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+                    self.metrics.record_latency(latency_us);
+                    // A dropped receiver just means the client went away.
+                    let _ = job.respond.send(JobResult {
+                        job_id: job.job_id,
+                        output: Ok(output),
+                        latency_us,
+                        cycles_share: share,
+                        worker: self.id,
+                        batch_size: bsz,
+                        shard: job.shard_index,
+                        fan_out: 1,
+                    });
                 }
             }
-        };
-        let cycles = self.unit.compute_cycles() - before;
-        self.metrics
-            .record_batch(self.id, batch.len(), cycles, load_cycles);
-
-        let share = cycles as f64 / batch.len() as f64;
-        let bsz = batch.len();
-        for (job, output) in batch.into_iter().zip(outputs) {
-            let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
-            self.metrics.record_latency(latency_us);
-            // A dropped receiver just means the client went away.
-            let _ = job.respond.send(JobResult {
-                job_id: job.job_id,
-                output,
-                latency_us,
-                cycles_share: share,
-                worker: self.id,
-                batch_size: bsz,
-                shard: job.shard_index,
-                fan_out: 1,
-            });
+            Err(err) => {
+                // Single-job failure: answer it typed. A reload that
+                // succeeded before the serve error is still recorded
+                // (zero jobs, but the load cycles and matrix_loads count
+                // must not vanish — the shard stays resident).
+                if load_cycles.is_some() {
+                    self.metrics.record_batch(self.id, 0, 0, load_cycles);
+                }
+                for job in batch {
+                    let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+                    let _ = job.respond.send(JobResult {
+                        job_id: job.job_id,
+                        output: Err(err.clone()),
+                        latency_us,
+                        cycles_share: 0.0,
+                        worker: self.id,
+                        batch_size: bsz,
+                        shard: job.shard_index,
+                        fan_out: 1,
+                    });
+                }
+            }
         }
     }
 }

@@ -34,6 +34,26 @@ use crate::sim::{BitVec, PpacArray};
 use super::blocked::{tail_mask, unflatten, Sweep};
 use super::{Blocked, EngineBatch, OpKernel};
 
+/// Plane-bit multiplier of a format: an oddint plane bit contributes
+/// `2b − 1` (±1), so its popcount term carries a ×2; uint/int plane bits
+/// contribute `b` directly.
+fn alpha(fmt: NumberFormat) -> i64 {
+    if fmt == NumberFormat::OddInt {
+        2
+    } else {
+        1
+    }
+}
+
+/// Value of the all-zero bit pattern in `fmt` — the decode of a
+/// zero-padded (or physically cleared) entry. 0 for uint/int; oddint
+/// reads every cleared plane as −1, i.e. −(2^bits − 1). Delegates to
+/// the codec so the pad algebra can never drift from
+/// [`NumberFormat::decode`].
+pub(crate) fn zero_pattern_value(fmt: NumberFormat, bits: u32) -> i64 {
+    fmt.decode(bits, 0)
+}
+
 /// The compiled shape of a §III-C multi-bit schedule: which 1-bit
 /// kernel every plane pass runs, how many matrix/vector significance
 /// planes there are, and the number formats that weight the fold.
@@ -74,30 +94,33 @@ impl MultibitPlan {
                 ))
             }
         };
-        if lbits == 0 {
-            return Err(PpacError::Config("multibit L must be ≥ 1".into()));
-        }
+        check_bits("L", lbits)?;
         Ok(Self { kernel, kbits: 1, lbits, a_fmt: NumberFormat::Uint, x_fmt, interleaved: false })
     }
 
-    /// §III-C2: K-bit matrix × L-bit vector (uint/int operands only).
+    /// §III-C2: K-bit matrix × L-bit vector, any Table I operand pairing.
+    ///
+    /// Uint/int operands run pure AND-partial passes. An oddint operand's
+    /// planes are ±1-valued (`2b − 1`), which expands into the same AND
+    /// popcounts times `α ∈ {2, 4}` plus affine terms that depend only on
+    /// the stored row (per matrix plane), only on the query (per vector
+    /// plane), or on neither — all folded host-side after the sweeps
+    /// (`MultibitPlan::corrections`), the same correction-register
+    /// strategy the 1-bit eq. (2)/(3) modes use in hardware.
     pub fn matrix(
         kbits: u32,
         lbits: u32,
         a_fmt: NumberFormat,
         x_fmt: NumberFormat,
     ) -> Result<Self> {
-        if !matches!(a_fmt, NumberFormat::Uint | NumberFormat::Int)
-            || !matches!(x_fmt, NumberFormat::Uint | NumberFormat::Int)
-        {
-            return Err(PpacError::Config(
-                "multibit-matrix mode supports uint/int operands".into(),
-            ));
-        }
-        if kbits == 0 || lbits == 0 {
-            return Err(PpacError::Config("multibit K/L must be ≥ 1".into()));
-        }
-        Ok(Self { kernel: OpKernel::and01_mvp(), kbits, lbits, a_fmt, x_fmt, interleaved: true })
+        check_bits("K", kbits)?;
+        check_bits("L", lbits)?;
+        let any_odd = a_fmt == NumberFormat::OddInt || x_fmt == NumberFormat::OddInt;
+        // The ±1-plane expansion carries a ×2 per oddint operand; the
+        // first factor maps onto the row ALU's popX2, the second (both
+        // operands oddint) is folded with the host corrections.
+        let kernel = OpKernel { pop_x2: any_odd, ..OpKernel::and01_mvp() };
+        Ok(Self { kernel, kbits, lbits, a_fmt, x_fmt, interleaved: true })
     }
 
     /// Schedule cycles per query — the paper's K·L bit-serial cost.
@@ -118,6 +141,95 @@ impl MultibitPlan {
     /// sign carrying the 2's-complement MSB negation of `Int` operands.
     pub fn weight(&self, k: u32, l: u32) -> i64 {
         self.a_fmt.plane_weight(self.kbits, k) * self.x_fmt.plane_weight(self.lbits, l)
+    }
+
+    /// Popcount multiplier of one plane-pair term in the blocked sweep:
+    /// the hardware popX2 factor times the remaining host scale —
+    /// α_a·α_x overall (1, 2 or 4 depending on how many operands are
+    /// oddint; always the plain popX2 factor on the vector path).
+    pub(crate) fn sweep_pop(&self) -> i64 {
+        (if self.kernel.pop_x2 { 2 } else { 1 }) * self.replay_scale()
+    }
+
+    /// Host-side scale of the replay's emitted pre-threshold value: the
+    /// part of α_a·α_x the row ALU's single popX2 doubling cannot
+    /// provide (2 exactly when both interleaved operands are oddint,
+    /// else 1).
+    pub(crate) fn replay_scale(&self) -> i64 {
+        if !self.interleaved {
+            return 1;
+        }
+        let need = alpha(self.a_fmt) * alpha(self.x_fmt);
+        need / (if self.kernel.pop_x2 { 2 } else { 1 })
+    }
+
+    /// The affine terms of the oddint ±1-plane expansion, folded
+    /// host-side after the AND sweeps (interleaved plans only; `None`
+    /// when both operands are uint/int and the sweeps are already
+    /// exact). Writing each operand as `value = α·S + Z` — `S` the
+    /// plane-weighted bit content, `Z` the all-zero-pattern value —
+    ///
+    /// ```text
+    ///   y = α_a α_x Σ_j A_j X_j  +  α_a Z_x Σ_j A_j  +  α_x Z_a Σ_j X_j  +  Z_a Z_x N_e
+    /// ```
+    ///
+    /// The first term is the weighted sweeps; the second depends only on
+    /// the stored row, the third only on the query, the fourth on
+    /// neither. `mem`/`wpr` describe the packed latch plane.
+    pub(crate) fn corrections(
+        &self,
+        mem: &[u64],
+        wpr: usize,
+        m: usize,
+        planes: &[Vec<BitVec>],
+    ) -> Option<PlaneCorrections> {
+        if !self.interleaved {
+            return None;
+        }
+        let z_a = zero_pattern_value(self.a_fmt, self.kbits);
+        let z_x = zero_pattern_value(self.x_fmt, self.lbits);
+        if z_a == 0 && z_x == 0 {
+            return None;
+        }
+        let k = self.kbits as usize;
+        let n_e = planes.first().map_or(0, |qp| qp[0].len());
+        let constant = z_a * z_x * n_e as i64;
+        let mut row = vec![constant; m];
+        if z_x != 0 {
+            // Per-plane popcounts of the stored bits, via the same
+            // spread masks the sweep packing uses: one masked word
+            // popcount per (row, plane, word) instead of a per-bit
+            // scan.
+            let ones = BitVec::ones(n_e);
+            let masks: Vec<BitVec> =
+                (0..k).map(|kk| ones.spread(k, kk)).collect();
+            for (r, slot) in row.iter_mut().enumerate() {
+                let words = &mem[r * wpr..(r + 1) * wpr];
+                let mut a_sum = 0i64;
+                for (kk, mask) in masks.iter().enumerate() {
+                    let w = self.a_fmt.plane_weight(self.kbits, kk as u32);
+                    let pop: i64 = words
+                        .iter()
+                        .zip(mask.words())
+                        .map(|(a, msk)| (a & msk).count_ones() as i64)
+                        .sum();
+                    a_sum += w * pop;
+                }
+                *slot += alpha(self.a_fmt) * z_x * a_sum;
+            }
+        }
+        let mut query = vec![0i64; planes.len()];
+        if z_a != 0 {
+            for (slot, qp) in query.iter_mut().zip(planes) {
+                let mut x_sum = 0i64;
+                for (l, plane) in qp.iter().enumerate() {
+                    x_sum +=
+                        self.x_fmt.plane_weight(self.lbits, l as u32) * plane.popcount() as i64;
+                }
+                *slot = alpha(self.x_fmt) * z_a * x_sum;
+            }
+        }
+        Some(PlaneCorrections { row, query })
     }
 
     /// The interleaved layout needs K to divide the array width so every
@@ -149,6 +261,27 @@ impl MultibitPlan {
         }
         Ok(planes)
     }
+}
+
+/// Significance-plane counts must fit the bit-serial schedule and the
+/// i64 host fold: 1..=32 (the same bound the format codecs assume).
+fn check_bits(which: &'static str, bits: u32) -> Result<()> {
+    if bits == 0 || bits > 32 {
+        return Err(PpacError::Config(format!(
+            "multibit {which} = {bits} outside the supported 1..=32"
+        )));
+    }
+    Ok(())
+}
+
+/// Host-folded affine terms of an interleaved oddint plan (see
+/// [`MultibitPlan::corrections`]): `row[r] + query[q]` is added to every
+/// (row r, query q) output after the weighted AND sweeps.
+pub(crate) struct PlaneCorrections {
+    /// Per-row content term plus the shared constant.
+    pub row: Vec<i64>,
+    /// Per-query content term.
+    pub query: Vec<i64>,
 }
 
 impl Blocked {
@@ -186,7 +319,8 @@ impl Blocked {
 
         let nq = xs.len();
         let mem = array.mem_words();
-        let k_pop = if kernel.pop_x2 { 2 } else { 1 };
+        let corrections = plan.corrections(mem, wpr, m, &planes);
+        let k_pop = plan.sweep_pop();
         let mask = tail_mask(n);
         let mut flat = vec![0i64; m * nq];
         let mut qwords = vec![0u64; nq * wpr];
@@ -215,7 +349,15 @@ impl Blocked {
                 self.sweep(&sweep, &qwords, nq, &mut flat);
             }
         }
-        // Threshold subtraction, once per (row, query).
+        // Oddint ±1-plane affine terms (interleaved plans only), then
+        // the threshold subtraction — each once per (row, query).
+        if let Some(c) = &corrections {
+            for (row, radd) in c.row.iter().enumerate() {
+                for (v, qadd) in flat[row * nq..(row + 1) * nq].iter_mut().zip(&c.query) {
+                    *v += radd + qadd;
+                }
+            }
+        }
         for (row, d) in deltas.iter().enumerate() {
             if *d != 0 {
                 for v in &mut flat[row * nq..(row + 1) * nq] {
@@ -250,14 +392,67 @@ mod tests {
     #[test]
     fn plan_constructors_reject_illegal_shapes() {
         assert!(MultibitPlan::vector(0, NumberFormat::Uint, MatrixInterp::U01).is_err());
+        assert!(MultibitPlan::vector(33, NumberFormat::Uint, MatrixInterp::U01).is_err());
         assert!(MultibitPlan::vector(4, NumberFormat::OddInt, MatrixInterp::U01).is_err());
-        assert!(MultibitPlan::matrix(4, 4, NumberFormat::OddInt, NumberFormat::Int).is_err());
         assert!(MultibitPlan::matrix(0, 4, NumberFormat::Int, NumberFormat::Int).is_err());
+        assert!(MultibitPlan::matrix(4, 0, NumberFormat::Int, NumberFormat::Int).is_err());
+        assert!(MultibitPlan::matrix(33, 4, NumberFormat::Int, NumberFormat::Int).is_err());
+        assert!(MultibitPlan::matrix(4, 33, NumberFormat::Int, NumberFormat::Int).is_err());
         let p = MultibitPlan::matrix(3, 2, NumberFormat::Int, NumberFormat::Uint).unwrap();
         assert!(p.check_geometry(10).is_err(), "10 % 3 != 0");
         assert!(p.check_geometry(12).is_ok());
         assert_eq!(p.cycles_per_query(), 6);
         assert_eq!(p.entries(12), 4);
+    }
+
+    #[test]
+    fn oddint_matrix_pairings_are_and_sweeps_with_pop_doubling() {
+        // Any oddint operand turns on popX2; both-oddint adds the ×2
+        // host scale. Uint/int pairings stay the plain AND kernel.
+        let uu = MultibitPlan::matrix(2, 2, NumberFormat::Uint, NumberFormat::Uint).unwrap();
+        assert!(!uu.kernel.pop_x2 && !uu.kernel.xnor);
+        assert_eq!((uu.sweep_pop(), uu.replay_scale()), (1, 1));
+        let uo = MultibitPlan::matrix(2, 2, NumberFormat::Uint, NumberFormat::OddInt).unwrap();
+        assert!(uo.kernel.pop_x2 && !uo.kernel.xnor);
+        assert_eq!((uo.sweep_pop(), uo.replay_scale()), (2, 1));
+        let oo = MultibitPlan::matrix(2, 2, NumberFormat::OddInt, NumberFormat::OddInt).unwrap();
+        assert_eq!((oo.sweep_pop(), oo.replay_scale()), (4, 2));
+        // Zero-pattern values drive the pad algebra and the corrections.
+        assert_eq!(zero_pattern_value(NumberFormat::Uint, 4), 0);
+        assert_eq!(zero_pattern_value(NumberFormat::Int, 4), 0);
+        assert_eq!(zero_pattern_value(NumberFormat::OddInt, 4), -15);
+    }
+
+    #[test]
+    fn oddint_vector_against_int_matrix_matches_golden() {
+        // K-bit int matrix × L-bit oddint vector: the AND sweeps plus
+        // the per-row correction term (the per-query and constant terms
+        // vanish since Z_a = 0).
+        let mut rng = Xoshiro256pp::seeded(73);
+        let (m, kbits, lbits, n_eff) = (5usize, 3u32, 2u32, 9usize);
+        let n = n_eff * kbits as usize;
+        let a_int: Vec<Vec<i64>> = (0..m).map(|_| rng.ints(n_eff, -4, 3)).collect();
+        let rows: Vec<BitVec> = a_int
+            .iter()
+            .map(|r| {
+                BitVec::from_bools(&formats::interleave_row(r, kbits, NumberFormat::Int).unwrap())
+            })
+            .collect();
+        let mut arr = array_with(&rows, n);
+        let plan =
+            MultibitPlan::matrix(kbits, lbits, NumberFormat::Int, NumberFormat::OddInt).unwrap();
+        let xs: Vec<Vec<i64>> = (0..4)
+            .map(|_| {
+                (0..n_eff)
+                    .map(|_| NumberFormat::OddInt.sample(&mut rng, lbits))
+                    .collect()
+            })
+            .collect();
+        let got = Blocked::default().serve_multibit(&mut arr, &plan, &xs).unwrap();
+        for (xi, x) in xs.iter().enumerate() {
+            assert_eq!(got.ys[xi], golden::mvp_i64(&a_int, x), "x{xi}");
+        }
+        assert_eq!(got.cycles, 4 * 6 + 1, "K·L·Q plus one drain");
     }
 
     #[test]

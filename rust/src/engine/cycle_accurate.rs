@@ -118,6 +118,26 @@ impl Engine for CycleAccurate {
         cycles += 1;
         ys.push(out.y);
         array.recycle_buffers(Vec::new(), out.bank_p);
+
+        // Oddint operands in the interleaved layout: the pipeline ran
+        // plain (popX2-doubled) AND passes; apply the remaining host
+        // scale and the affine ±1-plane terms exactly as the blocked
+        // fold does, re-applying the threshold only once at the end.
+        let scale = plan.replay_scale();
+        let corrections =
+            plan.corrections(array.mem_words(), array.words_per_row(), array.config().m, &planes);
+        if scale != 1 || corrections.is_some() {
+            let deltas: Vec<i64> = array.alus().iter().map(|alu| alu.delta).collect();
+            for (q, y) in ys.iter_mut().enumerate() {
+                for (row, v) in y.iter_mut().enumerate() {
+                    let mut u = (*v + deltas[row]) * scale;
+                    if let Some(c) = &corrections {
+                        u += c.row[row] + c.query[q];
+                    }
+                    *v = u - deltas[row];
+                }
+            }
+        }
         Ok(EngineBatch { ys, cycles })
     }
 }

@@ -227,8 +227,10 @@ pub trait Engine {
     /// (`formats::decompose`) and evaluated as `plan.kbits · plan.lbits`
     /// 1-bit plane passes whose partials fold with the per-plane
     /// shift/sign weights `y = Σ_k Σ_l ±2^{(K−1−k)+(L−1−l)} · y_{k,l}`.
-    /// Cycles are charged by the analytic schedule (K·L·Q + one drain)
-    /// on every implementation.
+    /// Oddint operands in the interleaved layout add a popcount
+    /// multiplier plus host-folded affine corrections (see
+    /// [`MultibitPlan::matrix`]). Cycles are charged by the analytic
+    /// schedule (K·L·Q + one drain) on every implementation.
     fn serve_multibit(
         &self,
         array: &mut PpacArray,

@@ -41,6 +41,11 @@ pub enum PpacError {
     /// A serving-layer failure (routing, scatter/gather, worker loss).
     Coordinator(String),
 
+    /// A typed per-job failure surfaced by the coordinator (see
+    /// [`crate::coordinator::JobError`]): what a shard job reported
+    /// instead of an answer.
+    Job(crate::coordinator::JobError),
+
     Io(std::io::Error),
 
     Json(crate::util::json::JsonError),
@@ -64,6 +69,7 @@ impl fmt::Display for PpacError {
             }
             PpacError::Artifact(msg) => write!(f, "runtime artifact error: {msg}"),
             PpacError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            PpacError::Job(e) => write!(f, "job error: {e}"),
             PpacError::Io(e) => write!(f, "{e}"),
             PpacError::Json(e) => write!(f, "{e}"),
         }
@@ -75,6 +81,7 @@ impl std::error::Error for PpacError {
         match self {
             PpacError::Io(e) => Some(e),
             PpacError::Json(e) => Some(e),
+            PpacError::Job(e) => Some(e),
             _ => None,
         }
     }
@@ -83,6 +90,12 @@ impl std::error::Error for PpacError {
 impl From<std::io::Error> for PpacError {
     fn from(e: std::io::Error) -> Self {
         PpacError::Io(e)
+    }
+}
+
+impl From<crate::coordinator::JobError> for PpacError {
+    fn from(e: crate::coordinator::JobError) -> Self {
+        PpacError::Job(e)
     }
 }
 

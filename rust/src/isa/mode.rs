@@ -59,7 +59,9 @@ pub enum OpMode {
         matrix: MatrixInterp,
     },
     /// §III-C2: K-bit matrix × L-bit vector, K·L cycles per vector.
-    /// Matrix and vector in uint or int (the AND-partial formats).
+    /// Any Table I operand pairing: uint/int run pure AND-partial
+    /// passes; an oddint operand adds popX2 plus host-folded affine
+    /// corrections (see [`crate::engine::MultibitPlan::matrix`]).
     MultibitMatrix {
         kbits: u32,
         lbits: u32,

@@ -246,6 +246,49 @@ impl PpacUnit {
         Ok(())
     }
 
+    /// Load a K-bit matrix block no larger than the array, zero-padding
+    /// to the full latch plane: up to M rows of up to N/K entries in the
+    /// §III-C2 interleaved column layout. Padded entries store the
+    /// all-zero bit pattern (value 0 in uint/int, −(2^K − 1) in oddint —
+    /// the sharding gather corrects for it, see
+    /// [`crate::engine::blocked_planes`]); rows beyond the block are
+    /// cleared so stale residents never leak into padded results.
+    pub fn load_multibit_matrix_padded(
+        &mut self,
+        vals: &[Vec<i64>],
+        kbits: u32,
+        fmt: NumberFormat,
+    ) -> Result<()> {
+        let (m, n) = (self.config().m, self.config().n);
+        if kbits == 0 || n % kbits as usize != 0 {
+            return Err(PpacError::Config(format!(
+                "array width {n} not divisible by K = {kbits} (interleaved layout)"
+            )));
+        }
+        let n_eff = n / kbits as usize;
+        if vals.len() > m {
+            return Err(PpacError::DimMismatch {
+                context: "load_multibit_matrix_padded rows",
+                expected: m,
+                got: vals.len(),
+            });
+        }
+        let mut rows = Vec::with_capacity(vals.len());
+        for row in vals {
+            if row.len() > n_eff {
+                return Err(PpacError::DimMismatch {
+                    context: "load_multibit_matrix_padded row entries",
+                    expected: n_eff,
+                    got: row.len(),
+                });
+            }
+            rows.push(formats::interleave_row(row, kbits, fmt)?);
+        }
+        self.load_bit_matrix_padded(&rows)?;
+        self.n_eff = n_eff;
+        Ok(())
+    }
+
     /// Load a K-bit integer matrix in the §III-C2 column layout (entry j
     /// occupies columns j·K..j·K+K, MSB first).
     pub fn load_multibit_matrix(
@@ -729,6 +772,48 @@ mod tests {
         assert_eq!(outs[0].0, outs[1].0, "bit-exact across backends");
         assert_eq!(outs[0].1, outs[1].1, "identical analytic cycle count");
         assert_eq!(outs[0].1, 6 * 3 + 1, "L·Q plus one drain");
+    }
+
+    #[test]
+    fn padded_multibit_load_equals_explicit_zero_entries() {
+        use crate::formats::NumberFormat;
+        let mut rng = Xoshiro256pp::seeded(47);
+        let cfg = PpacConfig::new(16, 32); // K=4 → 8 entries per row
+        let (mr, er) = (10usize, 5usize);
+        let block: Vec<Vec<i64>> = (0..mr).map(|_| rng.ints(er, 0, 15)).collect();
+        let padded: Vec<Vec<i64>> = (0..16)
+            .map(|i| {
+                let mut row = if i < mr { block[i].clone() } else { Vec::new() };
+                row.resize(8, 0);
+                row
+            })
+            .collect();
+        let mode = OpMode::MultibitMatrix {
+            kbits: 4,
+            lbits: 2,
+            a_fmt: NumberFormat::Uint,
+            x_fmt: NumberFormat::Uint,
+        };
+        let mut a = PpacUnit::new(cfg).unwrap();
+        a.load_multibit_matrix_padded(&block, 4, NumberFormat::Uint).unwrap();
+        assert_eq!(a.n_eff(), 8);
+        a.configure(mode.clone()).unwrap();
+        let mut b = PpacUnit::new(cfg).unwrap();
+        b.load_multibit_matrix(&padded, 4, NumberFormat::Uint).unwrap();
+        b.configure(mode).unwrap();
+        let xs: Vec<Vec<i64>> = (0..4).map(|_| rng.ints(8, 0, 3)).collect();
+        assert_eq!(
+            a.mvp_multibit_batch(&xs).unwrap(),
+            b.mvp_multibit_batch(&xs).unwrap()
+        );
+        // Oversize blocks and a non-dividing K are rejected.
+        let too_wide = vec![vec![0i64; 9]; 2];
+        assert!(a
+            .load_multibit_matrix_padded(&too_wide, 4, NumberFormat::Uint)
+            .is_err());
+        assert!(a
+            .load_multibit_matrix_padded(&[vec![0i64; 2]], 5, NumberFormat::Uint)
+            .is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
-//! ppac serve [--workers --batch --jobs --backend blocked|cycle --threads T]   coordinator demo
+//! ppac serve [--workers --batch --jobs --backend blocked|cycle --threads T --ttl-ms MS]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -444,7 +444,7 @@ fn simulate(rest: Vec<String>) -> AnyResult {
 }
 
 fn serve(rest: Vec<String>) -> AnyResult {
-    use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput};
+    use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, MatrixSpec};
     use ppac::engine::{Backend, EngineOpts};
     use ppac::util::config::Config;
     let p = Spec::new()
@@ -455,6 +455,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("n")
         .opt("backend")
         .opt("threads")
+        .opt("ttl-ms")
         .opt("config")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
@@ -471,15 +472,24 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .str_or("backend", &file.str_or("coordinator.backend", "blocked"))
         .parse()?;
     let threads = p.usize_or("threads", file.usize_or("engine.threads", 1)?)?;
+    let ttl_ms = p.usize_or("ttl-ms", file.usize_or("coordinator.registry_ttl_ms", 0)?)?;
     let engine = EngineOpts::threaded(threads);
     let tile = PpacConfig::new(m, n);
-    let coord =
-        Coordinator::start(CoordinatorConfig { tile, workers, max_batch, backend, engine })?;
+    let registry_ttl = (ttl_ms > 0).then(|| std::time::Duration::from_millis(ttl_ms as u64));
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile,
+        workers,
+        max_batch,
+        backend,
+        engine,
+        registry_ttl,
+        ..Default::default()
+    })?;
     let mut rng = Xoshiro256pp::seeded(11);
     let matrices: Vec<_> = (0..workers)
         .map(|_| {
             coord
-                .register_matrix((0..m).map(|_| rng.bits(n)).collect())
+                .register(MatrixSpec::Bit1 { rows: (0..m).map(|_| rng.bits(n)).collect() })
                 .unwrap()
         })
         .collect();
@@ -503,6 +513,12 @@ fn serve(rest: Vec<String>) -> AnyResult {
     println!("matrix loads     : {}", snap.matrix_loads);
     println!("latency p50/p99  : {:.0} / {:.0} us", snap.p50_us, snap.p99_us);
     println!("sim cycles total : {}", snap.sim_cycles);
+    if snap.jobs_failed > 0 || snap.auto_evictions > 0 {
+        println!(
+            "failures         : {} typed job errors, {} TTL auto-evictions",
+            snap.jobs_failed, snap.auto_evictions
+        );
+    }
     println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight)");
     for (i, w) in snap.per_worker.iter().enumerate() {
         println!(

@@ -99,6 +99,20 @@ impl Runner {
     }
 }
 
+/// Assert-style helper for property bodies: boolean form.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($ctx:tt)*) => {{
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond))
+                + &format!("  [{}]", format_args!($($ctx)*)));
+        }
+    }};
+    ($cond:expr) => {
+        $crate::prop_assert!($cond, "")
+    };
+}
+
 /// Assert-style helper for property bodies.
 #[macro_export]
 macro_rules! prop_assert_eq {

@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 
 use ppac::coordinator::{
-    Coordinator, CoordinatorConfig, JobInput, JobOutput, ModeKey,
+    Coordinator, CoordinatorConfig, JobInput, JobOutput, MatrixSpec, ModeKey,
 };
 use ppac::golden;
 use ppac::sim::PpacConfig;
@@ -33,7 +33,10 @@ fn random_job_mixes_conserve_metrics_and_results() {
         let mats: Vec<(u64, Vec<Vec<bool>>)> = (0..n_mats)
             .map(|_| {
                 let m: Vec<Vec<bool>> = (0..32).map(|_| rng.bits(n)).collect();
-                (coord.register_matrix(m.clone()).unwrap(), m)
+                (
+                    coord.register(MatrixSpec::Bit1 { rows: m.clone() }).unwrap(),
+                    m,
+                )
             })
             .collect();
 
@@ -67,7 +70,7 @@ fn random_job_mixes_conserve_metrics_and_results() {
         let mut per_matrix_worker: HashMap<(u64, ModeKey), usize> = HashMap::new();
         for (h, want) in handles.into_iter().zip(expects) {
             let r = h.wait().map_err(|e| e.to_string())?;
-            crate::assert_prop(r.output == want, "job output mismatch")?;
+            crate::assert_prop(r.output == Ok(want), "job output mismatch")?;
             crate::assert_prop(
                 r.batch_size >= 1 && r.batch_size <= max_batch,
                 "batch size out of bounds",
@@ -121,7 +124,7 @@ fn matrix_worker_affinity_is_stable_per_matrix() {
         })
         .map_err(|e| e.to_string())?;
         let mid = coord
-            .register_matrix((0..32).map(|_| rng.bits(32)).collect())
+            .register(MatrixSpec::Bit1 { rows: (0..32).map(|_| rng.bits(32)).collect() })
             .map_err(|e| e.to_string())?;
         let mut seen = None;
         for _ in 0..20 {
@@ -170,7 +173,9 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
         let m = 1 + rng.below(40) as usize;
         let n = 1 + rng.below(40) as usize;
         let mat: Vec<Vec<bool>> = (0..m).map(|_| rng.bits(n)).collect();
-        let mid = coord.register_matrix(mat.clone()).map_err(|e| e.to_string())?;
+        let mid = coord
+            .register(MatrixSpec::Bit1 { rows: mat.clone() })
+            .map_err(|e| e.to_string())?;
 
         let xs: Vec<Vec<bool>> = (0..1 + rng.below(6) as usize)
             .map(|_| rng.bits(n))
@@ -214,7 +219,7 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
         crate::assert_prop(results.len() == inputs.len(), "batch result count")?;
         for (r, want) in results.iter().zip(&wants) {
             crate::assert_prop(
-                &r.output == want,
+                r.output.as_ref().ok() == Some(want),
                 &format!("sharded batch output mismatch ({m}x{n})"),
             )?;
         }
@@ -224,7 +229,7 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
             .map_err(|e| e.to_string())?;
         let r = h.wait().map_err(|e| e.to_string())?;
         crate::assert_prop(
-            r.output == wants[0],
+            r.output.as_ref().ok() == Some(&wants[0]),
             &format!("sharded submit output mismatch ({m}x{n})"),
         )?;
         let expect_shards = m.div_ceil(16) * n.div_ceil(16);

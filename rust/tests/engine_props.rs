@@ -328,8 +328,10 @@ fn multibit_vector_blocked_planes_match_cycle_and_golden() {
 }
 
 /// Blocked-planes == cycle-accurate == golden for the §III-C2
-/// interleaved K-bit-matrix modes: K, L ∈ {1, 2, 4, 8}, uint/int
-/// operand pairings, ragged entry counts, 1 and 4 sweep threads.
+/// interleaved K-bit-matrix modes: K, L ∈ {1, 2, 4, 8}, every Table I
+/// operand pairing (uint/int run pure AND passes; oddint operands add
+/// the popX2 + host-correction expansion), ragged entry counts, 1 and 4
+/// sweep threads.
 #[test]
 fn multibit_matrix_blocked_planes_match_cycle_and_golden() {
     let mut rng = Xoshiro256pp::seeded(603);
@@ -340,6 +342,11 @@ fn multibit_matrix_blocked_planes_match_cycle_and_golden() {
             (NumberFormat::Uint, NumberFormat::Int),
             (NumberFormat::Int, NumberFormat::Uint),
             (NumberFormat::Int, NumberFormat::Int),
+            (NumberFormat::Uint, NumberFormat::OddInt),
+            (NumberFormat::Int, NumberFormat::OddInt),
+            (NumberFormat::OddInt, NumberFormat::Uint),
+            (NumberFormat::OddInt, NumberFormat::Int),
+            (NumberFormat::OddInt, NumberFormat::OddInt),
         ] {
             for n_eff in [1usize, 21] {
                 let n = n_eff * kbits as usize;
@@ -402,8 +409,9 @@ fn multibit_blocked_equals_cycle_property() {
             let kbits = 1 + rng.below(8) as u32;
             let lbits = 1 + rng.below(8) as u32;
             let n_eff = 1 + rng.below(24) as usize;
-            let a_fmt = *g.choose(&[NumberFormat::Uint, NumberFormat::Int]);
-            let x_fmt = *g.choose(&[NumberFormat::Uint, NumberFormat::Int]);
+            let fmts = [NumberFormat::Uint, NumberFormat::Int, NumberFormat::OddInt];
+            let a_fmt = *g.choose(&fmts);
+            let x_fmt = *g.choose(&fmts);
             (OpMode::MultibitMatrix { kbits, lbits, a_fmt, x_fmt }, n_eff * kbits as usize)
         } else {
             let lbits = 1 + rng.below(8) as u32;
