@@ -258,6 +258,53 @@ fn main() {
         coord.shutdown();
     }
 
+    // ---- replicated shard serving: one hot matrix, two replicas ---------
+    // The same burst shape as coordinator_roundtrip, but every job
+    // targets ONE matrix registered with replicas = 2: throughput must
+    // come from both pinned workers (replica hits spread), not
+    // bottleneck on a single resident tile.
+    {
+        let coord = Coordinator::start(CoordinatorConfig {
+            tile: cfg,
+            workers: 4,
+            max_batch: 64,
+            backend: Backend::Blocked,
+            replicas: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let mid = coord
+            .register(MatrixSpec::Bit1 { rows: (0..256).map(|_| rng.bits(256)).collect() })
+            .unwrap();
+        let payloads: Vec<Vec<bool>> = (0..256).map(|_| rng.bits(256)).collect();
+        let s = bench.run("coordinator_replicated_w4_r2_b256", || {
+            let handles: Vec<_> = payloads
+                .iter()
+                .map(|x| coord.submit(mid, JobInput::Pm1Mvp(x.clone())).unwrap())
+                .collect();
+            let mut acc = 0i64;
+            for h in handles {
+                if let Ok(ppac::coordinator::JobOutput::Ints(y)) = h.wait().unwrap().output {
+                    acc += y[0];
+                }
+            }
+            acc
+        });
+        println!(
+            "  -> {} (one hot matrix, 2 replicas over 4 workers)",
+            human_rate(s.throughput(payloads.len() as f64), "job/s")
+        );
+        report.add(&s, payloads.len() as f64, "job/s");
+        let snap = coord.metrics.snapshot();
+        let hits: Vec<u64> = snap.per_worker.iter().map(|w| w.replica_hits).collect();
+        println!(
+            "  -> replica hits per worker {:?} ({} workers served the hot shard)",
+            hits,
+            hits.iter().filter(|&&h| h > 0).count()
+        );
+        coord.shutdown();
+    }
+
     // ---- single-job latency ---------------------------------------------
     let coord = Coordinator::start(CoordinatorConfig {
         tile: cfg,

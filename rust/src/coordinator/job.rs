@@ -17,8 +17,11 @@ use crate::isa::MatrixInterp;
 /// Identifier of a registered logical matrix.
 pub type MatrixId = u64;
 
-/// Identifier of one resident-able shard: a tile-sized block of a
-/// registered matrix (a 1×1-grid matrix has exactly one shard).
+/// Identifier of one resident-able shard *replica*: a tile-sized block
+/// of a registered matrix (a 1×1-grid matrix has exactly one shard).
+/// With replication factor `r`, each logical block owns `r` such ids —
+/// distinct registry entries sharing one `Arc` of block data, each
+/// independently pinnable and resident on its own worker.
 pub type ShardId = u64;
 
 /// What a client registers with
@@ -103,8 +106,10 @@ pub enum JobError {
     /// An unsupported configuration: illegal format pairing, L outside
     /// 1..=32, K/L beyond the tile's row-ALU limits, bad geometry.
     Unsupported { reason: String },
-    /// The worker thread disappeared before every shard partial
-    /// arrived.
+    /// A worker died with this job unanswered and no surviving replica
+    /// could absorb it within the retry budget (with replication and
+    /// live workers remaining, the gather re-dispatches instead of
+    /// surfacing this).
     WorkerLost,
 }
 
@@ -317,6 +322,11 @@ pub struct JobResult {
     /// Number of shard partials reduced into this result (1 = the matrix
     /// fit a single tile).
     pub fan_out: usize,
+    /// Failover re-dispatch wave that produced this partial (0 = first
+    /// dispatch). Gathered results report the highest wave among their
+    /// partials, so a nonzero value marks a job that survived a worker
+    /// loss.
+    pub attempt: u32,
 }
 
 /// An in-flight shard request (internal).
@@ -328,6 +338,10 @@ pub struct Job {
     pub shard_index: usize,
     pub input: JobInput,
     pub submitted: Instant,
+    /// Failover re-dispatch wave (0 = first dispatch; the gather's
+    /// bounded retry loop counts up). Workers echo it back in the
+    /// partial — purely observability, never interpreted.
+    pub attempt: u32,
     pub respond: Sender<JobResult>,
 }
 

@@ -27,6 +27,10 @@ pub struct WorkerMetrics {
     pub sim_cycles: AtomicU64,
     /// Resident shards this worker dropped on matrix unregistration.
     pub evictions: AtomicU64,
+    /// Shard jobs routed here for shards with more than one replica —
+    /// the per-replica occupancy of load-balanced reads. A replicated
+    /// matrix under load shows these spread over several workers.
+    pub replica_hits: AtomicU64,
 }
 
 /// Shared metrics (atomics for counters, a mutexed reservoir for
@@ -40,10 +44,27 @@ pub struct Metrics {
     /// Completed logical jobs whose output was a typed `JobError`
     /// (subset of `jobs_completed`).
     pub jobs_failed: AtomicU64,
-    /// Shard jobs produced by the scatter stage (the fan-out).
+    /// Shard jobs dispatched to workers (the scatter fan-out plus any
+    /// failover re-dispatches).
     pub shard_jobs_submitted: AtomicU64,
-    /// Shard jobs served by workers.
+    /// Shard jobs a worker answered with a result.
     pub shard_jobs_completed: AtomicU64,
+    /// Shard jobs a worker answered with a typed `JobError`.
+    pub shard_jobs_failed: AtomicU64,
+    /// Shard jobs that died unanswered in a lost worker's queue (each
+    /// is re-dispatched while retry budget remains). Quiescent,
+    /// `shard_jobs_submitted ≈ shard_jobs_completed + shard_jobs_failed
+    /// + shard_jobs_lost` — approximately, because failover is
+    /// at-least-once: a dying worker can answer a job whose run is also
+    /// re-served elsewhere (the gather folds duplicates once).
+    pub shard_jobs_lost: AtomicU64,
+    /// Shard jobs re-dispatched by the gather's failover retry waves.
+    pub retries: AtomicU64,
+    /// Dispatches re-routed to another replica after a send revealed a
+    /// dead worker (scatter-time or re-dispatch-time).
+    pub failovers: AtomicU64,
+    /// Workers observed dead (first discoveries only).
+    pub workers_lost: AtomicU64,
     /// Logical jobs that required a host-side reduction of >1 shard.
     pub gathers: AtomicU64,
     /// Matrices dropped via `unregister_matrix`.
@@ -136,6 +157,11 @@ impl Metrics {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             shard_jobs_submitted: self.shard_jobs_submitted.load(Ordering::Relaxed),
             shard_jobs_completed: self.shard_jobs_completed.load(Ordering::Relaxed),
+            shard_jobs_failed: self.shard_jobs_failed.load(Ordering::Relaxed),
+            shard_jobs_lost: self.shard_jobs_lost.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            workers_lost: self.workers_lost.load(Ordering::Relaxed),
             gathers: self.gathers.load(Ordering::Relaxed),
             matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
             auto_evictions: self.auto_evictions.load(Ordering::Relaxed),
@@ -154,6 +180,7 @@ impl Metrics {
                     batches: w.batches.load(Ordering::Relaxed),
                     sim_cycles: w.sim_cycles.load(Ordering::Relaxed),
                     evictions: w.evictions.load(Ordering::Relaxed),
+                    replica_hits: w.replica_hits.load(Ordering::Relaxed),
                 })
                 .collect(),
         }
@@ -168,6 +195,7 @@ pub struct WorkerSnapshot {
     pub batches: u64,
     pub sim_cycles: u64,
     pub evictions: u64,
+    pub replica_hits: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -178,6 +206,11 @@ pub struct MetricsSnapshot {
     pub jobs_failed: u64,
     pub shard_jobs_submitted: u64,
     pub shard_jobs_completed: u64,
+    pub shard_jobs_failed: u64,
+    pub shard_jobs_lost: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub workers_lost: u64,
     pub gathers: u64,
     pub matrices_unregistered: u64,
     pub auto_evictions: u64,

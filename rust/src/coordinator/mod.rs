@@ -1,4 +1,5 @@
-//! L3 coordinator: a multi-tile PPAC serving layer with sharded matrices.
+//! L3 coordinator: a multi-tile PPAC serving layer with sharded,
+//! replicated matrices.
 //!
 //! The paper's envisioned deployment keeps the matrix A static while
 //! input vectors stream at high rate (§IV-A). The coordinator turns that
@@ -12,15 +13,20 @@
 //!    tile-sized *shards*, zero-padded at the boundary; K-bit matrices
 //!    shard with **entry-aligned column blocking** (each group of
 //!    `tile_n / K` entries maps to K·(tile_n/K) = tile_n physical
-//!    columns), so an entry never straddles shards. Each shard is an
-//!    independently resident-able unit with its own worker affinity.
+//!    columns), so an entry never straddles shards. With a replication
+//!    factor `r > 1` ([`CoordinatorConfig::replicas`] or
+//!    [`Coordinator::register_replicated`]) each logical shard owns `r`
+//!    registry entries sharing one block of data, pinned on distinct
+//!    workers — hot matrices serve from several tiles at once.
 //! 2. **Scatter** — `submit` / `submit_batch` validate against the
 //!    logical shape, split the input vector into column blocks, and fan
-//!    one shard job per (row block, column block) out to the shards'
-//!    workers. A **residency-aware router** keeps a shard on the tile
-//!    that already holds it (loading a 256-row shard costs 256 write
-//!    cycles — the analogue of a vLLM router's prefix-cache affinity);
-//!    new shards go to the worker with the fewest *in-flight* jobs.
+//!    one shard job per (row block, column block) out through the shared
+//!    `Router` (`coordinator/router.rs`), which both the scatter path
+//!    and the reducer pool hold. The router keeps a shard on the tile that
+//!    already holds it (loading a 256-row shard costs 256 write cycles —
+//!    the analogue of a vLLM router's prefix-cache affinity), sends each
+//!    job of a replicated shard to the **least-loaded replica**, and
+//!    places new shards on the worker with the fewest *in-flight* jobs.
 //!    Workers **batch** consecutive same-(shard, mode) jobs to exploit
 //!    the one-MVP-per-cycle pipeline, which `submit_batch` feeds
 //!    directly by shipping a whole batch through one response channel.
@@ -33,9 +39,21 @@
 //!    gathers, and [`BatchHandle`]/[`JobHandle`] offer non-blocking
 //!    `try_wait` / bounded `wait_timeout` polling on top of the blocking
 //!    `wait`.
-//! 4. **Unregister** — [`Coordinator::unregister_matrix`] drops a
-//!    matrix's shards from the registry, releases affinities/placement
-//!    counts and evicts resident copies. With
+//! 4. **Failover** — nothing announces a worker crash; the router learns
+//!    of one when a send fails, and the gather when a shard partial
+//!    never arrives (the response channel disconnects with pairs
+//!    missing) or answers `WorkerLost`/`UnknownShard`. Both sides hold
+//!    the same `Arc<Router>`: the scatter re-dispatches a failed shard
+//!    run to a surviving replica on the spot, and the reducer re-issues
+//!    missing shard jobs in bounded retry waves
+//!    ([`CoordinatorConfig::retry_limit`]) before a typed error reaches
+//!    the client. Duplicate partials (a worker served a job, then died
+//!    before the rest of its queue) fold at most once. A killed worker
+//!    is thereby a load-balancing event, not a `WorkerLost` for every
+//!    in-flight job on it.
+//! 5. **Unregister** — [`Coordinator::unregister_matrix`] drops a
+//!    matrix's shard replicas from the registry, releases
+//!    affinities/placement counts and evicts resident copies. With
 //!    [`CoordinatorConfig::registry_ttl`] set, matrices idle longer than
 //!    the TTL are swept automatically on registry/submit activity (the
 //!    `auto_evictions` metric counts them).
@@ -61,10 +79,11 @@
 
 pub mod job;
 pub mod metrics;
+mod router;
 pub mod worker;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -82,6 +101,8 @@ pub use job::{
     ModeKey, MultibitSpec, ShardId,
 };
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
+pub use router::RoutingStats;
+use router::Router;
 use worker::{MatrixRegistry, ShardData, Worker, WorkerMsg};
 
 /// Coordinator configuration.
@@ -103,6 +124,17 @@ pub struct CoordinatorConfig {
     /// (overlapping gather with the next scatter). Small is right: a
     /// reduction is a few integer adds per partial.
     pub reducers: usize,
+    /// Replication factor matrices register with by default (per-matrix
+    /// override: [`Coordinator::register_replicated`]). Each logical
+    /// shard gets this many registry replicas sharing one resident
+    /// block, pinned on distinct workers at placement time: reads
+    /// load-balance across the replicas and a lost worker fails over
+    /// instead of failing jobs. Clamped to the worker count.
+    pub replicas: usize,
+    /// Failover re-dispatch waves a gather may spend before a transient
+    /// `WorkerLost`/`UnknownShard` becomes the client's typed error.
+    /// 0 disables re-dispatch entirely.
+    pub retry_limit: usize,
     /// If set, matrices idle (no submit) for at least this long are
     /// unregistered automatically. The sweep is opportunistic — it runs
     /// on registry/submit activity, not on a dedicated timer thread —
@@ -119,6 +151,8 @@ impl Default for CoordinatorConfig {
             backend: Backend::Blocked,
             engine: EngineOpts::default(),
             reducers: 2,
+            replicas: 1,
+            retry_limit: 2,
             registry_ttl: None,
         }
     }
@@ -136,6 +170,7 @@ impl Default for CoordinatorConfig {
 ///
 /// let coord = Coordinator::builder()
 ///     .workers(4)
+///     .replicas(2) // every shard served by two workers
 ///     .engine(EngineOpts::threaded(1))
 ///     .worker_engine(0, EngineOpts::threaded(4)) // worker 0: tall-tile pool
 ///     .build()
@@ -189,6 +224,19 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Default replication factor (see [`CoordinatorConfig::replicas`]).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.cfg.replicas = replicas;
+        self
+    }
+
+    /// Failover re-dispatch budget (see
+    /// [`CoordinatorConfig::retry_limit`]).
+    pub fn retry_limit(mut self, retry_limit: usize) -> Self {
+        self.cfg.retry_limit = retry_limit;
+        self
+    }
+
     pub fn registry_ttl(mut self, ttl: Option<Duration>) -> Self {
         self.cfg.registry_ttl = ttl;
         self
@@ -207,12 +255,15 @@ impl CoordinatorBuilder {
 }
 
 /// A registered matrix: its partition geometry, storage kind, the
-/// registry ids of its shards (row-major rb·col_blocks + cb), and its
-/// last-use stamp for the TTL sweep.
+/// registry ids of its shard replicas, and its last-use stamp for the
+/// TTL sweep.
 struct ShardedMatrix {
     part: Partition,
     kind: MatrixKind,
-    shard_ids: Vec<ShardId>,
+    /// Replica registry ids per logical shard, row-major
+    /// (rb·col_blocks + cb): `shard_replicas[s]` lists the `r` replicas
+    /// sharing that block's `Arc<ShardData>`.
+    shard_replicas: Vec<Vec<ShardId>>,
     last_used: Mutex<Instant>,
     /// Batches scattered but not yet fully gathered. The TTL sweep
     /// skips matrices with outstanding gathers, so a worker backlog
@@ -232,11 +283,16 @@ struct GatherState {
     int_acc: Vec<Vec<i64>>,
     bit_acc: Vec<Vec<bool>>,
     errors: Vec<Option<JobError>>,
-    recvd: Vec<usize>,
+    /// Finalized (job, shard) pairs. A pair folds in at most once: a
+    /// duplicate partial — the original worker answered a job, then
+    /// died, and the failover re-dispatched the whole run — is dropped
+    /// instead of double-counted.
+    got: Vec<Vec<bool>>,
     cycles: Vec<f64>,
     latency: Vec<f64>,
     max_batch: Vec<usize>,
     worker0: Vec<usize>,
+    attempts: Vec<u32>,
     received: usize,
     metrics: Arc<Metrics>,
 }
@@ -244,6 +300,7 @@ struct GatherState {
 impl GatherState {
     fn new(plan: GatherPlan, base_job_id: u64, count: usize, metrics: Arc<Metrics>) -> Self {
         let padded_rows = plan.part.row_blocks * plan.part.tile_m;
+        let shards = plan.shards();
         let gf2 = plan.mode == ModeKey::Gf2;
         Self {
             plan,
@@ -252,11 +309,12 @@ impl GatherState {
             int_acc: vec![vec![0i64; if gf2 { 0 } else { padded_rows }]; count],
             bit_acc: vec![vec![false; if gf2 { padded_rows } else { 0 }]; count],
             errors: vec![None; count],
-            recvd: vec![0; count],
+            got: vec![vec![false; shards]; count],
             cycles: vec![0f64; count],
             latency: vec![0f64; count],
             max_batch: vec![0usize; count],
             worker0: vec![0usize; count],
+            attempts: vec![0u32; count],
             received: 0,
             metrics,
         }
@@ -270,20 +328,33 @@ impl GatherState {
         self.received >= self.expected()
     }
 
-    /// Fold one shard partial in. A malformed partial (stray id, wrong
-    /// payload kind) aborts the whole gather.
-    fn absorb(&mut self, partial: JobResult) -> Result<()> {
-        let part = self.plan.part;
-        let shards = self.plan.shards();
-        let gf2 = self.plan.mode == ModeKey::Gf2;
+    /// Validate a partial's (job, shard) coordinates.
+    fn pair(&self, partial: &JobResult) -> Result<(usize, usize)> {
         let idx = partial.job_id.wrapping_sub(self.base_job_id) as usize;
-        if idx >= self.count || partial.shard >= shards {
+        if idx >= self.count || partial.shard >= self.plan.shards() {
             return Err(PpacError::Coordinator(format!(
                 "stray shard partial (job {}, shard {})",
                 partial.job_id, partial.shard
             )));
         }
-        let off = (partial.shard / part.col_blocks) * part.tile_m;
+        Ok((idx, partial.shard))
+    }
+
+    fn pair_done(&self, idx: usize, shard: usize) -> bool {
+        self.got[idx][shard]
+    }
+
+    /// Fold one shard partial in. A malformed partial (stray id, wrong
+    /// payload kind) aborts the whole gather; a duplicate for an
+    /// already-finalized pair is ignored.
+    fn absorb(&mut self, partial: JobResult) -> Result<()> {
+        let (idx, shard) = self.pair(&partial)?;
+        if self.got[idx][shard] {
+            return Ok(());
+        }
+        let part = self.plan.part;
+        let gf2 = self.plan.mode == ModeKey::Gf2;
+        let off = (shard / part.col_blocks) * part.tile_m;
         match &partial.output {
             Ok(JobOutput::Ints(p)) if !gf2 => {
                 for (i, &v) in p.iter().enumerate() {
@@ -309,25 +380,48 @@ impl GatherState {
         self.cycles[idx] += partial.cycles_share;
         self.latency[idx] = self.latency[idx].max(partial.latency_us);
         self.max_batch[idx] = self.max_batch[idx].max(partial.batch_size);
-        if partial.shard == 0 {
+        self.attempts[idx] = self.attempts[idx].max(partial.attempt);
+        if shard == 0 {
             self.worker0[idx] = partial.worker;
         }
-        self.recvd[idx] += 1;
+        self.got[idx][shard] = true;
         self.received += 1;
         Ok(())
     }
 
-    /// The response channel disconnected early (worker thread gone):
-    /// every job still missing partials fails typed, instead of the
-    /// whole batch aborting.
-    fn mark_lost(&mut self) {
-        let shards = self.plan.shards();
-        for (idx, &got) in self.recvd.iter().enumerate() {
-            if got < shards && self.errors[idx].is_none() {
-                self.errors[idx] = Some(JobError::WorkerLost);
+    /// Close an open pair with a typed error (retry budget exhausted or
+    /// no surviving replica). A no-op for pairs that already folded.
+    fn finalize_error(&mut self, idx: usize, shard: usize, err: JobError) {
+        if self.got[idx][shard] {
+            return;
+        }
+        if self.errors[idx].is_none() {
+            self.errors[idx] = Some(err);
+        }
+        self.got[idx][shard] = true;
+        self.received += 1;
+    }
+
+    /// Every (job, shard) pair not yet finalized — what a retry wave
+    /// re-dispatches.
+    fn missing_pairs(&self) -> Vec<(usize, usize)> {
+        let mut missing = Vec::new();
+        for (idx, row) in self.got.iter().enumerate() {
+            for (shard, &done) in row.iter().enumerate() {
+                if !done {
+                    missing.push((idx, shard));
+                }
             }
         }
-        self.received = self.expected();
+        missing
+    }
+
+    /// Close every open pair as `WorkerLost` (the no-retry path: the
+    /// response channel died and no budget or context remains).
+    fn mark_lost(&mut self) {
+        for (idx, shard) in self.missing_pairs() {
+            self.finalize_error(idx, shard, JobError::WorkerLost);
+        }
     }
 
     /// Strip padding, apply the pad correction, and emit one result per
@@ -363,6 +457,7 @@ impl GatherState {
                 batch_size: self.max_batch[idx],
                 shard: 0,
                 fan_out: shards,
+                attempt: self.attempts[idx],
             });
         }
         self.metrics
@@ -380,6 +475,19 @@ impl GatherState {
     }
 }
 
+/// Everything a reducer needs to re-dispatch a missing shard job to a
+/// surviving replica: the shared router, the matrix's replica table
+/// (the `Arc` keeps the blocks alive even across an unregister race),
+/// and the original inputs to re-split.
+struct RetryCtx {
+    router: Arc<Router>,
+    matrix: Arc<ShardedMatrix>,
+    inputs: Vec<JobInput>,
+    submitted: Instant,
+    /// Retry waves this gather may spend (the bounded budget).
+    budget: usize,
+}
+
 /// One gather handed to the reducer pool.
 struct ReduceTask {
     rx: Receiver<JobResult>,
@@ -388,24 +496,151 @@ struct ReduceTask {
     /// The matrix's outstanding-gather count, released when this gather
     /// ends (however it ends) — the TTL sweep's eviction guard.
     inflight: Arc<AtomicU64>,
+    /// Failover re-dispatch context; `None` runs the gather without
+    /// retries (unit tests).
+    retry: Option<RetryCtx>,
 }
 
-/// Reducer loop: drain each task's partials as they arrive, then ship
-/// the finished batch to its handle.
-fn run_reducer(tasks: Receiver<ReduceTask>) {
-    while let Ok(mut task) = tasks.recv() {
-        let outcome = (|| {
-            while !task.state.complete() {
-                match task.rx.recv() {
-                    Ok(partial) => task.state.absorb(partial)?,
-                    Err(_) => {
-                        task.state.mark_lost();
-                        break;
-                    }
+/// Would re-dispatching this failed pair change anything? `WorkerLost`
+/// means the job never reached a live replica — always worth a retry.
+/// `UnknownShard` is only transient while the registration is still
+/// live (the worker raced a reload/evict): once every replica has left
+/// the shared registry, any worker would answer the same, so burning
+/// retry waves only delays the typed error the client is owed.
+/// Deterministic verdicts (format range, kind mismatch, …) never retry.
+fn worth_retry(ctx: &RetryCtx, shard_idx: usize, err: &JobError) -> bool {
+    match err {
+        JobError::WorkerLost => true,
+        JobError::UnknownShard { .. } => ctx.matrix.shard_replicas[shard_idx]
+            .iter()
+            .any(|&sid| ctx.router.shard_known(sid)),
+        _ => false,
+    }
+}
+
+/// Re-issue one missing (job, shard) pair through the router, retrying
+/// across replicas as sends reveal dead workers. `Err` when no live
+/// worker remains.
+fn redispatch(
+    ctx: &RetryCtx,
+    state: &GatherState,
+    idx: usize,
+    shard_idx: usize,
+    attempt: u32,
+    tx: &Sender<JobResult>,
+) -> std::result::Result<(), JobError> {
+    let part = state.plan.part;
+    let cb = shard_idx % part.col_blocks;
+    let replicas = &ctx.matrix.shard_replicas[shard_idx];
+    loop {
+        let Some((sid, worker)) = ctx.router.route(replicas) else {
+            return Err(JobError::WorkerLost);
+        };
+        if let Some(wm) = state.metrics.worker(worker) {
+            wm.inflight.fetch_add(1, Ordering::Relaxed);
+        }
+        let job = job::Job {
+            job_id: state.base_job_id + idx as u64,
+            shard: sid,
+            shard_index: shard_idx,
+            input: ctx.inputs[idx].split(&part, cb),
+            submitted: ctx.submitted,
+            attempt,
+            respond: tx.clone(),
+        };
+        if ctx.router.send(worker, WorkerMsg::Job(job)) {
+            state.metrics.shard_jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            state.metrics.retries.fetch_add(1, Ordering::Relaxed);
+            if replicas.len() > 1 {
+                if let Some(wm) = state.metrics.worker(worker) {
+                    wm.replica_hits.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            Ok(task.state.finish())
-        })();
+            return Ok(());
+        }
+        // The in-flight bump is reclaimed by mark_dead's reset — the
+        // worker may have served part of its queue before dying, so a
+        // plain rollback could double-subtract.
+        ctx.router.mark_dead(worker);
+        state.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Drain one gather to completion, re-dispatching lost shard jobs in
+/// bounded retry waves.
+///
+/// A wave boundary is the response channel disconnecting: the scatter's
+/// sender, every worker clone and any prior wave are gone, so whatever
+/// pairs are still open either answered with a transient error or died
+/// unanswered in a lost worker's queue. Each wave re-issues the open
+/// pairs on a fresh channel through the shared router; when the budget
+/// is spent, open pairs finalize with their last seen typed error.
+fn reduce_task(task: &mut ReduceTask) -> Result<Vec<JobResult>> {
+    let mut last_err: HashMap<(usize, usize), JobError> = HashMap::new();
+    let mut wave = 0usize;
+    loop {
+        while !task.state.complete() {
+            let Ok(partial) = task.rx.recv() else { break };
+            let (idx, shard) = task.state.pair(&partial)?;
+            if let Err(je) = &partial.output {
+                let retryable = task
+                    .retry
+                    .as_ref()
+                    .is_some_and(|r| wave < r.budget && worth_retry(r, shard, je));
+                if retryable && !task.state.pair_done(idx, shard) {
+                    // Leave the pair open: the next wave re-dispatches
+                    // it to a surviving replica.
+                    last_err.insert((idx, shard), je.clone());
+                    continue;
+                }
+            }
+            task.state.absorb(partial)?;
+        }
+        if task.state.complete() {
+            break;
+        }
+        let missing = task.state.missing_pairs();
+        // Pairs that vanished without even a typed answer died in a
+        // lost worker's queue — the "lost" side of the dispatch
+        // accounting, whether or not budget remains to re-issue them.
+        let lost = missing.iter().filter(|&&p| !last_err.contains_key(&p)).count() as u64;
+        if lost > 0 {
+            task.state.metrics.shard_jobs_lost.fetch_add(lost, Ordering::Relaxed);
+        }
+        let can_retry = task.retry.as_ref().is_some_and(|r| wave < r.budget);
+        if !can_retry {
+            // Budget spent (or no retry context): open pairs finalize
+            // with their last typed answer; anything that never answered
+            // at all is a lost worker's silence.
+            for (idx, shard) in missing {
+                if let Some(err) = last_err.remove(&(idx, shard)) {
+                    task.state.finalize_error(idx, shard, err);
+                }
+            }
+            task.state.mark_lost();
+            break;
+        }
+        let ctx = task.retry.as_ref().unwrap();
+        wave += 1;
+        let (tx, rx) = channel();
+        for (idx, shard) in missing {
+            last_err.remove(&(idx, shard));
+            if let Err(je) = redispatch(ctx, &task.state, idx, shard, wave as u32, &tx) {
+                task.state.finalize_error(idx, shard, je);
+            }
+        }
+        drop(tx);
+        task.rx = rx;
+    }
+    Ok(task.state.finish())
+}
+
+/// Reducer loop: drain each task's partials as they arrive (re-issuing
+/// lost shard jobs through the router), then ship the finished batch to
+/// its handle.
+fn run_reducer(tasks: Receiver<ReduceTask>) {
+    while let Ok(mut task) = tasks.recv() {
+        let outcome = reduce_task(&mut task);
         task.inflight.fetch_sub(1, Ordering::Relaxed);
         // A dropped handle just means the client stopped caring.
         let _ = task.done.send(outcome);
@@ -521,43 +756,28 @@ impl JobHandle {
     }
 }
 
-/// Least-loaded placement: fewest in-flight shard jobs first, tie-broken
-/// by fewest shards ever placed (spread), then lowest index (determinism).
-///
-/// In-flight counts are decremented when jobs finish, so a worker that
-/// drained its queue competes as idle again — the old cumulative
-/// "least-ever-routed" counter never did, and placement degraded as soon
-/// as traffic was uneven.
-fn pick_worker(inflight: &[u64], placed: &[u64]) -> usize {
-    let mut best = 0;
-    let mut best_key = (u64::MAX, u64::MAX);
-    for i in 0..inflight.len().min(placed.len()) {
-        let key = (inflight[i], placed[i]);
-        if key < best_key {
-            best_key = key;
-            best = i;
-        }
-    }
-    best
-}
-
-/// The coordinator: owns worker + reducer threads and the routing table.
+/// The coordinator: owns worker + reducer threads and the shared
+/// routing state.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: MatrixRegistry,
     shards: RwLock<HashMap<MatrixId, Arc<ShardedMatrix>>>,
-    senders: Vec<Sender<WorkerMsg>>,
-    handles: Vec<JoinHandle<()>>,
+    /// Shared routing state: worker channels, shard→worker affinities,
+    /// placement counts, liveness. The scatter path and every reducer
+    /// (for failover re-dispatch) hold the same `Arc`.
+    router: Arc<Router>,
+    /// Worker join handles; `kill_worker` takes one out to join a
+    /// crashed worker deterministically.
+    handles: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// Per-worker crash-injection flags (see
+    /// [`Coordinator::kill_worker`]).
+    kill_flags: Vec<Arc<AtomicBool>>,
     reducer_txs: Vec<Sender<ReduceTask>>,
     reducer_handles: Vec<JoinHandle<()>>,
     next_reducer: AtomicU64,
     /// Engine options each worker was built with (defaults + builder
     /// overrides), for introspection.
     engine_opts: Vec<EngineOpts>,
-    /// shard → worker affinity (residency-aware routing).
-    affinity: RwLock<HashMap<ShardId, usize>>,
-    /// Shards ever placed per worker (placement tie-break).
-    placed: Vec<AtomicU64>,
     next_matrix: AtomicU64,
     next_shard: AtomicU64,
     next_job: AtomicU64,
@@ -578,9 +798,9 @@ impl Coordinator {
     }
 
     fn start_with(cfg: CoordinatorConfig, overrides: &[(usize, EngineOpts)]) -> Result<Self> {
-        if cfg.workers == 0 || cfg.max_batch == 0 || cfg.reducers == 0 {
+        if cfg.workers == 0 || cfg.max_batch == 0 || cfg.reducers == 0 || cfg.replicas == 0 {
             return Err(PpacError::Config(
-                "workers/max_batch/reducers must be ≥ 1".into(),
+                "workers/max_batch/reducers/replicas must be ≥ 1".into(),
             ));
         }
         cfg.tile.validate()?;
@@ -598,8 +818,10 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::for_workers(cfg.workers));
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
+        let mut kill_flags = Vec::with_capacity(cfg.workers);
         for (id, &opts) in engine_opts.iter().enumerate() {
             let (tx, rx) = channel();
+            let killed = Arc::new(AtomicBool::new(false));
             let worker = Worker::new(
                 id,
                 cfg.tile,
@@ -608,10 +830,17 @@ impl Coordinator {
                 cfg.max_batch,
                 cfg.backend,
                 opts,
+                Arc::clone(&killed),
             )?;
-            handles.push(std::thread::spawn(move || worker.run(rx)));
+            handles.push(Some(std::thread::spawn(move || worker.run(rx))));
             senders.push(tx);
+            kill_flags.push(killed);
         }
+        let router = Arc::new(Router::new(
+            senders,
+            Arc::clone(&registry),
+            Arc::clone(&metrics),
+        ));
         let mut reducer_txs = Vec::with_capacity(cfg.reducers);
         let mut reducer_handles = Vec::with_capacity(cfg.reducers);
         for _ in 0..cfg.reducers {
@@ -622,14 +851,13 @@ impl Coordinator {
         Ok(Self {
             registry,
             shards: RwLock::new(HashMap::new()),
-            senders,
-            handles,
+            router,
+            handles: Mutex::new(handles),
+            kill_flags,
             reducer_txs,
             reducer_handles,
             next_reducer: AtomicU64::new(0),
             engine_opts,
-            affinity: RwLock::new(HashMap::new()),
-            placed: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             next_matrix: AtomicU64::new(1),
             next_shard: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
@@ -650,16 +878,63 @@ impl Coordinator {
         self.engine_opts.get(id).copied()
     }
 
-    /// Register a matrix for later jobs — the single entry point for
-    /// both storage kinds (see [`MatrixSpec`]). Matrices larger than one
-    /// tile are sharded into row-block × column-block sub-matrices;
-    /// ragged input, empty shapes, out-of-format values and K that does
-    /// not fit the tile are errors.
+    /// Point-in-time routing state: pinned affinities, per-worker
+    /// placement counts, live workers. After every matrix unregisters,
+    /// `affinities` returns to 0 and `placed` to all-zero — the leak
+    /// the unregister-vs-submit stress test pins down.
+    pub fn routing_stats(&self) -> RoutingStats {
+        self.router.stats()
+    }
+
+    /// Fault injection for tests and chaos drills: crash worker `id` on
+    /// the spot. The worker discards its queue without answering
+    /// (serving at most the batch already in flight) and exits; the
+    /// call joins the thread, so sends to it fail deterministically
+    /// afterwards. Like a real crash, nothing is announced — the router
+    /// discovers the death on the next failed send, re-pins the
+    /// worker's replicas and re-dispatches its lost jobs.
+    pub fn kill_worker(&self, id: usize) -> Result<()> {
+        if id >= self.cfg.workers {
+            return Err(PpacError::Config(format!(
+                "no worker {id} (only {} workers)",
+                self.cfg.workers
+            )));
+        }
+        // Flag first (so queued jobs are dropped, not drained), then a
+        // Die message to wake an idle worker out of its recv promptly.
+        self.kill_flags[id].store(true, Ordering::Relaxed);
+        let _ = self.router.send(id, WorkerMsg::Die);
+        let handle = self.handles.lock().unwrap()[id].take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Register a matrix for later jobs with the config's default
+    /// replication factor — the single entry point for both storage
+    /// kinds (see [`MatrixSpec`]). Matrices larger than one tile are
+    /// sharded into row-block × column-block sub-matrices; ragged
+    /// input, empty shapes, out-of-format values and K that does not
+    /// fit the tile are errors.
     pub fn register(&self, spec: MatrixSpec) -> Result<MatrixId> {
+        self.register_replicated(spec, self.cfg.replicas)
+    }
+
+    /// Register with an explicit per-matrix replication factor: each
+    /// logical shard gets `replicas` registry entries sharing one
+    /// resident block, pinned on distinct workers at placement time, so
+    /// a hot matrix serves from several tiles and survives a worker
+    /// loss. Clamped to `1..=workers` (more replicas than workers could
+    /// not be pinned distinctly).
+    pub fn register_replicated(&self, spec: MatrixSpec, replicas: usize) -> Result<MatrixId> {
         self.maybe_sweep();
+        let replicas = replicas.clamp(1, self.cfg.workers);
         match spec {
-            MatrixSpec::Bit1 { rows } => self.register_bit1(rows),
-            MatrixSpec::Multibit { rows, k, format } => self.register_multibit(rows, k, format),
+            MatrixSpec::Bit1 { rows } => self.register_bit1(rows, replicas),
+            MatrixSpec::Multibit { rows, k, format } => {
+                self.register_multibit(rows, k, format, replicas)
+            }
         }
     }
 
@@ -670,7 +945,7 @@ impl Coordinator {
         self.register(MatrixSpec::Bit1 { rows })
     }
 
-    fn register_bit1(&self, rows: Vec<Vec<bool>>) -> Result<MatrixId> {
+    fn register_bit1(&self, rows: Vec<Vec<bool>>, replicas: usize) -> Result<MatrixId> {
         let (m, n) = rect_shape(&rows)?;
         let part = Partition::new(m, n, self.cfg.tile.m, self.cfg.tile.n)?;
         // Build every block before taking the registry lock: workers read
@@ -687,7 +962,7 @@ impl Coordinator {
             }
             blocks
         };
-        Ok(self.insert_matrix(part, MatrixKind::Bit1, blocks))
+        Ok(self.insert_matrix(part, MatrixKind::Bit1, blocks, replicas))
     }
 
     fn register_multibit(
@@ -695,6 +970,7 @@ impl Coordinator {
         rows: Vec<Vec<i64>>,
         k: u32,
         format: NumberFormat,
+        replicas: usize,
     ) -> Result<MatrixId> {
         let (m, n_eff) = rect_shape(&rows)?;
         let tile = self.cfg.tile;
@@ -741,7 +1017,7 @@ impl Coordinator {
             }
             blocks
         };
-        Ok(self.insert_matrix(part, kind, blocks))
+        Ok(self.insert_matrix(part, kind, blocks, replicas))
     }
 
     fn insert_matrix(
@@ -749,14 +1025,19 @@ impl Coordinator {
         part: Partition,
         kind: MatrixKind,
         blocks: Vec<Arc<ShardData>>,
+        replicas: usize,
     ) -> MatrixId {
-        let mut shard_ids = Vec::with_capacity(blocks.len());
+        let mut shard_replicas = Vec::with_capacity(blocks.len());
         {
             let mut reg = self.registry.write().unwrap();
             for block in blocks {
-                let id = self.next_shard.fetch_add(1, Ordering::Relaxed);
-                reg.insert(id, block);
-                shard_ids.push(id);
+                let mut ids = Vec::with_capacity(replicas);
+                for _ in 0..replicas {
+                    let id = self.next_shard.fetch_add(1, Ordering::Relaxed);
+                    reg.insert(id, Arc::clone(&block));
+                    ids.push(id);
+                }
+                shard_replicas.push(ids);
             }
         }
         let mid = self.next_matrix.fetch_add(1, Ordering::Relaxed);
@@ -765,7 +1046,7 @@ impl Coordinator {
             Arc::new(ShardedMatrix {
                 part,
                 kind,
-                shard_ids,
+                shard_replicas,
                 last_used: Mutex::new(Instant::now()),
                 gathers_inflight: Arc::new(AtomicU64::new(0)),
             }),
@@ -773,12 +1054,12 @@ impl Coordinator {
         mid
     }
 
-    /// Unregister a matrix: its shards leave the registry (so nothing
-    /// can reload them), their worker affinities are released, placement
-    /// counts are decremented so freed workers compete for new shards
-    /// again, and the owning workers are told to evict any resident
-    /// copy. Jobs submitted after this call fail with "unknown matrix";
-    /// a scatter that raced the unregister reports a typed
+    /// Unregister a matrix: its shard replicas leave the registry (so
+    /// nothing can reload them), their worker affinities are released,
+    /// placement counts are decremented so freed workers compete for
+    /// new shards again, and the owning workers are told to evict any
+    /// resident copy. Jobs submitted after this call fail with "unknown
+    /// matrix"; a scatter that raced the unregister reports a typed
     /// [`JobError::UnknownShard`] per affected job.
     pub fn unregister_matrix(&self, matrix: MatrixId) -> Result<()> {
         self.remove_matrix(matrix)?;
@@ -797,20 +1078,12 @@ impl Coordinator {
             .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
         {
             let mut reg = self.registry.write().unwrap();
-            for sid in &sharded.shard_ids {
+            for sid in sharded.shard_replicas.iter().flatten() {
                 reg.remove(sid);
             }
         }
-        let mut aff = self.affinity.write().unwrap();
-        for &sid in &sharded.shard_ids {
-            if let Some(w) = aff.remove(&sid) {
-                // The placed count rose when the affinity was pinned, so
-                // it is ≥ 1 here; releasing it lets the freed worker win
-                // placement ties again.
-                self.placed[w].fetch_sub(1, Ordering::Relaxed);
-                // A dead worker just means there is nothing to evict.
-                let _ = self.senders[w].send(WorkerMsg::Evict(sid));
-            }
+        for &sid in sharded.shard_replicas.iter().flatten() {
+            self.router.release(sid);
         }
         Ok(())
     }
@@ -860,43 +1133,6 @@ impl Coordinator {
             .unwrap()
             .get(&matrix)
             .map(|s| (s.part.m, s.part.n))
-    }
-
-    /// Pick the worker for a shard: resident tile if any, else the
-    /// least-loaded worker (and pin the affinity there).
-    fn route(&self, shard: ShardId) -> usize {
-        if let Some(&w) = self.affinity.read().unwrap().get(&shard) {
-            return w;
-        }
-        let mut aff = self.affinity.write().unwrap();
-        if let Some(&w) = aff.get(&shard) {
-            return w;
-        }
-        // A scatter can race unregister_matrix (it cloned the Sharded
-        // entry before the removal). Never pin an affinity for a shard
-        // that already left the registry: the worker will answer the job
-        // with a typed UnknownShard error anyway, and a pin here would
-        // leak the affinity entry and its placed count forever (no
-        // unregister can reach them again). Holding the affinity write
-        // lock across this check makes the interleavings safe: either
-        // unregister's affinity sweep runs after our insert (and cleans
-        // it up), or the registry entry is already gone and we skip the
-        // pin.
-        if !self.registry.read().unwrap().contains_key(&shard) {
-            return 0;
-        }
-        let inflight: Vec<u64> = (0..self.cfg.workers)
-            .map(|i| self.metrics.worker_inflight(i))
-            .collect();
-        let placed: Vec<u64> = self
-            .placed
-            .iter()
-            .map(|p| p.load(Ordering::Relaxed))
-            .collect();
-        let w = pick_worker(&inflight, &placed);
-        self.placed[w].fetch_add(1, Ordering::Relaxed);
-        aff.insert(shard, w);
-        w
     }
 
     /// Scatter a batch of same-mode inputs over a matrix's shards and
@@ -957,55 +1193,83 @@ impl Coordinator {
             // Rejected above.
             (MatrixKind::Multibit { .. }, _) => 0,
         };
-        let base = self
-            .next_job
-            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        let njobs = inputs.len() as u64;
+        let base = self.next_job.fetch_add(njobs, Ordering::Relaxed);
         let (tx, rx) = channel();
         let submitted = Instant::now();
         // Shard-major order keeps each worker's queue runs of the same
         // (shard, mode) key, so the whole batch serves in few pipeline
         // batches.
-        for (s_idx, &sid) in sharded.shard_ids.iter().enumerate() {
+        for (s_idx, replicas) in sharded.shard_replicas.iter().enumerate() {
             let cb = s_idx % part.col_blocks;
-            let worker = self.route(sid);
-            // In-flight must rise before the first send (the worker
-            // decrements after serving) and is rolled back in full on a
-            // dead worker — its dropped receiver will never serve any of
-            // this scatter's jobs.
-            if let Some(wm) = self.metrics.worker(worker) {
-                wm.inflight
-                    .fetch_add(inputs.len() as u64, Ordering::Relaxed);
-            }
-            let mut send_failed = false;
-            for (j, input) in inputs.iter().enumerate() {
-                let job = job::Job {
-                    job_id: base + j as u64,
-                    shard: sid,
-                    shard_index: s_idx,
-                    input: input.split(&part, cb),
-                    submitted,
-                    respond: tx.clone(),
+            loop {
+                let Some((sid, worker)) = self.router.route(replicas) else {
+                    // Every worker is dead. Answer this shard's jobs
+                    // with synthetic typed partials through the normal
+                    // channel so the gather finalizes cleanly — the old
+                    // code aborted the scatter here, leaving the
+                    // already-dispatched shards serving into a dropped
+                    // receiver and the submit counters skewed.
+                    for j in 0..inputs.len() {
+                        let _ = tx.send(JobResult {
+                            job_id: base + j as u64,
+                            output: Err(JobError::WorkerLost),
+                            latency_us: 0.0,
+                            cycles_share: 0.0,
+                            worker: 0,
+                            batch_size: 0,
+                            shard: s_idx,
+                            fan_out: 1,
+                            attempt: 0,
+                        });
+                    }
+                    break;
                 };
-                if self.senders[worker].send(WorkerMsg::Job(job)).is_err() {
-                    send_failed = true;
+                // In-flight must rise before the first send (the worker
+                // decrements after serving).
+                if let Some(wm) = self.metrics.worker(worker) {
+                    wm.inflight.fetch_add(njobs, Ordering::Relaxed);
+                }
+                let mut sent_all = true;
+                for (j, input) in inputs.iter().enumerate() {
+                    let job = job::Job {
+                        job_id: base + j as u64,
+                        shard: sid,
+                        shard_index: s_idx,
+                        input: input.split(&part, cb),
+                        submitted,
+                        attempt: 0,
+                        respond: tx.clone(),
+                    };
+                    if !self.router.send(worker, WorkerMsg::Job(job)) {
+                        sent_all = false;
+                        break;
+                    }
+                }
+                if sent_all {
+                    self.metrics
+                        .shard_jobs_submitted
+                        .fetch_add(njobs, Ordering::Relaxed);
+                    if replicas.len() > 1 {
+                        if let Some(wm) = self.metrics.worker(worker) {
+                            wm.replica_hits.fetch_add(njobs, Ordering::Relaxed);
+                        }
+                    }
                     break;
                 }
+                // Mid-scatter send failure: the worker died under us.
+                // Mark it dead — which also reclaims the in-flight bump;
+                // a plain rollback could double-subtract jobs it served
+                // before dying — and re-dispatch the whole run on a
+                // surviving replica. Jobs its queue had accepted died
+                // with its receiver; any it *served* first are
+                // deduplicated by the gather.
+                self.router.mark_dead(worker);
+                self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
             }
-            if send_failed {
-                if let Some(wm) = self.metrics.worker(worker) {
-                    wm.inflight
-                        .fetch_sub(inputs.len() as u64, Ordering::Relaxed);
-                }
-                return Err(PpacError::Coordinator("worker gone".into()));
-            }
-            self.metrics
-                .shard_jobs_submitted
-                .fetch_add(inputs.len() as u64, Ordering::Relaxed);
         }
         drop(tx);
-        self.metrics
-            .jobs_submitted
-            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        self.metrics.jobs_submitted.fetch_add(njobs, Ordering::Relaxed);
 
         // Hand the gather to a reducer so it overlaps the serving and
         // whatever the client scatters next. The in-flight count pins
@@ -1015,9 +1279,25 @@ impl Coordinator {
         let (done_tx, done_rx) = channel();
         let inflight = Arc::clone(&sharded.gathers_inflight);
         inflight.fetch_add(1, Ordering::Relaxed);
+        // The retry context owns a copy of the inputs (a lost shard job
+        // is re-split from them); with retries disabled, skip the clone
+        // entirely — the gather then finalizes losses as typed errors.
+        let retry = (self.cfg.retry_limit > 0).then(|| RetryCtx {
+            router: Arc::clone(&self.router),
+            matrix: Arc::clone(&sharded),
+            inputs: inputs.to_vec(),
+            submitted,
+            budget: self.cfg.retry_limit,
+        });
         let r = self.next_reducer.fetch_add(1, Ordering::Relaxed) as usize
             % self.reducer_txs.len();
-        let task = ReduceTask { rx, state, done: done_tx, inflight: Arc::clone(&inflight) };
+        let task = ReduceTask {
+            rx,
+            state,
+            done: done_tx,
+            inflight: Arc::clone(&inflight),
+            retry,
+        };
         if self.reducer_txs[r].send(task).is_err() {
             inflight.fetch_sub(1, Ordering::Relaxed);
             return Err(PpacError::Coordinator("reducer pool shut down".into()));
@@ -1064,14 +1344,14 @@ impl Coordinator {
     /// Graceful shutdown: drain queues, join workers, then retire the
     /// reducer pool (it finishes any gather still in flight first).
     pub fn shutdown(self) {
-        let Coordinator { senders, handles, reducer_txs, reducer_handles, .. } = self;
-        for tx in &senders {
-            let _ = tx.send(WorkerMsg::Shutdown);
+        let Coordinator { cfg, router, handles, reducer_txs, reducer_handles, .. } = self;
+        for w in 0..cfg.workers {
+            // A killed worker just fails the send.
+            let _ = router.send(w, WorkerMsg::Shutdown);
         }
-        for h in handles {
+        for h in handles.into_inner().unwrap().into_iter().flatten() {
             let _ = h.join();
         }
-        drop(senders);
         drop(reducer_txs);
         for h in reducer_handles {
             let _ = h.join();
@@ -1082,27 +1362,6 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn pick_worker_prefers_idle_over_low_historical_count() {
-        // Regression for the cumulative-counter bug: worker 0 routed many
-        // jobs in the past but is idle now; worker 1 is busy. The idle
-        // worker must win even though its historical count is higher.
-        assert_eq!(pick_worker(&[0, 3], &[9, 0]), 0);
-        assert_eq!(pick_worker(&[5, 0, 3], &[0, 9, 0]), 1);
-    }
-
-    #[test]
-    fn pick_worker_ties_spread_by_placement_then_index() {
-        assert_eq!(pick_worker(&[0, 0], &[3, 1]), 1);
-        assert_eq!(pick_worker(&[0, 0, 0], &[0, 0, 0]), 0);
-        assert_eq!(pick_worker(&[2, 2], &[1, 1]), 0);
-    }
-
-    #[test]
-    fn pick_worker_empty_defaults_to_zero() {
-        assert_eq!(pick_worker(&[], &[]), 0);
-    }
 
     fn test_plan(m: usize, n: usize) -> GatherPlan {
         GatherPlan {
@@ -1122,6 +1381,7 @@ mod tests {
             batch_size: 1,
             shard: 0,
             fan_out: 1,
+            attempt: 0,
         }
     }
 
@@ -1147,8 +1407,14 @@ mod tests {
         let reducer = std::thread::spawn(move || {
             let tasks_rx = {
                 let (ttx, trx) = channel();
-                ttx.send(ReduceTask { rx, state, done: done_tx, inflight: pinned })
-                    .unwrap();
+                ttx.send(ReduceTask {
+                    rx,
+                    state,
+                    done: done_tx,
+                    inflight: pinned,
+                    retry: None,
+                })
+                .unwrap();
                 trx
             };
             run_reducer(tasks_rx);
@@ -1181,11 +1447,30 @@ mod tests {
         let mut state = GatherState::new(plan, 0, 2, Arc::clone(&metrics));
         state.absorb(partial(0, vec![1, 2])).unwrap();
         assert!(!state.complete());
+        assert_eq!(state.missing_pairs(), vec![(1, 0)]);
         state.mark_lost();
         assert!(state.complete());
         let results = state.finish();
         assert_eq!(results[0].output, Ok(JobOutput::Ints(vec![1, 2])));
         assert_eq!(results[1].output, Err(JobError::WorkerLost));
         assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 1);
+    }
+
+    /// A duplicate partial — the original worker served a job, then
+    /// died, and the failover re-dispatched the whole run — folds at
+    /// most once; a late error for an already-folded pair is a no-op.
+    #[test]
+    fn duplicate_partials_from_failover_fold_once() {
+        let metrics = Arc::new(Metrics::for_workers(1));
+        let plan = test_plan(2, 4);
+        let mut state = GatherState::new(plan, 0, 1, Arc::clone(&metrics));
+        state.absorb(partial(0, vec![1, 2])).unwrap();
+        assert!(state.complete());
+        state.absorb(partial(0, vec![1, 2])).unwrap(); // re-dispatch raced the original
+        state.finalize_error(0, 0, JobError::WorkerLost); // late loss verdict
+        assert!(state.complete());
+        let results = state.finish();
+        assert_eq!(results[0].output, Ok(JobOutput::Ints(vec![1, 2])), "folded once, no error");
+        assert_eq!(metrics.jobs_failed.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,0 +1,412 @@
+//! Routing state for the serving spine, shared between the scatter path
+//! and the reducer pool.
+//!
+//! The [`Router`] owns everything placement-related that used to live
+//! inline in `Coordinator`: the shard → worker affinity map, the
+//! placement tie-break counters, the worker channels, and the liveness
+//! mask. Both the scatter stage (first dispatch) and the gather's
+//! failover re-dispatch (retry waves on a reducer thread) route through
+//! the same `Arc<Router>`, so a replica's pin, a worker's death and the
+//! in-flight load it balances against are observed consistently from
+//! either side.
+//!
+//! **Replicas.** A logical shard registered with replication factor
+//! `r > 1` owns `r` registry entries (distinct [`ShardId`]s sharing one
+//! `Arc<ShardData>`). [`Router::route`] pins the whole replica group on
+//! distinct workers at first placement and afterwards returns the
+//! replica whose worker currently has the fewest in-flight shard jobs
+//! (ties rotate round-robin so idle replicas share reads instead of
+//! hot-spotting the first pin).
+//!
+//! **Liveness.** Nothing announces a worker crash; the router learns of
+//! it when a `send` fails (the worker's receiver is gone) and the
+//! caller invokes [`Router::mark_dead`]. A dead worker is excluded from
+//! every later placement decision, its replicas are re-pinned on
+//! surviving workers lazily inside `route`, and its in-flight counter —
+//! which nobody will ever decrement again — is reset so snapshots stay
+//! meaningful. A killed worker thereby becomes a load-balancing event,
+//! not a poison pill for every shard pinned on it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, RwLock};
+
+use super::job::ShardId;
+use super::metrics::Metrics;
+use super::worker::{MatrixRegistry, WorkerMsg};
+
+/// Least-loaded selection: fewest in-flight shard jobs first, tie-broken
+/// by fewest shards ever placed (spread), then lowest index
+/// (determinism). Workers with `banned[i]` set never win; `None` when
+/// every worker is banned.
+///
+/// In-flight counts are decremented when jobs finish, so a worker that
+/// drained its queue competes as idle again — the old cumulative
+/// "least-ever-routed" counter never did, and placement degraded as soon
+/// as traffic was uneven.
+fn pick_worker(inflight: &[u64], placed: &[u64], banned: &[bool]) -> Option<usize> {
+    let mut best = None;
+    let mut best_key = (u64::MAX, u64::MAX);
+    let n = inflight.len().min(placed.len()).min(banned.len());
+    for i in 0..n {
+        if banned[i] {
+            continue;
+        }
+        let key = (inflight[i], placed[i]);
+        if best.is_none() || key < best_key {
+            best_key = key;
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Point-in-time routing introspection (see
+/// [`Coordinator::routing_stats`](super::Coordinator::routing_stats)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoutingStats {
+    /// Pinned shard→worker affinities (one per placed replica).
+    pub affinities: usize,
+    /// Shards currently placed per worker (the placement tie-break).
+    pub placed: Vec<u64>,
+    /// Workers not yet observed dead.
+    pub live_workers: usize,
+}
+
+pub(crate) struct Router {
+    workers: usize,
+    senders: Vec<Sender<WorkerMsg>>,
+    /// shard → worker affinity (residency-aware routing); every replica
+    /// of a shard has its own entry.
+    affinity: RwLock<HashMap<ShardId, usize>>,
+    /// Shards ever placed per worker (placement tie-break).
+    placed: Vec<AtomicU64>,
+    /// Workers whose channel was observed disconnected.
+    dead: Vec<AtomicBool>,
+    /// Rotates replica reads when every pinned worker is equally loaded.
+    rr: AtomicU64,
+    registry: MatrixRegistry,
+    metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub(crate) fn new(
+        senders: Vec<Sender<WorkerMsg>>,
+        registry: MatrixRegistry,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let workers = senders.len();
+        Self {
+            workers,
+            senders,
+            affinity: RwLock::new(HashMap::new()),
+            placed: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            rr: AtomicU64::new(0),
+            registry,
+            metrics,
+        }
+    }
+
+    pub(crate) fn is_dead(&self, worker: usize) -> bool {
+        self.dead.get(worker).is_some_and(|d| d.load(Ordering::Relaxed))
+    }
+
+    /// Record a worker as gone (its channel rejected a send). Every
+    /// failed sender calls this; the worker thread has already exited —
+    /// a send can only fail once the receiver is dropped — so nobody
+    /// will decrement its in-flight counter again and resetting it here
+    /// is race-free. The `workers_lost` metric counts first discoveries
+    /// only.
+    pub(crate) fn mark_dead(&self, worker: usize) {
+        let Some(dead) = self.dead.get(worker) else { return };
+        if !dead.swap(true, Ordering::Relaxed) {
+            self.metrics.workers_lost.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(wm) = self.metrics.worker(worker) {
+            wm.inflight.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Deliver a message to a worker. `false` means the worker is gone
+    /// (receiver dropped) — the caller decides whether that is a
+    /// failover (scatter / re-dispatch) or ignorable (evict, shutdown).
+    pub(crate) fn send(&self, worker: usize, msg: WorkerMsg) -> bool {
+        self.senders[worker].send(msg).is_ok()
+    }
+
+    /// Least-loaded live worker, preferring workers outside `exclude`
+    /// (replica spreading); falls back to sharing a worker when every
+    /// live one is excluded. `None` only when no worker is live.
+    fn least_loaded(&self, exclude: &[usize]) -> Option<usize> {
+        let inflight: Vec<u64> = (0..self.workers)
+            .map(|i| self.metrics.worker_inflight(i))
+            .collect();
+        let placed: Vec<u64> = self.placed.iter().map(|p| p.load(Ordering::Relaxed)).collect();
+        let banned: Vec<bool> = (0..self.workers)
+            .map(|i| self.is_dead(i) || exclude.contains(&i))
+            .collect();
+        pick_worker(&inflight, &placed, &banned).or_else(|| {
+            let alive: Vec<bool> = (0..self.workers).map(|i| self.is_dead(i)).collect();
+            pick_worker(&inflight, &placed, &alive)
+        })
+    }
+
+    /// Among the pinned replicas, the one whose worker has the fewest
+    /// in-flight shard jobs; equally-loaded ties rotate so idle replicas
+    /// share reads.
+    fn balance(&self, pins: &[(ShardId, usize)]) -> (ShardId, usize) {
+        debug_assert!(!pins.is_empty());
+        // Replicas sharing a worker (deaths can leave fewer live workers
+        // than replicas) are interchangeable for load but NOT for
+        // residency: rotating between their ids would thrash the
+        // worker's single resident slot with a full reload per dispatch.
+        // Keep one pin per worker — stably the first — before balancing.
+        let mut unique: Vec<(ShardId, usize)> = Vec::with_capacity(pins.len());
+        for &(sid, w) in pins {
+            if !unique.iter().any(|&(_, uw)| uw == w) {
+                unique.push((sid, w));
+            }
+        }
+        let load: Vec<u64> = unique
+            .iter()
+            .map(|&(_, w)| self.metrics.worker_inflight(w))
+            .collect();
+        let min = *load.iter().min().unwrap();
+        let ties: Vec<(ShardId, usize)> = unique
+            .iter()
+            .zip(&load)
+            .filter(|&(_, &l)| l == min)
+            .map(|(&p, _)| p)
+            .collect();
+        let pick = self.rr.fetch_add(1, Ordering::Relaxed) as usize % ties.len();
+        ties[pick]
+    }
+
+    /// Pick the (replica, worker) a shard job should go to: place
+    /// unplaced replicas on distinct live workers, re-pin replicas whose
+    /// worker died, then return the least-loaded pinned replica. `None`
+    /// only when no worker is live at all.
+    pub(crate) fn route(&self, replicas: &[ShardId]) -> Option<(ShardId, usize)> {
+        debug_assert!(!replicas.is_empty());
+        // Fast path: the whole group is pinned on live workers.
+        {
+            let aff = self.affinity.read().unwrap();
+            let mut pins = Vec::with_capacity(replicas.len());
+            for sid in replicas {
+                match aff.get(sid) {
+                    Some(&w) if !self.is_dead(w) => pins.push((*sid, w)),
+                    _ => {
+                        pins.clear();
+                        break;
+                    }
+                }
+            }
+            if !pins.is_empty() {
+                return Some(self.balance(&pins));
+            }
+        }
+        let mut aff = self.affinity.write().unwrap();
+        // A scatter can race unregister_matrix (it cloned the Sharded
+        // entry before the removal). Never pin an affinity for a shard
+        // that already left the registry: the worker will answer the job
+        // with a typed UnknownShard error anyway, and a pin here would
+        // leak the affinity entry and its placed count forever (no
+        // unregister can reach them again). Holding the affinity write
+        // lock across this check makes the interleavings safe: either
+        // unregister's affinity sweep runs after our insert (and cleans
+        // it up), or the registry entry is already gone and we skip the
+        // pin. The job still needs *a* worker to answer it typed — the
+        // least-loaded live one, so the race cannot hot-spot worker 0's
+        // in-flight count and distort placement for live traffic.
+        if !self.registry.read().unwrap().contains_key(&replicas[0]) {
+            return self.least_loaded(&[]).map(|w| (replicas[0], w));
+        }
+        // (Re)place replicas that are unpinned or whose worker died, on
+        // distinct live workers where possible (sharing only when fewer
+        // live workers than replicas remain).
+        let mut used: Vec<usize> = replicas
+            .iter()
+            .filter_map(|sid| aff.get(sid).copied())
+            .filter(|&w| !self.is_dead(w))
+            .collect();
+        for sid in replicas {
+            match aff.get(sid).copied() {
+                Some(w) if !self.is_dead(w) => {}
+                prior => {
+                    if let Some(w) = prior {
+                        // Dead pin: release its placed count before
+                        // re-pinning (the eviction is moot — the worker
+                        // is gone).
+                        self.placed[w].fetch_sub(1, Ordering::Relaxed);
+                        aff.remove(sid);
+                    }
+                    let w = self.least_loaded(&used)?;
+                    self.placed[w].fetch_add(1, Ordering::Relaxed);
+                    aff.insert(*sid, w);
+                    used.push(w);
+                }
+            }
+        }
+        let pins: Vec<(ShardId, usize)> =
+            replicas.iter().map(|sid| (*sid, aff[sid])).collect();
+        Some(self.balance(&pins))
+    }
+
+    /// Release one replica's routing state (its matrix unregistered):
+    /// drop the affinity, return the placed count so the freed worker
+    /// wins placement ties again, and tell the owning worker to evict
+    /// any resident copy. A dead worker just means there is nothing to
+    /// evict.
+    pub(crate) fn release(&self, sid: ShardId) {
+        let removed = self.affinity.write().unwrap().remove(&sid);
+        if let Some(w) = removed {
+            self.placed[w].fetch_sub(1, Ordering::Relaxed);
+            let _ = self.send(w, WorkerMsg::Evict(sid));
+        }
+    }
+
+    /// Whether a shard replica is still registered. The registry is
+    /// shared by every worker, so an `UnknownShard` answer for a shard
+    /// that has left it is deterministic — no replica can do better —
+    /// while one still present was a transient race worth retrying.
+    pub(crate) fn shard_known(&self, sid: ShardId) -> bool {
+        self.registry.read().unwrap().contains_key(&sid)
+    }
+
+    pub(crate) fn stats(&self) -> RoutingStats {
+        RoutingStats {
+            affinities: self.affinity.read().unwrap().len(),
+            placed: self.placed.iter().map(|p| p.load(Ordering::Relaxed)).collect(),
+            live_workers: (0..self.workers).filter(|&w| !self.is_dead(w)).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_worker_prefers_idle_over_low_historical_count() {
+        // Regression for the cumulative-counter bug: worker 0 routed many
+        // jobs in the past but is idle now; worker 1 is busy. The idle
+        // worker must win even though its historical count is higher.
+        assert_eq!(pick_worker(&[0, 3], &[9, 0], &[false; 2]), Some(0));
+        assert_eq!(pick_worker(&[5, 0, 3], &[0, 9, 0], &[false; 3]), Some(1));
+    }
+
+    #[test]
+    fn pick_worker_ties_spread_by_placement_then_index() {
+        assert_eq!(pick_worker(&[0, 0], &[3, 1], &[false; 2]), Some(1));
+        assert_eq!(pick_worker(&[0, 0, 0], &[0, 0, 0], &[false; 3]), Some(0));
+        assert_eq!(pick_worker(&[2, 2], &[1, 1], &[false; 2]), Some(0));
+    }
+
+    #[test]
+    fn pick_worker_skips_banned_workers() {
+        // The otherwise-best worker is dead: the next candidate wins.
+        assert_eq!(pick_worker(&[0, 5], &[0, 0], &[true, false]), Some(1));
+        assert_eq!(pick_worker(&[0, 0], &[0, 0], &[true, true]), None);
+        assert_eq!(pick_worker(&[], &[], &[]), None);
+    }
+
+    fn test_router(workers: usize) -> (Router, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::for_workers(workers));
+        // Receivers are dropped: routing never sends, and the eviction
+        // message `release` fires is allowed to fail.
+        let senders = (0..workers).map(|_| std::sync::mpsc::channel().0).collect();
+        let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
+        (Router::new(senders, registry, Arc::clone(&metrics)), metrics)
+    }
+
+    /// The unregister-race branch must fall back to the least-loaded
+    /// live worker, never hardcode worker 0 (which inflated its
+    /// in-flight count and distorted placement for live traffic).
+    #[test]
+    fn unregistered_shard_routes_least_loaded_without_pinning() {
+        let (router, metrics) = test_router(3);
+        metrics.worker(0).unwrap().inflight.store(7, Ordering::Relaxed);
+        metrics.worker(2).unwrap().inflight.store(3, Ordering::Relaxed);
+        // Shard 42 is not in the registry: route, but never pin.
+        let (_, w) = router.route(&[42]).unwrap();
+        assert_eq!(w, 1, "least-loaded live worker, not worker 0");
+        let stats = router.stats();
+        assert_eq!(stats.affinities, 0, "the race must not leak an affinity");
+        assert_eq!(stats.placed, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn replica_group_pins_distinct_workers_and_balances_reads() {
+        let (router, metrics) = test_router(3);
+        let data = Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+        {
+            let mut reg = router.registry.write().unwrap();
+            reg.insert(1, Arc::clone(&data));
+            reg.insert(2, Arc::clone(&data));
+        }
+        let (_, w0) = router.route(&[1, 2]).unwrap();
+        let stats = router.stats();
+        assert_eq!(stats.affinities, 2, "both replicas pinned at placement");
+        assert_eq!(stats.placed.iter().sum::<u64>(), 2);
+        assert_eq!(
+            stats.placed.iter().filter(|&&p| p == 1).count(),
+            2,
+            "replicas land on distinct workers: {stats:?}"
+        );
+        // Load one pinned worker: the other replica must win the read.
+        metrics.worker(w0).unwrap().inflight.store(10, Ordering::Relaxed);
+        let (_, w1) = router.route(&[1, 2]).unwrap();
+        assert_ne!(w0, w1, "reads follow the least-loaded replica");
+    }
+
+    /// Replicas forced onto one surviving worker must resolve to a
+    /// stable ShardId: rotating between co-located ids would thrash the
+    /// worker's single residency slot with a reload per dispatch.
+    #[test]
+    fn co_located_replicas_do_not_alternate_ids() {
+        let (router, _metrics) = test_router(2);
+        let data = Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+        {
+            let mut reg = router.registry.write().unwrap();
+            reg.insert(1, Arc::clone(&data));
+            reg.insert(2, Arc::clone(&data));
+        }
+        router.mark_dead(0); // only worker 1 stays live: replicas share it
+        let first = router.route(&[1, 2]).unwrap();
+        for _ in 0..8 {
+            assert_eq!(router.route(&[1, 2]).unwrap(), first, "stable (sid, worker)");
+        }
+    }
+
+    #[test]
+    fn dead_pin_re_pins_on_a_live_worker() {
+        let (router, _metrics) = test_router(2);
+        let data = Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+        router.registry.write().unwrap().insert(7, Arc::clone(&data));
+        let (_, w0) = router.route(&[7]).unwrap();
+        router.mark_dead(w0);
+        let (_, w1) = router.route(&[7]).unwrap();
+        assert_ne!(w0, w1, "the replica must leave the dead worker");
+        let stats = router.stats();
+        assert_eq!(stats.live_workers, 1);
+        assert_eq!(stats.placed[w0], 0, "dead pin released its placed count");
+        assert_eq!(stats.placed[w1], 1);
+        router.mark_dead(w1);
+        assert_eq!(router.route(&[7]), None, "no live workers left");
+    }
+
+    #[test]
+    fn release_frees_affinity_and_placed() {
+        let (router, _metrics) = test_router(2);
+        let data = Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+        router.registry.write().unwrap().insert(9, data);
+        router.route(&[9]).unwrap();
+        assert_eq!(router.stats().affinities, 1);
+        router.release(9);
+        let stats = router.stats();
+        assert_eq!(stats.affinities, 0);
+        assert_eq!(stats.placed, vec![0, 0]);
+    }
+}

@@ -19,7 +19,7 @@
 //! take down valid jobs that merely coalesced into the same batch.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,8 +43,16 @@ fn collect_bits(batch: &[Job]) -> Option<Vec<Vec<bool>>> {
 pub enum WorkerMsg {
     Job(Job),
     /// Drop residency of a shard (sent when its matrix unregisters).
+    /// With replication, every replica id pinned here gets its own
+    /// eviction — replicas are independent residencies.
     Evict(ShardId),
     Shutdown,
+    /// Fault injection: crash on the spot. Unlike `Shutdown` (which
+    /// still serves the batch it already collected), `Die` drops the
+    /// current batch and the whole queue unanswered — exactly what a
+    /// killed worker process does. The coordinator discovers the death
+    /// through failed sends and re-dispatches onto surviving replicas.
+    Die,
 }
 
 /// One resident-able block of a registered matrix, in the form its
@@ -73,9 +81,16 @@ pub struct Worker {
     registry: MatrixRegistry,
     metrics: Arc<Metrics>,
     max_batch: usize,
+    /// Crash injection (`Coordinator::kill_worker`): checked at batch
+    /// boundaries so a kill drops the *queued* jobs unanswered — a
+    /// `Die` message alone would sit behind them and drain the queue
+    /// gracefully first, which is not what a crash does. At most the
+    /// batch already in flight still gets served.
+    killed: Arc<AtomicBool>,
 }
 
 impl Worker {
+    #[allow(clippy::too_many_arguments)] // construction-time wiring, one call site
     pub fn new(
         id: usize,
         cfg: PpacConfig,
@@ -84,6 +99,7 @@ impl Worker {
         max_batch: usize,
         backend: Backend,
         engine: EngineOpts,
+        killed: Arc<AtomicBool>,
     ) -> Result<Self> {
         let mut unit = PpacUnit::new(cfg)?;
         unit.configure_engine(backend, engine);
@@ -94,13 +110,20 @@ impl Worker {
             registry,
             metrics,
             max_batch,
+            killed,
         })
     }
 
-    /// Blocking worker loop: runs until `Shutdown`.
+    /// Blocking worker loop: runs until `Shutdown` (or a crash
+    /// injection).
     pub fn run(mut self, rx: Receiver<WorkerMsg>) {
         let mut pending: Option<Job> = None;
         loop {
+            if self.killed.load(Ordering::Relaxed) {
+                // Crashed: the queue (and any carried-over job) dies
+                // unanswered with this receiver.
+                return;
+            }
             // Fetch the head job (carried over or fresh).
             let head = match pending.take() {
                 Some(j) => j,
@@ -110,7 +133,7 @@ impl Worker {
                         self.evict(sid);
                         continue;
                     }
-                    Ok(WorkerMsg::Shutdown) => return,
+                    Ok(WorkerMsg::Shutdown) | Ok(WorkerMsg::Die) => return,
                     Err(RecvTimeoutError::Timeout) => continue,
                     Err(RecvTimeoutError::Disconnected) => return,
                 },
@@ -130,6 +153,8 @@ impl Worker {
                         }
                     }
                     Ok(WorkerMsg::Evict(sid)) => self.evict(sid),
+                    // A crash mid-collection drops the batch unanswered.
+                    Ok(WorkerMsg::Die) => return,
                     Ok(WorkerMsg::Shutdown) => {
                         shutdown = true;
                         break;
@@ -299,6 +324,7 @@ impl Worker {
                         batch_size: bsz,
                         shard: job.shard_index,
                         fan_out: 1,
+                        attempt: job.attempt,
                     });
                 }
             }
@@ -310,6 +336,12 @@ impl Worker {
                 if load_cycles.is_some() {
                     self.metrics.record_batch(self.id, 0, 0, load_cycles);
                 }
+                // Typed answers still leave the queue: count them so the
+                // scatter/gather books balance (submitted = completed +
+                // failed + lost).
+                self.metrics
+                    .shard_jobs_failed
+                    .fetch_add(bsz as u64, Ordering::Relaxed);
                 for job in batch {
                     let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
                     let _ = job.respond.send(JobResult {
@@ -321,6 +353,7 @@ impl Worker {
                         batch_size: bsz,
                         shard: job.shard_index,
                         fan_out: 1,
+                        attempt: job.attempt,
                     });
                 }
             }

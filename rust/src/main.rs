@@ -11,7 +11,7 @@
 //! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
-//! ppac serve [--workers --batch --jobs --backend blocked|cycle --threads T --ttl-ms MS]   coordinator demo
+//! ppac serve [--workers --batch --jobs --replicas R --backend blocked|cycle --threads T --ttl-ms MS]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -453,6 +453,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("jobs")
         .opt("m")
         .opt("n")
+        .opt("replicas")
         .opt("backend")
         .opt("threads")
         .opt("ttl-ms")
@@ -472,6 +473,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .str_or("backend", &file.str_or("coordinator.backend", "blocked"))
         .parse()?;
     let threads = p.usize_or("threads", file.usize_or("engine.threads", 1)?)?;
+    let replicas = p.usize_or("replicas", file.usize_or("coordinator.replicas", 1)?)?;
     let ttl_ms = p.usize_or("ttl-ms", file.usize_or("coordinator.registry_ttl_ms", 0)?)?;
     let engine = EngineOpts::threaded(threads);
     let tile = PpacConfig::new(m, n);
@@ -482,6 +484,7 @@ fn serve(rest: Vec<String>) -> AnyResult {
         max_batch,
         backend,
         engine,
+        replicas,
         registry_ttl,
         ..Default::default()
     })?;
@@ -505,10 +508,14 @@ fn serve(rest: Vec<String>) -> AnyResult {
     }
     let dt = t0.elapsed().as_secs_f64();
     let snap = coord.metrics.snapshot();
+    // Throughput counts *successful* jobs only — jobs_completed includes
+    // the jobs_failed subset, and failed jobs are not served work.
+    let succeeded = snap.jobs_completed - snap.jobs_failed;
     println!("workers          : {workers} (tile {m}x{n}, max batch {max_batch})");
     println!("backend          : {} ({} sweep thread(s))", backend.name(), threads);
-    println!("jobs             : {} in {dt:.3} s = {:.0} jobs/s", snap.jobs_completed,
-             snap.jobs_completed as f64 / dt);
+    println!("replication      : {replicas} replica(s)/shard");
+    println!("jobs             : {succeeded} ok in {dt:.3} s = {:.0} jobs/s",
+             succeeded as f64 / dt);
     println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch_size);
     println!("matrix loads     : {}", snap.matrix_loads);
     println!("latency p50/p99  : {:.0} / {:.0} us", snap.p50_us, snap.p99_us);
@@ -519,11 +526,17 @@ fn serve(rest: Vec<String>) -> AnyResult {
             snap.jobs_failed, snap.auto_evictions
         );
     }
-    println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight)");
+    if snap.retries > 0 || snap.failovers > 0 || snap.workers_lost > 0 {
+        println!(
+            "failover         : {} workers lost, {} re-routed dispatches, {} retried shard jobs, {} lost shard jobs",
+            snap.workers_lost, snap.failovers, snap.retries, snap.shard_jobs_lost
+        );
+    }
+    println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight / replica hits)");
     for (i, w) in snap.per_worker.iter().enumerate() {
         println!(
-            "  worker {i:<2}      : {:>6} served / {:>5} batches / {:>9} cycles / {} in-flight",
-            w.served, w.batches, w.sim_cycles, w.inflight
+            "  worker {i:<2}      : {:>6} served / {:>5} batches / {:>9} cycles / {} in-flight / {} replica hits",
+            w.served, w.batches, w.sim_cycles, w.inflight, w.replica_hits
         );
     }
     coord.shutdown();

@@ -1,0 +1,287 @@
+//! Replication + failover integration tests: load-balanced replica
+//! reads, worker-crash re-dispatch (scatter-time and gather-time), and
+//! the accounting regressions around the old scatter abort path.
+//!
+//! `Coordinator::kill_worker` models a crash faithfully: the worker
+//! discards its queue unanswered and its thread is joined, so later
+//! sends fail deterministically — but nothing is announced. The router
+//! must *discover* the death through failed sends and turn it into a
+//! load-balancing event instead of a `WorkerLost` for every in-flight
+//! job.
+
+use std::collections::HashSet;
+
+use ppac::coordinator::{
+    Coordinator, CoordinatorConfig, JobError, JobInput, JobOutput, MatrixSpec,
+};
+use ppac::golden;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn coordinator(workers: usize, replicas: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers,
+        max_batch: 16,
+        replicas,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+fn pm1_golden(a: &[Vec<bool>], x: &[bool]) -> JobOutput {
+    JobOutput::Ints(a.iter().map(|row| golden::pm1_inner(row, x)).collect())
+}
+
+/// Acceptance (throughput side): with replicas = 2 a single hot shard is
+/// served by more than one worker, and the replica reads show up spread
+/// over the per-worker `replica_hits` occupancy.
+#[test]
+fn replicated_matrix_serves_from_multiple_workers() {
+    let mut rng = Xoshiro256pp::seeded(300);
+    let coord = coordinator(4, 2);
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    let xs: Vec<Vec<bool>> = (0..64).map(|_| rng.bits(32)).collect();
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap())
+        .collect();
+    let mut workers_seen = HashSet::new();
+    for (h, x) in handles.into_iter().zip(&xs) {
+        let r = h.wait().unwrap();
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)));
+        workers_seen.insert(r.worker);
+    }
+    assert!(
+        workers_seen.len() >= 2,
+        "2 replicas must spread reads over >1 worker, got {workers_seen:?}"
+    );
+    let snap = coord.metrics.snapshot();
+    let hit_workers = snap.per_worker.iter().filter(|w| w.replica_hits > 0).count();
+    assert!(
+        hit_workers >= 2,
+        "replica_hits concentrated: {:?}",
+        snap.per_worker.iter().map(|w| w.replica_hits).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        snap.per_worker.iter().map(|w| w.replica_hits).sum::<u64>(),
+        64,
+        "every dispatch of the replicated shard is a replica hit"
+    );
+    // Both replicas end up resident (each worker loads its copy once).
+    assert_eq!(snap.matrix_loads, workers_seen.len() as u64);
+    assert_eq!(snap.jobs_failed, 0);
+    coord.shutdown();
+}
+
+/// Acceptance (availability side): with replicas = 2 and one worker's
+/// channel dropped, a multi-shard batch completes with **zero**
+/// `Err(WorkerLost)` results — every shard pinned on the dead worker
+/// fails over to its surviving replica.
+#[test]
+fn killed_worker_fails_over_with_zero_worker_lost() {
+    let mut rng = Xoshiro256pp::seeded(301);
+    let coord = coordinator(3, 2);
+    // 64×96 on 32×32 tiles: a 2×3 grid, 6 logical shards × 2 replicas =
+    // 12 pins over 3 workers — every worker hosts replicas.
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // Warm-up: place the replicas and confirm clean serving.
+    let warm: Vec<JobInput> = (0..8).map(|_| JobInput::Pm1Mvp(rng.bits(96))).collect();
+    for r in coord.submit_batch(id, &warm).unwrap().wait().unwrap() {
+        assert!(r.output.is_ok(), "warm-up failed: {:?}", r.output);
+    }
+
+    coord.kill_worker(0).unwrap();
+
+    let xs: Vec<Vec<bool>> = (0..16).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let results = coord.submit_batch(id, &inputs).unwrap().wait().unwrap();
+    for (x, r) in xs.iter().zip(&results) {
+        assert_eq!(
+            r.output,
+            Ok(pm1_golden(&a, x)),
+            "job {} must fail over, not fail",
+            r.job_id
+        );
+    }
+
+    assert_eq!(coord.metrics.snapshot().jobs_failed, 0, "zero WorkerLost results");
+
+    // Discovery is lazy (a send must fail); if the batch's balancing
+    // happened to dodge the corpse, keep probing — the rotating replica
+    // tie-break reaches every pinned worker within a few rounds. The
+    // probes double as proof the survivors keep serving normally.
+    let mut probes = 0;
+    while coord.metrics.snapshot().workers_lost == 0 {
+        probes += 1;
+        assert!(probes <= 64, "worker death never discovered");
+        let x = rng.bits(96);
+        let r = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap().wait().unwrap();
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_failed, 0);
+    assert_eq!(snap.workers_lost, 1, "exactly one death discovered");
+    assert!(snap.failovers >= 1, "the dead pins must be re-routed");
+    assert_eq!(coord.routing_stats().live_workers, 2);
+    coord.shutdown();
+}
+
+/// A crash with jobs already queued (mid-stream): the dropped shard jobs
+/// are re-dispatched by the gather's retry waves onto the surviving
+/// replica — no job fails, and any re-dispatched result is marked with
+/// its attempt wave.
+#[test]
+fn mid_stream_crash_redispatches_inflight_jobs() {
+    let mut rng = Xoshiro256pp::seeded(302);
+    // max_batch = 1 forces one pipeline batch per job, so the victim's
+    // queue is still full when the crash lands.
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 3,
+        max_batch: 1,
+        replicas: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // Pin both replicas before the burst so the kill hits a worker that
+    // genuinely hosts one.
+    let x0 = rng.bits(32);
+    let victim = {
+        let r = coord.submit(id, JobInput::Pm1Mvp(x0.clone())).unwrap().wait().unwrap();
+        assert_eq!(r.output, Ok(pm1_golden(&a, &x0)));
+        r.worker
+    };
+
+    let xs: Vec<Vec<bool>> = (0..600).map(|_| rng.bits(32)).collect();
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap())
+        .collect();
+    // Kill while the burst is in flight: whatever sat in the victim's
+    // queue dies unanswered and must be re-issued by the gather's retry
+    // waves onto the surviving replica.
+    coord.kill_worker(victim).unwrap();
+
+    let mut redispatched = 0u64;
+    for (h, x) in handles.into_iter().zip(&xs) {
+        let r = h.wait().unwrap();
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)), "job {}", r.job_id);
+        redispatched += (r.attempt > 0) as u64;
+    }
+
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    coord.shutdown(); // join survivors so every in-flight decrement landed
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_submitted, 601);
+    assert_eq!(snap.jobs_completed, 601);
+    assert_eq!(snap.jobs_failed, 0, "a lone crash must not surface WorkerLost");
+    assert_eq!(
+        snap.retries, redispatched,
+        "every gather-wave re-dispatch marks its result's attempt"
+    );
+    for (w, occ) in snap.per_worker.iter().enumerate() {
+        assert_eq!(occ.inflight, 0, "worker {w} in-flight must settle to zero");
+    }
+}
+
+/// Regression (scatter abort accounting): killing a worker's channel
+/// between batches used to abort the scatter mid-fan-out — the
+/// already-dispatched shards kept their `shard_jobs_submitted`
+/// increments, `jobs_submitted` was never counted, and the queued jobs
+/// served into a dropped receiver. Now the send failure re-dispatches
+/// on the spot (even with replicas = 1: the shard data still lives in
+/// the shared registry) and the snapshot stays consistent.
+#[test]
+fn scatter_send_failure_keeps_accounting_consistent() {
+    let mut rng = Xoshiro256pp::seeded(303);
+    let coord = coordinator(2, 1);
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // Pin the single replica, then crash its worker.
+    let x0 = rng.bits(32);
+    let victim = {
+        let r = coord.submit(id, JobInput::Pm1Mvp(x0.clone())).unwrap().wait().unwrap();
+        r.worker
+    };
+    coord.kill_worker(victim).unwrap();
+
+    let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(32)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let results = coord
+        .submit_batch(id, &inputs)
+        .expect("a dead worker must not abort the scatter")
+        .wait()
+        .unwrap();
+    for (x, r) in xs.iter().zip(&results) {
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)));
+        assert_ne!(r.worker, victim, "served by the survivor");
+    }
+
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    coord.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.jobs_submitted, 9, "the batch is counted submitted");
+    assert_eq!(snap.jobs_completed, 9);
+    assert_eq!(snap.jobs_failed, 0);
+    assert_eq!(snap.workers_lost, 1);
+    assert!(snap.failovers >= 1);
+    assert_eq!(
+        snap.shard_jobs_lost, 0,
+        "sends failed before anything could queue on the dead worker"
+    );
+    for (w, occ) in snap.per_worker.iter().enumerate() {
+        assert_eq!(occ.inflight, 0, "worker {w}: no in-flight skew, dead or alive");
+    }
+    // The re-pin moved the shard: both workers loaded it exactly once.
+    assert_eq!(snap.matrix_loads, 2);
+}
+
+/// With *every* worker dead the machinery must still terminate: all
+/// jobs resolve with a typed `WorkerLost` once the bounded retry budget
+/// is spent — never a hang, never a panic.
+#[test]
+fn all_workers_dead_yields_typed_errors_not_hangs() {
+    let mut rng = Xoshiro256pp::seeded(304);
+    let coord = coordinator(1, 1);
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let x0 = rng.bits(32);
+    coord.submit(id, JobInput::Pm1Mvp(x0)).unwrap().wait().unwrap();
+
+    coord.kill_worker(0).unwrap();
+
+    let inputs: Vec<JobInput> = (0..4).map(|_| JobInput::Pm1Mvp(rng.bits(32))).collect();
+    let results = coord.submit_batch(id, &inputs).unwrap().wait().unwrap();
+    for r in &results {
+        assert_eq!(r.output, Err(JobError::WorkerLost));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_submitted, 5);
+    assert_eq!(snap.jobs_completed, 5);
+    assert_eq!(snap.jobs_failed, 4);
+    assert_eq!(coord.routing_stats().live_workers, 0);
+    coord.shutdown();
+}
+
+/// `kill_worker` input validation and idempotence.
+#[test]
+fn kill_worker_rejects_unknown_ids_and_is_idempotent() {
+    let coord = coordinator(2, 1);
+    assert!(coord.kill_worker(2).is_err());
+    coord.kill_worker(1).unwrap();
+    coord.kill_worker(1).unwrap(); // second kill: nothing left to join
+    coord.shutdown();
+}

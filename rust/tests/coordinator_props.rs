@@ -242,6 +242,136 @@ fn sharded_serving_matches_golden_for_arbitrary_shapes() {
     });
 }
 
+/// Stress property: concurrent register / submit / unregister across
+/// threads must neither leak routing state (affinity pins and placement
+/// counts return to baseline once every matrix is gone) nor wedge a
+/// handle — every wait resolves with a bit-exact result or a typed
+/// error. These are exactly the interleavings the router's
+/// unregister-race path reasons about but nothing exercised before.
+#[test]
+fn unregister_vs_submit_stress_leaks_nothing_and_resolves_every_handle() {
+    use ppac::coordinator::JobError;
+    use std::sync::{Arc, Mutex};
+
+    Runner::new(6).check("unregister-stress", |g| {
+        let mut rng = g.rng.fork();
+        let workers = 2 + rng.below(3) as usize;
+        let replicas = 1 + rng.below(2) as usize;
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                tile: PpacConfig::new(16, 16),
+                workers,
+                max_batch: 8,
+                replicas,
+                ..Default::default()
+            })
+            .map_err(|e| e.to_string())?,
+        );
+
+        // A shared pool of matrices one thread keeps churning
+        // (register + unregister of the displaced entry) while others
+        // submit against whatever ids they last saw.
+        type Pool = Arc<Mutex<Vec<(u64, Arc<Vec<Vec<bool>>>)>>>;
+        let pool: Pool = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..3 {
+            let m: Vec<Vec<bool>> = (0..20).map(|_| rng.bits(20)).collect();
+            let id = coord
+                .register(MatrixSpec::Bit1 { rows: m.clone() })
+                .map_err(|e| e.to_string())?;
+            pool.lock().unwrap().push((id, Arc::new(m)));
+        }
+
+        let mut joins = Vec::new();
+        {
+            let coord = Arc::clone(&coord);
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::seeded(7100);
+                for _ in 0..40 {
+                    let m: Vec<Vec<bool>> = (0..20).map(|_| rng.bits(20)).collect();
+                    let id = coord.register(MatrixSpec::Bit1 { rows: m.clone() }).unwrap();
+                    let old = {
+                        let mut p = pool.lock().unwrap();
+                        let slot = rng.below(p.len() as u64) as usize;
+                        std::mem::replace(&mut p[slot], (id, Arc::new(m)))
+                    };
+                    // The displaced id may still have scatters in
+                    // flight — that is the point.
+                    let _ = coord.unregister_matrix(old.0);
+                }
+            }));
+        }
+        for t in 0..3u64 {
+            let coord = Arc::clone(&coord);
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::seeded(7200 + t);
+                for i in 0..60 {
+                    let (id, m) = {
+                        let p = pool.lock().unwrap();
+                        p[rng.below(p.len() as u64) as usize].clone()
+                    };
+                    let x = rng.bits(20);
+                    // The registration may vanish between picking the
+                    // id and submitting (synchronous error) or between
+                    // scatter and serve (typed per-job error) — both
+                    // legal; a hang or a stale answer is not.
+                    let submitted = if i % 2 == 0 {
+                        coord.submit(id, JobInput::Pm1Mvp(x.clone())).map(|h| h.wait())
+                    } else {
+                        coord
+                            .submit_batch(id, &[JobInput::Pm1Mvp(x.clone())])
+                            .map(|h| h.wait().map(|mut v| v.pop().unwrap()))
+                    };
+                    match submitted {
+                        Err(_) => {} // unknown matrix: unregister won
+                        Ok(r) => match r.unwrap().output {
+                            Ok(JobOutput::Ints(y)) => {
+                                let want: Vec<i64> =
+                                    m.iter().map(|row| golden::pm1_inner(row, &x)).collect();
+                                assert_eq!(y, want, "stale result for matrix {id}");
+                            }
+                            Ok(other) => panic!("wrong payload kind: {other:?}"),
+                            Err(JobError::UnknownShard { .. } | JobError::WorkerLost) => {}
+                            Err(other) => panic!("unexpected error: {other}"),
+                        },
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| "a stress thread panicked".to_string())?;
+        }
+
+        // Drain the pool: after the last unregister the routing state
+        // must be back at baseline — no leaked pins, no leaked
+        // placement counts (the leak would starve those workers'
+        // placement tie-break forever).
+        for (id, _) in pool.lock().unwrap().drain(..) {
+            coord.unregister_matrix(id).map_err(|e| e.to_string())?;
+        }
+        let stats = coord.routing_stats();
+        crate::assert_prop(stats.affinities == 0, &format!("leaked affinities: {stats:?}"))?;
+        crate::assert_prop(
+            stats.placed.iter().all(|&p| p == 0),
+            &format!("leaked placement counts: {stats:?}"),
+        )?;
+        let snap = coord.metrics.snapshot();
+        crate::assert_prop(
+            snap.jobs_submitted == snap.jobs_completed,
+            &format!(
+                "jobs submitted {} != completed {}",
+                snap.jobs_submitted, snap.jobs_completed
+            ),
+        )?;
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown(),
+            Err(_) => return Err("coordinator still shared after joins".into()),
+        }
+        Ok(())
+    });
+}
+
 /// Small helper: property-friendly assert.
 pub fn assert_prop(cond: bool, msg: &str) -> Result<(), String> {
     if cond {
