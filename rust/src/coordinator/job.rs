@@ -259,6 +259,7 @@ impl JobInput {
             JobInput::Hamming(b) => JobInput::Hamming(part.split_input(b, cb)),
             JobInput::Gf2(b) => JobInput::Gf2(part.split_input(b, cb)),
             JobInput::Multibit { x, spec } => {
+                // ppac-lint: allow(no-index, reason = "cb < col_blocks and input width validated by scatter")
                 let mut block = x[part.col_range(cb)].to_vec();
                 block.resize(part.tile_n, spec.pad_value());
                 JobInput::Multibit { x: block, spec: *spec }

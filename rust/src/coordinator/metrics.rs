@@ -7,17 +7,19 @@
 //! in-flight shard jobs, served counts, simulated cycles — feeds the
 //! least-loaded placement policy and the `serve` report.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats;
+use crate::util::sync::{lock, AtomicU64, Ordering};
 
 /// Occupancy counters for one worker.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct WorkerMetrics {
     /// Shard jobs routed to this worker and not yet served (queue depth +
-    /// in service). Incremented at scatter time, decremented when the
-    /// worker finishes (or drops) the batch containing the job.
+    /// in service). Incremented at scatter time, decremented
+    /// (saturating, via [`WorkerMetrics::complete`]) when the worker
+    /// finishes or drops the batch containing the job, and reclaimed
+    /// wholesale by `Router::mark_dead` when the worker is lost.
     pub inflight: AtomicU64,
     /// Shard jobs this worker has answered.
     pub served: AtomicU64,
@@ -33,9 +35,53 @@ pub struct WorkerMetrics {
     pub replica_hits: AtomicU64,
 }
 
+// Default is hand-written (not derived) so the struct keeps working
+// when `util::sync` swaps the atomics for loom's, which do not
+// implement `Default`.
+impl Default for WorkerMetrics {
+    fn default() -> Self {
+        Self {
+            inflight: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            replica_hits: AtomicU64::new(0),
+        }
+    }
+}
+
+impl WorkerMetrics {
+    /// Count `n` shard jobs as no longer in flight, saturating at zero.
+    ///
+    /// Saturation (rather than a plain `fetch_sub`) is what makes the
+    /// decrement safe to race `Router::mark_dead`'s `swap(0)` reclaim:
+    /// a straggler completion landing after the reclaim must not wrap
+    /// the gauge to `u64::MAX` and permanently bias least-loaded
+    /// placement away from the slot (see the `router` loom/interleave
+    /// suites).
+    pub fn complete(&self, n: u64) {
+        // ordering: AcqRel on the RMW orders the decrement against the
+        // mark_dead reclaim's swap; the count is a placement hint, so
+        // no other memory depends on it.
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    /// Zero the in-flight gauge, returning what was outstanding — the
+    /// dead-worker reclaim half of the race described on
+    /// [`WorkerMetrics::complete`].
+    pub fn reclaim_inflight(&self) -> u64 {
+        self.inflight.swap(0, Ordering::AcqRel)
+    }
+}
+
 /// Shared metrics (atomics for counters, a mutexed reservoir for
 /// latencies).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Logical jobs accepted by `submit` / `submit_batch`.
     pub jobs_submitted: AtomicU64,
@@ -81,6 +127,34 @@ pub struct Metrics {
     workers: Vec<WorkerMetrics>,
 }
 
+// Hand-written for the same loom-compatibility reason as
+// `WorkerMetrics`.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            jobs_submitted: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            shard_jobs_submitted: AtomicU64::new(0),
+            shard_jobs_completed: AtomicU64::new(0),
+            shard_jobs_failed: AtomicU64::new(0),
+            shard_jobs_lost: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            workers_lost: AtomicU64::new(0),
+            gathers: AtomicU64::new(0),
+            matrices_unregistered: AtomicU64::new(0),
+            auto_evictions: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_jobs: AtomicU64::new(0),
+            matrix_loads: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+            workers: Vec::new(),
+        }
+    }
+}
+
 impl Metrics {
     /// Metrics with `n` per-worker occupancy slots.
     pub fn for_workers(n: usize) -> Self {
@@ -98,6 +172,9 @@ impl Metrics {
 
     /// In-flight shard jobs on one worker (0 for unknown ids).
     pub fn worker_inflight(&self, id: usize) -> u64 {
+        // ordering: Relaxed — a momentarily stale occupancy read only
+        // skews one placement decision; no memory is published through
+        // this gauge.
         self.workers
             .get(id)
             .map_or(0, |w| w.inflight.load(Ordering::Relaxed))
@@ -129,7 +206,7 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, us: f64) {
-        let mut l = self.latencies_us.lock().unwrap();
+        let mut l = lock(&self.latencies_us);
         // Bounded reservoir: keep the newest 100k samples.
         if l.len() >= 100_000 {
             l.drain(..50_000);
@@ -146,7 +223,7 @@ impl Metrics {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        let l = self.latencies_us.lock().unwrap();
+        let l = lock(&self.latencies_us);
         stats::percentile(&l, p)
     }
 
@@ -175,6 +252,8 @@ impl Metrics {
                 .workers
                 .iter()
                 .map(|w| WorkerSnapshot {
+                    // ordering: Relaxed — reporting snapshot; staleness
+                    // is acceptable and nothing is published through it.
                     inflight: w.inflight.load(Ordering::Relaxed),
                     served: w.served.load(Ordering::Relaxed),
                     batches: w.batches.load(Ordering::Relaxed),
@@ -253,6 +332,20 @@ mod tests {
         assert_eq!(m.shard_jobs_completed.load(Ordering::Relaxed), 2);
         assert!(m.worker(7).is_none());
         assert_eq!(m.worker_inflight(7), 0);
+    }
+
+    #[test]
+    fn complete_saturates_against_reclaim() {
+        let w = WorkerMetrics::default();
+        w.inflight.store(3, Ordering::Relaxed);
+        assert_eq!(w.reclaim_inflight(), 3, "reclaim returns the outstanding count");
+        // A straggler completion landing after the dead-worker reclaim
+        // must saturate at zero, not wrap to u64::MAX.
+        w.complete(1);
+        assert_eq!(w.inflight.load(Ordering::Relaxed), 0);
+        w.inflight.store(5, Ordering::Relaxed);
+        w.complete(2);
+        assert_eq!(w.inflight.load(Ordering::Relaxed), 3);
     }
 
     #[test]

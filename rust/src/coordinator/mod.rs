@@ -83,11 +83,12 @@ mod router;
 pub mod worker;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{lock, read_lock, write_lock, AtomicBool, AtomicU64, Ordering, RwLock};
 
 use crate::apps::tiled::{rect_shape, Partition};
 use crate::engine::blocked_planes::zero_pattern_value;
@@ -340,6 +341,7 @@ impl GatherState {
         Ok((idx, partial.shard))
     }
 
+    // ppac-lint: allow(no-index, reason = "(idx, shard) validated by pair()")
     fn pair_done(&self, idx: usize, shard: usize) -> bool {
         self.got[idx][shard]
     }
@@ -347,6 +349,7 @@ impl GatherState {
     /// Fold one shard partial in. A malformed partial (stray id, wrong
     /// payload kind) aborts the whole gather; a duplicate for an
     /// already-finalized pair is ignored.
+    // ppac-lint: allow(no-index, reason = "(idx, shard) validated by pair(); acc rows sized count")
     fn absorb(&mut self, partial: JobResult) -> Result<()> {
         let (idx, shard) = self.pair(&partial)?;
         if self.got[idx][shard] {
@@ -391,6 +394,7 @@ impl GatherState {
 
     /// Close an open pair with a typed error (retry budget exhausted or
     /// no surviving replica). A no-op for pairs that already folded.
+    // ppac-lint: allow(no-index, reason = "callers pass pair()-validated or missing_pairs() coordinates")
     fn finalize_error(&mut self, idx: usize, shard: usize, err: JobError) {
         if self.got[idx][shard] {
             return;
@@ -426,6 +430,7 @@ impl GatherState {
 
     /// Strip padding, apply the pad correction, and emit one result per
     /// job in submission order.
+    // ppac-lint: allow(no-index, reason = "idx < count; acc rows sized padded_rows >= part.m")
     fn finish(&mut self) -> Vec<JobResult> {
         let part = self.plan.part;
         let shards = self.plan.shards();
@@ -508,6 +513,7 @@ struct ReduceTask {
 /// the shared registry, any worker would answer the same, so burning
 /// retry waves only delays the typed error the client is owed.
 /// Deterministic verdicts (format range, kind mismatch, …) never retry.
+// ppac-lint: allow(no-index, reason = "shard_idx comes from pair()-validated partial coordinates")
 fn worth_retry(ctx: &RetryCtx, shard_idx: usize, err: &JobError) -> bool {
     match err {
         JobError::WorkerLost => true,
@@ -521,6 +527,7 @@ fn worth_retry(ctx: &RetryCtx, shard_idx: usize, err: &JobError) -> bool {
 /// Re-issue one missing (job, shard) pair through the router, retrying
 /// across replicas as sends reveal dead workers. `Err` when no live
 /// worker remains.
+// ppac-lint: allow(no-index, reason = "idx/shard_idx come from pair()-validated missing_pairs()")
 fn redispatch(
     ctx: &RetryCtx,
     state: &GatherState,
@@ -537,6 +544,9 @@ fn redispatch(
             return Err(JobError::WorkerLost);
         };
         if let Some(wm) = state.metrics.worker(worker) {
+            // ordering: Relaxed — the occupancy bump is a placement
+            // hint; the only cross-thread reclaim edge is mark_dead's
+            // AcqRel swap, and no other memory hangs off this count.
             wm.inflight.fetch_add(1, Ordering::Relaxed);
         }
         let job = job::Job {
@@ -550,6 +560,8 @@ fn redispatch(
         };
         if ctx.router.send(worker, WorkerMsg::Job(job)) {
             state.metrics.shard_jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            // ordering: Relaxed — retries is a monotonic report counter;
+            // nothing orders against it.
             state.metrics.retries.fetch_add(1, Ordering::Relaxed);
             if replicas.len() > 1 {
                 if let Some(wm) = state.metrics.worker(worker) {
@@ -562,6 +574,8 @@ fn redispatch(
         // worker may have served part of its queue before dying, so a
         // plain rollback could double-subtract.
         ctx.router.mark_dead(worker);
+        // ordering: Relaxed — failovers is a monotonic report counter;
+        // nothing orders against it.
         state.metrics.failovers.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -605,22 +619,25 @@ fn reduce_task(task: &mut ReduceTask) -> Result<Vec<JobResult>> {
         // accounting, whether or not budget remains to re-issue them.
         let lost = missing.iter().filter(|&&p| !last_err.contains_key(&p)).count() as u64;
         if lost > 0 {
+            // ordering: Relaxed — shard_jobs_lost is a monotonic report
+            // counter; nothing orders against it.
             task.state.metrics.shard_jobs_lost.fetch_add(lost, Ordering::Relaxed);
         }
-        let can_retry = task.retry.as_ref().is_some_and(|r| wave < r.budget);
-        if !can_retry {
-            // Budget spent (or no retry context): open pairs finalize
-            // with their last typed answer; anything that never answered
-            // at all is a lost worker's silence.
-            for (idx, shard) in missing {
-                if let Some(err) = last_err.remove(&(idx, shard)) {
-                    task.state.finalize_error(idx, shard, err);
+        let ctx = match task.retry.as_ref() {
+            Some(r) if wave < r.budget => r,
+            _ => {
+                // Budget spent (or no retry context): open pairs
+                // finalize with their last typed answer; anything that
+                // never answered at all is a lost worker's silence.
+                for (idx, shard) in missing {
+                    if let Some(err) = last_err.remove(&(idx, shard)) {
+                        task.state.finalize_error(idx, shard, err);
+                    }
                 }
+                task.state.mark_lost();
+                break;
             }
-            task.state.mark_lost();
-            break;
-        }
-        let ctx = task.retry.as_ref().unwrap();
+        };
         wave += 1;
         let (tx, rx) = channel();
         for (idx, shard) in missing {
@@ -641,6 +658,9 @@ fn reduce_task(task: &mut ReduceTask) -> Result<Vec<JobResult>> {
 fn run_reducer(tasks: Receiver<ReduceTask>) {
     while let Ok(mut task) = tasks.recv() {
         let outcome = reduce_task(&mut task);
+        // ordering: Relaxed — releases the TTL sweep's eviction guard;
+        // the sweep only compares the count against zero and takes the
+        // registry write lock (its own synchronization) before evicting.
         task.inflight.fetch_sub(1, Ordering::Relaxed);
         // A dropped handle just means the client stopped caring.
         let _ = task.done.send(outcome);
@@ -806,13 +826,13 @@ impl Coordinator {
         cfg.tile.validate()?;
         let mut engine_opts = vec![cfg.engine; cfg.workers];
         for &(worker, opts) in overrides {
-            if worker >= cfg.workers {
+            let Some(slot) = engine_opts.get_mut(worker) else {
                 return Err(PpacError::Config(format!(
                     "engine override for worker {worker}, but only {} workers",
                     cfg.workers
                 )));
-            }
-            engine_opts[worker] = opts;
+            };
+            *slot = opts;
         }
         let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::for_workers(cfg.workers));
@@ -902,9 +922,13 @@ impl Coordinator {
         }
         // Flag first (so queued jobs are dropped, not drained), then a
         // Die message to wake an idle worker out of its recv promptly.
-        self.kill_flags[id].store(true, Ordering::Relaxed);
+        if let Some(flag) = self.kill_flags.get(id) {
+            // ordering: Relaxed — the worker polls this flag at batch
+            // boundaries; the join below is the real synchronization.
+            flag.store(true, Ordering::Relaxed);
+        }
         let _ = self.router.send(id, WorkerMsg::Die);
-        let handle = self.handles.lock().unwrap()[id].take();
+        let handle = lock(&self.handles).get_mut(id).and_then(Option::take);
         if let Some(h) = handle {
             let _ = h.join();
         }
@@ -1029,7 +1053,7 @@ impl Coordinator {
     ) -> MatrixId {
         let mut shard_replicas = Vec::with_capacity(blocks.len());
         {
-            let mut reg = self.registry.write().unwrap();
+            let mut reg = write_lock(&self.registry);
             for block in blocks {
                 let mut ids = Vec::with_capacity(replicas);
                 for _ in 0..replicas {
@@ -1041,7 +1065,7 @@ impl Coordinator {
             }
         }
         let mid = self.next_matrix.fetch_add(1, Ordering::Relaxed);
-        self.shards.write().unwrap().insert(
+        write_lock(&self.shards).insert(
             mid,
             Arc::new(ShardedMatrix {
                 part,
@@ -1070,14 +1094,11 @@ impl Coordinator {
     }
 
     fn remove_matrix(&self, matrix: MatrixId) -> Result<()> {
-        let sharded = self
-            .shards
-            .write()
-            .unwrap()
+        let sharded = write_lock(&self.shards)
             .remove(&matrix)
             .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
         {
-            let mut reg = self.registry.write().unwrap();
+            let mut reg = write_lock(&self.registry);
             for sid in sharded.shard_replicas.iter().flatten() {
                 reg.remove(sid);
             }
@@ -1096,10 +1117,15 @@ impl Coordinator {
         let Some(ttl) = self.cfg.registry_ttl else { return };
         let now_ms = self.epoch.elapsed().as_millis() as u64;
         let interval = ((ttl.as_millis() as u64) / 2).max(1);
+        // ordering: Relaxed — last_sweep_ms is only a rate-limit stamp;
+        // a stale read merely skips one sweep opportunity.
         let last = self.last_sweep_ms.load(Ordering::Relaxed);
         if now_ms.saturating_sub(last) < interval {
             return;
         }
+        // ordering: Relaxed — winning the CAS elects this thread as the
+        // sweeper; eviction itself synchronizes through the registry
+        // write lock, not through this stamp.
         if self
             .last_sweep_ms
             .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
@@ -1107,14 +1133,14 @@ impl Coordinator {
         {
             return; // another thread is sweeping
         }
-        let expired: Vec<MatrixId> = self
-            .shards
-            .read()
-            .unwrap()
+        let expired: Vec<MatrixId> = read_lock(&self.shards)
             .iter()
             .filter(|(_, s)| {
+                // ordering: Relaxed — the eviction guard only compares
+                // against zero; remove_matrix re-checks nothing because
+                // reducers hold the ShardData Arcs alive regardless.
                 s.gathers_inflight.load(Ordering::Relaxed) == 0
-                    && s.last_used.lock().unwrap().elapsed() >= ttl
+                    && lock(&s.last_used).elapsed() >= ttl
             })
             .map(|(&id, _)| id)
             .collect();
@@ -1128,32 +1154,25 @@ impl Coordinator {
 
     /// Shape of a registered matrix (logical rows × entries).
     pub fn matrix_shape(&self, matrix: MatrixId) -> Option<(usize, usize)> {
-        self.shards
-            .read()
-            .unwrap()
-            .get(&matrix)
-            .map(|s| (s.part.m, s.part.n))
+        read_lock(&self.shards).get(&matrix).map(|s| (s.part.m, s.part.n))
     }
 
     /// Scatter a batch of same-mode inputs over a matrix's shards and
     /// hand the gather to a reducer; the returned handle waits on the
     /// reduced results.
     fn scatter(&self, matrix: MatrixId, inputs: &[JobInput]) -> Result<BatchHandle> {
-        let sharded = self
-            .shards
-            .read()
-            .unwrap()
+        let sharded = read_lock(&self.shards)
             .get(&matrix)
             .cloned()
             .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
         // Touch before sweeping, so a submit can never evict the matrix
         // it is about to use.
-        *sharded.last_used.lock().unwrap() = Instant::now();
+        *lock(&sharded.last_used) = Instant::now();
         self.maybe_sweep();
-        if inputs.is_empty() {
+        let Some(first_input) = inputs.first() else {
             return Err(PpacError::Coordinator("empty batch".into()));
-        }
-        let mode = inputs[0].mode_key();
+        };
+        let mode = first_input.mode_key();
         // Structural validation only: shape, mode uniformity, matrix
         // kind. Value ranges, pairings and K/L limits are the engine
         // layer's job — its verdict comes back as a typed JobError.
@@ -1228,6 +1247,9 @@ impl Coordinator {
                 // In-flight must rise before the first send (the worker
                 // decrements after serving).
                 if let Some(wm) = self.metrics.worker(worker) {
+                    // ordering: Relaxed — occupancy is a placement hint;
+                    // mark_dead's AcqRel swap is the only reclaim edge
+                    // and no other memory hangs off this count.
                     wm.inflight.fetch_add(njobs, Ordering::Relaxed);
                 }
                 let mut sent_all = true;
@@ -1265,6 +1287,8 @@ impl Coordinator {
                 // with its receiver; any it *served* first are
                 // deduplicated by the gather.
                 self.router.mark_dead(worker);
+                // ordering: Relaxed — failovers is a monotonic report
+                // counter; nothing orders against it.
                 self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -1278,6 +1302,9 @@ impl Coordinator {
         let state = GatherState::new(plan, base, inputs.len(), Arc::clone(&self.metrics));
         let (done_tx, done_rx) = channel();
         let inflight = Arc::clone(&sharded.gathers_inflight);
+        // ordering: Relaxed — pins the matrix against the TTL sweep,
+        // which only compares this count against zero; the registry
+        // locks provide the real eviction synchronization.
         inflight.fetch_add(1, Ordering::Relaxed);
         // The retry context owns a copy of the inputs (a lost shard job
         // is re-split from them); with retries disabled, skip the clone
@@ -1298,7 +1325,10 @@ impl Coordinator {
             inflight: Arc::clone(&inflight),
             retry,
         };
-        if self.reducer_txs[r].send(task).is_err() {
+        let handed_off = self.reducer_txs.get(r).is_some_and(|rtx| rtx.send(task).is_ok());
+        if !handed_off {
+            // ordering: Relaxed — releases the TTL-sweep pin taken
+            // above; the task never reached a reducer.
             inflight.fetch_sub(1, Ordering::Relaxed);
             return Err(PpacError::Coordinator("reducer pool shut down".into()));
         }
@@ -1349,7 +1379,8 @@ impl Coordinator {
             // A killed worker just fails the send.
             let _ = router.send(w, WorkerMsg::Shutdown);
         }
-        for h in handles.into_inner().unwrap().into_iter().flatten() {
+        let joined = handles.into_inner().unwrap_or_else(PoisonError::into_inner);
+        for h in joined.into_iter().flatten() {
             let _ = h.join();
         }
         drop(reducer_txs);

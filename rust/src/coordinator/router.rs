@@ -27,14 +27,19 @@
 //! meaningful. A killed worker thereby becomes a load-balancing event,
 //! not a poison pill for every shard pinned on it.
 
+// The `loom` cfg is injected by the CI model-checking lane
+// (`RUSTFLAGS="--cfg loom"`); stock toolchains don't know it.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use super::job::ShardId;
 use super::metrics::Metrics;
 use super::worker::{MatrixRegistry, WorkerMsg};
+use crate::util::sync::{read_lock, write_lock, AtomicBool, AtomicU64, Ordering, RwLock};
 
 /// Least-loaded selection: fewest in-flight shard jobs first, tie-broken
 /// by fewest shards ever placed (spread), then lowest index
@@ -48,12 +53,11 @@ use super::worker::{MatrixRegistry, WorkerMsg};
 fn pick_worker(inflight: &[u64], placed: &[u64], banned: &[bool]) -> Option<usize> {
     let mut best = None;
     let mut best_key = (u64::MAX, u64::MAX);
-    let n = inflight.len().min(placed.len()).min(banned.len());
-    for i in 0..n {
-        if banned[i] {
+    for (i, ((&inf, &pl), &ban)) in inflight.iter().zip(placed).zip(banned).enumerate() {
+        if ban {
             continue;
         }
-        let key = (inflight[i], placed[i]);
+        let key = (inf, pl);
         if best.is_none() || key < best_key {
             best_key = key;
             best = Some(i);
@@ -110,30 +114,42 @@ impl Router {
     }
 
     pub(crate) fn is_dead(&self, worker: usize) -> bool {
-        self.dead.get(worker).is_some_and(|d| d.load(Ordering::Relaxed))
+        // Acquire pairs with mark_dead's AcqRel swap: a router that
+        // observes the death also observes the inflight reclaim it
+        // published, so placement never mixes the stale occupancy of a
+        // dead slot with its liveness.
+        self.dead.get(worker).is_some_and(|d| d.load(Ordering::Acquire))
     }
 
     /// Record a worker as gone (its channel rejected a send). Every
-    /// failed sender calls this; the worker thread has already exited —
-    /// a send can only fail once the receiver is dropped — so nobody
-    /// will decrement its in-flight counter again and resetting it here
-    /// is race-free. The `workers_lost` metric counts first discoveries
-    /// only.
+    /// failed sender calls this. The worker thread has usually exited —
+    /// a send can only fail once the receiver is dropped — but its last
+    /// completion decrement can still be in flight, so the reclaim is a
+    /// `swap(0)` paired with saturating decrements
+    /// ([`super::metrics::WorkerMetrics::complete`]): whichever side
+    /// loses the race, the gauge lands at zero instead of wrapping to
+    /// `u64::MAX` and permanently repelling the least-loaded policy.
+    /// The `workers_lost` metric counts first discoveries only.
     pub(crate) fn mark_dead(&self, worker: usize) {
         let Some(dead) = self.dead.get(worker) else { return };
-        if !dead.swap(true, Ordering::Relaxed) {
+        // AcqRel: the winning swap publishes everything done before the
+        // death was discovered to the next is_dead(Acquire) observer.
+        if !dead.swap(true, Ordering::AcqRel) {
+            // ordering: Relaxed — workers_lost is a monotonic report
+            // counter; nothing synchronizes through it.
             self.metrics.workers_lost.fetch_add(1, Ordering::Relaxed);
         }
         if let Some(wm) = self.metrics.worker(worker) {
-            wm.inflight.store(0, Ordering::Relaxed);
+            wm.reclaim_inflight();
         }
     }
 
     /// Deliver a message to a worker. `false` means the worker is gone
-    /// (receiver dropped) — the caller decides whether that is a
-    /// failover (scatter / re-dispatch) or ignorable (evict, shutdown).
+    /// (receiver dropped, or the id is out of range) — the caller
+    /// decides whether that is a failover (scatter / re-dispatch) or
+    /// ignorable (evict, shutdown).
     pub(crate) fn send(&self, worker: usize, msg: WorkerMsg) -> bool {
-        self.senders[worker].send(msg).is_ok()
+        self.senders.get(worker).is_some_and(|s| s.send(msg).is_ok())
     }
 
     /// Least-loaded live worker, preferring workers outside `exclude`
@@ -143,6 +159,8 @@ impl Router {
         let inflight: Vec<u64> = (0..self.workers)
             .map(|i| self.metrics.worker_inflight(i))
             .collect();
+        // ordering: Relaxed — placed is a placement tie-break gauge;
+        // a stale read only skews one pick and publishes nothing.
         let placed: Vec<u64> = self.placed.iter().map(|p| p.load(Ordering::Relaxed)).collect();
         let banned: Vec<bool> = (0..self.workers)
             .map(|i| self.is_dead(i) || exclude.contains(&i))
@@ -155,9 +173,9 @@ impl Router {
 
     /// Among the pinned replicas, the one whose worker has the fewest
     /// in-flight shard jobs; equally-loaded ties rotate so idle replicas
-    /// share reads.
-    fn balance(&self, pins: &[(ShardId, usize)]) -> (ShardId, usize) {
-        debug_assert!(!pins.is_empty());
+    /// share reads. `None` only for an empty pin set (callers never pass
+    /// one, but the hot path stays panic-free rather than asserting).
+    fn balance(&self, pins: &[(ShardId, usize)]) -> Option<(ShardId, usize)> {
         // Replicas sharing a worker (deaths can leave fewer live workers
         // than replicas) are interchangeable for load but NOT for
         // residency: rotating between their ids would thrash the
@@ -173,15 +191,15 @@ impl Router {
             .iter()
             .map(|&(_, w)| self.metrics.worker_inflight(w))
             .collect();
-        let min = *load.iter().min().unwrap();
+        let min = load.iter().copied().min()?;
         let ties: Vec<(ShardId, usize)> = unique
             .iter()
             .zip(&load)
             .filter(|&(_, &l)| l == min)
             .map(|(&p, _)| p)
             .collect();
-        let pick = self.rr.fetch_add(1, Ordering::Relaxed) as usize % ties.len();
-        ties[pick]
+        let pick = self.rr.fetch_add(1, Ordering::Relaxed) as usize % ties.len().max(1);
+        ties.get(pick).copied()
     }
 
     /// Pick the (replica, worker) a shard job should go to: place
@@ -192,7 +210,7 @@ impl Router {
         debug_assert!(!replicas.is_empty());
         // Fast path: the whole group is pinned on live workers.
         {
-            let aff = self.affinity.read().unwrap();
+            let aff = read_lock(&self.affinity);
             let mut pins = Vec::with_capacity(replicas.len());
             for sid in replicas {
                 match aff.get(sid) {
@@ -204,10 +222,10 @@ impl Router {
                 }
             }
             if !pins.is_empty() {
-                return Some(self.balance(&pins));
+                return self.balance(&pins);
             }
         }
-        let mut aff = self.affinity.write().unwrap();
+        let mut aff = write_lock(&self.affinity);
         // A scatter can race unregister_matrix (it cloned the Sharded
         // entry before the removal). Never pin an affinity for a shard
         // that already left the registry: the worker will answer the job
@@ -220,8 +238,9 @@ impl Router {
         // pin. The job still needs *a* worker to answer it typed — the
         // least-loaded live one, so the race cannot hot-spot worker 0's
         // in-flight count and distort placement for live traffic.
-        if !self.registry.read().unwrap().contains_key(&replicas[0]) {
-            return self.least_loaded(&[]).map(|w| (replicas[0], w));
+        let first = *replicas.first()?;
+        if !read_lock(&self.registry).contains_key(&first) {
+            return self.least_loaded(&[]).map(|w| (first, w));
         }
         // (Re)place replicas that are unpinned or whose worker died, on
         // distinct live workers where possible (sharing only when fewer
@@ -239,19 +258,29 @@ impl Router {
                         // Dead pin: release its placed count before
                         // re-pinning (the eviction is moot — the worker
                         // is gone).
-                        self.placed[w].fetch_sub(1, Ordering::Relaxed);
+                        // ordering: Relaxed — placed is the placement
+                        // tie-break gauge; the affinity write lock is
+                        // what orders pin/unpin pairs.
+                        if let Some(placed) = self.placed.get(w) {
+                            placed.fetch_sub(1, Ordering::Relaxed);
+                        }
                         aff.remove(sid);
                     }
                     let w = self.least_loaded(&used)?;
-                    self.placed[w].fetch_add(1, Ordering::Relaxed);
+                    // ordering: Relaxed — same tie-break gauge as above.
+                    if let Some(placed) = self.placed.get(w) {
+                        placed.fetch_add(1, Ordering::Relaxed);
+                    }
                     aff.insert(*sid, w);
                     used.push(w);
                 }
             }
         }
-        let pins: Vec<(ShardId, usize)> =
-            replicas.iter().map(|sid| (*sid, aff[sid])).collect();
-        Some(self.balance(&pins))
+        let pins: Vec<(ShardId, usize)> = replicas
+            .iter()
+            .filter_map(|sid| aff.get(sid).map(|&w| (*sid, w)))
+            .collect();
+        self.balance(&pins)
     }
 
     /// Release one replica's routing state (its matrix unregistered):
@@ -260,9 +289,13 @@ impl Router {
     /// any resident copy. A dead worker just means there is nothing to
     /// evict.
     pub(crate) fn release(&self, sid: ShardId) {
-        let removed = self.affinity.write().unwrap().remove(&sid);
+        let removed = write_lock(&self.affinity).remove(&sid);
         if let Some(w) = removed {
-            self.placed[w].fetch_sub(1, Ordering::Relaxed);
+            // ordering: Relaxed — placed tie-break gauge (see `route`);
+            // the affinity lock ordered the unpin itself.
+            if let Some(placed) = self.placed.get(w) {
+                placed.fetch_sub(1, Ordering::Relaxed);
+            }
             let _ = self.send(w, WorkerMsg::Evict(sid));
         }
     }
@@ -272,12 +305,14 @@ impl Router {
     /// that has left it is deterministic — no replica can do better —
     /// while one still present was a transient race worth retrying.
     pub(crate) fn shard_known(&self, sid: ShardId) -> bool {
-        self.registry.read().unwrap().contains_key(&sid)
+        read_lock(&self.registry).contains_key(&sid)
     }
 
     pub(crate) fn stats(&self) -> RoutingStats {
         RoutingStats {
-            affinities: self.affinity.read().unwrap().len(),
+            affinities: read_lock(&self.affinity).len(),
+            // ordering: Relaxed — introspection snapshot of the placed
+            // tie-break gauge; staleness is fine.
             placed: self.placed.iter().map(|p| p.load(Ordering::Relaxed)).collect(),
             live_workers: (0..self.workers).filter(|&w| !self.is_dead(w)).count(),
         }
@@ -408,5 +443,119 @@ mod tests {
         let stats = router.stats();
         assert_eq!(stats.affinities, 0);
         assert_eq!(stats.placed, vec![0, 0]);
+    }
+
+    /// Regression for the mark_dead reclaim race: a straggler completion
+    /// decrement landing *after* the dead-worker reclaim. With the old
+    /// `store(0)` + wrapping `fetch_sub` pair the gauge wrapped to
+    /// `u64::MAX` and the slot never won a placement comparison again;
+    /// `swap(0)` + saturating `complete` pins it at zero from either
+    /// interleaving (the exhaustive schedules live in
+    /// `tests/router_interleave.rs`).
+    #[test]
+    fn straggler_completion_after_mark_dead_cannot_wrap_occupancy() {
+        let (router, metrics) = test_router(2);
+        let w0 = metrics.worker(0).unwrap();
+        w0.inflight.store(3, Ordering::Relaxed);
+        router.mark_dead(0);
+        assert_eq!(metrics.worker_inflight(0), 0, "reclaim zeroed the gauge");
+        w0.complete(3); // the straggler
+        assert_eq!(metrics.worker_inflight(0), 0, "saturates instead of wrapping");
+        assert!(router.is_dead(0));
+        // Second discovery is idempotent and counts once.
+        router.mark_dead(0);
+        assert_eq!(metrics.workers_lost.load(Ordering::Relaxed), 1);
+    }
+}
+
+// Model-checking of the routing protocol under loom: the *real*
+// `Router`, with every interleaving of the `util::sync` atomics/locks
+// explored exhaustively. The dependency-free tier-1 build never
+// compiles this (`loom` is not a manifest dependency — the CI
+// static-analysis lane adds it with `cargo add --dev loom` and runs
+// `RUSTFLAGS="--cfg loom" cargo test --lib loom`). The pure-model
+// mirror of these schedules, which gates every PR on a stock
+// toolchain, lives in `tests/router_interleave.rs`; see ANALYSIS.md.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    fn loom_router(workers: usize) -> (Arc<Router>, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::for_workers(workers));
+        let senders = (0..workers).map(|_| std::sync::mpsc::channel().0).collect();
+        let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
+        (
+            Arc::new(Router::new(senders, registry, Arc::clone(&metrics))),
+            metrics,
+        )
+    }
+
+    /// The satellite race, on the real types: `mark_dead`'s reclaim vs
+    /// a concurrent completion decrement, every interleaving.
+    #[test]
+    fn mark_dead_reclaim_never_underflows_inflight() {
+        loom::model(|| {
+            let (router, metrics) = loom_router(2);
+            if let Some(w0) = metrics.worker(0) {
+                w0.inflight.store(2, Ordering::Relaxed);
+            }
+            let m2 = Arc::clone(&metrics);
+            let r2 = Arc::clone(&router);
+            let t1 = loom::thread::spawn(move || {
+                if let Some(w0) = m2.worker(0) {
+                    w0.complete(1);
+                }
+            });
+            let t2 = loom::thread::spawn(move || r2.mark_dead(0));
+            t1.join().expect("completer");
+            t2.join().expect("marker");
+            // Either order lands at zero: complete-then-reclaim drains
+            // it, reclaim-then-complete saturates. Wrapping would show
+            // up as u64::MAX here.
+            assert_eq!(metrics.worker_inflight(0), 0);
+            assert!(router.is_dead(0));
+        });
+    }
+
+    /// `route` racing `mark_dead`: whatever the schedule, the settled
+    /// state re-pins the shard on the surviving worker and the dead
+    /// pin's placed count is released.
+    #[test]
+    fn route_settles_on_the_survivor_after_concurrent_death() {
+        loom::model(|| {
+            let (router, _metrics) = loom_router(2);
+            let data =
+                Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+            write_lock(&router.registry).insert(7, data);
+            let r2 = Arc::clone(&router);
+            let t = loom::thread::spawn(move || r2.mark_dead(0));
+            let _ = router.route(&[7]); // may see 0 live or already dead
+            t.join().expect("marker");
+            let (_, w) = router.route(&[7]).expect("one worker survives");
+            assert_eq!(w, 1, "the settled pin is on the survivor");
+            let stats = router.stats();
+            assert_eq!(stats.placed.iter().sum::<u64>(), stats.affinities as u64);
+        });
+    }
+
+    /// `route` racing `release`: placed counts and affinity entries
+    /// stay paired (every insert +1 / remove −1 under the write lock),
+    /// so no schedule can leak or double-free a placement.
+    #[test]
+    fn route_release_keep_placed_paired() {
+        loom::model(|| {
+            let (router, _metrics) = loom_router(2);
+            let data =
+                Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+            write_lock(&router.registry).insert(3, data);
+            let _ = router.route(&[3]); // pin it
+            let r2 = Arc::clone(&router);
+            let t = loom::thread::spawn(move || r2.release(3));
+            let _ = router.route(&[3]);
+            t.join().expect("releaser");
+            let stats = router.stats();
+            assert_eq!(stats.placed.iter().sum::<u64>(), stats.affinities as u64);
+            assert!(stats.placed.iter().all(|&p| p <= 1));
+        });
     }
 }

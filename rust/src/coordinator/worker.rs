@@ -19,10 +19,11 @@
 //! take down valid jobs that merely coalesced into the same batch.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::Duration;
+
+use crate::util::sync::{read_lock, AtomicBool, Ordering, RwLock};
 
 use crate::engine::{Backend, EngineOpts};
 use crate::error::Result;
@@ -72,7 +73,7 @@ pub enum ShardData {
 
 /// Shared, read-only shard registry: tile-sized (possibly clipped) blocks
 /// of the registered matrices.
-pub type MatrixRegistry = Arc<std::sync::RwLock<HashMap<ShardId, Arc<ShardData>>>>;
+pub type MatrixRegistry = Arc<RwLock<HashMap<ShardId, Arc<ShardData>>>>;
 
 pub struct Worker {
     pub id: usize,
@@ -119,6 +120,10 @@ impl Worker {
     pub fn run(mut self, rx: Receiver<WorkerMsg>) {
         let mut pending: Option<Job> = None;
         loop {
+            // ordering: Relaxed — killed is a monotonic crash flag
+            // polled every batch boundary; the only cost of a stale
+            // read is one extra batch served before the "crash" lands,
+            // which the fault-injection semantics allow.
             if self.killed.load(Ordering::Relaxed) {
                 // Crashed: the queue (and any carried-over job) dies
                 // unanswered with this receiver.
@@ -166,8 +171,10 @@ impl Worker {
             self.serve_batch(key, batch);
             // The jobs leave this worker's queue whether they carried an
             // answer or a typed error — occupancy must reflect that.
+            // The decrement saturates so it can race mark_dead's
+            // reclaim without wrapping (see WorkerMetrics::complete).
             if let Some(w) = self.metrics.worker(self.id) {
-                w.inflight.fetch_sub(served, Ordering::Relaxed);
+                w.complete(served);
             }
             if shutdown {
                 return;
@@ -200,7 +207,7 @@ impl Worker {
         let (shard_id, mode) = key;
         if self.resident != Some(key) {
             let data = {
-                let reg = self.registry.read().unwrap();
+                let reg = read_lock(&self.registry);
                 reg.get(&shard_id).cloned()
             };
             let Some(data) = data else {

@@ -37,6 +37,8 @@
 //! schedules reuse the same sweep once per (k, l) plane pair — see
 //! [`blocked_planes`](super::blocked_planes).
 
+// ppac-lint: allow-file(no-index, reason = "sweep hot loops index packed words by validated tile geometry; bounds checks would sit inside the innermost loop")
+
 use crate::error::{PpacError, Result};
 use crate::sim::{BitVec, PpacArray};
 

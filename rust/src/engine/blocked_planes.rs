@@ -26,6 +26,8 @@
 //! engines consume it, which pins the two implementations to the same
 //! kernel selection, plane decomposition and validation.
 
+// ppac-lint: allow-file(no-index, reason = "plane-fold hot loops index buffers sized by check_geometry-validated plan shape")
+
 use crate::error::{PpacError, Result};
 use crate::formats::{self, NumberFormat};
 use crate::isa::MatrixInterp;

@@ -9,7 +9,9 @@
 //! authoritative for verification and the power model: the `Blocked`
 //! engine produces the same numbers but no per-cycle activity.
 
-use crate::error::Result;
+// ppac-lint: allow-file(no-index, reason = "correction loops index per-row tables sized m by construction")
+
+use crate::error::{PpacError, Result};
 use crate::formats::NumberFormat;
 use crate::sim::{BitVec, CycleInput, PpacArray, RowAluCtrl};
 
@@ -44,7 +46,7 @@ impl Engine for CycleAccurate {
             let out = array.cycle(&CycleInput::compute(q.clone(), s.clone(), ctrl))?;
             cycles += 1;
             if pending {
-                let out = out.expect("pipeline must be primed");
+                let out = out.ok_or(PpacError::Internal("pipeline must be primed"))?;
                 ys.push(out.y);
                 // Only y leaves this layer; hand the bank buffer back so
                 // the next cycle's stage 2 reuses its capacity.
@@ -52,7 +54,7 @@ impl Engine for CycleAccurate {
             }
             pending = true;
         }
-        let out = array.drain()?.expect("drain output");
+        let out = array.drain()?.ok_or(PpacError::Internal("drain produced no output"))?;
         cycles += 1;
         ys.push(out.y);
         array.recycle_buffers(Vec::new(), out.bank_p);
@@ -102,7 +104,8 @@ impl Engine for CycleAccurate {
                     let out = array.cycle(&CycleInput::compute(xin, s.clone(), ctrl))?;
                     cycles += 1;
                     if pending_emit {
-                        let out = out.expect("pipeline must be primed");
+                        let out =
+                            out.ok_or(PpacError::Internal("pipeline must be primed"))?;
                         ys.push(out.y);
                         array.recycle_buffers(Vec::new(), out.bank_p);
                     } else if let Some(out) = out {
@@ -114,7 +117,7 @@ impl Engine for CycleAccurate {
                 }
             }
         }
-        let out = array.drain()?.expect("drain output");
+        let out = array.drain()?.ok_or(PpacError::Internal("drain produced no output"))?;
         cycles += 1;
         ys.push(out.y);
         array.recycle_buffers(Vec::new(), out.bank_p);

@@ -46,6 +46,13 @@ pub enum PpacError {
     /// instead of an answer.
     Job(crate::coordinator::JobError),
 
+    /// A broken internal invariant — a bug in this crate, not a caller
+    /// error. Hot paths return it typed instead of panicking so one bad
+    /// shard job cannot take a worker thread (and every job batched
+    /// behind it) down with it; `ppac-lint` rule `no-panic` enforces
+    /// this.
+    Internal(&'static str),
+
     Io(std::io::Error),
 
     Json(crate::util::json::JsonError),
@@ -70,6 +77,9 @@ impl fmt::Display for PpacError {
             PpacError::Artifact(msg) => write!(f, "runtime artifact error: {msg}"),
             PpacError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             PpacError::Job(e) => write!(f, "job error: {e}"),
+            PpacError::Internal(msg) => {
+                write!(f, "internal invariant violated (bug): {msg}")
+            }
             PpacError::Io(e) => write!(f, "{e}"),
             PpacError::Json(e) => write!(f, "{e}"),
         }

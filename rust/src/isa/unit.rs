@@ -164,6 +164,7 @@ impl PpacUnit {
         for (buf, q) in self.qscratch.iter_mut().zip(queries) {
             buf.copy_from_bools(q);
         }
+        // ppac-lint: allow(no-index, reason = "qscratch grown to queries.len() by the loop above")
         let packed = &self.qscratch[..queries.len()];
         let engine = Self::select_engine(&self.array, self.engine.as_ref());
         let batch = engine.serve(&mut self.array, kernel, packed)?;
@@ -451,7 +452,7 @@ impl PpacUnit {
             let out = self.array.cycle(&step.input)?;
             cycles += 1;
             if pending_emit {
-                outputs.push(out.expect("pipeline must be primed"));
+                outputs.push(out.ok_or(PpacError::Internal("pipeline must be primed"))?);
             } else if let Some(out) = out {
                 // Dropped intermediate (bit-serial partials, setup
                 // cycles): hand the buffers back for stage-2 reuse.
@@ -462,7 +463,7 @@ impl PpacUnit {
         if pending_emit {
             let out = self.array.drain()?;
             cycles += 1;
-            outputs.push(out.expect("drain output"));
+            outputs.push(out.ok_or(PpacError::Internal("drain produced no output"))?);
         }
         if count_as_setup {
             self.setup_cycles += cycles;

@@ -1,0 +1,116 @@
+//! Synchronization substrate for the coordinator: loom-swappable
+//! atomics/locks plus poison-tolerant lock helpers.
+//!
+//! Two jobs, one module:
+//!
+//! 1. **Model-checking seam.** Every cross-thread handoff primitive the
+//!    coordinator uses (`AtomicU64`, `AtomicBool`, the `registry` /
+//!    `affinity` `RwLock`s) is imported from here rather than from
+//!    `std::sync` directly. Under a normal build the re-exports *are*
+//!    the `std` types — zero cost, zero behavior change. Under
+//!    `RUSTFLAGS="--cfg loom"` they become [loom](https://docs.rs/loom)
+//!    primitives, so the `loom` test modules can exhaustively interleave
+//!    `route` / `mark_dead` / `place` / `release` (see
+//!    `coordinator/router.rs` and ANALYSIS.md; loom itself is fetched by
+//!    the CI lane — it is deliberately *not* a manifest dependency, the
+//!    tier-1 gate stays registry-free).
+//!
+//! 2. **Poison tolerance.** A worker thread that panics while holding a
+//!    registry/affinity guard poisons the lock; `lock().unwrap()` at the
+//!    next coordinator call site would then cascade the panic into the
+//!    serving layer. The helpers below recover the guard instead — every
+//!    structure the coordinator guards (shard maps, affinity pins,
+//!    latency reservoirs, join handles) stays valid under torn writes
+//!    because each is updated through a single insert/remove/push, so
+//!    continuing with the recovered guard is sound. `ppac-lint` rule
+//!    `no-panic` keeps bare `unwrap()`s from creeping back in.
+
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Read-acquire an `RwLock`, recovering the guard if a previous holder
+/// panicked (poisoning is advisory; see the module docs for why the
+/// guarded structures stay valid).
+#[cfg(not(loom))]
+pub fn read_lock<'a, T>(lock: &'a RwLock<T>) -> RwLockReadGuard<'a, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-acquire an `RwLock`, recovering the guard after a poisoning
+/// panic.
+#[cfg(not(loom))]
+pub fn write_lock<'a, T>(lock: &'a RwLock<T>) -> RwLockWriteGuard<'a, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a `Mutex`, recovering the guard after a poisoning panic.
+pub fn lock<'a, T>(mutex: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// Under loom the locks are loom's own (which never poison — a panic
+// inside the model aborts the run, which is exactly what a model
+// checker should do), so the helpers reduce to plain acquisition.
+
+#[cfg(loom)]
+pub fn read_lock<'a, T>(lock: &'a RwLock<T>) -> RwLockReadGuard<'a, T> {
+    match lock.read() {
+        Ok(g) => g,
+        Err(_) => panic!("loom lock poisoned"),
+    }
+}
+
+#[cfg(loom)]
+pub fn write_lock<'a, T>(lock: &'a RwLock<T>) -> RwLockWriteGuard<'a, T> {
+    match lock.write() {
+        Ok(g) => g,
+        Err(_) => panic!("loom lock poisoned"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned(), "the panic must have poisoned the lock");
+        assert_eq!(*lock(&m), 7, "helper recovers the guard and the value");
+        *lock(&m) = 9;
+        assert_eq!(*lock(&m), 9);
+    }
+
+    #[test]
+    fn rwlock_helpers_recover_from_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(read_lock(&l).len(), 3);
+        write_lock(&l).push(4);
+        assert_eq!(read_lock(&l).len(), 4);
+    }
+}

@@ -1,0 +1,365 @@
+//! Exhaustive pure-model interleaving checks for the Router protocol.
+//!
+//! The loom lane (`router.rs::loom_tests`) model-checks the *real*
+//! types, but `loom` is not a manifest dependency — the tier-1 build
+//! stays dependency-free — so that lane is CI-optional. This suite is
+//! the gate: a tiny DFS scheduler enumerates **every** interleaving of
+//! small thread programs modeling the protocol's atomic steps, and the
+//! invariants must hold on all of them.
+//!
+//! Three protocols from `coordinator::router` / `coordinator::metrics`:
+//!
+//! - **Occupancy reclaim** (`mark_dead` vs. straggler completions):
+//!   `swap(0)` + saturating decrements always settle at zero. The old
+//!   `store(0)` + wrapping `fetch_sub` protocol is modeled too, as a
+//!   negative test: the checker must *find* its wrap-around — proof the
+//!   schedules have teeth.
+//! - **Placed-count pairing** (`route` vs. `release` vs. `mark_dead`):
+//!   every affinity insert/remove pairs a placed-count ±1 under the
+//!   affinity write lock, so lock-held sections are single model steps;
+//!   the count equals live pins and never goes negative, on every
+//!   schedule.
+//! - **Gather dedup** (reducer absorbing failover duplicates): one
+//!   reducer thread absorbs partials in arrival order; across every
+//!   permutation of a duplicate-bearing arrival multiset, each pair is
+//!   absorbed once and completion fires exactly once.
+
+use std::collections::BTreeSet;
+
+/// Enumerate every interleaving of `progs` (one step list per thread),
+/// calling `exec` to apply a step and `visit` on each terminal state.
+/// Returns the number of distinct schedules explored.
+fn explore<S: Clone, T: Copy>(
+    state: &S,
+    progs: &[Vec<T>],
+    exec: &impl Fn(&mut S, T),
+    visit: &mut impl FnMut(&S),
+) -> usize {
+    fn rec<S: Clone, T: Copy>(
+        state: &S,
+        progs: &[Vec<T>],
+        pcs: &mut [usize],
+        exec: &impl Fn(&mut S, T),
+        visit: &mut impl FnMut(&S),
+    ) -> usize {
+        let mut schedules = 0;
+        let mut terminal = true;
+        for t in 0..progs.len() {
+            if pcs[t] < progs[t].len() {
+                terminal = false;
+                let mut next = state.clone();
+                exec(&mut next, progs[t][pcs[t]]);
+                pcs[t] += 1;
+                schedules += rec(&next, progs, pcs, exec, visit);
+                pcs[t] -= 1;
+            }
+        }
+        if terminal {
+            visit(state);
+            return 1;
+        }
+        schedules
+    }
+    let mut pcs = vec![0usize; progs.len()];
+    rec(state, progs, &mut pcs, exec, visit)
+}
+
+#[test]
+fn explorer_enumerates_all_interleavings() {
+    // Sanity-check the checker itself: interleavings of step lists of
+    // lengths (3, 1) and (2, 2) are the multinomials 4 and 6.
+    let count = |lens: &[usize]| {
+        let progs: Vec<Vec<u8>> = lens.iter().map(|&n| vec![0u8; n]).collect();
+        explore(&(), &progs, &|_, _| {}, &mut |_| {})
+    };
+    assert_eq!(count(&[3, 1]), 4);
+    assert_eq!(count(&[2, 2]), 6);
+    assert_eq!(count(&[1, 1, 1]), 6);
+}
+
+// ---------------------------------------------------------------------
+// Model A: occupancy reclaim (mark_dead vs. straggler completion).
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct Occupancy {
+    /// `WorkerMetrics::inflight`, as the mathematical integer the u64
+    /// bit pattern represents — wrap-around shows up as a huge value.
+    inflight: u64,
+    dead: bool,
+    workers_lost: u64,
+}
+
+#[derive(Clone, Copy)]
+enum OccStep {
+    /// New protocol: saturating decrement (`complete`, a `fetch_update`
+    /// retry loop — atomic, hence one model step).
+    CompleteSaturating,
+    /// New protocol: `mark_dead`'s `dead.swap(true)` + `swap(0)` reclaim.
+    MarkDeadSwap,
+    /// Old protocol: wrapping `fetch_sub(1)`.
+    CompleteWrapping,
+    /// Old protocol: plain `store(0)` reclaim.
+    MarkDeadStore,
+}
+
+fn occ_exec(s: &mut Occupancy, step: OccStep) {
+    match step {
+        OccStep::CompleteSaturating => s.inflight = s.inflight.saturating_sub(1),
+        OccStep::MarkDeadSwap => {
+            if !s.dead {
+                s.dead = true;
+                s.workers_lost += 1;
+            }
+            s.inflight = 0;
+        }
+        OccStep::CompleteWrapping => s.inflight = s.inflight.wrapping_sub(1),
+        OccStep::MarkDeadStore => {
+            if !s.dead {
+                s.dead = true;
+                s.workers_lost += 1;
+            }
+            s.inflight = 0;
+        }
+    }
+}
+
+#[test]
+fn reclaim_with_saturating_completions_always_settles_at_zero() {
+    // Three in-flight jobs; their completions race the death discovery.
+    let start = Occupancy { inflight: 3, dead: false, workers_lost: 0 };
+    let progs = vec![
+        vec![OccStep::CompleteSaturating; 3],
+        vec![OccStep::MarkDeadSwap],
+    ];
+    let mut finals = BTreeSet::new();
+    let n = explore(&start, &progs, &occ_exec, &mut |s: &Occupancy| {
+        assert_eq!(s.inflight, 0, "every schedule must land the gauge at zero");
+        assert!(s.dead);
+        finals.insert(s.inflight);
+    });
+    assert_eq!(n, 4, "C(4,1) schedules");
+    assert_eq!(finals.len(), 1);
+}
+
+#[test]
+fn old_store_plus_wrapping_sub_protocol_is_caught_by_the_checker() {
+    // Negative test: the pre-fix protocol must fail under at least one
+    // schedule (reclaim first, then a straggler wraps to u64::MAX) —
+    // otherwise these models prove nothing.
+    let start = Occupancy { inflight: 2, dead: false, workers_lost: 0 };
+    let progs = vec![
+        vec![OccStep::CompleteWrapping; 2],
+        vec![OccStep::MarkDeadStore],
+    ];
+    let mut wrapped = 0usize;
+    explore(&start, &progs, &occ_exec, &mut |s: &Occupancy| {
+        if s.inflight > u64::MAX / 2 {
+            wrapped += 1;
+        }
+    });
+    assert!(wrapped > 0, "the checker must expose the wrap-around bug");
+}
+
+#[test]
+fn concurrent_death_discoveries_count_one_worker_lost() {
+    // Two senders discover the same dead worker; `dead.swap(true)` makes
+    // the workers_lost bump first-discovery-only on every schedule.
+    let start = Occupancy { inflight: 0, dead: false, workers_lost: 0 };
+    let progs = vec![vec![OccStep::MarkDeadSwap], vec![OccStep::MarkDeadSwap]];
+    explore(&start, &progs, &occ_exec, &mut |s: &Occupancy| {
+        assert_eq!(s.workers_lost, 1, "double-discovery must count once");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Model B: placed-count pairing (route vs. release vs. mark_dead).
+// ---------------------------------------------------------------------
+
+/// One shard, two workers. Affinity mutations happen under the affinity
+/// *write lock* in the real code, so each lock-held section is a single
+/// atomic model step; `mark_dead` is lock-free and steps alone.
+#[derive(Clone)]
+struct Placement {
+    /// Pinned worker for the one modeled shard.
+    aff: Option<usize>,
+    /// Per-worker placed tie-break counts (i64 so an underflow bug shows
+    /// up as a negative, not a silent wrap).
+    placed: [i64; 2],
+    dead: [bool; 2],
+    /// Set by a step that observed a broken local invariant.
+    violated: bool,
+}
+
+#[derive(Clone, Copy)]
+enum PlaceStep {
+    /// `route`: under the write lock — drop a dead pin (releasing its
+    /// placed count), then pin the least-index live worker.
+    Route,
+    /// `release`: under the write lock — unpin and release the count.
+    Release,
+    MarkDead(usize),
+}
+
+fn place_exec(s: &mut Placement, step: PlaceStep) {
+    match step {
+        PlaceStep::Route => {
+            if let Some(w) = s.aff {
+                if !s.dead[w] {
+                    return; // fast path: healthy pin, nothing to do
+                }
+                s.placed[w] -= 1;
+                s.aff = None;
+            }
+            if let Some(w) = (0..2).find(|&w| !s.dead[w]) {
+                s.placed[w] += 1;
+                s.aff = Some(w);
+            }
+        }
+        PlaceStep::Release => {
+            if let Some(w) = s.aff.take() {
+                s.placed[w] -= 1;
+            }
+        }
+        PlaceStep::MarkDead(w) => s.dead[w] = true,
+    }
+    if s.placed.iter().any(|&p| p < 0) {
+        s.violated = true;
+    }
+}
+
+fn check_placement(s: &Placement) {
+    assert!(!s.violated, "a placed count went negative mid-schedule");
+    let pinned_live = i64::from(s.aff.is_some());
+    assert_eq!(
+        s.placed.iter().sum::<i64>(),
+        pinned_live,
+        "placed counts must equal live pins: {:?} vs pin {:?}",
+        s.placed,
+        s.aff
+    );
+}
+
+#[test]
+fn route_release_and_death_keep_placed_paired_on_every_schedule() {
+    // Start pinned on worker 0 (one sequential route), then race a
+    // re-routing dispatch, an unregister's release, and worker 0 dying.
+    let mut start =
+        Placement { aff: None, placed: [0, 0], dead: [false, false], violated: false };
+    place_exec(&mut start, PlaceStep::Route);
+    let progs = vec![
+        vec![PlaceStep::Route],
+        vec![PlaceStep::Release],
+        vec![PlaceStep::MarkDead(0)],
+    ];
+    let n = explore(&start, &progs, &place_exec, &mut check_placement);
+    assert_eq!(n, 6, "3 single-step threads interleave 3! ways");
+}
+
+#[test]
+fn repeated_routing_across_total_failure_never_double_frees() {
+    // Both workers die while two dispatch paths re-route; after total
+    // failure routing pins nothing and every count is released exactly
+    // once.
+    let mut start =
+        Placement { aff: None, placed: [0, 0], dead: [false, false], violated: false };
+    place_exec(&mut start, PlaceStep::Route);
+    let progs = vec![
+        vec![PlaceStep::Route, PlaceStep::Route],
+        vec![PlaceStep::MarkDead(0), PlaceStep::MarkDead(1)],
+        vec![PlaceStep::Release],
+    ];
+    explore(&start, &progs, &place_exec, &mut |s: &Placement| {
+        check_placement(s);
+        if s.dead == [true, true] {
+            if let Some(w) = s.aff {
+                // A pin may survive only if it was placed before the
+                // last death was *observed* by a route step — but its
+                // count must still balance (checked above).
+                assert_eq!(s.placed[w], 1, "surviving pin keeps its count");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Model C: gather dedup under failover duplicates (arrival orders).
+// ---------------------------------------------------------------------
+
+/// The reducer absorbs partials sequentially (one thread owns the
+/// gather), so the schedule space is arrival-order permutations of a
+/// duplicate-bearing multiset — failover re-dispatch can deliver the
+/// same (idx, shard) twice.
+#[derive(Clone)]
+struct Gather {
+    got: [bool; 4],
+    absorbed: usize,
+    completions: usize,
+}
+
+fn absorb(s: &mut Gather, pair: usize) {
+    if s.got[pair] {
+        return; // duplicate: dedup bitmap drops it
+    }
+    s.got[pair] = true;
+    s.absorbed += 1;
+    if s.absorbed == s.got.len() {
+        s.completions += 1;
+    }
+}
+
+#[test]
+fn gather_dedup_absorbs_each_pair_once_across_all_arrival_orders() {
+    // 4 pairs, two of them delivered twice (failover duplicates):
+    // 6!/(2!·2!) = 180 distinct arrival orders, all checked.
+    let arrivals = [0usize, 1, 2, 3, 0, 2];
+    let mut orders = BTreeSet::new();
+    permute(&arrivals, &mut Vec::new(), &mut |order| {
+        orders.insert(order.to_vec());
+    });
+    assert_eq!(orders.len(), 180);
+    for order in &orders {
+        let mut s = Gather { got: [false; 4], absorbed: 0, completions: 0 };
+        for &p in order {
+            absorb(&mut s, p);
+        }
+        assert_eq!(s.absorbed, 4, "every pair absorbed exactly once: {order:?}");
+        assert_eq!(s.completions, 1, "completion fires exactly once: {order:?}");
+        assert!(s.got.iter().all(|&g| g));
+    }
+}
+
+#[test]
+fn gather_does_not_complete_early_with_missing_pairs() {
+    // A lost shard (pair 3 never arrives, duplicates of others do) must
+    // never trigger completion — that is the retry path's job.
+    let arrivals = [0usize, 1, 2, 0, 1, 2];
+    let mut orders = BTreeSet::new();
+    permute(&arrivals, &mut Vec::new(), &mut |order| {
+        orders.insert(order.to_vec());
+    });
+    for order in &orders {
+        let mut s = Gather { got: [false; 4], absorbed: 0, completions: 0 };
+        for &p in order {
+            absorb(&mut s, p);
+        }
+        assert_eq!(s.completions, 0, "missing pair must hold completion: {order:?}");
+        assert_eq!(s.absorbed, 3);
+    }
+}
+
+/// All permutations of `rest` appended to `prefix` (duplicates included;
+/// the callers dedup through a set).
+fn permute(rest: &[usize], prefix: &mut Vec<usize>, visit: &mut impl FnMut(&[usize])) {
+    if rest.is_empty() {
+        visit(prefix);
+        return;
+    }
+    for i in 0..rest.len() {
+        let mut remaining = rest.to_vec();
+        let item = remaining.remove(i);
+        prefix.push(item);
+        permute(&remaining, prefix, visit);
+        prefix.pop();
+    }
+}

@@ -1,0 +1,351 @@
+//! A deliberately small Rust lexer — just enough structure for the
+//! rules in [`crate::rules`].
+//!
+//! It is *not* a parser: no AST, no macro expansion, no type
+//! information. The rules work on token streams plus comment
+//! side-tables, which keeps the tool dependency-free (no `syn`, whose
+//! dependency closure the build image does not vendor) and fast enough
+//! to run on every push. The trade-off is precision: rules are written
+//! so their false positives are rare and an inline
+//! `// ppac-lint: allow(...)` with a reason is the documented escape
+//! hatch (see ANALYSIS.md §Limitations).
+//!
+//! What it does get right, because the rules would otherwise be wrong
+//! in practice:
+//!
+//! - line comments, nested block comments (collected into a side table
+//!   with line numbers, for suppression and `// ordering:` lookup);
+//! - string literals, raw strings (`r#"…"#`), byte strings, and char
+//!   literals vs. lifetimes (`'a'` vs `&'a`), so quoted brackets and
+//!   quotes never look like code;
+//! - identifiers vs. punctuation, with line numbers on every token.
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `Ordering`, …).
+    Ident,
+    /// Numeric literal (loose: `0..5` lexes as number, punct, number).
+    Number,
+    /// String / raw string / byte string / char literal.
+    Literal,
+    /// Lifetime (`'a`) — distinct so `'a` never looks like a char.
+    Lifetime,
+    /// Single punctuation character (`.`, `[`, `(`, `;`, `!`, …).
+    Punct,
+}
+
+/// One lexed token with its source line (1-based).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment with the line it *starts* on. Block comments keep their
+/// full text (suppressions may sit inside them).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+}
+
+/// Lexed file: code tokens and a comment side table, both line-stamped.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + comments. Unterminated constructs (a string
+/// or block comment running to EOF) terminate the token stream quietly:
+/// the real compiler rejects such files long before this tool matters.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let start = i;
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+                out.comments.push(Comment {
+                    text: chars[start..i].iter().collect(),
+                    line,
+                });
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if chars[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                out.comments.push(Comment {
+                    text: chars[start..i.min(chars.len())].iter().collect(),
+                    line: start_line,
+                });
+            }
+            'r' | 'b' if is_raw_string_start(&chars, i) => {
+                let tok_line = line;
+                let (text, consumed, newlines) = lex_raw_string(&chars, i);
+                out.tokens.push(Token { kind: TokKind::Literal, text, line: tok_line });
+                i += consumed;
+                line += newlines;
+            }
+            '"' => {
+                let tok_line = line;
+                let (text, consumed, newlines) = lex_quoted(&chars, i, '"');
+                out.tokens.push(Token { kind: TokKind::Literal, text, line: tok_line });
+                i += consumed;
+                line += newlines;
+            }
+            'b' if chars.get(i + 1) == Some(&'"') => {
+                let tok_line = line;
+                let (text, consumed, newlines) = lex_quoted(&chars, i + 1, '"');
+                out.tokens.push(Token {
+                    kind: TokKind::Literal,
+                    text: format!("b{text}"),
+                    line: tok_line,
+                });
+                i += consumed + 1;
+                line += newlines;
+            }
+            '\'' => {
+                // Char literal or lifetime. `'a'` / `'\n'` are chars;
+                // `'a` followed by non-quote is a lifetime.
+                if is_char_literal(&chars, i) {
+                    let tok_line = line;
+                    let (text, consumed, newlines) = lex_quoted(&chars, i, '\'');
+                    out.tokens.push(Token { kind: TokKind::Literal, text, line: tok_line });
+                    i += consumed;
+                    line += newlines;
+                } else {
+                    let start = i;
+                    i += 1;
+                    while i < chars.len() && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                        i += 1;
+                    }
+                    out.tokens.push(Token {
+                        kind: TokKind::Lifetime,
+                        text: chars[start..i].iter().collect(),
+                        line,
+                    });
+                }
+            }
+            c if c == '_' || c.is_alphabetic() => {
+                let start = i;
+                while i < chars.len() && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Ident,
+                    text: chars[start..i].iter().collect(),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < chars.len() {
+                    let d = chars[i];
+                    let in_number = d == '_'
+                        || d.is_alphanumeric()
+                        || (d == '.' && chars.get(i + 1).is_some_and(|n| n.is_ascii_digit()));
+                    if !in_number {
+                        break;
+                    }
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Number,
+                    text: chars[start..i].iter().collect(),
+                    line,
+                });
+            }
+            c => {
+                out.tokens.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `r`/`br` at `i` begin a raw string (`r"`, `r#`, `br"`, `br#`)?
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    let rest: String = chars[i..chars.len().min(i + 4)].iter().collect();
+    rest.starts_with("r\"")
+        || rest.starts_with("r#")
+        || rest.starts_with("br\"")
+        || rest.starts_with("br#")
+}
+
+/// Lex a raw string starting at `i`; returns (text, chars consumed,
+/// newlines crossed).
+fn lex_raw_string(chars: &[char], i: usize) -> (String, usize, usize) {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    j += 1; // the `r`
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) != Some(&'"') {
+        // `r#foo` is a raw identifier, not a string — back out and let
+        // the caller's consumed count just cover the prefix as a token.
+        let text: String = chars[i..j].iter().collect();
+        return (text, j - i, 0);
+    }
+    j += 1;
+    let mut newlines = 0usize;
+    loop {
+        match chars.get(j) {
+            None => break,
+            Some('\n') => {
+                newlines += 1;
+                j += 1;
+            }
+            Some('"') => {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while seen < hashes && chars.get(k) == Some(&'#') {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    j = k;
+                    break;
+                }
+                j += 1;
+            }
+            Some(_) => j += 1,
+        }
+    }
+    let text: String = chars[i..j.min(chars.len())].iter().collect();
+    (text, j - i, newlines)
+}
+
+/// Lex a `quote`-delimited literal with backslash escapes starting at
+/// `i`; returns (text, chars consumed, newlines crossed).
+fn lex_quoted(chars: &[char], i: usize, quote: char) -> (String, usize, usize) {
+    let mut j = i + 1;
+    let mut newlines = 0usize;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                newlines += 1;
+                j += 1;
+            }
+            c if c == quote => {
+                j += 1;
+                break;
+            }
+            _ => j += 1,
+        }
+    }
+    let text: String = chars[i..j.min(chars.len())].iter().collect();
+    (text, j - i, newlines)
+}
+
+/// Is the `'` at `i` a char literal (vs. a lifetime)? A char literal is
+/// `'x'` or `'\…'`; a lifetime is `'ident` not followed by a closing
+/// quote.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(&c) if c != '\'' => chars.get(i + 2) == Some(&'\''),
+        _ => true, // `''` — malformed either way; treat as literal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_leak_tokens() {
+        let src = r##"
+            let a = "unwrap() inside a string";
+            // unwrap() inside a line comment
+            /* unwrap() inside /* a nested */ block comment */
+            let b = r#"raw "quoted" unwrap()"#;
+            b.real_call();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "quoted/comment text leaked: {ids:?}");
+        assert!(ids.contains(&"real_call".to_string()));
+    }
+
+    #[test]
+    fn comments_carry_their_starting_line() {
+        let lexed = lex("fn f() {}\n// marker\nfn g() {}\n");
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].line, 2);
+        assert!(lexed.comments[0].text.contains("marker"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lexed = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<_> =
+            lexed.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "{lifetimes:?}");
+        let chars: Vec<_> = lexed.tokens.iter().filter(|t| t.kind == TokKind::Literal).collect();
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].text, "'x'");
+    }
+
+    #[test]
+    fn ranges_do_not_confuse_number_lexing() {
+        let lexed = lex("for i in 0..57 { a[i] += 1.5; }");
+        let nums: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Number)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "57", "1.5"]);
+    }
+
+    #[test]
+    fn tokens_are_line_stamped() {
+        let lexed = lex("a\nb\n\nc");
+        let lines: Vec<usize> = lexed.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+}

@@ -1,0 +1,442 @@
+//! `ppac-lint` — repo-specific static analysis for the `ppac` crate.
+//!
+//! Generic linters (clippy) cannot know this repo's protocols: which
+//! atomics are cross-thread handoffs, which counters must pair
+//! submission with completion, or that the coordinator's hot paths must
+//! stay panic-free so one bad shard job cannot take a worker thread
+//! down. This tool encodes those protocols as four rules (catalog and
+//! rationale: ANALYSIS.md at the repo root):
+//!
+//! - `no-panic` — no `unwrap`/`expect`/`panic!`-family calls in
+//!   non-test code under `coordinator/`, `engine/`, `isa/`.
+//! - `no-index` — no `x[i]` indexing/slicing there either (companion
+//!   rule; suppressible per-line, per-fn, or per-file with a reason).
+//! - `relaxed-ordering` — `Ordering::Relaxed` on a cross-thread handoff
+//!   atomic must carry an `// ordering:` justification comment.
+//! - `metric-pairing` — submission-side counter bumps must have a
+//!   declared completion/failure/reclaim counterpart in the corpus.
+//! - `lock-across-send` — no lock guard held across a channel
+//!   `send()`/`recv()` or a thread `join()`.
+//!
+//! Suppressions (reason required, enforced):
+//!
+//! ```text
+//! // ppac-lint: allow(no-index, reason = "idx validated by pair()")
+//! // ppac-lint: allow-file(no-index, reason = "kernel hot loops ...")
+//! ```
+//!
+//! A plain `allow(rule)` above a statement covers that statement; above
+//! an `fn` signature it covers the whole function body (the analogue of
+//! an item-level `#[allow]`); `allow-file` covers the file.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Lexed, TokKind};
+
+/// One lint finding, ordered for stable output.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file.display(),
+            self.line,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// A parsed `// ppac-lint: allow(...)` with its effective line span.
+#[derive(Debug, Clone)]
+struct Allow {
+    rule: String,
+    /// Inclusive line span the allow covers (whole file for
+    /// `allow-file`).
+    span: (usize, usize),
+}
+
+/// Suppressions for one file, plus any findings the suppression
+/// comments themselves produce (missing reason, unknown shape).
+#[derive(Debug, Default)]
+pub struct Suppressions {
+    allows: Vec<Allow>,
+    file_allows: Vec<String>,
+}
+
+impl Suppressions {
+    pub fn covers(&self, rule: &str, line: usize) -> bool {
+        self.file_allows.iter().any(|r| r == rule)
+            || self
+                .allows
+                .iter()
+                .any(|a| a.rule == rule && a.span.0 <= line && line <= a.span.1)
+    }
+}
+
+/// Everything the per-file rules need.
+pub struct FileCtx<'a> {
+    pub path: &'a Path,
+    /// Forward-slashed path string, for area checks
+    /// (`coordinator/` / `engine/` / `isa/`).
+    pub rel: String,
+    pub lexed: &'a Lexed,
+    /// Line spans of `#[test]` fns and `#[cfg(test)]` items — rules
+    /// skip findings inside them.
+    pub test_spans: Vec<(usize, usize)>,
+    pub suppressions: &'a Suppressions,
+}
+
+impl FileCtx<'_> {
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    pub fn in_area(&self, areas: &[&str]) -> bool {
+        areas.iter().any(|a| self.rel.contains(a))
+    }
+}
+
+/// Lint every `.rs` file under `root` (a file path works too). Findings
+/// come back sorted by (file, line, rule); suppression-comment
+/// violations are included.
+pub fn run(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut lexed_files = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let lexed = lex(&src);
+        let (suppressions, mut sup_findings) = parse_suppressions(path, &lexed);
+        findings.append(&mut sup_findings);
+        lexed_files.push((path.clone(), lexed, suppressions));
+    }
+
+    // Per-file rules.
+    for (path, lexed, suppressions) in &lexed_files {
+        let ctx = FileCtx {
+            path,
+            rel: path.to_string_lossy().replace('\\', "/"),
+            lexed,
+            test_spans: test_spans(lexed),
+            suppressions,
+        };
+        let mut raw = Vec::new();
+        rules::no_panic(&ctx, &mut raw);
+        rules::no_index(&ctx, &mut raw);
+        rules::relaxed_ordering(&ctx, &mut raw);
+        rules::lock_across_send(&ctx, &mut raw);
+        findings.extend(
+            raw.into_iter()
+                .filter(|f| !ctx.in_test(f.line) && !suppressions.covers(f.rule, f.line)),
+        );
+    }
+
+    // Corpus-global rule: metric pairing across every coordinator file.
+    let ctxs: Vec<FileCtx> = lexed_files
+        .iter()
+        .map(|(path, lexed, suppressions)| FileCtx {
+            path,
+            rel: path.to_string_lossy().replace('\\', "/"),
+            lexed,
+            test_spans: test_spans(lexed),
+            suppressions,
+        })
+        .collect();
+    findings.extend(
+        rules::metric_pairing(&ctxs)
+            .into_iter()
+            .filter(|f| {
+                let sup = ctxs
+                    .iter()
+                    .find(|c| c.path == f.file)
+                    .is_some_and(|c| c.suppressions.covers(f.rule, f.line));
+                !sup
+            }),
+    );
+
+    findings.sort();
+    findings.dedup();
+    Ok(findings)
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Parse `// ppac-lint: allow(rule, reason = "...")` comments,
+/// resolving each allow's effective span against the token stream. An
+/// allow without a reason is itself a finding — suppressions document a
+/// judgment call, and an unexplained one is indistinguishable from a
+/// silenced bug.
+fn parse_suppressions(path: &Path, lexed: &Lexed) -> (Suppressions, Vec<Finding>) {
+    let mut sup = Suppressions::default();
+    let mut findings = Vec::new();
+    for c in &lexed.comments {
+        let Some(rest) = c.text.find("ppac-lint:").map(|i| &c.text[i + "ppac-lint:".len()..])
+        else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let (file_scope, body) = if let Some(b) = rest.strip_prefix("allow-file(") {
+            (true, b)
+        } else if let Some(b) = rest.strip_prefix("allow(") {
+            (false, b)
+        } else {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: c.line,
+                rule: "suppression",
+                message: format!(
+                    "unrecognized ppac-lint directive (expected allow(...) or allow-file(...)): {}",
+                    rest.trim()
+                ),
+            });
+            continue;
+        };
+        // Cut at the *last* `)` so reasons may themselves contain
+        // parens: allow(no-index, reason = "validated by pair()").
+        let body = body.rsplit_once(')').map_or(body, |(b, _)| b);
+        let mut parts = body.splitn(2, ',');
+        let rule = parts.next().unwrap_or("").trim().to_string();
+        let reason = parts.next().map(str::trim).unwrap_or("");
+        let has_reason = reason
+            .strip_prefix("reason")
+            .map(str::trim_start)
+            .and_then(|r| r.strip_prefix('='))
+            .is_some_and(|r| r.trim().trim_matches('"').len() >= 8);
+        if rule.is_empty() || !rules::KNOWN_RULES.contains(&rule.as_str()) {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: c.line,
+                rule: "suppression",
+                message: format!("allow() names unknown rule {rule:?}"),
+            });
+            continue;
+        }
+        if !has_reason {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: c.line,
+                rule: "suppression",
+                message: format!(
+                    "allow({rule}) needs a reason: `allow({rule}, reason = \"why this is safe\")`"
+                ),
+            });
+            continue;
+        }
+        if file_scope {
+            sup.file_allows.push(rule);
+        } else {
+            sup.allows.push(Allow { rule, span: allow_span(lexed, c.line) });
+        }
+    }
+    (sup, findings)
+}
+
+/// The line span a statement-level allow at `comment_line` covers: the
+/// next code statement, or — when the comment sits directly above an
+/// `fn` signature — the whole function (signature through closing
+/// brace), mirroring item-level `#[allow]`.
+fn allow_span(lexed: &Lexed, comment_line: usize) -> (usize, usize) {
+    let toks = &lexed.tokens;
+    let Some(start) = toks.iter().position(|t| t.line > comment_line) else {
+        return (comment_line, comment_line);
+    };
+    // Walk bracket depth until the statement/item ends: a `;` at depth
+    // zero, a `}` closing back to depth zero (an fn body, an `if let`
+    // block), or the enclosing block closing under us. This one scan
+    // covers both statements and fn items — an fn is just "signature
+    // parens, then a brace pair".
+    let mut depth = 0i64;
+    for t in &toks[start..] {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" | "(" | "[" => depth += 1,
+                "}" | ")" | "]" => {
+                    depth -= 1;
+                    if depth < 0 || (depth == 0 && t.text == "}") {
+                        return (comment_line, t.line);
+                    }
+                }
+                ";" if depth == 0 => return (comment_line, t.line),
+                _ => {}
+            }
+        }
+    }
+    let last = toks.last().map_or(comment_line, |t| t.line);
+    (comment_line, last)
+}
+
+/// Line spans of test code: any item annotated `#[test]` or
+/// `#[cfg(test)]` (attribute through the item's closing brace).
+fn test_spans(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let toks = &lexed.tokens;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && toks.get(i + 1).is_some_and(|t| t.text == "[")
+        {
+            // Collect the attribute tokens up to the matching `]`.
+            let attr_line = toks[i].line;
+            let mut j = i + 2;
+            let mut depth = 1i64;
+            let mut is_test = false;
+            let mut negated = false;
+            while j < toks.len() && depth > 0 {
+                match (toks[j].kind, toks[j].text.as_str()) {
+                    (TokKind::Punct, "[") => depth += 1,
+                    (TokKind::Punct, "]") => depth -= 1,
+                    (TokKind::Ident, "test") => is_test = true,
+                    (TokKind::Ident, "not") => negated = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if is_test && !negated {
+                // Span: attribute through the annotated item's body.
+                let mut depth = 0i64;
+                let mut entered = false;
+                let mut end = attr_line;
+                let mut k = j;
+                while k < toks.len() {
+                    if toks[k].kind == TokKind::Punct {
+                        match toks[k].text.as_str() {
+                            "{" => {
+                                depth += 1;
+                                entered = true;
+                            }
+                            "}" => {
+                                depth -= 1;
+                                if entered && depth == 0 {
+                                    end = toks[k].line;
+                                    break;
+                                }
+                            }
+                            ";" if !entered => {
+                                // `#[cfg(test)] mod tests;` — out-of-line.
+                                end = toks[k].line;
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    k += 1;
+                }
+                if k >= toks.len() {
+                    end = toks.last().map_or(attr_line, |t| t.line);
+                }
+                spans.push((attr_line, end));
+                i = k.max(j);
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_spans_cover_cfg_test_modules_but_not_cfg_not_test() {
+        let src = "
+fn live() { stuff(); }
+
+#[cfg(not(test))]
+fn also_live() { other(); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { x.unwrap(); }
+}
+";
+        let lexed = lex(src);
+        let spans = test_spans(&lexed);
+        assert_eq!(spans.len(), 2, "{spans:?}"); // the mod and the inner #[test]
+        let covers = |l: usize| spans.iter().any(|&(a, b)| a <= l && l <= b);
+        assert!(!covers(2), "live fn is not test code");
+        assert!(!covers(5), "cfg(not(test)) is not test code");
+        assert!(covers(10), "unwrap inside the test module is covered");
+    }
+
+    #[test]
+    fn allow_span_extends_over_a_following_fn() {
+        let src = "
+// ppac-lint: allow(no-index, reason = \"validated upstream\")
+fn f(&self) -> bool {
+    self.got[idx][shard]
+}
+
+fn g(&self) {}
+";
+        let lexed = lex(src);
+        let (sup, findings) = parse_suppressions(Path::new("x.rs"), &lexed);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(sup.covers("no-index", 4), "fn body covered");
+        assert!(!sup.covers("no-index", 7), "next item not covered");
+        assert!(!sup.covers("no-panic", 4), "other rules not covered");
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "// ppac-lint: allow(no-index)\nlet x = a[i];\n";
+        let (sup, findings) = parse_suppressions(Path::new("x.rs"), &lex(src));
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "suppression");
+        assert!(!sup.covers("no-index", 2), "reasonless allow grants nothing");
+    }
+
+    #[test]
+    fn allow_file_covers_everything() {
+        let src = "// ppac-lint: allow-file(no-index, reason = \"kernel hot loops\")\nfn f() { a[i]; }\n";
+        let (sup, findings) = parse_suppressions(Path::new("x.rs"), &lex(src));
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(sup.covers("no-index", 2));
+    }
+
+    #[test]
+    fn unknown_rule_is_a_finding() {
+        let src = "// ppac-lint: allow(no-such-rule, reason = \"whatever this is\")\n";
+        let (_, findings) = parse_suppressions(Path::new("x.rs"), &lex(src));
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("unknown rule"));
+    }
+}

@@ -1,0 +1,37 @@
+//! CLI: `cargo run -p ppac-lint -- rust/src [more paths...]`
+//!
+//! Exits non-zero if any finding survives suppressions, so CI can gate
+//! on it directly. With no arguments it lints `rust/src`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<String> = if args.is_empty() { vec!["rust/src".to_string()] } else { args };
+
+    let mut findings = Vec::new();
+    for root in &roots {
+        match ppac_lint::run(Path::new(root)) {
+            Ok(mut f) => findings.append(&mut f),
+            Err(e) => {
+                eprintln!("ppac-lint: cannot lint {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    findings.sort();
+    findings.dedup();
+
+    for f in &findings {
+        println!("{f}");
+    }
+    let n = findings.len();
+    if n == 0 {
+        eprintln!("ppac-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("ppac-lint: {n} finding{}", if n == 1 { "" } else { "s" });
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,647 @@
+//! The lint rules. Each works on the token stream of [`crate::lexer`];
+//! precision limits and the reasoning behind every table live in
+//! ANALYSIS.md.
+
+use crate::lexer::{TokKind, Token};
+use crate::{FileCtx, Finding};
+
+/// Every rule id `allow(...)` may name.
+pub const KNOWN_RULES: &[&str] =
+    &["no-panic", "no-index", "relaxed-ordering", "metric-pairing", "lock-across-send"];
+
+/// Directories the panic-freedom rules police. Code here runs on worker
+/// and reducer threads where a panic kills the thread and strands every
+/// job queued behind it; `util/`, `sim/`, `formats/` and the binaries
+/// run on caller threads where Rust's panic = bug convention is fine.
+const PANIC_FREE_AREAS: &[&str] = &["coordinator/", "engine/", "isa/"];
+
+/// Idents that look like an index-expression head but are keywords
+/// (`let [a, b] = …` is a slice pattern, not an indexing).
+const KEYWORDS: &[&str] = &[
+    "let", "in", "if", "else", "match", "return", "while", "for", "loop", "break", "continue",
+    "move", "ref", "mut", "as", "where", "impl", "fn", "static", "const", "use", "pub", "mod",
+    "enum", "struct", "trait", "type", "unsafe", "dyn", "box", "yield",
+];
+
+/// Cross-thread handoff atomics: liveness flags and occupancy gauges
+/// where a `Relaxed` access is a *decision*, not a default. Monotonic
+/// report counters (`retries`, `jobs_completed`, …) are deliberately
+/// absent — Relaxed is always right for them.
+const HANDOFF: &[&str] =
+    &["dead", "inflight", "placed", "killed", "kill_flags", "gathers_inflight", "last_sweep_ms"];
+
+/// How many lines above a `Relaxed` use the `// ordering:` justification
+/// may start (multi-line comment blocks, a guard `if let` or a wrapped
+/// method chain between the comment and the access).
+const ORDERING_COMMENT_WINDOW: usize = 6;
+
+/// Occupancy gauges: a submission-side `fetch_add` must have a
+/// completion/reclaim decrement (`fetch_sub`/`fetch_update`/`swap`)
+/// somewhere in the corpus, or workers look busy forever.
+const GAUGES: &[&str] = &["inflight", "placed", "gathers_inflight"];
+
+/// Submission counters and the completion-side counters that must
+/// absorb them (`submitted = completed + failed + lost` is the
+/// accounting invariant the failover tests assert).
+const PAIRS: &[(&str, &[&str])] = &[
+    ("jobs_submitted", &["jobs_completed"]),
+    ("shard_jobs_submitted", &["shard_jobs_completed", "shard_jobs_failed", "shard_jobs_lost"]),
+];
+
+/// Monotonic report counters — increment-only by design.
+const MONOTONIC: &[&str] = &[
+    "jobs_completed",
+    "jobs_failed",
+    "shard_jobs_completed",
+    "shard_jobs_failed",
+    "shard_jobs_lost",
+    "retries",
+    "failovers",
+    "workers_lost",
+    "gathers",
+    "matrices_unregistered",
+    "auto_evictions",
+    "batches",
+    "batched_jobs",
+    "matrix_loads",
+    "sim_cycles",
+    "served",
+    "evictions",
+    "replica_hits",
+];
+
+/// Id/tie-break sequences — `fetch_add` is the allocation itself.
+const SEQUENCE: &[&str] =
+    &["next_matrix", "next_shard", "next_job", "next_reducer", "rr", "last_sweep_ms"];
+
+fn is_punct(t: &Token, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_ident(t: &Token, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// `no-panic`: no `.unwrap()` / `.expect(` / `panic!`-family macros in
+/// the panic-free areas. Hot paths return `PpacError::Internal` instead.
+pub fn no_panic(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.in_area(PANIC_FREE_AREAS) {
+        return;
+    }
+    let toks = &ctx.lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let method_call = i > 0
+            && is_punct(&toks[i - 1], ".")
+            && toks.get(i + 1).is_some_and(|n| is_punct(n, "("));
+        if method_call && (t.text == "unwrap" || t.text == "expect") {
+            out.push(Finding {
+                file: ctx.path.to_path_buf(),
+                line: t.line,
+                rule: "no-panic",
+                message: format!(
+                    ".{}() can panic a worker/reducer thread; return a typed error \
+                     (PpacError::Internal for broken invariants) instead",
+                    t.text
+                ),
+            });
+        }
+        let macro_call = toks.get(i + 1).is_some_and(|n| is_punct(n, "!"));
+        if macro_call
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+        {
+            out.push(Finding {
+                file: ctx.path.to_path_buf(),
+                line: t.line,
+                rule: "no-panic",
+                message: format!("{}! can panic a worker/reducer thread", t.text),
+            });
+        }
+    }
+}
+
+/// `no-index`: no `x[i]` indexing or `x[a..b]` slicing in the
+/// panic-free areas — `.get()` or a suppression with a bounds argument.
+pub fn no_index(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.in_area(PANIC_FREE_AREAS) {
+        return;
+    }
+    let toks = &ctx.lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !is_punct(t, "[") || i == 0 {
+            continue;
+        }
+        let prev = &toks[i - 1];
+        let head = match prev.kind {
+            TokKind::Ident if !KEYWORDS.contains(&prev.text.as_str()) => true,
+            TokKind::Punct if prev.text == "]" || prev.text == ")" => true,
+            _ => false,
+        };
+        if head {
+            out.push(Finding {
+                file: ctx.path.to_path_buf(),
+                line: t.line,
+                rule: "no-index",
+                message: "indexing/slicing can panic a worker/reducer thread; use .get() \
+                          or add `// ppac-lint: allow(no-index, reason = ...)` stating the bound"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `relaxed-ordering`: `Ordering::Relaxed` on a handoff atomic (the
+/// receiver chain names a [`HANDOFF`] ident) must have an
+/// `// ordering:` comment nearby.
+pub fn relaxed_ordering(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let toks = &ctx.lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !is_ident(t, "Relaxed") {
+            continue;
+        }
+        let receivers = receiver_chain(toks, i);
+        let Some(atomic) = receivers.iter().find(|r| HANDOFF.contains(&r.as_str())) else {
+            continue;
+        };
+        let lo = t.line.saturating_sub(ORDERING_COMMENT_WINDOW);
+        let annotated = ctx
+            .lexed
+            .comments
+            .iter()
+            .any(|c| c.line >= lo && c.line <= t.line && c.text.contains("ordering:"));
+        if !annotated {
+            out.push(Finding {
+                file: ctx.path.to_path_buf(),
+                line: t.line,
+                rule: "relaxed-ordering",
+                message: format!(
+                    "Ordering::Relaxed on handoff atomic `{atomic}` needs an \
+                     `// ordering:` comment justifying why relaxed is enough"
+                ),
+            });
+        }
+    }
+}
+
+/// The idents of the method-call receiver chain a token at `i` sits
+/// inside: walk back to the call's unmatched `(`, then back over the
+/// `recv.field.method` chain.
+fn receiver_chain(toks: &[Token], i: usize) -> Vec<String> {
+    let mut depth = 0i64;
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if is_punct(&toks[j], ")") {
+            depth += 1;
+        } else if is_punct(&toks[j], "(") {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+        } else if depth == 0 && (is_punct(&toks[j], ";") || is_punct(&toks[j], "{")) {
+            return Vec::new(); // statement boundary before any call-open
+        }
+    }
+    if j == 0 {
+        return Vec::new();
+    }
+    // Collect `a . b . c` going backwards from just before the `(`.
+    let mut chain = Vec::new();
+    let mut k = j;
+    while k > 0 {
+        k -= 1;
+        match toks[k].kind {
+            TokKind::Ident => chain.push(toks[k].text.clone()),
+            TokKind::Punct if toks[k].text == "." => {}
+            _ => break,
+        }
+    }
+    chain
+}
+
+/// `lock-across-send`: a lock guard (from `.lock()`/`.read()`/
+/// `.write()` with no args, or the `util::sync` helpers) must not be
+/// live across a channel `send`/`recv` or a thread `join` — a worker
+/// blocked on a full/dead channel while holding the registry lock
+/// deadlocks every thread that next touches the registry.
+pub fn lock_across_send(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let toks = &ctx.lexed.tokens;
+    // Innermost enclosing-brace close index for each token.
+    let block_close = enclosing_block_close(toks);
+    for (i, t) in toks.iter().enumerate() {
+        let acq_end = match acquisition_at(toks, i) {
+            Some(e) => e,
+            None => continue,
+        };
+        // Postfix chain: consuming adapters (`.get()`, `.cloned()`, …)
+        // end the guard at the statement; pure unwrapping keeps it.
+        let (chain_end, persists) = postfix_chain(toks, acq_end);
+        let let_bound = persists && statement_is_let(toks, i);
+        let scope_end = if let_bound {
+            block_close.get(i).copied().flatten().unwrap_or(toks.len() - 1)
+        } else {
+            statement_end(toks, chain_end)
+        };
+        for k in i..=scope_end.min(toks.len() - 1) {
+            let tk = &toks[k];
+            if tk.kind == TokKind::Ident
+                && matches!(tk.text.as_str(), "send" | "recv" | "recv_timeout" | "join")
+                && k > 0
+                && is_punct(&toks[k - 1], ".")
+                && toks.get(k + 1).is_some_and(|n| is_punct(n, "("))
+            {
+                out.push(Finding {
+                    file: ctx.path.to_path_buf(),
+                    line: t.line,
+                    rule: "lock-across-send",
+                    message: format!(
+                        "lock guard acquired here is live across a blocking .{}() on line {}; \
+                         drop or scope the guard first",
+                        tk.text, tk.line
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// Is token `i` the start of a lock acquisition? Returns the index of
+/// the call's closing `)`.
+fn acquisition_at(toks: &[Token], i: usize) -> Option<usize> {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    let after_dot = i > 0 && is_punct(&toks[i - 1], ".");
+    // Method form: `.lock()`, `.read()`, `.write()` — no-arg only, so
+    // `io::Read::read(&mut buf)` and `Vec::write` lookalikes don't fire.
+    if after_dot
+        && matches!(t.text.as_str(), "lock" | "read" | "write")
+        && toks.get(i + 1).is_some_and(|n| is_punct(n, "("))
+        && toks.get(i + 2).is_some_and(|n| is_punct(n, ")"))
+    {
+        return Some(i + 2);
+    }
+    // Helper form: `lock(&m)`, `read_lock(&l)`, `write_lock(&l)` from
+    // util::sync (declarations `fn lock...` excluded via prev token).
+    let declared = i > 0 && is_ident(&toks[i - 1], "fn");
+    if !after_dot
+        && !declared
+        && matches!(t.text.as_str(), "lock" | "read_lock" | "write_lock")
+        && toks.get(i + 1).is_some_and(|n| is_punct(n, "("))
+    {
+        let mut depth = 0i64;
+        for (k, tk) in toks.iter().enumerate().skip(i + 1) {
+            if is_punct(tk, "(") {
+                depth += 1;
+            } else if is_punct(tk, ")") {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Walk the postfix chain after a call's closing paren at `end`.
+/// Returns (last token index of the chain, guard persists?): the guard
+/// persists only if every chained call is a pure unwrapping
+/// (`unwrap`/`expect`/`unwrap_or_else`) — anything else consumes or
+/// re-borrows, ending the guard's life at the statement.
+fn postfix_chain(toks: &[Token], end: usize) -> (usize, bool) {
+    let mut k = end;
+    loop {
+        let Some(dot) = toks.get(k + 1) else { return (k, true) };
+        if is_punct(dot, "?") {
+            k += 1;
+            continue;
+        }
+        if !is_punct(dot, ".") {
+            return (k, true);
+        }
+        let Some(m) = toks.get(k + 2) else { return (k, true) };
+        if m.kind != TokKind::Ident {
+            return (k, true);
+        }
+        let pure = matches!(m.text.as_str(), "unwrap" | "expect" | "unwrap_or_else");
+        // Skip the method's argument list.
+        let Some(open) = toks.get(k + 3) else { return (k, true) };
+        if !is_punct(open, "(") {
+            // Field access — keeps borrowing; treat as consuming to be
+            // conservative (scope stays the statement).
+            return (k, false);
+        }
+        let mut depth = 0i64;
+        let mut close = k + 3;
+        for (idx, tk) in toks.iter().enumerate().skip(k + 3) {
+            if is_punct(tk, "(") {
+                depth += 1;
+            } else if is_punct(tk, ")") {
+                depth -= 1;
+                if depth == 0 {
+                    close = idx;
+                    break;
+                }
+            }
+        }
+        if !pure {
+            return (close, false);
+        }
+        k = close;
+    }
+}
+
+/// Does the statement containing token `i` start with `let`?
+fn statement_is_let(toks: &[Token], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if is_punct(t, ";") || is_punct(t, "{") || is_punct(t, "}") {
+            return toks.get(j + 1).is_some_and(|n| is_ident(n, "let"));
+        }
+    }
+    toks.first().is_some_and(|n| is_ident(n, "let"))
+}
+
+/// Index of the token ending the statement that continues at `from`:
+/// the first `;` at relative depth ≤ 0, or the token closing the
+/// enclosing block.
+fn statement_end(toks: &[Token], from: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, tk) in toks.iter().enumerate().skip(from + 1) {
+        if tk.kind == TokKind::Punct {
+            match tk.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "}" => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return k;
+                    }
+                }
+                ";" if depth <= 0 => return k,
+                _ => {}
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+/// For each token index, the index of the `}` closing its innermost
+/// enclosing brace block (`None` at the top level).
+fn enclosing_block_close(toks: &[Token]) -> Vec<Option<usize>> {
+    let mut out = vec![None; toks.len()];
+    let mut stack: Vec<usize> = Vec::new();
+    // First pass records, for every `{`, its matching `}`.
+    let mut matching = vec![None; toks.len()];
+    for (i, t) in toks.iter().enumerate() {
+        if is_punct(t, "{") {
+            stack.push(i);
+        } else if is_punct(t, "}") {
+            if let Some(open) = stack.pop() {
+                matching[open] = Some(i);
+            }
+        }
+    }
+    stack.clear();
+    for (i, t) in toks.iter().enumerate() {
+        if is_punct(t, "{") {
+            stack.push(i);
+        } else if is_punct(t, "}") {
+            stack.pop();
+        }
+        out[i] = stack.last().and_then(|&open| matching[open]);
+    }
+    out
+}
+
+/// One atomic-counter op site, for the corpus-wide pairing rule.
+#[derive(Debug)]
+struct CounterOp {
+    file: std::path::PathBuf,
+    line: usize,
+    receiver: String,
+    op: &'static str,
+}
+
+/// `metric-pairing`: corpus-global accounting-balance rule over the
+/// coordinator area. See [`GAUGES`], [`PAIRS`], [`MONOTONIC`],
+/// [`SEQUENCE`].
+pub fn metric_pairing(ctxs: &[FileCtx]) -> Vec<Finding> {
+    let mut ops: Vec<CounterOp> = Vec::new();
+    for ctx in ctxs {
+        if !ctx.in_area(&["coordinator/"]) {
+            continue;
+        }
+        let toks = &ctx.lexed.tokens;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || ctx.in_test(t.line) {
+                continue;
+            }
+            let op = match t.text.as_str() {
+                "fetch_add" => "fetch_add",
+                "fetch_sub" => "fetch_sub",
+                "fetch_update" => "fetch_update",
+                "swap" => "swap",
+                "compare_exchange" => "compare_exchange",
+                _ => continue,
+            };
+            if i < 2
+                || !is_punct(&toks[i - 1], ".")
+                || toks[i - 2].kind != TokKind::Ident
+                || !toks.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            {
+                continue;
+            }
+            ops.push(CounterOp {
+                file: ctx.path.to_path_buf(),
+                line: t.line,
+                receiver: toks[i - 2].text.clone(),
+                op,
+            });
+        }
+    }
+
+    let decremented = |name: &str| {
+        ops.iter().any(|o| {
+            o.receiver == name
+                && matches!(o.op, "fetch_sub" | "fetch_update" | "swap")
+        })
+    };
+    let incremented = |name: &str| ops.iter().any(|o| o.receiver == name && o.op == "fetch_add");
+
+    let mut findings = Vec::new();
+    let mut reported: Vec<String> = Vec::new();
+    for o in &ops {
+        if o.op != "fetch_add" || reported.contains(&o.receiver) {
+            continue;
+        }
+        let name = o.receiver.as_str();
+        if GAUGES.contains(&name) {
+            if !decremented(name) {
+                reported.push(o.receiver.clone());
+                findings.push(Finding {
+                    file: o.file.clone(),
+                    line: o.line,
+                    rule: "metric-pairing",
+                    message: format!(
+                        "gauge `{name}` is incremented but never decremented/reclaimed \
+                         (fetch_sub/fetch_update/swap) anywhere in the corpus"
+                    ),
+                });
+            }
+        } else if let Some((_, rights)) = PAIRS.iter().find(|(l, _)| *l == name) {
+            if !rights.iter().any(|&r| incremented(r)) {
+                reported.push(o.receiver.clone());
+                findings.push(Finding {
+                    file: o.file.clone(),
+                    line: o.line,
+                    rule: "metric-pairing",
+                    message: format!(
+                        "submission counter `{name}` has no completion-side increment \
+                         (expected one of: {})",
+                        rights.join(", ")
+                    ),
+                });
+            }
+        } else if !MONOTONIC.contains(&name) && !SEQUENCE.contains(&name) {
+            reported.push(o.receiver.clone());
+            findings.push(Finding {
+                file: o.file.clone(),
+                line: o.line,
+                rule: "metric-pairing",
+                message: format!(
+                    "undeclared counter `{name}`: classify it in ppac-lint's \
+                     GAUGES/PAIRS/MONOTONIC/SEQUENCE tables (see ANALYSIS.md)"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::Suppressions;
+    use std::path::Path;
+
+    fn ctx_of<'a>(
+        rel: &str,
+        lexed: &'a crate::lexer::Lexed,
+        sup: &'a Suppressions,
+    ) -> FileCtx<'a> {
+        FileCtx {
+            path: Path::new("mem.rs"),
+            rel: rel.to_string(),
+            lexed,
+            test_spans: Vec::new(),
+            suppressions: sup,
+        }
+    }
+
+    #[test]
+    fn receiver_chain_sees_through_call_args() {
+        let lexed = lex(
+            "self.last_sweep_ms.compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed);",
+        );
+        let idx = lexed.tokens.iter().position(|t| t.text == "Relaxed").unwrap();
+        let chain = receiver_chain(&lexed.tokens, idx);
+        assert!(chain.contains(&"last_sweep_ms".to_string()), "{chain:?}");
+        assert!(!chain.contains(&"now".to_string()), "args are not receivers: {chain:?}");
+    }
+
+    #[test]
+    fn relaxed_on_handoff_without_comment_fires() {
+        let lexed = lex("fn f(&self) { self.inflight.fetch_add(1, Ordering::Relaxed); }");
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &lexed, &sup);
+        let mut out = Vec::new();
+        relaxed_ordering(&ctx, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "relaxed-ordering");
+    }
+
+    #[test]
+    fn relaxed_with_ordering_comment_is_quiet() {
+        let lexed = lex(
+            "fn f(&self) {\n    // ordering: Relaxed — occupancy hint only.\n    self.inflight.fetch_add(1, Ordering::Relaxed);\n}",
+        );
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &lexed, &sup);
+        let mut out = Vec::new();
+        relaxed_ordering(&ctx, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn relaxed_on_plain_counter_needs_nothing() {
+        let lexed = lex("fn f(&self) { self.retries.fetch_add(1, Ordering::Relaxed); }");
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &lexed, &sup);
+        let mut out = Vec::new();
+        relaxed_ordering(&ctx, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn guard_across_send_fires_and_scoped_guard_does_not() {
+        let bad = lex(
+            "fn f(&self) {\n    let reg = read_lock(&self.registry);\n    tx.send(reg.len()); \n}",
+        );
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &bad, &sup);
+        let mut out = Vec::new();
+        lock_across_send(&ctx, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+
+        let good = lex(
+            "fn f(&self) {\n    let n = { let reg = read_lock(&self.registry); reg.len() };\n    tx.send(n);\n}",
+        );
+        let ctx = ctx_of("src/coordinator/x.rs", &good, &sup);
+        let mut out = Vec::new();
+        lock_across_send(&ctx, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn temporary_guard_statement_does_not_reach_the_next_line() {
+        let src = lex(
+            "fn f(&self) {\n    let n = read_lock(&self.registry).len();\n    tx.send(n);\n}",
+        );
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &src, &sup);
+        let mut out = Vec::new();
+        lock_across_send(&ctx, &mut out);
+        assert!(out.is_empty(), "consuming chain ends the guard: {out:?}");
+    }
+
+    #[test]
+    fn method_form_lock_unwrap_guard_persists() {
+        let src = lex(
+            "fn f(&self) {\n    let g = self.handles.lock().unwrap();\n    h.join();\n}",
+        );
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/coordinator/x.rs", &src, &sup);
+        let mut out = Vec::new();
+        lock_across_send(&ctx, &mut out);
+        assert_eq!(out.len(), 1, "unwrap() keeps the guard live: {out:?}");
+    }
+
+    #[test]
+    fn no_index_skips_patterns_and_macros() {
+        let src = lex("fn f() { let [a, b] = pair; let v = vec![1, 2]; let w = xs[i]; }");
+        let sup = Suppressions::default();
+        let ctx = ctx_of("src/engine/x.rs", &src, &sup);
+        let mut out = Vec::new();
+        no_index(&ctx, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+}

@@ -1,0 +1,54 @@
+//! Self-tests over the fixture corpora: the clean corpus must produce
+//! zero findings, the violations corpus exactly the documented set.
+//! Fixture files live under `tests/fixtures/` and are never compiled —
+//! they are data for the linter.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn fixtures(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(sub)
+}
+
+fn counts(root: &Path) -> BTreeMap<(String, &'static str), usize> {
+    let findings = ppac_lint::run(root).expect("fixture corpus lints");
+    let mut out = BTreeMap::new();
+    for f in findings {
+        let name = f.file.file_name().expect("fixture file name").to_string_lossy().into_owned();
+        *out.entry((name, f.rule)).or_insert(0) += 1;
+    }
+    out
+}
+
+#[test]
+fn clean_corpus_has_no_findings() {
+    let findings = ppac_lint::run(&fixtures("clean")).expect("clean corpus lints");
+    assert!(findings.is_empty(), "clean fixtures must stay clean:\n{findings:#?}");
+}
+
+#[test]
+fn violations_corpus_yields_exactly_the_expected_findings() {
+    let got = counts(&fixtures("violations"));
+    let expected: BTreeMap<(String, &'static str), usize> = [
+        (("panics.rs".to_string(), "no-panic"), 3),
+        (("panics.rs".to_string(), "no-index"), 1),
+        (("relaxed.rs".to_string(), "relaxed-ordering"), 1),
+        (("metrics_unpaired.rs".to_string(), "metric-pairing"), 2),
+        (("lock_send.rs".to_string(), "lock-across-send"), 1),
+        (("bad_suppress.rs".to_string(), "suppression"), 2),
+        (("bad_suppress.rs".to_string(), "no-index"), 1),
+    ]
+    .into_iter()
+    .collect();
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn findings_display_as_file_line_rule() {
+    let findings = ppac_lint::run(&fixtures("violations/coordinator/panics.rs"))
+        .expect("single-file lint");
+    let first = findings.first().expect("panics.rs has findings");
+    let line = format!("{first}");
+    assert!(line.contains("panics.rs:"), "{line}");
+    assert!(line.contains("[no-"), "{line}");
+}

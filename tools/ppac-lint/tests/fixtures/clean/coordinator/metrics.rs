@@ -1,0 +1,61 @@
+//! Fixture: idiomatic coordinator code every rule is happy with.
+//!
+//! Not compiled — this file is data for `tests/fixtures.rs`, which
+//! runs the linter over it and expects zero findings.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub inflight: AtomicU64,
+    pub dead: AtomicBool,
+    pub names: Mutex<Vec<String>>,
+}
+
+/// Poison-tolerant lock helper, like `ppac::util::sync::lock`.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Metrics {
+    pub fn submit(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — occupancy is only a placement hint; the
+        // reclaim edge synchronizes through mark_dead's AcqRel swap.
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn complete(&self) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — see submit(); the gauge is advisory.
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    pub fn name_count(&self) -> usize {
+        lock(&self.names).len()
+    }
+}
+
+// ppac-lint: allow(no-index, reason = "idx is bounds-checked by caller")
+pub fn nth(xs: &[u64], idx: usize) -> u64 {
+    xs[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let xs = vec![1u64, 2];
+        assert_eq!(xs.first().copied().unwrap(), 1);
+        assert_eq!(xs[1], 2);
+        assert_eq!(nth(&xs, 0), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: malformed suppressions. Expect two `suppression` findings
+//! (missing reason, unknown rule) plus one `no-index` finding — a
+//! reasonless allow grants nothing.
+
+// ppac-lint: allow(no-index)
+pub fn first(xs: &[u64]) -> u64 {
+    xs[0]
+}
+
+// ppac-lint: allow(made-up-rule, reason = "a long enough reason text")
+pub fn second(xs: &[u64]) -> u64 {
+    xs.len() as u64
+}

@@ -1,0 +1,12 @@
+//! Fixture: a lock guard held across a blocking channel send. Expect
+//! one `lock-across-send` finding, reported at the acquisition.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub fn drain(q: &Mutex<Vec<u64>>, tx: &Sender<u64>) {
+    let guard = lock(q);
+    for v in guard.iter() {
+        let _ = tx.send(*v);
+    }
+}

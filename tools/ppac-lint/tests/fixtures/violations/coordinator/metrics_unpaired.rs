@@ -1,0 +1,21 @@
+//! Fixture: accounting imbalance. Expect two `metric-pairing`
+//! findings: `shard_jobs_submitted` has no completion-side increment
+//! anywhere in this corpus, and `weird_things` is not classified in any
+//! of the linter's counter tables.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Stats {
+    pub shard_jobs_submitted: AtomicU64,
+    pub weird_things: AtomicU64,
+}
+
+impl Stats {
+    pub fn submit(&self) {
+        self.shard_jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note(&self) {
+        self.weird_things.fetch_add(1, Ordering::Relaxed);
+    }
+}

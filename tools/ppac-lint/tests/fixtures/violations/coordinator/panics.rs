@@ -1,0 +1,11 @@
+//! Fixture: every way hot-path code can panic. Expect three `no-panic`
+//! findings and one `no-index` finding.
+
+pub fn run(xs: &[u64]) -> u64 {
+    let first = xs.first().unwrap();
+    let second = xs.get(1).expect("need two");
+    if *first > *second {
+        panic!("out of order");
+    }
+    xs[0]
+}

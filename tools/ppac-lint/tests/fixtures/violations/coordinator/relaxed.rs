@@ -1,0 +1,21 @@
+//! Fixture: a `Relaxed` op on a handoff atomic without an
+//! `// ordering:` justification. Expect one `relaxed-ordering` finding
+//! (on `submit`; `done` is annotated and must stay quiet).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Occupancy {
+    pub inflight: AtomicU64,
+}
+
+impl Occupancy {
+    pub fn submit(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn done(&self) {
+        // ordering: Relaxed — the only reclaim edge synchronizes
+        // through mark_dead's AcqRel swap; this count is advisory.
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
