@@ -33,6 +33,11 @@ pub struct WorkerMetrics {
     /// the per-replica occupancy of load-balanced reads. A replicated
     /// matrix under load shows these spread over several workers.
     pub replica_hits: AtomicU64,
+    /// Heartbeat answers: bumped once per `WorkerMsg::Ping` the worker
+    /// drains. The supervisor compares successive values between ticks
+    /// to tell a live-but-stalled worker from one that is keeping up;
+    /// monotonic by design.
+    pub beats: AtomicU64,
 }
 
 // Default is hand-written (not derived) so the struct keeps working
@@ -47,6 +52,7 @@ impl Default for WorkerMetrics {
             sim_cycles: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             replica_hits: AtomicU64::new(0),
+            beats: AtomicU64::new(0),
         }
     }
 }
@@ -111,6 +117,21 @@ pub struct Metrics {
     pub failovers: AtomicU64,
     /// Workers observed dead (first discoveries only).
     pub workers_lost: AtomicU64,
+    /// Dead workers the supervisor respawned into their slot (fresh
+    /// thread + channel, shards lazily reloaded from the registry).
+    pub workers_restarted: AtomicU64,
+    /// Supervisor pings that went unanswered: the ping send failed
+    /// (proactive death discovery) or the worker's `beats` counter did
+    /// not advance between ticks (live but stalled).
+    pub heartbeats_missed: AtomicU64,
+    /// Replica pins moved by a rebalance pass after a worker returned
+    /// (under-replicated or co-located groups re-spread).
+    pub rebalanced_shards: AtomicU64,
+    /// Gathers handed to the reducer pool and not yet finished — the
+    /// queue-saturation gauge the reducer autoscaler reads. Incremented
+    /// before the pool send, decremented (saturating) when the gather
+    /// finishes or the hand-off fails.
+    pub reducer_queue_depth: AtomicU64,
     /// Logical jobs that required a host-side reduction of >1 shard.
     pub gathers: AtomicU64,
     /// Matrices dropped via `unregister_matrix`.
@@ -142,6 +163,10 @@ impl Default for Metrics {
             retries: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
             workers_lost: AtomicU64::new(0),
+            workers_restarted: AtomicU64::new(0),
+            heartbeats_missed: AtomicU64::new(0),
+            rebalanced_shards: AtomicU64::new(0),
+            reducer_queue_depth: AtomicU64::new(0),
             gathers: AtomicU64::new(0),
             matrices_unregistered: AtomicU64::new(0),
             auto_evictions: AtomicU64::new(0),
@@ -239,6 +264,12 @@ impl Metrics {
             retries: self.retries.load(Ordering::Relaxed),
             failovers: self.failovers.load(Ordering::Relaxed),
             workers_lost: self.workers_lost.load(Ordering::Relaxed),
+            workers_restarted: self.workers_restarted.load(Ordering::Relaxed),
+            heartbeats_missed: self.heartbeats_missed.load(Ordering::Relaxed),
+            rebalanced_shards: self.rebalanced_shards.load(Ordering::Relaxed),
+            // ordering: Relaxed — point-in-time report read of the
+            // queue-depth gauge; staleness only skews one report line.
+            reducer_queue_depth: self.reducer_queue_depth.load(Ordering::Relaxed),
             gathers: self.gathers.load(Ordering::Relaxed),
             matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
             auto_evictions: self.auto_evictions.load(Ordering::Relaxed),
@@ -260,6 +291,7 @@ impl Metrics {
                     sim_cycles: w.sim_cycles.load(Ordering::Relaxed),
                     evictions: w.evictions.load(Ordering::Relaxed),
                     replica_hits: w.replica_hits.load(Ordering::Relaxed),
+                    beats: w.beats.load(Ordering::Relaxed),
                 })
                 .collect(),
         }
@@ -275,6 +307,7 @@ pub struct WorkerSnapshot {
     pub sim_cycles: u64,
     pub evictions: u64,
     pub replica_hits: u64,
+    pub beats: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -290,6 +323,10 @@ pub struct MetricsSnapshot {
     pub retries: u64,
     pub failovers: u64,
     pub workers_lost: u64,
+    pub workers_restarted: u64,
+    pub heartbeats_missed: u64,
+    pub rebalanced_shards: u64,
+    pub reducer_queue_depth: u64,
     pub gathers: u64,
     pub matrices_unregistered: u64,
     pub auto_evictions: u64,

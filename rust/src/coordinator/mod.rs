@@ -50,7 +50,16 @@
 //!    the client. Duplicate partials (a worker served a job, then died
 //!    before the rest of its queue) fold at most once. A killed worker
 //!    is thereby a load-balancing event, not a `WorkerLost` for every
-//!    in-flight job on it.
+//!    in-flight job on it. With [`CoordinatorConfig::heartbeat_ms`] set
+//!    a supervisor thread (`coordinator/supervisor.rs`) additionally
+//!    pings every worker each interval — an *idle* coordinator then
+//!    discovers a crash proactively — and with
+//!    [`CoordinatorConfig::supervise`] it *restarts* dead workers:
+//!    a fresh incarnation on a fresh channel re-enters routing under a
+//!    bumped slot epoch (jobs queued on the dead incarnation can never
+//!    be answered by the new one), shard data reloads lazily from the
+//!    shared registry, and a rebalance pass re-spreads replica groups
+//!    that failover had forced to co-locate.
 //! 5. **Unregister** — [`Coordinator::unregister_matrix`] drops a
 //!    matrix's shard replicas from the registry, releases
 //!    affinities/placement counts and evicts resident copies. With
@@ -80,11 +89,12 @@
 pub mod job;
 pub mod metrics;
 mod router;
+mod supervisor;
 pub mod worker;
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -103,7 +113,8 @@ pub use job::{
 };
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use router::RoutingStats;
-use router::Router;
+use router::{Router, SendStatus};
+use supervisor::{ReducerPool, Supervisor, WorkerSlots};
 use worker::{MatrixRegistry, ShardData, Worker, WorkerMsg};
 
 /// Coordinator configuration.
@@ -141,6 +152,32 @@ pub struct CoordinatorConfig {
     /// on registry/submit activity, not on a dedicated timer thread —
     /// and each sweep counts into the `auto_evictions` metric.
     pub registry_ttl: Option<Duration>,
+    /// Heartbeat interval of the supervisor thread, in milliseconds.
+    /// 0 (the default) spawns no supervisor: death is discovered
+    /// lazily, on the first failed send, exactly as before. With a
+    /// supervisor, every tick pings each live worker through the
+    /// liveness-marking send path, so an *idle* coordinator learns of a
+    /// crash within one interval; a ping that is delivered but never
+    /// answered counts into `heartbeats_missed` (alive-but-stalled is
+    /// observational, never fatal).
+    pub heartbeat_ms: u64,
+    /// Let the supervisor *restart* dead workers: a fresh incarnation
+    /// (fresh channel, epoch-bumped router slot) replaces the dead one
+    /// and shard data reloads lazily from the shared registry. Requires
+    /// `heartbeat_ms > 0`. Off by default — `kill_worker` keeps
+    /// fault-injection semantics unless a test opts into self-healing.
+    pub supervise: bool,
+    /// Base delay between restart attempts of one slot, in
+    /// milliseconds; consecutive failures double it (capped), sustained
+    /// health resets it. A crash-looping worker cannot spin the
+    /// supervisor.
+    pub restart_backoff_ms: u64,
+    /// Reducer-pool autoscaling ceiling: the supervisor grows the pool
+    /// above [`CoordinatorConfig::reducers`] while the
+    /// `reducer_queue_depth` gauge saturates and retires the extras
+    /// when it idles. 0 (the default) clamps to `reducers` — i.e. no
+    /// autoscaling.
+    pub max_reducers: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -155,6 +192,10 @@ impl Default for CoordinatorConfig {
             replicas: 1,
             retry_limit: 2,
             registry_ttl: None,
+            heartbeat_ms: 0,
+            supervise: false,
+            restart_backoff_ms: 50,
+            max_reducers: 0,
         }
     }
 }
@@ -243,6 +284,34 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Supervisor heartbeat interval (see
+    /// [`CoordinatorConfig::heartbeat_ms`]); 0 disables supervision.
+    pub fn heartbeat_ms(mut self, heartbeat_ms: u64) -> Self {
+        self.cfg.heartbeat_ms = heartbeat_ms;
+        self
+    }
+
+    /// Let the supervisor restart dead workers (see
+    /// [`CoordinatorConfig::supervise`]). Requires a heartbeat.
+    pub fn supervise(mut self, supervise: bool) -> Self {
+        self.cfg.supervise = supervise;
+        self
+    }
+
+    /// Base restart backoff (see
+    /// [`CoordinatorConfig::restart_backoff_ms`]).
+    pub fn restart_backoff_ms(mut self, restart_backoff_ms: u64) -> Self {
+        self.cfg.restart_backoff_ms = restart_backoff_ms;
+        self
+    }
+
+    /// Reducer autoscaling ceiling (see
+    /// [`CoordinatorConfig::max_reducers`]).
+    pub fn max_reducers(mut self, max_reducers: usize) -> Self {
+        self.cfg.max_reducers = max_reducers;
+        self
+    }
+
     /// Override the engine options of one worker (later calls for the
     /// same worker win). `build` rejects indices outside `0..workers`.
     pub fn worker_engine(mut self, worker: usize, opts: EngineOpts) -> Self {
@@ -272,6 +341,11 @@ struct ShardedMatrix {
     /// queued jobs.
     gathers_inflight: Arc<AtomicU64>,
 }
+
+/// The registered-matrix table, shared between the coordinator (every
+/// register/submit path) and the supervisor (the rebalance pass walks
+/// it to collect replica groups).
+type SharedShards = Arc<RwLock<HashMap<MatrixId, Arc<ShardedMatrix>>>>;
 
 /// Incremental host-side reduction of one batch's shard partials.
 /// Partials are absorbed one at a time (on a reducer thread), so the
@@ -558,112 +632,295 @@ fn redispatch(
             attempt,
             respond: tx.clone(),
         };
-        if ctx.router.send(worker, WorkerMsg::Job(job)) {
-            state.metrics.shard_jobs_submitted.fetch_add(1, Ordering::Relaxed);
-            // ordering: Relaxed — retries is a monotonic report counter;
-            // nothing orders against it.
-            state.metrics.retries.fetch_add(1, Ordering::Relaxed);
-            if replicas.len() > 1 {
+        match ctx.router.send(worker, WorkerMsg::Job(job)) {
+            SendStatus::Sent => {
+                state.metrics.shard_jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                // ordering: Relaxed — retries is a monotonic report counter;
+                // nothing orders against it.
+                state.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                if replicas.len() > 1 {
+                    if let Some(wm) = state.metrics.worker(worker) {
+                        wm.replica_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                return Ok(());
+            }
+            SendStatus::Dead => {
+                // The failed send marked the worker on the spot, and that
+                // mark reclaimed the whole in-flight count (the worker may
+                // have served part of its queue before dying, so a plain
+                // rollback could double-subtract).
+            }
+            SendStatus::Stale => {
+                // The send failed against an incarnation that has since
+                // been replaced: the mark was refused (it would have
+                // killed the *new* incarnation), so our own bump is ours
+                // to roll back. Saturating: a racing mark of the old
+                // incarnation may already have reclaimed it.
                 if let Some(wm) = state.metrics.worker(worker) {
-                    wm.replica_hits.fetch_add(1, Ordering::Relaxed);
+                    wm.complete(1);
                 }
             }
-            return Ok(());
         }
-        // The in-flight bump is reclaimed by mark_dead's reset — the
-        // worker may have served part of its queue before dying, so a
-        // plain rollback could double-subtract.
-        ctx.router.mark_dead(worker);
         // ordering: Relaxed — failovers is a monotonic report counter;
         // nothing orders against it.
         state.metrics.failovers.fetch_add(1, Ordering::Relaxed);
     }
 }
 
-/// Drain one gather to completion, re-dispatching lost shard jobs in
-/// bounded retry waves.
+/// How far one non-blocking poll pass advanced a gather.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GatherPoll {
+    /// No partial waiting; the gather is parked on its workers.
+    Idle,
+    /// Folded at least one partial (or crossed a wave boundary) but
+    /// more pairs are still open.
+    Progressed,
+    /// Every pair finalized — ready to `finish`.
+    Complete,
+}
+
+/// One gather in flight on a reducer, advanced incrementally so a
+/// single reducer can interleave many gathers: a gather stuck in a
+/// retry wave (its re-issued jobs queued behind a slow worker) must
+/// never head-of-line-block the *other* gathers assigned to the same
+/// reducer — the regression the
+/// `a_stalled_retry_wave_does_not_block_other_gathers` test pins down.
 ///
-/// A wave boundary is the response channel disconnecting: the scatter's
-/// sender, every worker clone and any prior wave are gone, so whatever
-/// pairs are still open either answered with a transient error or died
-/// unanswered in a lost worker's queue. Each wave re-issues the open
-/// pairs on a fresh channel through the shared router; when the budget
-/// is spent, open pairs finalize with their last seen typed error.
-fn reduce_task(task: &mut ReduceTask) -> Result<Vec<JobResult>> {
-    let mut last_err: HashMap<(usize, usize), JobError> = HashMap::new();
-    let mut wave = 0usize;
-    loop {
-        while !task.state.complete() {
-            let Ok(partial) = task.rx.recv() else { break };
-            let (idx, shard) = task.state.pair(&partial)?;
-            if let Err(je) = &partial.output {
-                let retryable = task
-                    .retry
-                    .as_ref()
-                    .is_some_and(|r| wave < r.budget && worth_retry(r, shard, je));
-                if retryable && !task.state.pair_done(idx, shard) {
-                    // Leave the pair open: the next wave re-dispatches
-                    // it to a surviving replica.
-                    last_err.insert((idx, shard), je.clone());
-                    continue;
-                }
+/// A wave boundary is the response channel disconnecting: the
+/// scatter's sender, every worker clone and any prior wave are gone, so
+/// whatever pairs are still open either answered with a transient error
+/// or died unanswered in a lost worker's queue. Each wave re-issues the
+/// open pairs on a fresh channel through the shared router; when the
+/// budget is spent, open pairs finalize with their last seen typed
+/// error.
+struct ActiveGather {
+    task: ReduceTask,
+    /// Last transient verdict per open pair, consumed at the wave
+    /// boundary (re-dispatch) or at budget exhaustion (finalize).
+    last_err: HashMap<(usize, usize), JobError>,
+    /// Retry waves spent so far.
+    wave: usize,
+}
+
+impl ActiveGather {
+    fn new(task: ReduceTask) -> Self {
+        Self { task, last_err: HashMap::new(), wave: 0 }
+    }
+
+    /// Fold one partial in — or, for a transient error with budget
+    /// remaining, leave the pair open for the next wave.
+    fn ingest(&mut self, partial: JobResult) -> Result<()> {
+        let (idx, shard) = self.task.state.pair(&partial)?;
+        if let Err(je) = &partial.output {
+            let retryable = self
+                .task
+                .retry
+                .as_ref()
+                .is_some_and(|r| self.wave < r.budget && worth_retry(r, shard, je));
+            if retryable && !self.task.state.pair_done(idx, shard) {
+                // Leave the pair open: the next wave re-dispatches it
+                // to a surviving replica.
+                self.last_err.insert((idx, shard), je.clone());
+                return Ok(());
             }
-            task.state.absorb(partial)?;
         }
-        if task.state.complete() {
-            break;
+        self.task.state.absorb(partial)
+    }
+
+    /// The response channel disconnected with pairs still open: spend a
+    /// retry wave re-issuing them on a fresh channel, or — budget gone —
+    /// finalize them with their last typed verdict.
+    fn wave_boundary(&mut self) {
+        if self.task.state.complete() {
+            return;
         }
-        let missing = task.state.missing_pairs();
+        let missing = self.task.state.missing_pairs();
         // Pairs that vanished without even a typed answer died in a
         // lost worker's queue — the "lost" side of the dispatch
         // accounting, whether or not budget remains to re-issue them.
-        let lost = missing.iter().filter(|&&p| !last_err.contains_key(&p)).count() as u64;
+        let lost =
+            missing.iter().filter(|&&p| !self.last_err.contains_key(&p)).count() as u64;
         if lost > 0 {
             // ordering: Relaxed — shard_jobs_lost is a monotonic report
             // counter; nothing orders against it.
-            task.state.metrics.shard_jobs_lost.fetch_add(lost, Ordering::Relaxed);
+            self.task.state.metrics.shard_jobs_lost.fetch_add(lost, Ordering::Relaxed);
         }
-        let ctx = match task.retry.as_ref() {
-            Some(r) if wave < r.budget => r,
+        match self.task.retry.as_ref() {
+            Some(ctx) if self.wave < ctx.budget => {
+                self.wave += 1;
+                let (tx, rx) = channel();
+                for (idx, shard) in missing {
+                    self.last_err.remove(&(idx, shard));
+                    if let Err(je) =
+                        redispatch(ctx, &self.task.state, idx, shard, self.wave as u32, &tx)
+                    {
+                        self.task.state.finalize_error(idx, shard, je);
+                    }
+                }
+                drop(tx);
+                self.task.rx = rx;
+            }
             _ => {
                 // Budget spent (or no retry context): open pairs
                 // finalize with their last typed answer; anything that
                 // never answered at all is a lost worker's silence.
                 for (idx, shard) in missing {
-                    if let Some(err) = last_err.remove(&(idx, shard)) {
-                        task.state.finalize_error(idx, shard, err);
+                    if let Some(err) = self.last_err.remove(&(idx, shard)) {
+                        self.task.state.finalize_error(idx, shard, err);
                     }
                 }
-                task.state.mark_lost();
-                break;
-            }
-        };
-        wave += 1;
-        let (tx, rx) = channel();
-        for (idx, shard) in missing {
-            last_err.remove(&(idx, shard));
-            if let Err(je) = redispatch(ctx, &task.state, idx, shard, wave as u32, &tx) {
-                task.state.finalize_error(idx, shard, je);
+                self.task.state.mark_lost();
             }
         }
-        drop(tx);
-        task.rx = rx;
     }
-    Ok(task.state.finish())
+
+    /// Drain whatever partials are waiting *without blocking*. Always
+    /// terminates: each wave boundary either completes the gather or
+    /// spends one unit of the bounded retry budget, and between
+    /// boundaries only already-queued partials are consumed.
+    fn poll(&mut self) -> Result<GatherPoll> {
+        let mut progressed = false;
+        loop {
+            if self.task.state.complete() {
+                return Ok(GatherPoll::Complete);
+            }
+            match self.task.rx.try_recv() {
+                Ok(partial) => {
+                    self.ingest(partial)?;
+                    progressed = true;
+                }
+                Err(TryRecvError::Empty) => {
+                    return Ok(if progressed {
+                        GatherPoll::Progressed
+                    } else {
+                        GatherPoll::Idle
+                    });
+                }
+                Err(TryRecvError::Disconnected) => {
+                    self.wave_boundary();
+                    progressed = true;
+                }
+            }
+        }
+    }
 }
 
-/// Reducer loop: drain each task's partials as they arrive (re-issuing
-/// lost shard jobs through the router), then ship the finished batch to
-/// its handle.
+/// End one gather however it ended: release the TTL-sweep pin and the
+/// queue-depth gauge, then ship the outcome to the handle.
+fn finish_gather(task: &ReduceTask, outcome: Result<Vec<JobResult>>) {
+    // ordering: Relaxed — releases the TTL sweep's eviction guard;
+    // the sweep only compares the count against zero and takes the
+    // registry write lock (its own synchronization) before evicting.
+    task.inflight.fetch_sub(1, Ordering::Relaxed);
+    // ordering: Relaxed — reducer_queue_depth is the autoscaler's
+    // saturation gauge; nothing synchronizes through it. Saturating, so
+    // a gather that never went through the pool (unit tests hand tasks
+    // to run_reducer directly) cannot wrap the gauge.
+    let _ = task.state.metrics.reducer_queue_depth.fetch_update(
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+        |d| Some(d.saturating_sub(1)),
+    );
+    // A dropped handle just means the client stopped caring.
+    let _ = task.done.send(outcome);
+}
+
+/// How long a reducer with exactly one active gather parks on that
+/// gather's own channel (event-driven wake on the next partial).
+const SINGLE_GATHER_PARK: Duration = Duration::from_millis(1);
+/// Poll backoff when several gathers are active at once (none may
+/// monopolize the thread, so parking happens on the task intake).
+const MULTI_GATHER_PARK: Duration = Duration::from_micros(200);
+
+/// Reducer loop: interleave every gather assigned to this reducer,
+/// folding partials as they arrive and re-issuing lost shard jobs
+/// through the router. Blocks only when idle (on the task intake) or on
+/// a lone gather's own channel — a stalled retry wave parks *that*
+/// gather, while fresh tasks and the other gathers keep advancing.
+///
+/// Exits when the pool's sender side is gone **and** every accepted
+/// gather has finished; a retired (scaled-down) reducer therefore
+/// drains what it owns before exiting.
 fn run_reducer(tasks: Receiver<ReduceTask>) {
-    while let Ok(mut task) = tasks.recv() {
-        let outcome = reduce_task(&mut task);
-        // ordering: Relaxed — releases the TTL sweep's eviction guard;
-        // the sweep only compares the count against zero and takes the
-        // registry write lock (its own synchronization) before evicting.
-        task.inflight.fetch_sub(1, Ordering::Relaxed);
-        // A dropped handle just means the client stopped caring.
-        let _ = task.done.send(outcome);
+    let mut active: Vec<ActiveGather> = Vec::new();
+    let mut pool_open = true;
+    loop {
+        // Intake: block when nothing is active, drain opportunistically
+        // otherwise.
+        if active.is_empty() {
+            if !pool_open {
+                return;
+            }
+            match tasks.recv() {
+                Ok(task) => active.push(ActiveGather::new(task)),
+                Err(_) => return,
+            }
+        }
+        while pool_open {
+            match tasks.try_recv() {
+                Ok(task) => active.push(ActiveGather::new(task)),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => pool_open = false,
+            }
+        }
+        // Advance every active gather one non-blocking step.
+        let mut progressed = false;
+        let mut i = 0;
+        while i < active.len() {
+            let Some(gather) = active.get_mut(i) else { break };
+            match gather.poll() {
+                Ok(GatherPoll::Complete) => {
+                    let mut done = active.swap_remove(i);
+                    let results = done.task.state.finish();
+                    finish_gather(&done.task, Ok(results));
+                    progressed = true;
+                }
+                Ok(GatherPoll::Progressed) => {
+                    progressed = true;
+                    i += 1;
+                }
+                Ok(GatherPoll::Idle) => {
+                    i += 1;
+                }
+                Err(e) => {
+                    // A malformed partial aborts this gather (and only
+                    // this gather) with a coordinator error.
+                    let done = active.swap_remove(i);
+                    finish_gather(&done.task, Err(e));
+                    progressed = true;
+                }
+            }
+        }
+        if progressed {
+            continue;
+        }
+        // Nothing moved: park. With exactly one gather in flight the
+        // park is event-driven on that gather's own channel (the common
+        // un-contended case pays no polling latency); with several, a
+        // short bounded doze on the intake keeps every gather fair.
+        if active.len() == 1 {
+            if let Some(g) = active.first_mut() {
+                match g.task.rx.recv_timeout(SINGLE_GATHER_PARK) {
+                    Ok(partial) => {
+                        if let Err(e) = g.ingest(partial) {
+                            let done = active.swap_remove(0);
+                            finish_gather(&done.task, Err(e));
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => g.wave_boundary(),
+                }
+            }
+        } else if pool_open {
+            match tasks.recv_timeout(MULTI_GATHER_PARK) {
+                Ok(task) => active.push(ActiveGather::new(task)),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => pool_open = false,
+            }
+        } else {
+            std::thread::sleep(MULTI_GATHER_PARK);
+        }
     }
 }
 
@@ -781,20 +1038,23 @@ impl JobHandle {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: MatrixRegistry,
-    shards: RwLock<HashMap<MatrixId, Arc<ShardedMatrix>>>,
+    shards: SharedShards,
     /// Shared routing state: worker channels, shard→worker affinities,
-    /// placement counts, liveness. The scatter path and every reducer
-    /// (for failover re-dispatch) hold the same `Arc`.
+    /// placement counts, liveness. The scatter path, every reducer
+    /// (for failover re-dispatch) and the supervisor hold the same
+    /// `Arc`.
     router: Arc<Router>,
-    /// Worker join handles; `kill_worker` takes one out to join a
-    /// crashed worker deterministically.
-    handles: Mutex<Vec<Option<JoinHandle<()>>>>,
-    /// Per-worker crash-injection flags (see
-    /// [`Coordinator::kill_worker`]).
-    kill_flags: Vec<Arc<AtomicBool>>,
-    reducer_txs: Vec<Sender<ReduceTask>>,
-    reducer_handles: Vec<JoinHandle<()>>,
-    next_reducer: AtomicU64,
+    /// Per-slot worker thread state (join handle + crash flag), shared
+    /// with the supervisor: `kill_worker` takes a handle out to join a
+    /// crashed worker deterministically, a restart installs a fresh
+    /// incarnation into the freed slot.
+    slots: Arc<WorkerSlots>,
+    /// The reducer pool (round-robin gather hand-off, autoscaled by the
+    /// supervisor between `cfg.reducers` and `cfg.max_reducers`).
+    reducers: Arc<ReducerPool>,
+    /// The supervision thread and its stop signal, when
+    /// `cfg.heartbeat_ms > 0`.
+    supervisor: Option<(Sender<()>, JoinHandle<()>)>,
     /// Engine options each worker was built with (defaults + builder
     /// overrides), for introspection.
     engine_opts: Vec<EngineOpts>,
@@ -823,6 +1083,11 @@ impl Coordinator {
                 "workers/max_batch/reducers/replicas must be ≥ 1".into(),
             ));
         }
+        if cfg.supervise && cfg.heartbeat_ms == 0 {
+            return Err(PpacError::Config(
+                "supervise requires a heartbeat (heartbeat_ms > 0)".into(),
+            ));
+        }
         cfg.tile.validate()?;
         let mut engine_opts = vec![cfg.engine; cfg.workers];
         for &(worker, opts) in overrides {
@@ -837,8 +1102,7 @@ impl Coordinator {
         let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::for_workers(cfg.workers));
         let mut senders = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
-        let mut kill_flags = Vec::with_capacity(cfg.workers);
+        let mut slot_parts = Vec::with_capacity(cfg.workers);
         for (id, &opts) in engine_opts.iter().enumerate() {
             let (tx, rx) = channel();
             let killed = Arc::new(AtomicBool::new(false));
@@ -852,31 +1116,43 @@ impl Coordinator {
                 opts,
                 Arc::clone(&killed),
             )?;
-            handles.push(Some(std::thread::spawn(move || worker.run(rx))));
+            slot_parts.push((std::thread::spawn(move || worker.run(rx)), killed));
             senders.push(tx);
-            kill_flags.push(killed);
         }
+        let slots = Arc::new(WorkerSlots::new(slot_parts));
         let router = Arc::new(Router::new(
             senders,
             Arc::clone(&registry),
             Arc::clone(&metrics),
         ));
-        let mut reducer_txs = Vec::with_capacity(cfg.reducers);
-        let mut reducer_handles = Vec::with_capacity(cfg.reducers);
-        for _ in 0..cfg.reducers {
-            let (tx, rx) = channel();
-            reducer_handles.push(std::thread::spawn(move || run_reducer(rx)));
-            reducer_txs.push(tx);
-        }
+        let reducers = Arc::new(ReducerPool::start(
+            cfg.reducers,
+            cfg.max_reducers,
+            Arc::clone(&metrics),
+        ));
+        let shards: SharedShards = Arc::new(RwLock::new(HashMap::new()));
+        let supervisor = (cfg.heartbeat_ms > 0).then(|| {
+            let (stop_tx, stop_rx) = channel();
+            let sup = Supervisor::new(
+                cfg,
+                Arc::clone(&router),
+                Arc::clone(&metrics),
+                Arc::clone(&registry),
+                Arc::clone(&shards),
+                Arc::clone(&slots),
+                Arc::clone(&reducers),
+                engine_opts.clone(),
+                stop_rx,
+            );
+            (stop_tx, std::thread::spawn(move || sup.run()))
+        });
         Ok(Self {
             registry,
-            shards: RwLock::new(HashMap::new()),
+            shards,
             router,
-            handles: Mutex::new(handles),
-            kill_flags,
-            reducer_txs,
-            reducer_handles,
-            next_reducer: AtomicU64::new(0),
+            slots,
+            reducers,
+            supervisor,
             engine_opts,
             next_matrix: AtomicU64::new(1),
             next_shard: AtomicU64::new(1),
@@ -922,17 +1198,26 @@ impl Coordinator {
         }
         // Flag first (so queued jobs are dropped, not drained), then a
         // Die message to wake an idle worker out of its recv promptly.
-        if let Some(flag) = self.kill_flags.get(id) {
+        if let Some(flag) = self.slots.kill_flag(id) {
             // ordering: Relaxed — the worker polls this flag at batch
             // boundaries; the join below is the real synchronization.
             flag.store(true, Ordering::Relaxed);
         }
-        let _ = self.router.send(id, WorkerMsg::Die);
-        let handle = lock(&self.handles).get_mut(id).and_then(Option::take);
-        if let Some(h) = handle {
+        // Quiet: a deliberate kill is not a *discovered* death — the
+        // router learns of it on the next failed send (or heartbeat),
+        // exactly like a real crash, and `workers_lost` counts only
+        // that discovery.
+        let _ = self.router.send_quiet(id, WorkerMsg::Die);
+        if let Some(h) = self.slots.take_handle(id) {
             let _ = h.join();
         }
         Ok(())
+    }
+
+    /// Reducers currently accepting gathers (the autoscaler moves this
+    /// between `cfg.reducers` and `cfg.max_reducers`).
+    pub fn reducer_count(&self) -> usize {
+        self.reducers.len()
     }
 
     /// Register a matrix for later jobs with the config's default
@@ -1252,7 +1537,7 @@ impl Coordinator {
                     // and no other memory hangs off this count.
                     wm.inflight.fetch_add(njobs, Ordering::Relaxed);
                 }
-                let mut sent_all = true;
+                let mut outcome = SendStatus::Sent;
                 for (j, input) in inputs.iter().enumerate() {
                     let job = job::Job {
                         job_id: base + j as u64,
@@ -1263,30 +1548,44 @@ impl Coordinator {
                         attempt: 0,
                         respond: tx.clone(),
                     };
-                    if !self.router.send(worker, WorkerMsg::Job(job)) {
-                        sent_all = false;
+                    outcome = self.router.send(worker, WorkerMsg::Job(job));
+                    if outcome != SendStatus::Sent {
                         break;
                     }
                 }
-                if sent_all {
-                    self.metrics
-                        .shard_jobs_submitted
-                        .fetch_add(njobs, Ordering::Relaxed);
-                    if replicas.len() > 1 {
+                match outcome {
+                    SendStatus::Sent => {
+                        self.metrics
+                            .shard_jobs_submitted
+                            .fetch_add(njobs, Ordering::Relaxed);
+                        if replicas.len() > 1 {
+                            if let Some(wm) = self.metrics.worker(worker) {
+                                wm.replica_hits.fetch_add(njobs, Ordering::Relaxed);
+                            }
+                        }
+                        break;
+                    }
+                    SendStatus::Dead => {
+                        // Mid-scatter send failure: the worker died
+                        // under us, and the failed send marked it dead —
+                        // which also reclaimed the in-flight bump; a
+                        // plain rollback could double-subtract jobs it
+                        // served before dying. Re-dispatch the whole run
+                        // on a surviving replica: jobs its queue had
+                        // accepted died with its receiver; any it
+                        // *served* first are deduplicated by the gather.
+                    }
+                    SendStatus::Stale => {
+                        // The failure was against an incarnation that a
+                        // restart has since replaced, so the mark was
+                        // refused and the bump is ours to roll back
+                        // (saturating: a racing mark of the old
+                        // incarnation may already have reclaimed it).
                         if let Some(wm) = self.metrics.worker(worker) {
-                            wm.replica_hits.fetch_add(njobs, Ordering::Relaxed);
+                            wm.complete(njobs);
                         }
                     }
-                    break;
                 }
-                // Mid-scatter send failure: the worker died under us.
-                // Mark it dead — which also reclaims the in-flight bump;
-                // a plain rollback could double-subtract jobs it served
-                // before dying — and re-dispatch the whole run on a
-                // surviving replica. Jobs its queue had accepted died
-                // with its receiver; any it *served* first are
-                // deduplicated by the gather.
-                self.router.mark_dead(worker);
                 // ordering: Relaxed — failovers is a monotonic report
                 // counter; nothing orders against it.
                 self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
@@ -1316,8 +1615,6 @@ impl Coordinator {
             submitted,
             budget: self.cfg.retry_limit,
         });
-        let r = self.next_reducer.fetch_add(1, Ordering::Relaxed) as usize
-            % self.reducer_txs.len();
         let task = ReduceTask {
             rx,
             state,
@@ -1325,8 +1622,7 @@ impl Coordinator {
             inflight: Arc::clone(&inflight),
             retry,
         };
-        let handed_off = self.reducer_txs.get(r).is_some_and(|rtx| rtx.send(task).is_ok());
-        if !handed_off {
+        if !self.reducers.submit(task) {
             // ordering: Relaxed — releases the TTL-sweep pin taken
             // above; the task never reached a reducer.
             inflight.fetch_sub(1, Ordering::Relaxed);
@@ -1371,22 +1667,23 @@ impl Coordinator {
         handles.into_iter().map(JobHandle::wait).collect()
     }
 
-    /// Graceful shutdown: drain queues, join workers, then retire the
-    /// reducer pool (it finishes any gather still in flight first).
+    /// Graceful shutdown: stop the supervisor *first* (so no fresh
+    /// incarnation can spawn behind the worker joins), drain queues,
+    /// join workers, then retire the reducer pool (it finishes any
+    /// gather still in flight first).
     pub fn shutdown(self) {
-        let Coordinator { cfg, router, handles, reducer_txs, reducer_handles, .. } = self;
+        let Coordinator { cfg, router, slots, reducers, supervisor, .. } = self;
+        if let Some((stop_tx, handle)) = supervisor {
+            let _ = stop_tx.send(());
+            let _ = handle.join();
+        }
         for w in 0..cfg.workers {
-            // A killed worker just fails the send.
-            let _ = router.send(w, WorkerMsg::Shutdown);
+            // Quiet: a worker already dead at shutdown just fails the
+            // send; that is not a newly *discovered* death.
+            let _ = router.send_quiet(w, WorkerMsg::Shutdown);
         }
-        let joined = handles.into_inner().unwrap_or_else(PoisonError::into_inner);
-        for h in joined.into_iter().flatten() {
-            let _ = h.join();
-        }
-        drop(reducer_txs);
-        for h in reducer_handles {
-            let _ = h.join();
-        }
+        slots.join_all();
+        reducers.shutdown();
     }
 }
 
@@ -1467,6 +1764,75 @@ mod tests {
             0,
             "the gather released its TTL-sweep pin"
         );
+    }
+
+    /// A gather stalled mid-wave must not head-of-line block other
+    /// gathers on the same reducer: the old blocking reducer served its
+    /// tasks strictly in order, so one gather parked on a slow worker
+    /// starved every gather queued behind it.
+    #[test]
+    fn a_stalled_retry_wave_does_not_block_other_gathers() {
+        let metrics = Arc::new(Metrics::for_workers(1));
+        let (tasks_tx, tasks_rx) = channel();
+        let reducer = std::thread::spawn(move || run_reducer(tasks_rx));
+
+        // Gather A: its partial sender stays open and silent — the
+        // stand-in for a retry wave whose re-issued jobs sit behind a
+        // slow worker.
+        let (stall_tx, stall_rx) = channel::<JobResult>();
+        let (a_done_tx, a_done_rx) = channel();
+        let a_inflight = Arc::new(AtomicU64::new(1));
+        tasks_tx
+            .send(ReduceTask {
+                rx: stall_rx,
+                state: GatherState::new(test_plan(2, 4), 1, 1, Arc::clone(&metrics)),
+                done: a_done_tx,
+                inflight: Arc::clone(&a_inflight),
+                retry: None,
+            })
+            .unwrap();
+
+        // Gather B, handed to the same reducer afterwards, complete on
+        // arrival.
+        let (b_tx, b_rx) = channel();
+        let (b_done_tx, b_done_rx) = channel();
+        b_tx.send(partial(9, vec![5, 6])).unwrap();
+        drop(b_tx);
+        tasks_tx
+            .send(ReduceTask {
+                rx: b_rx,
+                state: GatherState::new(test_plan(2, 4), 9, 1, Arc::clone(&metrics)),
+                done: b_done_tx,
+                inflight: Arc::new(AtomicU64::new(1)),
+                retry: None,
+            })
+            .unwrap();
+
+        // B must resolve while A is still stalled.
+        let b = b_done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("gather B starved behind the stalled gather A")
+            .expect("gather B reduced");
+        assert_eq!(b[0].output, Ok(JobOutput::Ints(vec![5, 6])));
+        assert!(a_done_rx.try_recv().is_err(), "A cannot have finished yet");
+
+        // Release A and wind down.
+        stall_tx.send(partial(1, vec![7, 8])).unwrap();
+        drop(stall_tx);
+        drop(tasks_tx);
+        reducer.join().unwrap();
+        let a = a_done_rx.recv().unwrap().unwrap();
+        assert_eq!(a[0].output, Ok(JobOutput::Ints(vec![7, 8])));
+        assert_eq!(a_inflight.load(Ordering::Relaxed), 0, "A released its TTL pin");
+        assert_eq!(metrics.jobs_completed.load(Ordering::Relaxed), 2);
+    }
+
+    /// `supervise` without a heartbeat could never restart anything —
+    /// reject it at construction instead of silently doing nothing.
+    #[test]
+    fn supervise_without_heartbeat_is_a_config_error() {
+        let cfg = CoordinatorConfig { supervise: true, ..Default::default() };
+        assert!(Coordinator::start(cfg).is_err());
     }
 
     /// A disconnected response channel fails the *incomplete* jobs

@@ -19,13 +19,32 @@
 //! hot-spotting the first pin).
 //!
 //! **Liveness.** Nothing announces a worker crash; the router learns of
-//! it when a `send` fails (the worker's receiver is gone) and the
-//! caller invokes [`Router::mark_dead`]. A dead worker is excluded from
+//! it when a `send` fails (the worker's receiver is gone) and the send
+//! marks the slot dead on the spot. A dead worker is excluded from
 //! every later placement decision, its replicas are re-pinned on
 //! surviving workers lazily inside `route`, and its in-flight counter —
 //! which nobody will ever decrement again — is reset so snapshots stay
 //! meaningful. A killed worker thereby becomes a load-balancing event,
-//! not a poison pill for every shard pinned on it.
+//! not a poison pill for every shard pinned on it. With a supervisor
+//! attached (`CoordinatorConfig::heartbeat_ms`) death is also
+//! discovered *proactively*: a periodic `Ping` send fails exactly like
+//! a job send would, so an idle coordinator notices before the first
+//! real dispatch.
+//!
+//! **Incarnations.** Supervised restart ([`Router::revive`]) installs a
+//! fresh worker channel into the dead slot, which re-opens the ABA race
+//! failover was previously immune to: a dispatcher can snapshot the old
+//! incarnation's sender, lose the CPU, and observe its send fail *after*
+//! the slot was revived — and must not mark the fresh incarnation dead.
+//! Each slot therefore carries an epoch, bumped under the slot's write
+//! lock on every revive; a failed send only marks the slot dead if the
+//! epoch it snapshotted is still current ([`SendStatus::Stale`]
+//! otherwise, and the dispatcher rolls back its own occupancy bump).
+//! Jobs queued on the old incarnation's channel can never be answered
+//! by the new one — the old receiver is joined away before the revive,
+//! so those sends fail deterministically and the jobs take the normal
+//! lost-job retry path (modeled exhaustively in
+//! `tests/router_interleave.rs`, models D and E).
 
 // The `loom` cfg is injected by the CI model-checking lane
 // (`RUSTFLAGS="--cfg loom"`); stock toolchains don't know it.
@@ -76,11 +95,52 @@ pub struct RoutingStats {
     pub placed: Vec<u64>,
     /// Workers not yet observed dead.
     pub live_workers: usize,
+    /// Per-slot incarnation numbers (bumped on every supervised
+    /// restart; 0 = the original worker is still the resident one).
+    pub epochs: Vec<u64>,
+    /// Dead workers the supervisor respawned into their slot.
+    pub workers_restarted: u64,
+    /// Supervisor pings that went unanswered (failed send or a stalled
+    /// beat counter).
+    pub heartbeats_missed: u64,
+    /// Replica pins moved by post-restart rebalance passes.
+    pub rebalanced_shards: u64,
+    /// Gathers handed to the reducer pool and not yet finished.
+    pub reducer_queue_depth: u64,
+}
+
+/// One worker slot: the channel of the incarnation currently occupying
+/// it, plus the incarnation number. Both only change together, under
+/// the slot's write lock, in [`Router::revive`].
+struct Slot {
+    sender: Sender<WorkerMsg>,
+    epoch: u64,
+}
+
+/// Outcome of a liveness-marking [`Router::send`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SendStatus {
+    /// Queued on the worker's current channel.
+    Sent,
+    /// The send failed against the slot's *current* incarnation: the
+    /// worker was marked dead and its in-flight gauge reclaimed. The
+    /// caller's occupancy bump is already accounted for.
+    Dead,
+    /// The send failed against a *stale* incarnation — the slot was
+    /// revived between the sender snapshot and the failure. The new
+    /// incarnation is healthy and was NOT marked; the caller must roll
+    /// back its own in-flight bump (a reclaim would zero the live
+    /// worker's gauge).
+    Stale,
 }
 
 pub(crate) struct Router {
     workers: usize,
-    senders: Vec<Sender<WorkerMsg>>,
+    /// Per-worker slots. A `send` snapshots `(sender, epoch)` under a
+    /// short read lock and sends outside it; `revive` swaps both under
+    /// the write lock, which is what makes the epoch check in
+    /// `mark_dead_if` atomic against revival.
+    senders: Vec<RwLock<Slot>>,
     /// shard → worker affinity (residency-aware routing); every replica
     /// of a shard has its own entry.
     affinity: RwLock<HashMap<ShardId, usize>>,
@@ -103,7 +163,10 @@ impl Router {
         let workers = senders.len();
         Self {
             workers,
-            senders,
+            senders: senders
+                .into_iter()
+                .map(|sender| RwLock::new(Slot { sender, epoch: 0 }))
+                .collect(),
             affinity: RwLock::new(HashMap::new()),
             placed: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
@@ -121,16 +184,29 @@ impl Router {
         self.dead.get(worker).is_some_and(|d| d.load(Ordering::Acquire))
     }
 
-    /// Record a worker as gone (its channel rejected a send). Every
-    /// failed sender calls this. The worker thread has usually exited —
-    /// a send can only fail once the receiver is dropped — but its last
-    /// completion decrement can still be in flight, so the reclaim is a
-    /// `swap(0)` paired with saturating decrements
+    /// Record the slot's *current* incarnation as gone. Public entry
+    /// point for callers that already know the worker is dead
+    /// (tests, fault injection); the dispatch paths go through
+    /// [`Router::send`], which marks with an epoch guard instead. The
+    /// worker thread has usually exited — a send can only fail once the
+    /// receiver is dropped — but its last completion decrement can
+    /// still be in flight, so the reclaim is a `swap(0)` paired with
+    /// saturating decrements
     /// ([`super::metrics::WorkerMetrics::complete`]): whichever side
     /// loses the race, the gauge lands at zero instead of wrapping to
     /// `u64::MAX` and permanently repelling the least-loaded policy.
     /// The `workers_lost` metric counts first discoveries only.
     pub(crate) fn mark_dead(&self, worker: usize) {
+        let Some(slot) = self.senders.get(worker) else { return };
+        // The slot read lock excludes `revive` (write lock) for the
+        // duration of the mark, so the death can never land on an
+        // incarnation installed concurrently.
+        let _slot = read_lock(slot);
+        self.mark_dead_locked(worker);
+    }
+
+    /// The mark itself; callers hold the slot's read lock.
+    fn mark_dead_locked(&self, worker: usize) {
         let Some(dead) = self.dead.get(worker) else { return };
         // AcqRel: the winning swap publishes everything done before the
         // death was discovered to the next is_dead(Acquire) observer.
@@ -144,12 +220,81 @@ impl Router {
         }
     }
 
-    /// Deliver a message to a worker. `false` means the worker is gone
-    /// (receiver dropped, or the id is out of range) — the caller
-    /// decides whether that is a failover (scatter / re-dispatch) or
-    /// ignorable (evict, shutdown).
-    pub(crate) fn send(&self, worker: usize, msg: WorkerMsg) -> bool {
-        self.senders.get(worker).is_some_and(|s| s.send(msg).is_ok())
+    /// Mark the slot dead only if its epoch still matches the one the
+    /// failed send snapshotted. Returns whether the mark happened —
+    /// `false` means the slot was revived in between (the failure
+    /// belongs to a stale incarnation) and nothing was touched.
+    fn mark_dead_if(&self, worker: usize, epoch: u64) -> bool {
+        let Some(slot) = self.senders.get(worker) else { return false };
+        // Read lock: excludes `revive`, making the epoch comparison and
+        // the mark one atomic step against it — the ABA guard modeled
+        // in `tests/router_interleave.rs` model D.
+        let guard = read_lock(slot);
+        if guard.epoch != epoch {
+            return false;
+        }
+        self.mark_dead_locked(worker);
+        true
+    }
+
+    /// Deliver a message to a worker's current incarnation, marking the
+    /// slot dead (with the epoch guard) when the send fails. Dispatch
+    /// paths use this; control-plane messages whose failure means
+    /// nothing (`Die`, `Shutdown`, `Evict`) go through
+    /// [`Router::send_quiet`] so fault injection and teardown never
+    /// count as discovered deaths.
+    pub(crate) fn send(&self, worker: usize, msg: WorkerMsg) -> SendStatus {
+        let Some(slot) = self.senders.get(worker) else {
+            // Out-of-range ids have no slot, no gauge, no incarnation:
+            // nothing to mark or roll back.
+            return SendStatus::Dead;
+        };
+        let (sender, epoch) = {
+            let guard = read_lock(slot);
+            (guard.sender.clone(), guard.epoch)
+        };
+        if sender.send(msg).is_ok() {
+            return SendStatus::Sent;
+        }
+        if self.mark_dead_if(worker, epoch) {
+            SendStatus::Dead
+        } else {
+            SendStatus::Stale
+        }
+    }
+
+    /// Deliver a message without liveness consequences: a failure is
+    /// returned but never marks the slot dead. `false` means the
+    /// worker's current channel is gone (or the id is out of range).
+    pub(crate) fn send_quiet(&self, worker: usize, msg: WorkerMsg) -> bool {
+        let Some(slot) = self.senders.get(worker) else { return false };
+        let sender = {
+            let guard = read_lock(slot);
+            guard.sender.clone()
+        };
+        sender.send(msg).is_ok()
+    }
+
+    /// Install a fresh incarnation into a slot: new channel, epoch bump,
+    /// liveness restored — all under the slot's write lock, so no failed
+    /// send of the old incarnation can mark the new one dead
+    /// (`mark_dead_if` re-checks the epoch under the read lock). The
+    /// caller (the supervisor) must have joined the old worker thread
+    /// first: the old receiver being gone is what guarantees jobs queued
+    /// on the old channel fail deterministically instead of being
+    /// answered by the new incarnation.
+    pub(crate) fn revive(&self, worker: usize, sender: Sender<WorkerMsg>) {
+        let Some(slot) = self.senders.get(worker) else { return };
+        let mut guard = write_lock(slot);
+        guard.sender = sender;
+        guard.epoch = guard.epoch.wrapping_add(1);
+        if let Some(dead) = self.dead.get(worker) {
+            // Release pairs with is_dead's Acquire: an observer that
+            // sees the slot live again also sees the fresh channel and
+            // epoch installed above (the write lock orders them here;
+            // the store publishes them to lock-free is_dead readers).
+            dead.store(false, Ordering::Release);
+        }
     }
 
     /// Least-loaded live worker, preferring workers outside `exclude`
@@ -296,8 +441,92 @@ impl Router {
             if let Some(placed) = self.placed.get(w) {
                 placed.fetch_sub(1, Ordering::Relaxed);
             }
-            let _ = self.send(w, WorkerMsg::Evict(sid));
+            // Quiet: an eviction failing to deliver only means the
+            // worker is already gone — not a death discovery.
+            let _ = self.send_quiet(w, WorkerMsg::Evict(sid));
         }
+    }
+
+    /// Re-spread replica pins after a worker returned to the pool: for
+    /// every replica group, pins that are unplaced, on a dead worker, or
+    /// co-located with another replica of the same group are moved to
+    /// the least-loaded live worker outside the group's healthy pins.
+    /// `route` already re-pins *dead* pins lazily — this pass exists for
+    /// the under-replication `route` tolerates forever: replicas that
+    /// were forced to share a surviving worker stay co-located until
+    /// traffic happens to re-route them, which never un-shares them.
+    /// Returns how many pins moved (also counted in the
+    /// `rebalanced_shards` metric).
+    pub(crate) fn rebalance(&self, groups: &[Vec<ShardId>]) -> u64 {
+        let mut moved = 0u64;
+        let mut evictions: Vec<(usize, ShardId)> = Vec::new();
+        {
+            let mut aff = write_lock(&self.affinity);
+            for group in groups {
+                // Same lock order as `route`'s slow path (affinity write
+                // → registry read): never touch groups that already left
+                // the registry — a pin here would leak forever.
+                if !group.iter().all(|sid| read_lock(&self.registry).contains_key(sid)) {
+                    continue;
+                }
+                // Healthy pins keep their placement — but only one
+                // replica per worker: the first claims the slot, later
+                // co-located replicas are movers.
+                let mut used: Vec<usize> = Vec::with_capacity(group.len());
+                let mut keep: Vec<ShardId> = Vec::with_capacity(group.len());
+                for sid in group {
+                    if let Some(w) = aff.get(sid).copied() {
+                        if !self.is_dead(w) && !used.contains(&w) {
+                            used.push(w);
+                            keep.push(*sid);
+                        }
+                    }
+                }
+                for sid in group {
+                    if keep.contains(sid) {
+                        continue;
+                    }
+                    let prior = aff.get(sid).copied();
+                    let Some(nw) = self.least_loaded(&used) else { break };
+                    if prior.is_some_and(|w| !self.is_dead(w)) && used.contains(&nw) {
+                        // Every live worker already hosts a replica of
+                        // this group (pool smaller than the group): keep
+                        // the live co-located pin, moving it would churn
+                        // residency for no spread.
+                        continue;
+                    }
+                    if let Some(w) = prior {
+                        // ordering: Relaxed — placed is the placement
+                        // tie-break gauge; the affinity write lock is
+                        // what orders pin/unpin pairs.
+                        if let Some(placed) = self.placed.get(w) {
+                            placed.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        if !self.is_dead(w) {
+                            // The old worker still holds a resident copy
+                            // it will never be routed again; evict it
+                            // once the lock is dropped.
+                            evictions.push((w, *sid));
+                        }
+                    }
+                    // ordering: Relaxed — same tie-break gauge as above.
+                    if let Some(placed) = self.placed.get(nw) {
+                        placed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    aff.insert(*sid, nw);
+                    used.push(nw);
+                    moved += 1;
+                }
+            }
+        }
+        for (w, sid) in evictions {
+            let _ = self.send_quiet(w, WorkerMsg::Evict(sid));
+        }
+        if moved > 0 {
+            // ordering: Relaxed — monotonic report counter.
+            self.metrics.rebalanced_shards.fetch_add(moved, Ordering::Relaxed);
+        }
+        moved
     }
 
     /// Whether a shard replica is still registered. The registry is
@@ -315,6 +544,13 @@ impl Router {
             // tie-break gauge; staleness is fine.
             placed: self.placed.iter().map(|p| p.load(Ordering::Relaxed)).collect(),
             live_workers: (0..self.workers).filter(|&w| !self.is_dead(w)).count(),
+            epochs: self.senders.iter().map(|s| read_lock(s).epoch).collect(),
+            workers_restarted: self.metrics.workers_restarted.load(Ordering::Relaxed),
+            heartbeats_missed: self.metrics.heartbeats_missed.load(Ordering::Relaxed),
+            rebalanced_shards: self.metrics.rebalanced_shards.load(Ordering::Relaxed),
+            // ordering: Relaxed — introspection snapshot of the
+            // queue-depth gauge; staleness only skews one report.
+            reducer_queue_depth: self.metrics.reducer_queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -466,6 +702,76 @@ mod tests {
         router.mark_dead(0);
         assert_eq!(metrics.workers_lost.load(Ordering::Relaxed), 1);
     }
+
+    /// The restart ABA guard: a failed send marks the incarnation it
+    /// actually talked to; once the slot is revived, a stale failure
+    /// (old epoch) must not kill the fresh incarnation.
+    #[test]
+    fn revive_restores_liveness_and_refuses_stale_marks() {
+        let (router, metrics) = test_router(2);
+        // Receivers were dropped at construction: a marking send
+        // discovers the death.
+        assert_eq!(router.send(0, WorkerMsg::Ping), SendStatus::Dead);
+        assert!(router.is_dead(0));
+        assert_eq!(metrics.workers_lost.load(Ordering::Relaxed), 1);
+        // Revive with a live channel: epoch bumps, slot is live again.
+        let (tx, rx) = std::sync::mpsc::channel();
+        router.revive(0, tx);
+        assert!(!router.is_dead(0));
+        assert_eq!(router.stats().epochs, vec![1, 0]);
+        // A failure snapshotted at epoch 0 is stale: refused, no mark.
+        assert!(!router.mark_dead_if(0, 0), "stale mark must be refused");
+        assert!(!router.is_dead(0));
+        // The fresh incarnation receives normally.
+        assert_eq!(router.send(0, WorkerMsg::Ping), SendStatus::Sent);
+        assert!(matches!(rx.try_recv(), Ok(WorkerMsg::Ping)));
+        assert_eq!(metrics.workers_lost.load(Ordering::Relaxed), 1, "one death total");
+    }
+
+    /// Control-plane sends (`Die`/`Shutdown`/`Evict`) never count as
+    /// death discoveries — fault injection and teardown would otherwise
+    /// skew `workers_lost` (the failover tests assert exact counts).
+    #[test]
+    fn quiet_sends_never_mark_dead() {
+        let (router, metrics) = test_router(1);
+        assert!(!router.send_quiet(0, WorkerMsg::Die));
+        assert!(!router.is_dead(0));
+        assert_eq!(metrics.workers_lost.load(Ordering::Relaxed), 0);
+    }
+
+    /// `route` only re-pins *dead* pins; replicas forced to share a
+    /// surviving worker stay co-located forever without an explicit
+    /// pass. After the dead worker returns, `rebalance` un-shares them.
+    #[test]
+    fn rebalance_respreads_colocated_replicas_after_revive() {
+        let (router, _metrics) = test_router(2);
+        let data = Arc::new(crate::coordinator::worker::ShardData::Bit1(vec![vec![true]]));
+        {
+            let mut reg = router.registry.write().unwrap();
+            reg.insert(1, Arc::clone(&data));
+            reg.insert(2, Arc::clone(&data));
+        }
+        router.mark_dead(0);
+        router.route(&[1, 2]).unwrap(); // both replicas forced onto worker 1
+        assert_eq!(router.stats().placed, vec![0, 2]);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        router.revive(0, tx);
+        assert_eq!(router.rebalance(&[vec![1, 2]]), 1, "one pin moves");
+        let stats = router.stats();
+        assert_eq!(stats.placed, vec![1, 1], "replicas spread over both workers");
+        assert_eq!(stats.rebalanced_shards, 1);
+        // Idempotent: a settled group moves nothing.
+        assert_eq!(router.rebalance(&[vec![1, 2]]), 0);
+    }
+
+    /// A group whose matrix already unregistered must not be re-pinned —
+    /// nothing would ever release the affinity again.
+    #[test]
+    fn rebalance_skips_unregistered_groups() {
+        let (router, _metrics) = test_router(2);
+        assert_eq!(router.rebalance(&[vec![99]]), 0);
+        assert_eq!(router.stats().affinities, 0);
+    }
 }
 
 // Model-checking of the routing protocol under loom: the *real*
@@ -556,6 +862,25 @@ mod loom_tests {
             let stats = router.stats();
             assert_eq!(stats.placed.iter().sum::<u64>(), stats.affinities as u64);
             assert!(stats.placed.iter().all(|&p| p <= 1));
+        });
+    }
+
+    /// The restart ABA on the real types: a stale epoch-0 mark racing
+    /// `revive` must leave the revived slot live on every schedule —
+    /// either the mark lands first (and the revive clears it) or the
+    /// epoch check refuses it.
+    #[test]
+    fn stale_mark_never_kills_the_revived_incarnation() {
+        loom::model(|| {
+            let (router, _metrics) = loom_router(1);
+            let r2 = Arc::clone(&router);
+            let t = loom::thread::spawn(move || {
+                let (tx, _rx) = std::sync::mpsc::channel();
+                r2.revive(0, tx);
+            });
+            let _ = router.mark_dead_if(0, 0);
+            t.join().expect("reviver");
+            assert!(!router.is_dead(0), "the revived slot must end live");
         });
     }
 }

@@ -1,0 +1,499 @@
+//! Self-healing supervision for the coordinator cluster: heartbeats,
+//! worker restart with bounded backoff, replica rebalancing, and
+//! reducer-pool autoscaling.
+//!
+//! The supervisor is one thread, enabled by
+//! [`CoordinatorConfig::heartbeat_ms`] > 0. Each tick it:
+//!
+//! 1. **Pings** every live slot through the router's liveness-marking
+//!    send. A ping that cannot be delivered is exactly a failed job
+//!    send — the slot is marked dead on the spot — so an *idle*
+//!    coordinator discovers death at heartbeat granularity instead of
+//!    on the first real dispatch. A worker whose channel accepts pings
+//!    but whose `beats` counter stops advancing is alive-but-stalled
+//!    (a long batch, a wedged engine); that is observational only
+//!    (`heartbeats_missed`) — killing a slow worker would turn long
+//!    batches into outages.
+//! 2. **Restarts** dead slots (when [`CoordinatorConfig::supervise`]
+//!    is set): flag + join the old incarnation's thread, spawn a fresh
+//!    `Worker` on a fresh channel into the same slot, and
+//!    `Router::revive` it (epoch bump — see the router's incarnation
+//!    protocol). Shard data reloads lazily from the shared registry on
+//!    the first routed job, exactly like a cold start. Consecutive
+//!    restarts back off exponentially
+//!    ([`CoordinatorConfig::restart_backoff_ms`] doubling per attempt,
+//!    capped), and sustained health resets the backoff — a
+//!    crash-looping worker cannot spin the supervisor.
+//! 3. **Rebalances** replica pins over the healed pool after any
+//!    restart (`Router::rebalance`): `route` re-pins *dead* pins
+//!    lazily, but replica groups forced to co-locate on a survivor
+//!    stay crowded forever without this pass.
+//! 4. **Autoscales** the reducer pool between `cfg.reducers` and
+//!    `cfg.max_reducers` off the `reducer_queue_depth` gauge.
+//!
+//! Shutdown stops the supervisor *first* (stop signal + join) so no
+//! fresh incarnation can spawn behind the worker joins.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::EngineOpts;
+use crate::util::sync::{lock, read_lock, AtomicBool, AtomicU64, Ordering};
+
+use super::router::{Router, SendStatus};
+use super::worker::{MatrixRegistry, Worker, WorkerMsg};
+use super::{run_reducer, CoordinatorConfig, Metrics, ReduceTask, SharedShards, ShardId};
+
+/// Ticks of continuous health after which a slot's restart backoff
+/// resets.
+const HEALTHY_RESET_TICKS: u32 = 16;
+/// Cap on the backoff doubling exponent (2^6 = 64 × base).
+const BACKOFF_CAP: u32 = 6;
+/// Consecutive zero-depth ticks before the autoscaler retires a
+/// reducer.
+const IDLE_TICKS_BEFORE_RETIRE: u32 = 4;
+
+/// One worker slot as the control plane sees it: the join handle of the
+/// incarnation currently occupying it and that incarnation's crash
+/// flag. Shared between the coordinator (`kill_worker`, shutdown) and
+/// the supervisor (restart) — whoever takes the handle joins the
+/// thread.
+struct WorkerSlot {
+    handle: Option<JoinHandle<()>>,
+    kill: Arc<AtomicBool>,
+}
+
+/// All worker slots, one mutex each (a kill and a restart of the same
+/// slot serialize; different slots never contend).
+pub(crate) struct WorkerSlots {
+    slots: Vec<Mutex<WorkerSlot>>,
+}
+
+impl WorkerSlots {
+    pub(crate) fn new(parts: Vec<(JoinHandle<()>, Arc<AtomicBool>)>) -> Self {
+        Self {
+            slots: parts
+                .into_iter()
+                .map(|(handle, kill)| Mutex::new(WorkerSlot { handle: Some(handle), kill }))
+                .collect(),
+        }
+    }
+
+    /// The crash flag of the incarnation currently in the slot.
+    pub(crate) fn kill_flag(&self, id: usize) -> Option<Arc<AtomicBool>> {
+        self.slots.get(id).map(|s| Arc::clone(&lock(s).kill))
+    }
+
+    /// Take the slot's join handle; the taker joins the thread. `None`
+    /// when another thread (a racing kill/restart) already took it.
+    pub(crate) fn take_handle(&self, id: usize) -> Option<JoinHandle<()>> {
+        self.slots.get(id).and_then(|s| lock(s).handle.take())
+    }
+
+    /// Install a fresh incarnation into the slot (restart).
+    pub(crate) fn install(&self, id: usize, handle: JoinHandle<()>, kill: Arc<AtomicBool>) {
+        if let Some(s) = self.slots.get(id) {
+            let mut slot = lock(s);
+            slot.handle = Some(handle);
+            slot.kill = kill;
+        }
+    }
+
+    /// Join every incarnation still occupying a slot (shutdown).
+    pub(crate) fn join_all(&self) {
+        for s in &self.slots {
+            let handle = lock(s).handle.take();
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The reducer pool: round-robin gather hand-off plus supervisor-driven
+/// autoscaling between a floor (`CoordinatorConfig::reducers`) and a
+/// ceiling (`CoordinatorConfig::max_reducers`). Retiring a reducer just
+/// drops its sender — the thread finishes the gathers it already owns,
+/// sees the disconnect and exits; its join handle stays parked for
+/// shutdown.
+pub(crate) struct ReducerPool {
+    txs: Mutex<Vec<Sender<ReduceTask>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    next_reducer: AtomicU64,
+    min: usize,
+    max: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl ReducerPool {
+    /// Spawn the floor-sized pool. A `max` below `min` disables
+    /// autoscaling (the ceiling clamps up to the floor).
+    pub(crate) fn start(min: usize, max: usize, metrics: Arc<Metrics>) -> Self {
+        let pool = Self {
+            txs: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()),
+            next_reducer: AtomicU64::new(0),
+            min,
+            max: max.max(min),
+            metrics,
+        };
+        for _ in 0..min {
+            pool.spawn_one();
+        }
+        pool
+    }
+
+    fn spawn_one(&self) {
+        let (tx, rx) = channel();
+        let handle = std::thread::spawn(move || run_reducer(rx));
+        lock(&self.txs).push(tx);
+        lock(&self.handles).push(handle);
+    }
+
+    /// Reducers currently accepting work.
+    pub(crate) fn len(&self) -> usize {
+        lock(&self.txs).len()
+    }
+
+    /// Hand a gather to a reducer (round-robin). The queue-depth gauge
+    /// rises *before* the send so its decrement (at gather completion)
+    /// can never land first and strand the gauge; a failed hand-off
+    /// rolls the bump back. `false` when the pool is shut down.
+    pub(crate) fn submit(&self, task: ReduceTask) -> bool {
+        // ordering: Relaxed — reducer_queue_depth is the autoscaler's
+        // saturation gauge; the channel send below is the real handoff
+        // and nothing synchronizes through the count.
+        self.metrics.reducer_queue_depth.fetch_add(1, Ordering::Relaxed);
+        let tx = {
+            let txs = lock(&self.txs);
+            if txs.is_empty() {
+                None
+            } else {
+                let r = self.next_reducer.fetch_add(1, Ordering::Relaxed) as usize % txs.len();
+                txs.get(r).cloned()
+            }
+        };
+        if tx.is_some_and(|tx| tx.send(task).is_ok()) {
+            return true;
+        }
+        // ordering: Relaxed — rolls back the bump above; the task never
+        // reached a reducer.
+        self.metrics.reducer_queue_depth.fetch_sub(1, Ordering::Relaxed);
+        false
+    }
+
+    /// Grow the pool by one reducer, respecting the ceiling.
+    pub(crate) fn scale_up(&self) -> bool {
+        if self.len() >= self.max {
+            return false;
+        }
+        self.spawn_one();
+        true
+    }
+
+    /// Retire one reducer, respecting the floor.
+    pub(crate) fn scale_down(&self) -> bool {
+        let mut txs = lock(&self.txs);
+        if txs.len() <= self.min {
+            return false;
+        }
+        txs.pop();
+        true
+    }
+
+    /// Drop every sender and join every reducer thread ever spawned
+    /// (including retired ones).
+    pub(crate) fn shutdown(&self) {
+        lock(&self.txs).clear();
+        let handles = std::mem::take(&mut *lock(&self.handles));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-slot supervision state, owned by the supervisor thread alone (no
+/// atomics: nothing else reads it).
+struct SlotState {
+    /// `beats` value seen at the last successful ping.
+    last_beats: u64,
+    /// Whether the previous tick delivered a ping (so a non-advancing
+    /// beat counter is meaningful this tick).
+    pinged: bool,
+    /// Consecutive restarts without sustained health in between.
+    restarts: u32,
+    /// Earliest instant the next restart attempt may run (backoff).
+    next_restart: Instant,
+    /// Ticks the slot has been continuously live.
+    healthy_ticks: u32,
+}
+
+/// The supervision loop (see the module docs for the protocol).
+pub(crate) struct Supervisor {
+    cfg: CoordinatorConfig,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    registry: MatrixRegistry,
+    shards: SharedShards,
+    slots: Arc<WorkerSlots>,
+    reducers: Arc<ReducerPool>,
+    engine_opts: Vec<EngineOpts>,
+    stop: Receiver<()>,
+    state: Vec<SlotState>,
+    /// Consecutive ticks the reducer queue-depth gauge read zero.
+    idle_ticks: u32,
+}
+
+impl Supervisor {
+    #[allow(clippy::too_many_arguments)] // construction-time wiring, one call site
+    pub(crate) fn new(
+        cfg: CoordinatorConfig,
+        router: Arc<Router>,
+        metrics: Arc<Metrics>,
+        registry: MatrixRegistry,
+        shards: SharedShards,
+        slots: Arc<WorkerSlots>,
+        reducers: Arc<ReducerPool>,
+        engine_opts: Vec<EngineOpts>,
+        stop: Receiver<()>,
+    ) -> Self {
+        let now = Instant::now();
+        let state = (0..cfg.workers)
+            .map(|_| SlotState {
+                last_beats: 0,
+                pinged: false,
+                restarts: 0,
+                next_restart: now,
+                healthy_ticks: 0,
+            })
+            .collect();
+        Self {
+            cfg,
+            router,
+            metrics,
+            registry,
+            shards,
+            slots,
+            reducers,
+            engine_opts,
+            stop,
+            state,
+            idle_ticks: 0,
+        }
+    }
+
+    /// Tick every `heartbeat_ms` until the stop channel fires (or the
+    /// coordinator is dropped, disconnecting it).
+    pub(crate) fn run(mut self) {
+        let interval = Duration::from_millis(self.cfg.heartbeat_ms.max(1));
+        loop {
+            match self.stop.recv_timeout(interval) {
+                Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+                Err(RecvTimeoutError::Timeout) => self.tick(),
+            }
+        }
+    }
+
+    fn tick(&mut self) {
+        let now = Instant::now();
+        let mut to_restart: Vec<usize> = Vec::new();
+        for (w, st) in self.state.iter_mut().enumerate() {
+            if self.router.is_dead(w) {
+                st.pinged = false;
+                st.healthy_ticks = 0;
+                if self.cfg.supervise && now >= st.next_restart {
+                    to_restart.push(w);
+                }
+                continue;
+            }
+            st.healthy_ticks = st.healthy_ticks.saturating_add(1);
+            if st.healthy_ticks >= HEALTHY_RESET_TICKS {
+                st.restarts = 0;
+            }
+            match self.router.send(w, WorkerMsg::Ping) {
+                SendStatus::Sent => {
+                    let beats =
+                        self.metrics.worker(w).map_or(0, |m| m.beats.load(Ordering::Relaxed));
+                    if st.pinged && beats == st.last_beats {
+                        // Delivered last tick but never drained: the
+                        // worker is alive-but-stalled. Observational
+                        // only — killing a slow worker would turn long
+                        // batches into outages.
+                        self.metrics.heartbeats_missed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    st.last_beats = beats;
+                    st.pinged = true;
+                }
+                SendStatus::Dead | SendStatus::Stale => {
+                    // The failed send already marked the slot dead (or
+                    // raced another marker): proactive discovery before
+                    // any job had to fail. The next tick restarts it.
+                    self.metrics.heartbeats_missed.fetch_add(1, Ordering::Relaxed);
+                    st.pinged = false;
+                }
+            }
+        }
+        let mut revived = false;
+        for w in to_restart {
+            revived |= self.restart(w);
+        }
+        if revived {
+            self.rebalance();
+        }
+        self.autoscale();
+    }
+
+    /// Respawn a fresh worker into slot `w`. The old incarnation is
+    /// flagged, nudged and joined *first*: the old receiver being gone
+    /// before `revive` is what guarantees jobs queued on the old
+    /// channel fail deterministically instead of being answered by the
+    /// new incarnation (`tests/router_interleave.rs` model E). Returns
+    /// whether the slot was revived.
+    fn restart(&mut self, w: usize) -> bool {
+        if let Some(flag) = self.slots.kill_flag(w) {
+            // ordering: Relaxed — the worker polls the flag at batch
+            // boundaries; the join below is the real synchronization.
+            flag.store(true, Ordering::Relaxed);
+        }
+        // Quiet: the slot is already known dead; a deliverable Die just
+        // wakes a lingering incarnation out of its recv.
+        let _ = self.router.send_quiet(w, WorkerMsg::Die);
+        if let Some(handle) = self.slots.take_handle(w) {
+            let _ = handle.join();
+        }
+        self.schedule_backoff(w);
+        let killed = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel();
+        let opts = self.engine_opts.get(w).copied().unwrap_or_default();
+        let worker = match Worker::new(
+            w,
+            self.cfg.tile,
+            Arc::clone(&self.registry),
+            Arc::clone(&self.metrics),
+            self.cfg.max_batch,
+            self.cfg.backend,
+            opts,
+            Arc::clone(&killed),
+        ) {
+            Ok(worker) => worker,
+            // Tile allocation failed (resource pressure): leave the
+            // slot dead; the backoff already scheduled the next try.
+            Err(_) => return false,
+        };
+        let handle = std::thread::spawn(move || worker.run(rx));
+        self.slots.install(w, handle, killed);
+        self.router.revive(w, tx);
+        self.metrics.workers_restarted.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Exponential backoff between restart attempts of one slot:
+    /// `restart_backoff_ms · 2^min(restarts, cap)`; sustained health
+    /// (HEALTHY_RESET_TICKS live ticks) resets the exponent.
+    fn schedule_backoff(&mut self, w: usize) {
+        let base = self.cfg.restart_backoff_ms.max(1);
+        if let Some(st) = self.state.get_mut(w) {
+            let factor = 1u64 << st.restarts.min(BACKOFF_CAP);
+            st.restarts = st.restarts.saturating_add(1);
+            st.healthy_ticks = 0;
+            st.pinged = false;
+            st.next_restart = Instant::now() + Duration::from_millis(base.saturating_mul(factor));
+        }
+    }
+
+    /// Re-spread replica pins over the healed pool (see
+    /// `Router::rebalance`).
+    fn rebalance(&self) {
+        let groups: Vec<Vec<ShardId>> = read_lock(&self.shards)
+            .values()
+            .flat_map(|s| s.shard_replicas.iter().cloned())
+            .collect();
+        if !groups.is_empty() {
+            self.router.rebalance(&groups);
+        }
+    }
+
+    /// Grow the reducer pool when more than two gathers per reducer are
+    /// outstanding; retire one after sustained idleness.
+    fn autoscale(&mut self) {
+        // ordering: Relaxed — the queue-depth gauge is a scaling hint;
+        // a stale read only delays one scaling decision by a tick.
+        let depth = self.metrics.reducer_queue_depth.load(Ordering::Relaxed);
+        let n = self.reducers.len().max(1) as u64;
+        if depth > 2 * n {
+            self.idle_ticks = 0;
+            self.reducers.scale_up();
+        } else if depth == 0 {
+            self.idle_ticks = self.idle_ticks.saturating_add(1);
+            if self.idle_ticks >= IDLE_TICKS_BEFORE_RETIRE {
+                self.idle_ticks = 0;
+                self.reducers.scale_down();
+            }
+        } else {
+            self.idle_ticks = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::tiled::Partition;
+
+    #[test]
+    fn reducer_pool_scales_within_bounds() {
+        let metrics = Arc::new(Metrics::for_workers(0));
+        let pool = ReducerPool::start(1, 3, Arc::clone(&metrics));
+        assert_eq!(pool.len(), 1);
+        assert!(pool.scale_up());
+        assert!(pool.scale_up());
+        assert!(!pool.scale_up(), "ceiling holds");
+        assert_eq!(pool.len(), 3);
+        assert!(pool.scale_down());
+        assert!(pool.scale_down());
+        assert!(!pool.scale_down(), "floor holds");
+        assert_eq!(pool.len(), 1);
+        pool.shutdown();
+        assert_eq!(pool.len(), 0);
+    }
+
+    #[test]
+    fn a_ceiling_below_the_floor_disables_autoscaling() {
+        let metrics = Arc::new(Metrics::for_workers(0));
+        let pool = ReducerPool::start(2, 0, metrics);
+        assert_eq!(pool.len(), 2);
+        assert!(!pool.scale_up(), "max clamps up to min");
+        assert!(!pool.scale_down());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails_and_rolls_back_the_gauge() {
+        let metrics = Arc::new(Metrics::for_workers(0));
+        let pool = ReducerPool::start(1, 1, Arc::clone(&metrics));
+        pool.shutdown();
+        let plan = super::super::GatherPlan {
+            part: Partition::new(2, 4, 2, 4).unwrap(),
+            mode: super::super::ModeKey::Pm1Mvp,
+            pad_adjust: -1,
+        };
+        let state = super::super::GatherState::new(plan, 0, 1, Arc::clone(&metrics));
+        let (_tx, rx) = channel();
+        let (done_tx, _done_rx) = channel();
+        let task = ReduceTask {
+            rx,
+            state,
+            done: done_tx,
+            inflight: Arc::new(AtomicU64::new(0)),
+            retry: None,
+        };
+        assert!(!pool.submit(task), "no reducer left to take the gather");
+        assert_eq!(
+            metrics.reducer_queue_depth.load(Ordering::Relaxed),
+            0,
+            "the failed hand-off must roll its bump back"
+        );
+    }
+}

@@ -54,6 +54,11 @@ pub enum WorkerMsg {
     /// killed worker process does. The coordinator discovers the death
     /// through failed sends and re-dispatches onto surviving replicas.
     Die,
+    /// Supervisor heartbeat. The worker answers by bumping its `beats`
+    /// counter — a failed *send* of this message is the supervisor's
+    /// proactive death discovery, and a counter that stops advancing
+    /// while sends succeed flags a live-but-stalled worker.
+    Ping,
 }
 
 /// One resident-able block of a registered matrix, in the form its
@@ -138,6 +143,10 @@ impl Worker {
                         self.evict(sid);
                         continue;
                     }
+                    Ok(WorkerMsg::Ping) => {
+                        self.beat();
+                        continue;
+                    }
                     Ok(WorkerMsg::Shutdown) | Ok(WorkerMsg::Die) => return,
                     Err(RecvTimeoutError::Timeout) => continue,
                     Err(RecvTimeoutError::Disconnected) => return,
@@ -158,6 +167,7 @@ impl Worker {
                         }
                     }
                     Ok(WorkerMsg::Evict(sid)) => self.evict(sid),
+                    Ok(WorkerMsg::Ping) => self.beat(),
                     // A crash mid-collection drops the batch unanswered.
                     Ok(WorkerMsg::Die) => return,
                     Ok(WorkerMsg::Shutdown) => {
@@ -179,6 +189,15 @@ impl Worker {
             if shutdown {
                 return;
             }
+        }
+    }
+
+    /// Answer a supervisor ping: advance the liveness beat counter the
+    /// supervisor compares between ticks. Monotonic report counter, so
+    /// Relaxed is the right ordering.
+    fn beat(&self) {
+        if let Some(w) = self.metrics.worker(self.id) {
+            w.beats.fetch_add(1, Ordering::Relaxed);
         }
     }
 

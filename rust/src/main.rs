@@ -11,7 +11,8 @@
 //! ppac cycles [--n 256]            §IV-B compute-cache cycle comparison
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
-//! ppac serve [--workers --batch --jobs --replicas R --backend blocked|cycle --threads T --ttl-ms MS]   coordinator demo
+//! ppac serve [--workers --batch --jobs --replicas R --backend blocked|cycle --threads T --ttl-ms MS
+//!             --heartbeat-ms MS --supervise --max-reducers N]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -457,6 +458,9 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("backend")
         .opt("threads")
         .opt("ttl-ms")
+        .opt("heartbeat-ms")
+        .opt("max-reducers")
+        .flag("supervise")
         .opt("config")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
@@ -475,6 +479,11 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let threads = p.usize_or("threads", file.usize_or("engine.threads", 1)?)?;
     let replicas = p.usize_or("replicas", file.usize_or("coordinator.replicas", 1)?)?;
     let ttl_ms = p.usize_or("ttl-ms", file.usize_or("coordinator.registry_ttl_ms", 0)?)?;
+    let heartbeat_ms =
+        p.usize_or("heartbeat-ms", file.usize_or("coordinator.heartbeat_ms", 0)?)? as u64;
+    let max_reducers =
+        p.usize_or("max-reducers", file.usize_or("coordinator.max_reducers", 0)?)?;
+    let supervise = p.flag("supervise") || file.bool_or("coordinator.supervise", false)?;
     let engine = EngineOpts::threaded(threads);
     let tile = PpacConfig::new(m, n);
     let registry_ttl = (ttl_ms > 0).then(|| std::time::Duration::from_millis(ttl_ms as u64));
@@ -486,6 +495,9 @@ fn serve(rest: Vec<String>) -> AnyResult {
         engine,
         replicas,
         registry_ttl,
+        heartbeat_ms,
+        supervise,
+        max_reducers,
         ..Default::default()
     })?;
     let mut rng = Xoshiro256pp::seeded(11);
@@ -514,6 +526,14 @@ fn serve(rest: Vec<String>) -> AnyResult {
     println!("workers          : {workers} (tile {m}x{n}, max batch {max_batch})");
     println!("backend          : {} ({} sweep thread(s))", backend.name(), threads);
     println!("replication      : {replicas} replica(s)/shard");
+    if heartbeat_ms > 0 {
+        let floor = coord.config().reducers;
+        let ceiling = if max_reducers == 0 { floor } else { max_reducers.max(floor) };
+        println!(
+            "supervision      : heartbeat {heartbeat_ms} ms, restarts {}, reducer pool {floor}..={ceiling}",
+            if supervise { "on" } else { "off" },
+        );
+    }
     println!("jobs             : {succeeded} ok in {dt:.3} s = {:.0} jobs/s",
              succeeded as f64 / dt);
     println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch_size);
@@ -530,6 +550,13 @@ fn serve(rest: Vec<String>) -> AnyResult {
         println!(
             "failover         : {} workers lost, {} re-routed dispatches, {} retried shard jobs, {} lost shard jobs",
             snap.workers_lost, snap.failovers, snap.retries, snap.shard_jobs_lost
+        );
+    }
+    if snap.workers_restarted > 0 || snap.heartbeats_missed > 0 || snap.rebalanced_shards > 0 {
+        println!(
+            "self-healing     : {} workers restarted, {} heartbeats missed, {} shards rebalanced, {} gathers queued",
+            snap.workers_restarted, snap.heartbeats_missed, snap.rebalanced_shards,
+            snap.reducer_queue_depth
         );
     }
     println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight / replica hits)");

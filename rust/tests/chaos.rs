@@ -1,0 +1,222 @@
+//! Chaos harness for the self-healing coordinator: deterministic,
+//! seeded kill/restart/delay schedules over a replicated shard grid.
+//!
+//! "Deterministic" means the fault schedule — which worker dies in
+//! which round, how long the storm pauses between rounds — is fully
+//! derived from a seeded [`Xoshiro256pp`], so a failure replays with
+//! the same pressure pattern. Thread timing still varies run to run, so
+//! every assertion is about *invariants that must hold on any
+//! schedule*:
+//!
+//! - every submitted job resolves — correct output or a typed
+//!   [`JobError`] — within a bounded wait: never a hang, never a panic;
+//! - the supervisor heals the cluster back to full liveness after the
+//!   storm (`workers_restarted` ≥ the kills it recovered from, slot
+//!   epochs account for every revive);
+//! - occupancy gauges (`inflight` per worker, `reducer_queue_depth`)
+//!   return to zero once the storm drains — no leaked accounting on
+//!   any interleaving of kills, restarts and retry waves;
+//! - a restarted slot reloads its shards from the shared registry and
+//!   serves correct results again (discovered *proactively* by the
+//!   heartbeat, not by a failed job send).
+
+use std::time::{Duration, Instant};
+
+use ppac::coordinator::{
+    Coordinator, CoordinatorConfig, JobInput, JobOutput, MatrixSpec,
+};
+use ppac::golden;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+fn pm1_golden(a: &[Vec<bool>], x: &[bool]) -> JobOutput {
+    JobOutput::Ints(a.iter().map(|row| golden::pm1_inner(row, x)).collect())
+}
+
+/// Poll `cond` every couple of milliseconds until it holds or `timeout`
+/// elapses; returns the final verdict.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+/// The storm: 4 workers, replicas = 2, a 2×3 shard grid, twelve rounds
+/// of batched traffic with a seeded kill every other round while the
+/// supervisor (2 ms heartbeat, 1 ms restart backoff) keeps healing the
+/// pool. Acceptance: every job resolves, the cluster returns to full
+/// liveness, and all occupancy returns to zero.
+#[test]
+fn seeded_kill_restart_storm_always_resolves() {
+    let mut rng = Xoshiro256pp::seeded(700);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 4,
+        max_batch: 4,
+        replicas: 2,
+        retry_limit: 3,
+        heartbeat_ms: 2,
+        supervise: true,
+        restart_backoff_ms: 1,
+        reducers: 1,
+        max_reducers: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    // 64×96 on 32×32 tiles: 6 logical shards × 2 replicas = 12 pins.
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    const ROUNDS: usize = 12;
+    const BATCH: usize = 8;
+    let mut handles = Vec::with_capacity(ROUNDS);
+    let mut batches = Vec::with_capacity(ROUNDS);
+    for round in 0..ROUNDS {
+        let xs: Vec<Vec<bool>> = (0..BATCH).map(|_| rng.bits(96)).collect();
+        let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+        handles.push(coord.submit_batch(id, &inputs).unwrap());
+        batches.push(xs);
+        if round % 2 == 0 {
+            // Seeded chaos: crash one worker mid-traffic. The victim
+            // may already be down (back-to-back kills) or freshly
+            // restarted — both are legal storm states.
+            let victim = (rng.next_u64() % 4) as usize;
+            coord.kill_worker(victim).unwrap();
+        }
+        // Seeded delay (0–3 ms): lets restarts, retry waves and fresh
+        // traffic interleave differently round to round.
+        std::thread::sleep(Duration::from_millis(rng.next_u64() % 4));
+    }
+
+    // Every job resolves within a bounded wait — correct or typed,
+    // never a hang.
+    let mut correct = 0usize;
+    let mut typed = 0usize;
+    for (handle, xs) in handles.into_iter().zip(&batches) {
+        let mut handle = handle;
+        let results = handle
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("a storm batch hung past the 30 s bound");
+        assert_eq!(results.len(), BATCH);
+        for (r, x) in results.iter().zip(xs) {
+            if r.output.is_ok() {
+                // An answered job must be *correct* — chaos may lose
+                // jobs (typed), never corrupt them.
+                assert_eq!(r.output, Ok(pm1_golden(&a, x)), "job {}", r.job_id);
+                correct += 1;
+            } else {
+                typed += 1; // typed error: resolved, not hung
+            }
+        }
+    }
+    assert_eq!(correct + typed, ROUNDS * BATCH, "every job resolved exactly once");
+    assert!(correct > 0, "a storm with live replicas must serve some jobs correctly");
+
+    // The supervisor heals the pool back to full strength.
+    assert!(
+        wait_until(Duration::from_secs(10), || coord.routing_stats().live_workers == 4),
+        "supervisor failed to restore 4/4 live workers; stats: {:?}",
+        coord.routing_stats()
+    );
+    let snap = coord.metrics.snapshot();
+    assert!(snap.workers_lost >= 1, "the storm killed at least one worker");
+    assert!(snap.workers_restarted >= 1, "the supervisor restarted at least one");
+    let stats = coord.routing_stats();
+    assert_eq!(
+        stats.epochs.iter().sum::<u64>(),
+        snap.workers_restarted,
+        "every restart bumps exactly one slot epoch"
+    );
+
+    // Post-storm: a clean batch over the healed pool is all-correct.
+    let xs: Vec<Vec<bool>> = (0..BATCH).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let results = coord.submit_batch(id, &inputs).unwrap().wait().unwrap();
+    for (r, x) in results.iter().zip(&xs) {
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)), "healed pool must serve correctly");
+    }
+
+    // All occupancy drains to zero once the storm settles.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            s.per_worker.iter().all(|w| w.inflight == 0) && s.reducer_queue_depth == 0
+        }),
+        "occupancy must return to zero; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
+    let reducers = coord.reducer_count();
+    assert!(
+        (1..=3).contains(&reducers),
+        "autoscaler must stay within [reducers, max_reducers], got {reducers}"
+    );
+    coord.shutdown();
+}
+
+/// A restarted slot is a *cold* incarnation: its shard data reloads
+/// lazily from the shared registry on the first routed job, and the
+/// death is discovered by the heartbeat alone — no job send ever failed
+/// (the coordinator is idle between the kill and the restart).
+#[test]
+fn restarted_slot_reloads_shards_and_serves_again() {
+    let mut rng = Xoshiro256pp::seeded(701);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 1,
+        max_batch: 4,
+        replicas: 1,
+        heartbeat_ms: 2,
+        supervise: true,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    let x0 = rng.bits(32);
+    let r = coord.submit(id, JobInput::Pm1Mvp(x0.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x0)));
+    assert_eq!(coord.metrics.snapshot().matrix_loads, 1);
+
+    coord.kill_worker(0).unwrap();
+
+    // No traffic: only the heartbeat can discover the death, and only
+    // the supervisor can bring the worker back.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            s.workers_restarted >= 1 && coord.routing_stats().live_workers == 1
+        }),
+        "supervisor never restarted the killed worker; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.workers_lost, 1, "exactly one death, discovered once");
+    assert!(
+        snap.heartbeats_missed >= 1,
+        "an idle coordinator must discover the death through the heartbeat"
+    );
+
+    // The fresh incarnation serves correctly, reloading the shard from
+    // the shared registry (a second load, same matrix).
+    let x1 = rng.bits(32);
+    let r = coord.submit(id, JobInput::Pm1Mvp(x1.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x1)), "restarted slot must serve again");
+    assert_eq!(
+        coord.metrics.snapshot().matrix_loads,
+        2,
+        "the cold incarnation reloads the shard exactly once"
+    );
+    coord.shutdown();
+}

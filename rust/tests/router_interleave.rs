@@ -7,7 +7,8 @@
 //! small thread programs modeling the protocol's atomic steps, and the
 //! invariants must hold on all of them.
 //!
-//! Three protocols from `coordinator::router` / `coordinator::metrics`:
+//! Five protocols from `coordinator::router` / `coordinator::metrics` /
+//! `coordinator::supervisor`:
 //!
 //! - **Occupancy reclaim** (`mark_dead` vs. straggler completions):
 //!   `swap(0)` + saturating decrements always settle at zero. The old
@@ -23,6 +24,20 @@
 //!   reducer thread absorbs partials in arrival order; across every
 //!   permutation of a duplicate-bearing arrival multiset, each pair is
 //!   absorbed once and completion fires exactly once.
+//! - **Epoch-guarded death marking** (model D: send failure vs. the
+//!   supervisor's revive): a failure observed against epoch `e` only
+//!   marks the slot while the slot is *still* at epoch `e` — the
+//!   epoch check and the mark happen under the same slot lock — so a
+//!   stale failure can never kill the freshly restarted incarnation.
+//!   The naive unconditional mark is modeled as the negative.
+//! - **Restart slot reuse** (model E: jobs routed to the old
+//!   incarnation vs. the new one): a restart replaces the slot's
+//!   channel *after* the old receiver is gone, so every job queued on
+//!   the old incarnation fails deterministically and is never answered
+//!   by the new one; answered and lost are disjoint and exhaustive. A
+//!   shared-queue protocol (the restart reusing the old channel) is the
+//!   negative: the checker finds schedules where a pre-restart job is
+//!   served by the new incarnation.
 
 use std::collections::BTreeSet;
 
@@ -346,6 +361,254 @@ fn gather_does_not_complete_early_with_missing_pairs() {
         assert_eq!(s.completions, 0, "missing pair must hold completion: {order:?}");
         assert_eq!(s.absorbed, 3);
     }
+}
+
+// ---------------------------------------------------------------------
+// Model D: epoch-guarded death marking (send failure vs. revive).
+// ---------------------------------------------------------------------
+
+/// One router slot across a restart. `Router::send` snapshots
+/// `(sender, epoch)` under the slot read lock; a failure calls
+/// `mark_dead_if(worker, epoch)`, which re-takes the read lock — the
+/// same lock `revive` writes under — so the epoch check and the mark
+/// are one atomic step against revival, exactly as modeled here.
+/// `inflight` is the mathematical integer (an i64 so an over-rollback
+/// shows up as a negative, not a silent wrap).
+#[derive(Clone)]
+struct Incarnation {
+    epoch: u64,
+    dead: bool,
+    inflight: i64,
+    workers_lost: u64,
+}
+
+#[derive(Clone, Copy)]
+enum IncStep {
+    /// Failure handling guarded by the sender's snapshot epoch: mark +
+    /// reclaim only while the slot is still that incarnation; a stale
+    /// failure rolls back only the caller's own bump (saturating).
+    HandleFailGuarded(u64),
+    /// The supervisor's restart: fresh channel, epoch bump, liveness
+    /// restored (the slot was dead when the restart ran).
+    Revive,
+    /// The pre-epoch protocol: mark unconditionally on any failure.
+    HandleFailNaive,
+}
+
+fn inc_exec(s: &mut Incarnation, step: IncStep) {
+    match step {
+        IncStep::HandleFailGuarded(e) => {
+            if s.epoch == e {
+                if !s.dead {
+                    s.dead = true;
+                    s.workers_lost += 1;
+                }
+                s.inflight = 0; // mark_dead's swap(0) reclaim
+            } else {
+                // Stale: roll back this caller's own bump; saturating,
+                // because the old incarnation's mark may already have
+                // reclaimed it.
+                s.inflight = (s.inflight - 1).max(0);
+            }
+        }
+        IncStep::Revive => {
+            s.epoch += 1;
+            s.dead = false;
+        }
+        IncStep::HandleFailNaive => {
+            if !s.dead {
+                s.dead = true;
+                s.workers_lost += 1;
+            }
+            s.inflight = 0;
+        }
+    }
+}
+
+#[test]
+fn epoch_guarded_marks_never_kill_the_revived_incarnation() {
+    // Two dispatchers bumped occupancy and snapshotted the slot at
+    // epoch 0; both sends fail (the worker died) while the supervisor
+    // revives the slot. On every schedule the revived incarnation ends
+    // live, the death is counted at most once, and the occupancy gauge
+    // settles at zero — no matter which side observes the other first.
+    let start = Incarnation { epoch: 0, dead: false, inflight: 2, workers_lost: 0 };
+    let progs = vec![
+        vec![IncStep::HandleFailGuarded(0)],
+        vec![IncStep::HandleFailGuarded(0)],
+        vec![IncStep::Revive],
+    ];
+    let n = explore(&start, &progs, &inc_exec, &mut |s: &Incarnation| {
+        assert!(!s.dead, "a stale mark must never kill the revived incarnation");
+        assert_eq!(s.inflight, 0, "bumps reclaimed or rolled back exactly once");
+        assert!(s.workers_lost <= 1, "one death, counted at most once");
+        assert_eq!(s.epoch, 1);
+    });
+    assert_eq!(n, 6, "3 single-step threads interleave 3! ways");
+}
+
+#[test]
+fn naive_unconditional_marks_are_caught_killing_the_new_incarnation() {
+    // Negative test: the pre-epoch protocol (mark on any failure,
+    // no snapshot check) must be caught re-killing the slot after the
+    // revive on at least one schedule — otherwise model D proves
+    // nothing. The slot starts dead (the death was already discovered).
+    let start = Incarnation { epoch: 0, dead: true, inflight: 1, workers_lost: 1 };
+    let progs = vec![vec![IncStep::HandleFailNaive], vec![IncStep::Revive]];
+    let mut rekilled = 0usize;
+    explore(&start, &progs, &inc_exec, &mut |s: &Incarnation| {
+        if s.dead {
+            rekilled += 1;
+            assert!(s.workers_lost > 1, "the re-kill double-counts the death too");
+        }
+    });
+    assert!(rekilled > 0, "the checker must expose the revive-then-mark kill");
+}
+
+// ---------------------------------------------------------------------
+// Model E: restart slot reuse (old-incarnation jobs vs. the new one).
+// ---------------------------------------------------------------------
+
+/// One slot across a restart, two dispatchers. A dispatch is two steps —
+/// snapshot the slot's sender (recording the epoch), then send through
+/// the snapshot — because that is the real window: `Router::send` clones
+/// the sender under the read lock and sends *outside* it. The restart
+/// joins the old incarnation (dropping its receiver) before installing
+/// the fresh channel, so a send through an old snapshot fails
+/// deterministically; the `shared` flag models the broken alternative
+/// (restart reusing the old channel), where such a send lands in the
+/// queue the *new* incarnation serves.
+#[derive(Clone)]
+struct SlotReuse {
+    epoch: u64,
+    /// Jobs queued on the old incarnation's channel.
+    old_queue: Vec<u64>,
+    /// Jobs queued on the new incarnation's channel (all served).
+    new_queue: Vec<u64>,
+    /// Jobs whose send failed or whose queue died unanswered.
+    lost: Vec<u64>,
+    /// Per-dispatcher snapshot epoch (`None` before its snapshot step).
+    snapshots: [Option<u64>; 2],
+    /// Negative-protocol switch: the restart reuses the old channel.
+    shared: bool,
+}
+
+#[derive(Clone, Copy)]
+enum ReuseStep {
+    /// Dispatcher `j` clones the slot's sender under the read lock.
+    Snapshot(usize),
+    /// Dispatcher `j` sends through its snapshot.
+    Send(usize),
+    /// Supervisor restart: join the old incarnation (its queued jobs
+    /// die unanswered with the receiver), install a fresh channel,
+    /// bump the epoch.
+    Restart,
+}
+
+fn reuse_exec(s: &mut SlotReuse, step: ReuseStep) {
+    match step {
+        ReuseStep::Snapshot(j) => s.snapshots[j] = Some(s.epoch),
+        ReuseStep::Send(j) => {
+            let Some(snap) = s.snapshots[j] else { return };
+            let job = j as u64 + 1;
+            if snap == s.epoch {
+                if s.epoch == 0 {
+                    s.old_queue.push(job);
+                } else {
+                    s.new_queue.push(job);
+                }
+            } else if s.shared {
+                // Broken protocol: the stale sender still reaches the
+                // queue the new incarnation serves.
+                s.new_queue.push(job);
+            } else {
+                // Correct protocol: the old receiver died with the old
+                // incarnation, so the stale send fails on the spot.
+                s.lost.push(job);
+            }
+        }
+        ReuseStep::Restart => {
+            let pending = std::mem::take(&mut s.old_queue);
+            if s.shared {
+                s.new_queue.extend(pending);
+            } else {
+                s.lost.extend(pending);
+            }
+            s.epoch += 1;
+        }
+    }
+}
+
+#[test]
+fn old_incarnation_jobs_are_never_answered_by_the_new_one() {
+    let start = SlotReuse {
+        epoch: 0,
+        old_queue: Vec::new(),
+        new_queue: Vec::new(),
+        lost: Vec::new(),
+        snapshots: [None, None],
+        shared: false,
+    };
+    let progs = vec![
+        vec![ReuseStep::Snapshot(0), ReuseStep::Send(0)],
+        vec![ReuseStep::Snapshot(1), ReuseStep::Send(1)],
+        vec![ReuseStep::Restart],
+    ];
+    let mut served_by_new = 0usize;
+    let n = explore(&start, &progs, &reuse_exec, &mut |s: &SlotReuse| {
+        // Terminal drain: the new incarnation answers everything on its
+        // channel; the restart already failed the old queue.
+        assert!(s.old_queue.is_empty(), "the restart consumed the old queue");
+        for &job in &s.new_queue {
+            let snap = s.snapshots[job as usize - 1];
+            assert_eq!(
+                snap,
+                Some(1),
+                "job {job} snapshotted pre-restart must not be served by the new incarnation"
+            );
+            assert!(!s.lost.contains(&job), "answered and lost must be disjoint");
+        }
+        assert_eq!(
+            s.new_queue.len() + s.lost.len(),
+            2,
+            "every dispatched job resolves exactly once (answered xor lost)"
+        );
+        served_by_new += s.new_queue.len();
+    });
+    assert_eq!(n, 30, "multinomial 5!/(2!·2!·1!) schedules");
+    assert!(
+        served_by_new > 0,
+        "schedules where a dispatcher snapshots after the restart must serve via the new incarnation"
+    );
+}
+
+#[test]
+fn a_shared_queue_restart_is_caught_answering_stale_jobs() {
+    // Negative test: if the restart reused the old channel, a job sent
+    // to the *dead* incarnation would be answered by the new one — the
+    // checker must find such a schedule, or model E proves nothing.
+    let start = SlotReuse {
+        epoch: 0,
+        old_queue: Vec::new(),
+        new_queue: Vec::new(),
+        lost: Vec::new(),
+        snapshots: [None, None],
+        shared: true,
+    };
+    let progs = vec![
+        vec![ReuseStep::Snapshot(0), ReuseStep::Send(0)],
+        vec![ReuseStep::Snapshot(1), ReuseStep::Send(1)],
+        vec![ReuseStep::Restart],
+    ];
+    let mut stale_answers = 0usize;
+    explore(&start, &progs, &reuse_exec, &mut |s: &SlotReuse| {
+        stale_answers += s
+            .new_queue
+            .iter()
+            .filter(|&&job| s.snapshots[job as usize - 1] == Some(0))
+            .count();
+    });
+    assert!(stale_answers > 0, "the checker must expose the stale-answer schedules");
 }
 
 /// All permutations of `rest` appended to `prefix` (duplicates included;

@@ -1,0 +1,223 @@
+//! Throughput-regression gate for the hot-path benchmark reports.
+//!
+//! Usage: `bench-gate <baseline.json> <current.json>`
+//!
+//! Both files use the flat shape `coordinator_hotpath` emits:
+//! `{"bench_name": {"median_ns": ..., "per_sec": ..., ...}, ...}`.
+//! The gate compares `per_sec` for every benchmark named in the
+//! baseline and fails (exit 1) when any falls below
+//! `baseline * (1 - tolerance)` or disappears from the current report.
+//! Benchmarks only present in the current report are listed but never
+//! fail the gate — coverage can grow freely.
+//!
+//! The baseline may carry a `_meta` object (ignored as a benchmark):
+//! - `tolerance`: allowed fractional drop, default 0.20;
+//! - `pending: true`: no trusted baseline has been recorded yet — the
+//!   gate prints what it *would* compare and exits 0, so the CI step
+//!   can land before the first quiet-machine baseline run. Arm the gate
+//!   by replacing the baseline with a real report (see EXPERIMENTS.md).
+
+use std::process::ExitCode;
+
+use ppac::util::json::Json;
+
+const DEFAULT_TOLERANCE: f64 = 0.20;
+
+/// One baseline benchmark checked against the current report.
+#[derive(Debug, PartialEq)]
+struct Verdict {
+    name: String,
+    baseline_per_sec: f64,
+    current_per_sec: Option<f64>,
+    regressed: bool,
+}
+
+/// Compare every non-`_meta` baseline entry's `per_sec` against the
+/// current report under the given tolerance.
+fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Vec<Verdict>, String> {
+    let Json::Obj(base_entries) = baseline else {
+        return Err("baseline is not a JSON object".into());
+    };
+    let mut verdicts = Vec::new();
+    for (name, entry) in base_entries {
+        if name.starts_with('_') {
+            continue; // metadata, not a benchmark
+        }
+        let base = entry
+            .get("per_sec")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("baseline entry {name:?} has no numeric per_sec"))?;
+        let cur = current.get(name).and_then(|e| e.get("per_sec")).and_then(Json::as_f64);
+        let regressed = match cur {
+            Some(c) => c < base * (1.0 - tolerance),
+            None => true, // vanished benchmark: lost coverage fails too
+        };
+        verdicts.push(Verdict {
+            name: name.clone(),
+            baseline_per_sec: base,
+            current_per_sec: cur,
+            regressed,
+        });
+    }
+    Ok(verdicts)
+}
+
+/// Benchmarks in the current report with no baseline yet (informational).
+fn unbaselined(baseline: &Json, current: &Json) -> Vec<String> {
+    let Json::Obj(cur_entries) = current else {
+        return Vec::new();
+    };
+    cur_entries
+        .keys()
+        .filter(|k| !k.starts_with('_') && baseline.get(k).is_none())
+        .cloned()
+        .collect()
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn run(baseline_path: &str, current_path: &str) -> Result<bool, String> {
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    let meta = baseline.get("_meta");
+    let pending = meta
+        .and_then(|m| m.get("pending"))
+        .is_some_and(|p| matches!(p, Json::Bool(true)));
+    let tolerance = meta
+        .and_then(|m| m.get("tolerance"))
+        .and_then(Json::as_f64)
+        .unwrap_or(DEFAULT_TOLERANCE);
+
+    let verdicts = compare(&baseline, &current, tolerance)?;
+    println!(
+        "bench-gate: {} baselined benchmark(s), tolerance {:.0}%{}",
+        verdicts.len(),
+        tolerance * 100.0,
+        if pending { " [PENDING baseline — advisory only]" } else { "" }
+    );
+    for v in &verdicts {
+        match v.current_per_sec {
+            Some(c) => {
+                let delta = (c / v.baseline_per_sec - 1.0) * 100.0;
+                println!(
+                    "  {} {:<40} baseline {:>14.1}/s  current {:>14.1}/s  ({delta:+.1}%)",
+                    if v.regressed { "FAIL" } else { " ok " },
+                    v.name,
+                    v.baseline_per_sec,
+                    c,
+                );
+            }
+            None => println!("  FAIL {:<40} missing from the current report", v.name),
+        }
+    }
+    for name in unbaselined(&baseline, &current) {
+        println!("  new  {name:<40} no baseline yet (not gated)");
+    }
+
+    let failures = verdicts.iter().filter(|v| v.regressed).count();
+    if pending {
+        if failures > 0 {
+            println!("bench-gate: {failures} would-be failure(s) ignored: baseline is pending");
+        }
+        return Ok(true);
+    }
+    if failures > 0 {
+        println!("bench-gate: {failures} benchmark(s) regressed past tolerance");
+        return Ok(false);
+    }
+    println!("bench-gate: all benchmarks within tolerance");
+    Ok(true)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [baseline_path, current_path] = args.as_slice() else {
+        eprintln!("usage: bench-gate <baseline.json> <current.json>");
+        return ExitCode::from(2);
+    };
+    match run(baseline_path, current_path) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(pairs: &[(&str, f64)]) -> Json {
+        Json::parse(&format!(
+            "{{{}}}",
+            pairs
+                .iter()
+                .map(|(k, v)| format!("\"{k}\": {{\"per_sec\": {v}, \"median_ns\": 1}}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report(&[("scatter", 1000.0)]);
+        let cur = report(&[("scatter", 810.0)]); // -19%, inside 20%
+        let v = compare(&base, &cur, 0.20).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(!v[0].regressed);
+    }
+
+    #[test]
+    fn past_tolerance_fails() {
+        let base = report(&[("scatter", 1000.0), ("gather", 500.0)]);
+        let cur = report(&[("scatter", 799.0), ("gather", 500.0)]); // -20.1%
+        let v = compare(&base, &cur, 0.20).unwrap();
+        assert!(v.iter().find(|x| x.name == "scatter").unwrap().regressed);
+        assert!(!v.iter().find(|x| x.name == "gather").unwrap().regressed);
+    }
+
+    #[test]
+    fn missing_benchmark_counts_as_regression() {
+        let base = report(&[("scatter", 1000.0)]);
+        let cur = report(&[("gather", 9999.0)]);
+        let v = compare(&base, &cur, 0.20).unwrap();
+        assert!(v[0].regressed);
+        assert_eq!(v[0].current_per_sec, None);
+    }
+
+    #[test]
+    fn meta_keys_are_not_benchmarks_and_new_entries_are_listed() {
+        let base = Json::parse(
+            r#"{"_meta": {"pending": true, "tolerance": 0.1},
+                "scatter": {"per_sec": 100.0}}"#,
+        )
+        .unwrap();
+        let cur = report(&[("scatter", 95.0), ("gather", 1.0)]);
+        let v = compare(&base, &cur, 0.10).unwrap();
+        assert_eq!(v.len(), 1, "_meta must not be compared as a benchmark");
+        assert!(!v[0].regressed);
+        assert_eq!(unbaselined(&base, &cur), vec!["gather".to_string()]);
+    }
+
+    #[test]
+    fn improvements_and_equal_throughput_pass() {
+        let base = report(&[("scatter", 1000.0)]);
+        for cur_v in [1000.0, 5000.0] {
+            let cur = report(&[("scatter", cur_v)]);
+            assert!(!compare(&base, &cur, 0.20).unwrap()[0].regressed);
+        }
+    }
+
+    #[test]
+    fn malformed_baseline_entry_is_an_error() {
+        let base = Json::parse(r#"{"scatter": {"median_ns": 5}}"#).unwrap();
+        let cur = report(&[("scatter", 1.0)]);
+        assert!(compare(&base, &cur, 0.20).is_err());
+    }
+}

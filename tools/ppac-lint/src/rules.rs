@@ -27,8 +27,16 @@ const KEYWORDS: &[&str] = &[
 /// where a `Relaxed` access is a *decision*, not a default. Monotonic
 /// report counters (`retries`, `jobs_completed`, …) are deliberately
 /// absent — Relaxed is always right for them.
-const HANDOFF: &[&str] =
-    &["dead", "inflight", "placed", "killed", "kill_flags", "gathers_inflight", "last_sweep_ms"];
+const HANDOFF: &[&str] = &[
+    "dead",
+    "inflight",
+    "placed",
+    "killed",
+    "kill_flags",
+    "gathers_inflight",
+    "last_sweep_ms",
+    "reducer_queue_depth",
+];
 
 /// How many lines above a `Relaxed` use the `// ordering:` justification
 /// may start (multi-line comment blocks, a guard `if let` or a wrapped
@@ -38,7 +46,7 @@ const ORDERING_COMMENT_WINDOW: usize = 6;
 /// Occupancy gauges: a submission-side `fetch_add` must have a
 /// completion/reclaim decrement (`fetch_sub`/`fetch_update`/`swap`)
 /// somewhere in the corpus, or workers look busy forever.
-const GAUGES: &[&str] = &["inflight", "placed", "gathers_inflight"];
+const GAUGES: &[&str] = &["inflight", "placed", "gathers_inflight", "reducer_queue_depth"];
 
 /// Submission counters and the completion-side counters that must
 /// absorb them (`submitted = completed + failed + lost` is the
@@ -58,6 +66,10 @@ const MONOTONIC: &[&str] = &[
     "retries",
     "failovers",
     "workers_lost",
+    "workers_restarted",
+    "heartbeats_missed",
+    "rebalanced_shards",
+    "beats",
     "gathers",
     "matrices_unregistered",
     "auto_evictions",
