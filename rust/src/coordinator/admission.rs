@@ -1,0 +1,493 @@
+//! Admission control: bounded in-flight budgets for the serving stack.
+//!
+//! The coordinator accepts work through an [`AdmissionGate`] — a
+//! `Mutex<GateState>` + `Condvar` pair counting *logical* jobs between
+//! admission (just before scatter) and gather completion. Two gates
+//! stack: the coordinator's global gate (budget
+//! `CoordinatorConfig::max_inflight_jobs`) counts every job, and each
+//! registered matrix owns a per-matrix gate (unbounded unless
+//! [`Coordinator::set_matrix_inflight_limit`] arms it). Acquisition
+//! order is global → matrix; a matrix-level shed releases the global
+//! count before returning, so the two budgets can never deadlock or
+//! leak against each other.
+//!
+//! Over-budget behavior is the [`AdmissionPolicy`]:
+//!
+//! - [`AdmissionPolicy::Reject`] sheds immediately with a typed
+//!   [`JobError::Overloaded`] carrying the observed depth;
+//! - [`AdmissionPolicy::Block`] parks the submitter on the condvar for
+//!   a bounded wait (capped by the job's own deadline, if sooner),
+//!   then sheds.
+//!
+//! [`Priority`] tiers act here and only here: `High` is never shed for
+//! load (it still counts against the budget, and a drain still refuses
+//! it), `Normal` sheds at the full budget, `Low` at half — headroom
+//! for normal traffic under pressure. A batch larger than the whole
+//! budget is admitted whenever the gate is idle (`inflight == 0`), so
+//! oversized batches degrade to one-at-a-time instead of starving
+//! forever.
+//!
+//! The released side is an RAII [`AdmissionPermit`] carried by the
+//! gather task: whatever path ends the gather — normal completion, a
+//! typed error, cancellation, a failed reducer-pool submit, or the
+//! task dying in a dropped channel — the permit's `Drop` returns the
+//! count and wakes blocked submitters. Accounting therefore balances
+//! on *every* exit path by construction, the same discipline as the
+//! router's saturating occupancy protocol.
+//!
+//! Counting lives in the mutex (no handoff atomics to order): the
+//! condvar is the wakeup edge and the guard is the synchronization.
+//! The only atomics touched here are the [`Metrics`] report counters
+//! (`jobs_shed`, `deadlines_exceeded`) and the `admission_queue_depth`
+//! gauge of currently-parked submitters.
+//!
+//! [`Coordinator::set_matrix_inflight_limit`]: crate::coordinator::Coordinator::set_matrix_inflight_limit
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::job::{JobError, Priority};
+use super::metrics::Metrics;
+use crate::util::sync::{lock, Ordering};
+
+/// What `submit`/`submit_batch` do when the in-flight budget is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Shed immediately: the submit returns
+    /// [`JobError::Overloaded`] with the depth observed at the
+    /// decision. The right default for latency-sensitive callers that
+    /// can fail over or retry with backoff.
+    #[default]
+    Reject,
+    /// Backpressure: park the submitter up to `timeout` waiting for
+    /// capacity (a job deadline that lands sooner caps the wait), then
+    /// shed. The right choice for batch/throughput callers that would
+    /// otherwise spin on retries.
+    Block {
+        /// Longest a submitter may wait for capacity.
+        timeout: Duration,
+    },
+}
+
+/// Counter state under the gate's mutex; the condvar signals every
+/// transition that could unblock a waiter (release, limit change,
+/// drain).
+struct GateState {
+    /// Logical jobs admitted and not yet finished under this gate.
+    inflight: u64,
+    /// In-flight budget; 0 = unbounded.
+    limit: u64,
+    /// One-way flag: admissions are closed (a drain or shutdown is in
+    /// progress); every admission attempt — blocked or fresh — resolves
+    /// `Overloaded { draining: true }`.
+    draining: bool,
+}
+
+/// A bounded in-flight-jobs counter with policy-driven admission. See
+/// the module docs for how the global and per-matrix gates stack.
+pub struct AdmissionGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl AdmissionGate {
+    /// A gate with the given budget (0 = unbounded).
+    pub fn new(limit: u64) -> Self {
+        AdmissionGate {
+            state: Mutex::new(GateState { inflight: 0, limit, draining: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Re-arm the budget (0 = unbounded). Raising it wakes blocked
+    /// submitters; lowering it never evicts admitted jobs — the gate
+    /// just refuses new work until the excess drains.
+    pub fn set_limit(&self, limit: u64) {
+        lock(&self.state).limit = limit;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently admitted under this gate.
+    pub fn inflight(&self) -> u64 {
+        lock(&self.state).inflight
+    }
+
+    /// Close admissions permanently (drain/shutdown). Blocked
+    /// submitters wake and resolve `Overloaded { draining: true }`.
+    pub fn set_draining(&self) {
+        lock(&self.state).draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether admissions are closed.
+    pub fn is_draining(&self) -> bool {
+        lock(&self.state).draining
+    }
+
+    /// The budget `priority` admits against: `None` = no load shedding
+    /// for this tier.
+    fn effective_limit(limit: u64, priority: Priority) -> Option<u64> {
+        if limit == 0 || priority == Priority::High {
+            return None;
+        }
+        match priority {
+            Priority::Low => Some((limit + 1) / 2),
+            _ => Some(limit),
+        }
+    }
+
+    /// Whether this gate has an armed (nonzero) budget.
+    pub fn limited(&self) -> bool {
+        lock(&self.state).limit > 0
+    }
+
+    /// Try to admit `njobs` logical jobs, applying `policy` when over
+    /// budget. On success the caller owns `njobs` counts and must
+    /// `release` them (the [`AdmissionPermit`] does this on drop).
+    pub fn admit(
+        &self,
+        njobs: u64,
+        priority: Priority,
+        policy: AdmissionPolicy,
+        deadline: Option<Instant>,
+        metrics: &Metrics,
+    ) -> Result<(), JobError> {
+        // The block deadline anchors at the *first* park — wakeups that
+        // lose the capacity race must not restart the timeout.
+        let mut block_deadline: Option<Instant> = None;
+        let mut g = lock(&self.state);
+        loop {
+            if g.draining {
+                metrics.jobs_shed.fetch_add(njobs, Ordering::Relaxed);
+                return Err(JobError::Overloaded {
+                    inflight: g.inflight,
+                    limit: g.limit,
+                    draining: true,
+                });
+            }
+            let lim = match Self::effective_limit(g.limit, priority) {
+                None => break,
+                Some(lim) if g.inflight == 0 || g.inflight + njobs <= lim => break,
+                Some(lim) => lim,
+            };
+            let AdmissionPolicy::Block { timeout } = policy else {
+                metrics.jobs_shed.fetch_add(njobs, Ordering::Relaxed);
+                return Err(JobError::Overloaded {
+                    inflight: g.inflight,
+                    limit: lim,
+                    draining: false,
+                });
+            };
+            let now = Instant::now();
+            if deadline.is_some_and(|d| now >= d) {
+                // The job expired while queued for admission — it never
+                // reaches a gather, so it is counted here (gathered
+                // jobs count in `GatherState::finish`).
+                metrics.deadlines_exceeded.fetch_add(njobs, Ordering::Relaxed);
+                return Err(JobError::DeadlineExceeded);
+            }
+            // Park bounded by the policy timeout and, if sooner, the
+            // job's own deadline.
+            let wake = *block_deadline.get_or_insert_with(|| {
+                let mut w = now.checked_add(timeout).unwrap_or(now);
+                if let Some(d) = deadline {
+                    w = w.min(d);
+                }
+                w
+            });
+            if now >= wake {
+                metrics.jobs_shed.fetch_add(njobs, Ordering::Relaxed);
+                return Err(JobError::Overloaded {
+                    inflight: g.inflight,
+                    limit: lim,
+                    draining: false,
+                });
+            }
+            g = self.block_until(g, wake, metrics);
+        }
+        g.inflight += njobs;
+        Ok(())
+    }
+
+    /// One bounded condvar park, keeping the `admission_queue_depth`
+    /// gauge honest around the wait. Returns the re-acquired guard;
+    /// the caller re-evaluates capacity (wakeups may be spurious).
+    fn block_until<'a>(
+        &'a self,
+        g: std::sync::MutexGuard<'a, GateState>,
+        wake: Instant,
+        metrics: &Metrics,
+    ) -> std::sync::MutexGuard<'a, GateState> {
+        // ordering: admission_queue_depth is a report gauge — snapshot
+        // readers tolerate staleness; the gate's mutex/condvar pair is
+        // the real synchronization edge for the admission decision.
+        metrics.admission_queue_depth.fetch_add(1, Ordering::Relaxed);
+        let dur = wake.saturating_duration_since(Instant::now());
+        let (g, _timed_out) = self
+            .cv
+            .wait_timeout(g, dur)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // ordering: gauge rollback pairing the fetch_add above; same
+        // mutex/condvar edge, snapshot-only readers.
+        metrics.admission_queue_depth.fetch_sub(1, Ordering::Relaxed);
+        g
+    }
+
+    /// Give back `njobs` counts and wake blocked submitters and any
+    /// `wait_idle` caller.
+    pub fn release(&self, njobs: u64) {
+        let mut g = lock(&self.state);
+        g.inflight = g.inflight.saturating_sub(njobs);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Park until every admitted job released (the drain's wait), up
+    /// to `timeout`; returns whether the gate is idle.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        let mut g = lock(&self.state);
+        while g.inflight > 0 {
+            let elapsed = start.elapsed();
+            if elapsed >= timeout {
+                return false;
+            }
+            let (back, _timed_out) = self
+                .cv
+                .wait_timeout(g, timeout - elapsed)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            g = back;
+        }
+        true
+    }
+}
+
+/// RAII claim on admission counts: the global gate always, plus the
+/// matrix gate when the matrix has an armed budget. Dropping the
+/// permit releases both and wakes blocked submitters — whichever path
+/// ends the gather.
+pub struct AdmissionPermit {
+    global: Arc<AdmissionGate>,
+    matrix: Option<Arc<AdmissionGate>>,
+    jobs: u64,
+}
+
+impl AdmissionPermit {
+    /// Admit `njobs` through the global gate, then the matrix gate.
+    /// A matrix-level shed releases the global claim before returning,
+    /// so a failed acquisition leaves no residue.
+    pub fn acquire(
+        global: &Arc<AdmissionGate>,
+        matrix: &Arc<AdmissionGate>,
+        njobs: u64,
+        priority: Priority,
+        policy: AdmissionPolicy,
+        deadline: Option<Instant>,
+        metrics: &Metrics,
+    ) -> Result<AdmissionPermit, JobError> {
+        global.admit(njobs, priority, policy, deadline, metrics)?;
+        let per_matrix = if matrix.limited() {
+            if let Err(e) = matrix.admit(njobs, priority, policy, deadline, metrics) {
+                global.release(njobs);
+                return Err(e);
+            }
+            Some(Arc::clone(matrix))
+        } else {
+            None
+        };
+        Ok(AdmissionPermit { global: Arc::clone(global), matrix: per_matrix, jobs: njobs })
+    }
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        if let Some(m) = &self.matrix {
+            m.release(self.jobs);
+        }
+        self.global.release(self.jobs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shed(err: JobError) -> (u64, u64, bool) {
+        match err {
+            JobError::Overloaded { inflight, limit, draining } => (inflight, limit, draining),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reject_policy_sheds_at_the_limit_with_observed_depth() {
+        let m = Metrics::default();
+        let g = AdmissionGate::new(2);
+        g.admit(2, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        let e = g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap_err();
+        assert_eq!(shed(e), (2, 2, false));
+        assert_eq!(m.jobs_shed.load(Ordering::Relaxed), 1);
+        g.release(1);
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        assert_eq!(g.inflight(), 2);
+    }
+
+    #[test]
+    fn an_idle_gate_admits_batches_larger_than_the_budget() {
+        let m = Metrics::default();
+        let g = AdmissionGate::new(2);
+        // Starvation guard: a 5-job batch admits against an idle gate…
+        g.admit(5, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        assert_eq!(g.inflight(), 5);
+        // …but nothing else fits until it drains.
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap_err();
+        g.release(5);
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+    }
+
+    #[test]
+    fn priority_tiers_shed_low_first_and_never_high() {
+        let m = Metrics::default();
+        let g = AdmissionGate::new(4);
+        g.admit(2, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        // Low's budget is half (2): already full.
+        let e = g.admit(1, Priority::Low, AdmissionPolicy::Reject, None, &m).unwrap_err();
+        assert_eq!(shed(e), (2, 2, false));
+        // Normal still fits…
+        g.admit(2, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        // …and once the full budget is hit, High is still admitted
+        // (counted over budget), Normal is not.
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap_err();
+        g.admit(1, Priority::High, AdmissionPolicy::Reject, None, &m).unwrap();
+        assert_eq!(g.inflight(), 5);
+    }
+
+    #[test]
+    fn block_policy_admits_when_capacity_frees() {
+        let m = Arc::new(Metrics::default());
+        let g = Arc::new(AdmissionGate::new(1));
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        let (g2, m2) = (Arc::clone(&g), Arc::clone(&m));
+        let waiter = std::thread::spawn(move || {
+            g2.admit(
+                1,
+                Priority::Normal,
+                AdmissionPolicy::Block { timeout: Duration::from_secs(10) },
+                None,
+                &m2,
+            )
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        g.release(1);
+        waiter.join().unwrap().unwrap();
+        assert_eq!(g.inflight(), 1);
+        assert_eq!(m.admission_queue_depth.load(Ordering::Relaxed), 0, "gauge drained");
+        assert_eq!(m.jobs_shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn block_policy_sheds_after_its_bounded_wait() {
+        let m = Metrics::default();
+        let g = AdmissionGate::new(1);
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        let e = g
+            .admit(
+                1,
+                Priority::Normal,
+                AdmissionPolicy::Block { timeout: Duration::from_millis(10) },
+                None,
+                &m,
+            )
+            .unwrap_err();
+        assert_eq!(shed(e), (1, 1, false));
+        assert_eq!(m.admission_queue_depth.load(Ordering::Relaxed), 0, "gauge drained");
+    }
+
+    #[test]
+    fn a_deadline_sooner_than_the_block_timeout_resolves_typed() {
+        let m = Metrics::default();
+        let g = AdmissionGate::new(1);
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        let e = g
+            .admit(
+                1,
+                Priority::Normal,
+                AdmissionPolicy::Block { timeout: Duration::from_secs(10) },
+                Some(Instant::now() + Duration::from_millis(10)),
+                &m,
+            )
+            .unwrap_err();
+        assert_eq!(e, JobError::DeadlineExceeded);
+        assert_eq!(m.deadlines_exceeded.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn draining_refuses_fresh_work_and_wakes_blocked_submitters() {
+        let m = Arc::new(Metrics::default());
+        let g = Arc::new(AdmissionGate::new(1));
+        g.admit(1, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        let (g2, m2) = (Arc::clone(&g), Arc::clone(&m));
+        let waiter = std::thread::spawn(move || {
+            g2.admit(
+                1,
+                Priority::Normal,
+                AdmissionPolicy::Block { timeout: Duration::from_secs(10) },
+                None,
+                &m2,
+            )
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        g.set_draining();
+        let e = waiter.join().unwrap().unwrap_err();
+        assert_eq!(shed(e), (1, 1, true), "a drain wakes blocked submitters typed");
+        // High priority is refused too: draining closes every tier.
+        let e = g.admit(1, Priority::High, AdmissionPolicy::Reject, None, &m).unwrap_err();
+        assert!(matches!(e, JobError::Overloaded { draining: true, .. }));
+    }
+
+    #[test]
+    fn permit_releases_both_gates_and_a_matrix_shed_leaves_no_residue() {
+        let m = Metrics::default();
+        let global = Arc::new(AdmissionGate::new(10));
+        let matrix = Arc::new(AdmissionGate::new(1));
+        let p = AdmissionPermit::acquire(
+            &global,
+            &matrix,
+            1,
+            Priority::Normal,
+            AdmissionPolicy::Reject,
+            None,
+            &m,
+        )
+        .unwrap();
+        assert_eq!((global.inflight(), matrix.inflight()), (1, 1));
+        // The matrix budget is full: the global claim must roll back.
+        let e = AdmissionPermit::acquire(
+            &global,
+            &matrix,
+            1,
+            Priority::Normal,
+            AdmissionPolicy::Reject,
+            None,
+            &m,
+        )
+        .unwrap_err();
+        assert_eq!(shed(e), (1, 1, false));
+        assert_eq!(global.inflight(), 1, "matrix shed rolled the global claim back");
+        drop(p);
+        assert_eq!((global.inflight(), matrix.inflight()), (0, 0));
+    }
+
+    #[test]
+    fn wait_idle_observes_releases() {
+        let g = Arc::new(AdmissionGate::new(0));
+        let m = Metrics::default();
+        g.admit(3, Priority::Normal, AdmissionPolicy::Reject, None, &m).unwrap();
+        assert!(!g.wait_idle(Duration::from_millis(5)), "still occupied");
+        let g2 = Arc::clone(&g);
+        let t = std::thread::spawn(move || g2.wait_idle(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(10));
+        g.release(3);
+        assert!(t.join().unwrap(), "wait_idle wakes on the last release");
+    }
+}

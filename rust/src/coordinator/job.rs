@@ -111,6 +111,38 @@ pub enum JobError {
     /// live workers remaining, the gather re-dispatches instead of
     /// surfacing this).
     WorkerLost,
+    /// Admission control shed the job: the coordinator was at its
+    /// in-flight budget (or `draining`) and the admission policy chose
+    /// to reject rather than queue. Carries the depth observed at the
+    /// decision so clients can implement load-aware backoff.
+    Overloaded {
+        /// Logical jobs in flight when the job was shed.
+        inflight: u64,
+        /// The budget that was hit (`CoordinatorConfig::max_inflight_jobs`
+        /// or a per-matrix override; 0 only when shed for draining).
+        limit: u64,
+        /// True when the shed was caused by a [`drain`] in progress
+        /// rather than load — retrying against this coordinator is
+        /// pointless, the caller should fail over.
+        ///
+        /// [`drain`]: crate::coordinator::Coordinator::drain
+        draining: bool,
+    },
+    /// The job's end-to-end deadline (`JobOptions::deadline`) passed
+    /// before a result could be produced — at admission, on a worker
+    /// queue (the worker skips the compute), or during gather retry
+    /// waves.
+    DeadlineExceeded,
+    /// The client cancelled the job via [`JobHandle::cancel`] /
+    /// [`BatchHandle::cancel`] before it resolved.
+    ///
+    /// [`JobHandle::cancel`]: crate::coordinator::JobHandle::cancel
+    /// [`BatchHandle::cancel`]: crate::coordinator::BatchHandle::cancel
+    Cancelled,
+    /// The coordinator tore down (shutdown or a finished drain) before
+    /// this job resolved — the handle will never produce a payload and
+    /// the caller should not retry against this instance.
+    CoordinatorGone,
 }
 
 impl fmt::Display for JobError {
@@ -130,6 +162,20 @@ impl fmt::Display for JobError {
             }
             JobError::Unsupported { reason } => write!(f, "unsupported job: {reason}"),
             JobError::WorkerLost => write!(f, "a worker disappeared before answering"),
+            JobError::Overloaded { inflight, limit, draining } => {
+                if *draining {
+                    write!(f, "coordinator draining: admissions closed ({inflight} in flight)")
+                } else {
+                    write!(f, "overloaded: {inflight} jobs in flight at limit {limit}")
+                }
+            }
+            JobError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the job could be served")
+            }
+            JobError::Cancelled => write!(f, "job cancelled by the client"),
+            JobError::CoordinatorGone => {
+                write!(f, "coordinator shut down before the job resolved")
+            }
         }
     }
 }
@@ -200,6 +246,50 @@ impl MultibitSpec {
             (MatrixInterp::Pm1, NumberFormat::OddInt) => 1,
             _ => 0,
         }
+    }
+}
+
+/// Admission priority of a logical job (or batch). Priorities act at
+/// the *admission* gate only — once admitted, every job is scheduled
+/// identically — and trade shed probability, not latency:
+///
+/// - [`Priority::High`] is never shed for load (it is still counted
+///   against the budget, and still refused while draining);
+/// - [`Priority::Normal`] sheds when the in-flight budget is full;
+/// - [`Priority::Low`] sheds once half the budget is occupied, keeping
+///   headroom for normal traffic under pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Best-effort: shed at half the in-flight budget.
+    Low,
+    /// The default tier: shed only at the full budget.
+    #[default]
+    Normal,
+    /// Latency-critical: admitted even over budget (never shed for
+    /// load; a drain still refuses it).
+    High,
+}
+
+/// Per-submission options: an end-to-end deadline and an admission
+/// priority. The zero-cost default (`JobOptions::default()`) is what
+/// the plain `submit`/`submit_batch` paths use: no deadline, normal
+/// priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct JobOptions {
+    /// Absolute wall-clock deadline for the *logical* job. Once passed,
+    /// every stage short-circuits: admission refuses it, a worker skips
+    /// the compute and answers [`JobError::DeadlineExceeded`], retry
+    /// waves stop re-dispatching, and the gather finalizes the typed
+    /// error instead of waiting. `None` = no deadline (seed behavior).
+    pub deadline: Option<Instant>,
+    /// Admission tier; see [`Priority`].
+    pub priority: Priority,
+}
+
+impl JobOptions {
+    /// Options with a deadline `timeout` from now, normal priority.
+    pub fn within(timeout: std::time::Duration) -> Self {
+        JobOptions { deadline: Some(Instant::now() + timeout), priority: Priority::Normal }
     }
 }
 
@@ -343,6 +433,14 @@ pub struct Job {
     /// bounded retry loop counts up). Workers echo it back in the
     /// partial — purely observability, never interpreted.
     pub attempt: u32,
+    /// End-to-end deadline of the logical job this shard job belongs
+    /// to. A worker that dequeues an already-expired job answers
+    /// [`JobError::DeadlineExceeded`] without computing.
+    pub deadline: Option<Instant>,
+    /// Admission tier the logical job was admitted under. Carried for
+    /// observability (echoed nowhere today — admission is where
+    /// priority acts); workers do not reorder on it.
+    pub priority: Priority,
     pub respond: Sender<JobResult>,
 }
 

@@ -134,6 +134,27 @@ pub struct Metrics {
     pub reducer_queue_depth: AtomicU64,
     /// Logical jobs that required a host-side reduction of >1 shard.
     pub gathers: AtomicU64,
+    /// Logical jobs refused by admission control (`Overloaded`): the
+    /// in-flight budget was full under `AdmissionPolicy::Reject`, a
+    /// `Block` wait timed out, or the coordinator was draining. Shed
+    /// jobs are *not* counted in `jobs_submitted` — they never enter
+    /// the pipeline.
+    pub jobs_shed: AtomicU64,
+    /// Logical jobs resolved `DeadlineExceeded`: expired at submit,
+    /// while queued for admission, or (counted once per logical job at
+    /// gather finish) on a worker queue / during retry waves. Subset of
+    /// `jobs_failed` for the gathered cases.
+    pub deadlines_exceeded: AtomicU64,
+    /// Logical jobs resolved `Cancelled` via `JobHandle::cancel` /
+    /// `BatchHandle::cancel` (counted at gather finish; subset of
+    /// `jobs_failed`).
+    pub jobs_cancelled: AtomicU64,
+    /// Graceful drains started (`Coordinator::drain`).
+    pub drain_initiated: AtomicU64,
+    /// Submitters currently parked on the admission gate's condvar
+    /// under `AdmissionPolicy::Block` — the backpressure-depth gauge.
+    /// Incremented before each bounded park, decremented on wake.
+    pub admission_queue_depth: AtomicU64,
     /// Matrices dropped via `unregister_matrix`.
     pub matrices_unregistered: AtomicU64,
     /// Matrices swept by the registry TTL (idle longer than
@@ -168,6 +189,11 @@ impl Default for Metrics {
             rebalanced_shards: AtomicU64::new(0),
             reducer_queue_depth: AtomicU64::new(0),
             gathers: AtomicU64::new(0),
+            jobs_shed: AtomicU64::new(0),
+            deadlines_exceeded: AtomicU64::new(0),
+            jobs_cancelled: AtomicU64::new(0),
+            drain_initiated: AtomicU64::new(0),
+            admission_queue_depth: AtomicU64::new(0),
             matrices_unregistered: AtomicU64::new(0),
             auto_evictions: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -271,6 +297,13 @@ impl Metrics {
             // queue-depth gauge; staleness only skews one report line.
             reducer_queue_depth: self.reducer_queue_depth.load(Ordering::Relaxed),
             gathers: self.gathers.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            deadlines_exceeded: self.deadlines_exceeded.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            drain_initiated: self.drain_initiated.load(Ordering::Relaxed),
+            // ordering: Relaxed — point-in-time report read of the
+            // blocked-submitters gauge; staleness only skews one line.
+            admission_queue_depth: self.admission_queue_depth.load(Ordering::Relaxed),
             matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
             auto_evictions: self.auto_evictions.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -328,6 +361,11 @@ pub struct MetricsSnapshot {
     pub rebalanced_shards: u64,
     pub reducer_queue_depth: u64,
     pub gathers: u64,
+    pub jobs_shed: u64,
+    pub deadlines_exceeded: u64,
+    pub jobs_cancelled: u64,
+    pub drain_initiated: u64,
+    pub admission_queue_depth: u64,
     pub matrices_unregistered: u64,
     pub auto_evictions: u64,
     pub batches: u64,

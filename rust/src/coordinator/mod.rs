@@ -60,7 +60,22 @@
 //!    be answered by the new one), shard data reloads lazily from the
 //!    shared registry, and a rebalance pass re-spreads replica groups
 //!    that failover had forced to co-locate.
-//! 5. **Unregister** — [`Coordinator::unregister_matrix`] drops a
+//! 5. **Overload protection** — submits pass an admission gate first:
+//!    [`CoordinatorConfig::max_inflight_jobs`] bounds the logical jobs
+//!    in flight (per-matrix overrides via
+//!    [`Coordinator::set_matrix_inflight_limit`]), with over-budget
+//!    submits shed typed ([`JobError::Overloaded`]) or parked for a
+//!    bounded wait per [`AdmissionPolicy`]. [`JobOptions`] add an
+//!    end-to-end deadline (expired jobs short-circuit at admission, on
+//!    the worker, and in the gather's retry waves —
+//!    [`JobError::DeadlineExceeded`]) and an admission [`Priority`].
+//!    [`BatchHandle::cancel`] cooperatively cancels a gather: open
+//!    pairs finalize [`JobError::Cancelled`] and late worker answers
+//!    fold into their dedup-bitmap tombstones. [`Coordinator::drain`]
+//!    closes admissions, waits (bounded) for outstanding gathers, then
+//!    shuts down; handles orphaned by a teardown resolve
+//!    [`JobError::CoordinatorGone`] instead of blocking forever.
+//! 6. **Unregister** — [`Coordinator::unregister_matrix`] drops a
 //!    matrix's shard replicas from the registry, releases
 //!    affinities/placement counts and evicts resident copies. With
 //!    [`CoordinatorConfig::registry_ttl`] set, matrices idle longer than
@@ -86,6 +101,7 @@
 //! Threads + channels only (the image vendors no tokio); the public API
 //! is synchronous handles over mpsc.
 
+mod admission;
 pub mod job;
 pub mod metrics;
 mod router;
@@ -107,9 +123,11 @@ use crate::error::{PpacError, Result};
 use crate::formats::NumberFormat;
 use crate::sim::PpacConfig;
 
+pub use admission::AdmissionPolicy;
+use admission::{AdmissionGate, AdmissionPermit};
 pub use job::{
-    GatherPlan, JobError, JobInput, JobOutput, JobResult, MatrixId, MatrixKind, MatrixSpec,
-    ModeKey, MultibitSpec, ShardId,
+    GatherPlan, JobError, JobInput, JobOptions, JobOutput, JobResult, MatrixId, MatrixKind,
+    MatrixSpec, ModeKey, MultibitSpec, Priority, ShardId,
 };
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use router::RoutingStats;
@@ -178,6 +196,17 @@ pub struct CoordinatorConfig {
     /// when it idles. 0 (the default) clamps to `reducers` — i.e. no
     /// autoscaling.
     pub max_reducers: usize,
+    /// Admission budget: logical jobs admitted (submitted and not yet
+    /// resolved) before `submit`/`submit_batch` start shedding per the
+    /// [`CoordinatorConfig::admission`] policy. 0 (the default) admits
+    /// unboundedly — the seed behavior. Per-matrix overrides stack on
+    /// top via [`Coordinator::set_matrix_inflight_limit`].
+    pub max_inflight_jobs: usize,
+    /// What an over-budget submit does: shed immediately
+    /// ([`AdmissionPolicy::Reject`], the default) or park for a bounded
+    /// wait ([`AdmissionPolicy::Block`]). Irrelevant while
+    /// `max_inflight_jobs` is 0 and no matrix gate is armed.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -196,6 +225,8 @@ impl Default for CoordinatorConfig {
             supervise: false,
             restart_backoff_ms: 50,
             max_reducers: 0,
+            max_inflight_jobs: 0,
+            admission: AdmissionPolicy::Reject,
         }
     }
 }
@@ -312,6 +343,19 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Admission budget (see
+    /// [`CoordinatorConfig::max_inflight_jobs`]); 0 admits unboundedly.
+    pub fn max_inflight_jobs(mut self, max_inflight_jobs: usize) -> Self {
+        self.cfg.max_inflight_jobs = max_inflight_jobs;
+        self
+    }
+
+    /// Over-budget behavior (see [`CoordinatorConfig::admission`]).
+    pub fn admission(mut self, admission: AdmissionPolicy) -> Self {
+        self.cfg.admission = admission;
+        self
+    }
+
     /// Override the engine options of one worker (later calls for the
     /// same worker win). `build` rejects indices outside `0..workers`.
     pub fn worker_engine(mut self, worker: usize, opts: EngineOpts) -> Self {
@@ -340,6 +384,10 @@ struct ShardedMatrix {
     /// longer than the TTL cannot get its matrix evicted from under
     /// queued jobs.
     gathers_inflight: Arc<AtomicU64>,
+    /// Per-matrix admission gate, stacked on the coordinator's global
+    /// one. Unbounded (limit 0) until
+    /// [`Coordinator::set_matrix_inflight_limit`] arms it.
+    admission: Arc<AdmissionGate>,
 }
 
 /// The registered-matrix table, shared between the coordinator (every
@@ -512,9 +560,16 @@ impl GatherState {
         let pad = self.plan.pad_adjust * part.pad_cols as i64;
         let mut out = Vec::with_capacity(self.count);
         let mut failed = 0u64;
+        let mut cancelled = 0u64;
+        let mut expired = 0u64;
         for idx in 0..self.count {
             let output = if let Some(je) = self.errors[idx].take() {
                 failed += 1;
+                match je {
+                    JobError::Cancelled => cancelled += 1,
+                    JobError::DeadlineExceeded => expired += 1,
+                    _ => {}
+                }
                 Err(je)
             } else if gf2 {
                 Ok(JobOutput::Bits(self.bit_acc[idx][..part.m].to_vec()))
@@ -545,6 +600,16 @@ impl GatherState {
         if failed > 0 {
             self.metrics.jobs_failed.fetch_add(failed, Ordering::Relaxed);
         }
+        // jobs_cancelled / deadlines_exceeded are counted once per
+        // *logical* job, here at the single point every gathered job
+        // resolves (jobs shed before reaching a gather count at the
+        // admission gate instead). Both are subsets of jobs_failed.
+        if cancelled > 0 {
+            self.metrics.jobs_cancelled.fetch_add(cancelled, Ordering::Relaxed);
+        }
+        if expired > 0 {
+            self.metrics.deadlines_exceeded.fetch_add(expired, Ordering::Relaxed);
+        }
         if shards > 1 {
             self.metrics
                 .gathers
@@ -565,6 +630,9 @@ struct RetryCtx {
     submitted: Instant,
     /// Retry waves this gather may spend (the bounded budget).
     budget: usize,
+    /// Re-issued shard jobs carry the batch's original deadline and
+    /// priority, so a worker can still skip them once expired.
+    opts: JobOptions,
 }
 
 /// One gather handed to the reducer pool.
@@ -578,6 +646,19 @@ struct ReduceTask {
     /// Failover re-dispatch context; `None` runs the gather without
     /// retries (unit tests).
     retry: Option<RetryCtx>,
+    /// End-to-end deadline of every job in this gather: once passed,
+    /// the reducer finalizes open pairs as `DeadlineExceeded` instead
+    /// of waiting on workers or spending retry waves.
+    deadline: Option<Instant>,
+    /// Cooperative cancellation latch shared with the batch handle:
+    /// once raised, open pairs finalize as `Cancelled` and late worker
+    /// answers fold into the dedup bitmap's tombstones.
+    cancelled: Arc<AtomicBool>,
+    /// Admission claim of this gather's logical jobs; dropping the task
+    /// — any way the gather ends — releases the budget and wakes
+    /// blocked submitters. `None` for gathers admitted while no gate
+    /// was armed (and unit tests).
+    permit: Option<AdmissionPermit>,
 }
 
 /// Would re-dispatching this failed pair change anything? `WorkerLost`
@@ -630,6 +711,8 @@ fn redispatch(
             input: ctx.inputs[idx].split(&part, cb),
             submitted: ctx.submitted,
             attempt,
+            deadline: ctx.opts.deadline,
+            priority: ctx.opts.priority,
             respond: tx.clone(),
         };
         match ctx.router.send(worker, WorkerMsg::Job(job)) {
@@ -708,6 +791,32 @@ impl ActiveGather {
         Self { task, last_err: HashMap::new(), wave: 0 }
     }
 
+    /// The typed short-circuit verdict this gather is under, if any:
+    /// cancellation wins over deadline expiry (the client asked first).
+    fn short_circuit(&self) -> Option<JobError> {
+        // ordering: Relaxed — cancelled is a one-way latch the handle
+        // raises once; the reducer re-reads it every poll pass and a
+        // stale read only delays the tombstone by one pass.
+        if self.task.cancelled.load(Ordering::Relaxed) {
+            return Some(JobError::Cancelled);
+        }
+        if self.task.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Some(JobError::DeadlineExceeded);
+        }
+        None
+    }
+
+    /// Close every still-open pair with `err` — the cancellation /
+    /// deadline tombstone. The pairs flip in the `got` dedup bitmap, so
+    /// a late worker answer folds into the tombstone (ignored by
+    /// `absorb`) instead of leaking into a finished gather.
+    fn finalize_open(&mut self, err: JobError) {
+        for (idx, shard) in self.task.state.missing_pairs() {
+            self.last_err.remove(&(idx, shard));
+            self.task.state.finalize_error(idx, shard, err.clone());
+        }
+    }
+
     /// Fold one partial in — or, for a transient error with budget
     /// remaining, leave the pair open for the next wave.
     fn ingest(&mut self, partial: JobResult) -> Result<()> {
@@ -746,6 +855,13 @@ impl ActiveGather {
             // counter; nothing orders against it.
             self.task.state.metrics.shard_jobs_lost.fetch_add(lost, Ordering::Relaxed);
         }
+        // A cancelled or expired gather spends no further waves: open
+        // pairs finalize with the short-circuit verdict instead of
+        // being re-issued to workers that would compute dead results.
+        if let Some(err) = self.short_circuit() {
+            self.finalize_open(err);
+            return;
+        }
         match self.task.retry.as_ref() {
             Some(ctx) if self.wave < ctx.budget => {
                 self.wave += 1;
@@ -780,6 +896,13 @@ impl ActiveGather {
     /// spends one unit of the bounded retry budget, and between
     /// boundaries only already-queued partials are consumed.
     fn poll(&mut self) -> Result<GatherPoll> {
+        // Cancellation / deadline expiry short-circuits the whole
+        // gather: every open pair finalizes typed right now — workers
+        // still holding these shard jobs answer into tombstoned pairs
+        // (or a dropped channel) and are ignored.
+        if let Some(err) = self.short_circuit() {
+            self.finalize_open(err);
+        }
         let mut progressed = false;
         loop {
             if self.task.state.complete() {
@@ -932,6 +1055,8 @@ pub struct BatchHandle {
     count: usize,
     done: Receiver<Result<Vec<JobResult>>>,
     taken: bool,
+    /// Cancellation latch shared with the gather's [`ReduceTask`].
+    cancelled: Arc<AtomicBool>,
 }
 
 impl BatchHandle {
@@ -940,12 +1065,31 @@ impl BatchHandle {
         self.base_job_id..self.base_job_id + self.count as u64
     }
 
+    /// Cooperatively cancel the batch. The reducer observes the latch
+    /// at its next poll pass, finalizes every pair still open as
+    /// [`JobError::Cancelled`] and releases the batch's admission
+    /// claim; late worker answers fold into the finalized pairs'
+    /// tombstones instead of leaking. Partials that already folded are
+    /// kept — a subsequent `wait` delivers the mix of completed results
+    /// and typed `Cancelled` errors. Idempotent; a no-op once the
+    /// gather has finished.
+    pub fn cancel(&self) {
+        // ordering: Relaxed — cancelled is a one-way latch; the
+        // reducer re-reads it every poll pass and never writes it, so
+        // there is no ordering edge to publish beyond the flag itself.
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
     fn already_taken() -> PpacError {
         PpacError::Coordinator("batch results already collected".into())
     }
 
     fn reducer_gone() -> PpacError {
-        PpacError::Coordinator("reducer pool disappeared before the gather finished".into())
+        // The done channel disconnected with no outcome: the reducer
+        // pool (and with it the coordinator) tore down under this
+        // handle. Typed, so callers distinguish "shut down, fail over"
+        // from a job-level verdict.
+        PpacError::Job(JobError::CoordinatorGone)
     }
 
     /// Non-blocking poll: `Ok(None)` while shard partials are still
@@ -1022,6 +1166,11 @@ impl JobHandle {
         Self::single(self.inner.wait_timeout(timeout)?)
     }
 
+    /// Cooperatively cancel the job (see [`BatchHandle::cancel`]).
+    pub fn cancel(&self) {
+        self.inner.cancel();
+    }
+
     /// Block until the (gathered) result arrives. A failed job is an
     /// `Ok` result whose [`JobResult::output`] carries the typed
     /// [`JobError`].
@@ -1064,6 +1213,10 @@ pub struct Coordinator {
     /// TTL sweep pacing (millis since `epoch` of the last sweep).
     epoch: Instant,
     last_sweep_ms: AtomicU64,
+    /// Global admission gate: every submit acquires here (budget
+    /// `cfg.max_inflight_jobs`) before scattering; a drain/shutdown
+    /// closes it so racing submits resolve typed.
+    admission: Arc<AdmissionGate>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -1159,6 +1312,7 @@ impl Coordinator {
             next_job: AtomicU64::new(1),
             epoch: Instant::now(),
             last_sweep_ms: AtomicU64::new(0),
+            admission: Arc::new(AdmissionGate::new(cfg.max_inflight_jobs as u64)),
             metrics,
             cfg,
         })
@@ -1358,6 +1512,7 @@ impl Coordinator {
                 shard_replicas,
                 last_used: Mutex::new(Instant::now()),
                 gathers_inflight: Arc::new(AtomicU64::new(0)),
+                admission: Arc::new(AdmissionGate::new(0)),
             }),
         );
         mid
@@ -1445,7 +1600,12 @@ impl Coordinator {
     /// Scatter a batch of same-mode inputs over a matrix's shards and
     /// hand the gather to a reducer; the returned handle waits on the
     /// reduced results.
-    fn scatter(&self, matrix: MatrixId, inputs: &[JobInput]) -> Result<BatchHandle> {
+    fn scatter(
+        &self,
+        matrix: MatrixId,
+        inputs: &[JobInput],
+        opts: JobOptions,
+    ) -> Result<BatchHandle> {
         let sharded = read_lock(&self.shards)
             .get(&matrix)
             .cloned()
@@ -1457,6 +1617,29 @@ impl Coordinator {
         let Some(first_input) = inputs.first() else {
             return Err(PpacError::Coordinator("empty batch".into()));
         };
+        // A deadline already passed never reaches the admission gate —
+        // counted here because the batch never reaches a gather (the
+        // per-logical-job counting point for gathered work).
+        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics
+                .deadlines_exceeded
+                .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+            return Err(PpacError::Job(JobError::DeadlineExceeded));
+        }
+        // Admission: global gate, then the matrix's own. The permit
+        // rides the ReduceTask from here on, so *every* exit path —
+        // validation errors below included — releases the claim via
+        // its Drop and wakes blocked submitters.
+        let permit = AdmissionPermit::acquire(
+            &self.admission,
+            &sharded.admission,
+            inputs.len() as u64,
+            opts.priority,
+            self.cfg.admission,
+            opts.deadline,
+            &self.metrics,
+        )
+        .map_err(PpacError::Job)?;
         let mode = first_input.mode_key();
         // Structural validation only: shape, mode uniformity, matrix
         // kind. Value ranges, pairings and K/L limits are the engine
@@ -1546,6 +1729,8 @@ impl Coordinator {
                         input: input.split(&part, cb),
                         submitted,
                         attempt: 0,
+                        deadline: opts.deadline,
+                        priority: opts.priority,
                         respond: tx.clone(),
                     };
                     outcome = self.router.send(worker, WorkerMsg::Job(job));
@@ -1614,17 +1799,24 @@ impl Coordinator {
             inputs: inputs.to_vec(),
             submitted,
             budget: self.cfg.retry_limit,
+            opts,
         });
+        let cancelled = Arc::new(AtomicBool::new(false));
         let task = ReduceTask {
             rx,
             state,
             done: done_tx,
             inflight: Arc::clone(&inflight),
             retry,
+            deadline: opts.deadline,
+            cancelled: Arc::clone(&cancelled),
+            permit: Some(permit),
         };
         if !self.reducers.submit(task) {
             // ordering: Relaxed — releases the TTL-sweep pin taken
-            // above; the task never reached a reducer.
+            // above; the task never reached a reducer. (The admission
+            // permit released itself when the unsubmitted task
+            // dropped inside the failed hand-off.)
             inflight.fetch_sub(1, Ordering::Relaxed);
             return Err(PpacError::Coordinator("reducer pool shut down".into()));
         }
@@ -1633,12 +1825,24 @@ impl Coordinator {
             count: inputs.len(),
             done: done_rx,
             taken: false,
+            cancelled,
         })
     }
 
     /// Submit one job; returns a handle to wait on.
     pub fn submit(&self, matrix: MatrixId, input: JobInput) -> Result<JobHandle> {
-        let inner = self.scatter(matrix, std::slice::from_ref(&input))?;
+        self.submit_with(matrix, input, JobOptions::default())
+    }
+
+    /// Submit one job with explicit [`JobOptions`] (deadline,
+    /// priority).
+    pub fn submit_with(
+        &self,
+        matrix: MatrixId,
+        input: JobInput,
+        opts: JobOptions,
+    ) -> Result<JobHandle> {
+        let inner = self.scatter(matrix, std::slice::from_ref(&input), opts)?;
         Ok(JobHandle { job_id: inner.base_job_id, inner })
     }
 
@@ -1650,7 +1854,19 @@ impl Coordinator {
         matrix: MatrixId,
         inputs: &[JobInput],
     ) -> Result<BatchHandle> {
-        self.scatter(matrix, inputs)
+        self.submit_batch_with(matrix, inputs, JobOptions::default())
+    }
+
+    /// [`Coordinator::submit_batch`] with explicit [`JobOptions`]; the
+    /// deadline and priority apply to every job of the batch (admission
+    /// is all-or-nothing for a batch).
+    pub fn submit_batch_with(
+        &self,
+        matrix: MatrixId,
+        inputs: &[JobInput],
+        opts: JobOptions,
+    ) -> Result<BatchHandle> {
+        self.scatter(matrix, inputs, opts)
     }
 
     /// Submit many jobs and wait for all results (in submission order).
@@ -1667,12 +1883,50 @@ impl Coordinator {
         handles.into_iter().map(JobHandle::wait).collect()
     }
 
-    /// Graceful shutdown: stop the supervisor *first* (so no fresh
-    /// incarnation can spawn behind the worker joins), drain queues,
-    /// join workers, then retire the reducer pool (it finishes any
-    /// gather still in flight first).
+    /// Logical jobs currently admitted and not yet resolved (the
+    /// admission gate's in-flight count — what
+    /// [`CoordinatorConfig::max_inflight_jobs`] bounds).
+    pub fn inflight_jobs(&self) -> u64 {
+        self.admission.inflight()
+    }
+
+    /// Arm (or, with 0, disarm) a per-matrix in-flight budget on top of
+    /// the global one — QoS isolation so one hot matrix cannot occupy
+    /// the whole coordinator. Takes effect for subsequent submits; jobs
+    /// already admitted are never evicted.
+    pub fn set_matrix_inflight_limit(&self, matrix: MatrixId, limit: usize) -> Result<()> {
+        let sharded = read_lock(&self.shards)
+            .get(&matrix)
+            .cloned()
+            .ok_or_else(|| PpacError::Coordinator(format!("unknown matrix {matrix}")))?;
+        sharded.admission.set_limit(limit as u64);
+        Ok(())
+    }
+
+    /// Graceful drain: close admissions (fresh submits and blocked
+    /// submitters resolve `Overloaded { draining: true }`), wait up to
+    /// `timeout` for every admitted job to finish its gather, then
+    /// [`Coordinator::shutdown`]. Returns whether the coordinator went
+    /// idle within the timeout — `false` means leftover work was cut
+    /// off by the shutdown exactly as an undrained one would.
+    pub fn drain(self, timeout: Duration) -> bool {
+        // ordering: Relaxed — drain_initiated is a monotonic report
+        // counter; nothing orders against it.
+        self.metrics.drain_initiated.fetch_add(1, Ordering::Relaxed);
+        self.admission.set_draining();
+        let idle = self.admission.wait_idle(timeout);
+        self.shutdown();
+        idle
+    }
+
+    /// Graceful shutdown: close admissions (a submit racing the
+    /// teardown resolves typed instead of queueing into it), stop the
+    /// supervisor *first* (so no fresh incarnation can spawn behind the
+    /// worker joins), drain queues, join workers, then retire the
+    /// reducer pool (it finishes any gather still in flight first).
     pub fn shutdown(self) {
-        let Coordinator { cfg, router, slots, reducers, supervisor, .. } = self;
+        let Coordinator { cfg, router, slots, reducers, supervisor, admission, .. } = self;
+        admission.set_draining();
         if let Some((stop_tx, handle)) = supervisor {
             let _ = stop_tx.send(());
             let _ = handle.join();
@@ -1723,7 +1977,13 @@ mod tests {
         let (tx, rx) = channel();
         let (done_tx, done_rx) = channel();
         let state = GatherState::new(plan, 7, 1, Arc::clone(&metrics));
-        let mut handle = BatchHandle { base_job_id: 7, count: 1, done: done_rx, taken: false };
+        let mut handle = BatchHandle {
+            base_job_id: 7,
+            count: 1,
+            done: done_rx,
+            taken: false,
+            cancelled: Arc::new(AtomicBool::new(false)),
+        };
         assert!(handle.try_wait().unwrap().is_none(), "nothing reduced yet");
         assert!(handle
             .wait_timeout(Duration::from_millis(5))
@@ -1741,6 +2001,9 @@ mod tests {
                     done: done_tx,
                     inflight: pinned,
                     retry: None,
+                    deadline: None,
+                    cancelled: Arc::new(AtomicBool::new(false)),
+                    permit: None,
                 })
                 .unwrap();
                 trx
@@ -1789,6 +2052,9 @@ mod tests {
                 done: a_done_tx,
                 inflight: Arc::clone(&a_inflight),
                 retry: None,
+                deadline: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                permit: None,
             })
             .unwrap();
 
@@ -1805,6 +2071,9 @@ mod tests {
                 done: b_done_tx,
                 inflight: Arc::new(AtomicU64::new(1)),
                 retry: None,
+                deadline: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                permit: None,
             })
             .unwrap();
 

@@ -107,6 +107,9 @@ pub struct RoutingStats {
     pub rebalanced_shards: u64,
     /// Gathers handed to the reducer pool and not yet finished.
     pub reducer_queue_depth: u64,
+    /// Submitters currently parked on the admission gate
+    /// (`AdmissionPolicy::Block` backpressure waits).
+    pub admission_queue_depth: u64,
 }
 
 /// One worker slot: the channel of the incarnation currently occupying
@@ -551,6 +554,10 @@ impl Router {
             // ordering: Relaxed — introspection snapshot of the
             // queue-depth gauge; staleness only skews one report.
             reducer_queue_depth: self.metrics.reducer_queue_depth.load(Ordering::Relaxed),
+            // ordering: Relaxed — introspection snapshot of the parked-
+            // submitter gauge; the admission gate's mutex/condvar is
+            // the real synchronization edge.
+            admission_queue_depth: self.metrics.admission_queue_depth.load(Ordering::Relaxed),
         }
     }
 }

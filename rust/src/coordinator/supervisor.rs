@@ -29,7 +29,12 @@
 //!    lazily, but replica groups forced to co-locate on a survivor
 //!    stay crowded forever without this pass.
 //! 4. **Autoscales** the reducer pool between `cfg.reducers` and
-//!    `cfg.max_reducers` off the `reducer_queue_depth` gauge.
+//!    `cfg.max_reducers` off the `reducer_queue_depth` gauge — and off
+//!    the `deadlines_exceeded` counter: jobs expiring between ticks
+//!    mean the serving path is missing its latency obligations, which
+//!    deserves a scale-up even while the queue gauge still looks
+//!    shallow (deadline pressure shows up as latency before it shows
+//!    up as depth).
 //!
 //! Shutdown stops the supervisor *first* (stop signal + join) so no
 //! fresh incarnation can spawn behind the worker joins.
@@ -244,6 +249,9 @@ pub(crate) struct Supervisor {
     state: Vec<SlotState>,
     /// Consecutive ticks the reducer queue-depth gauge read zero.
     idle_ticks: u32,
+    /// `deadlines_exceeded` reading at the previous tick, for the
+    /// deadline-pressure delta the autoscaler reacts to.
+    last_deadlines: u64,
 }
 
 impl Supervisor {
@@ -281,6 +289,7 @@ impl Supervisor {
             stop,
             state,
             idle_ticks: 0,
+            last_deadlines: 0,
         }
     }
 
@@ -416,13 +425,21 @@ impl Supervisor {
     }
 
     /// Grow the reducer pool when more than two gathers per reducer are
-    /// outstanding; retire one after sustained idleness.
+    /// outstanding — or when jobs missed deadlines since the last tick
+    /// (deadline pressure is a latency signal that precedes queue
+    /// depth); retire one after sustained idleness.
     fn autoscale(&mut self) {
         // ordering: Relaxed — the queue-depth gauge is a scaling hint;
         // a stale read only delays one scaling decision by a tick.
         let depth = self.metrics.reducer_queue_depth.load(Ordering::Relaxed);
+        // ordering: Relaxed — deadlines_exceeded is a monotonic report
+        // counter; the tick-to-tick delta is the scaling signal and a
+        // stale read only shifts it into the next tick.
+        let deadlines = self.metrics.deadlines_exceeded.load(Ordering::Relaxed);
+        let deadline_pressure = deadlines > self.last_deadlines;
+        self.last_deadlines = deadlines;
         let n = self.reducers.len().max(1) as u64;
-        if depth > 2 * n {
+        if depth > 2 * n || (deadline_pressure && depth > 0) {
             self.idle_ticks = 0;
             self.reducers.scale_up();
         } else if depth == 0 {
@@ -488,6 +505,9 @@ mod tests {
             done: done_tx,
             inflight: Arc::new(AtomicU64::new(0)),
             retry: None,
+            deadline: None,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            permit: None,
         };
         assert!(!pool.submit(task), "no reducer left to take the gather");
         assert_eq!(

@@ -21,7 +21,7 @@
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::sync::{read_lock, AtomicBool, Ordering, RwLock};
 
@@ -178,7 +178,21 @@ impl Worker {
                 }
             }
             let served = batch.len() as u64;
-            self.serve_batch(key, batch);
+            // Deadline short-circuit: a job that expired while queued is
+            // answered `DeadlineExceeded` without computing — the
+            // client's wait has already moved on, so serving it would
+            // only burn pipeline cycles that live jobs could use. The
+            // live remainder still batches together.
+            let now = Instant::now();
+            let (expired, live): (Vec<Job>, Vec<Job>) = batch
+                .into_iter()
+                .partition(|j| j.deadline.is_some_and(|d| now >= d));
+            if !expired.is_empty() {
+                self.refuse_expired(expired);
+            }
+            if !live.is_empty() {
+                self.serve_batch(key, live);
+            }
             // The jobs leave this worker's queue whether they carried an
             // answer or a typed error — occupancy must reflect that.
             // The decrement saturates so it can race mark_dead's
@@ -189,6 +203,31 @@ impl Worker {
             if shutdown {
                 return;
             }
+        }
+    }
+
+    /// Answer jobs whose deadline passed on this queue, typed and
+    /// without touching the tile. Typed answers still leave the queue,
+    /// so they count into `shard_jobs_failed` exactly like any other
+    /// typed verdict (submitted = completed + failed + lost stays
+    /// balanced); `batch_size: 0` marks them as skipped, not served.
+    fn refuse_expired(&self, expired: Vec<Job>) {
+        self.metrics
+            .shard_jobs_failed
+            .fetch_add(expired.len() as u64, Ordering::Relaxed);
+        for job in expired {
+            let latency_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+            let _ = job.respond.send(JobResult {
+                job_id: job.job_id,
+                output: Err(JobError::DeadlineExceeded),
+                latency_us,
+                cycles_share: 0.0,
+                worker: self.id,
+                batch_size: 0,
+                shard: job.shard_index,
+                fan_out: 1,
+                attempt: job.attempt,
+            });
         }
     }
 

@@ -12,7 +12,9 @@
 //! ppac area-breakdown [--m --n]    Fig. 3 area split
 //! ppac simulate [--m --n --mode --vectors]   ad-hoc workload
 //! ppac serve [--workers --batch --jobs --replicas R --backend blocked|cycle --threads T --ttl-ms MS
-//!             --heartbeat-ms MS --supervise --max-reducers N]   coordinator demo
+//!             --heartbeat-ms MS --supervise --max-reducers N
+//!             --max-inflight J --admission reject|block --admission-timeout-ms MS
+//!             --deadline-ms MS --drain-ms MS]   coordinator demo
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -445,9 +447,14 @@ fn simulate(rest: Vec<String>) -> AnyResult {
 }
 
 fn serve(rest: Vec<String>) -> AnyResult {
-    use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, MatrixSpec};
+    use ppac::coordinator::{
+        AdmissionPolicy, Coordinator, CoordinatorConfig, JobError, JobInput, JobOptions,
+        MatrixSpec,
+    };
     use ppac::engine::{Backend, EngineOpts};
+    use ppac::error::PpacError;
     use ppac::util::config::Config;
+    use std::time::Duration;
     let p = Spec::new()
         .opt("workers")
         .opt("batch")
@@ -461,6 +468,11 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("heartbeat-ms")
         .opt("max-reducers")
         .flag("supervise")
+        .opt("max-inflight")
+        .opt("admission")
+        .opt("admission-timeout-ms")
+        .opt("deadline-ms")
+        .opt("drain-ms")
         .opt("config")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
@@ -484,6 +496,23 @@ fn serve(rest: Vec<String>) -> AnyResult {
     let max_reducers =
         p.usize_or("max-reducers", file.usize_or("coordinator.max_reducers", 0)?)?;
     let supervise = p.flag("supervise") || file.bool_or("coordinator.supervise", false)?;
+    let max_inflight_jobs =
+        p.usize_or("max-inflight", file.usize_or("coordinator.max_inflight_jobs", 0)?)?;
+    let admission_timeout_ms = p.usize_or(
+        "admission-timeout-ms",
+        file.usize_or("coordinator.admission_timeout_ms", 100)?,
+    )? as u64;
+    let admission_name = p.str_or("admission", &file.str_or("coordinator.admission", "reject"));
+    let admission = match admission_name.as_str() {
+        "reject" => AdmissionPolicy::Reject,
+        "block" => {
+            AdmissionPolicy::Block { timeout: Duration::from_millis(admission_timeout_ms) }
+        }
+        other => return Err(format!("unknown admission policy {other} (reject|block)").into()),
+    };
+    let deadline_ms =
+        p.usize_or("deadline-ms", file.usize_or("workload.deadline_ms", 0)?)? as u64;
+    let drain_ms = p.usize_or("drain-ms", file.usize_or("coordinator.drain_ms", 0)?)? as u64;
     let engine = EngineOpts::threaded(threads);
     let tile = PpacConfig::new(m, n);
     let registry_ttl = (ttl_ms > 0).then(|| std::time::Duration::from_millis(ttl_ms as u64));
@@ -498,6 +527,8 @@ fn serve(rest: Vec<String>) -> AnyResult {
         heartbeat_ms,
         supervise,
         max_reducers,
+        max_inflight_jobs,
+        admission,
         ..Default::default()
     })?;
     let mut rng = Xoshiro256pp::seeded(11);
@@ -509,14 +540,29 @@ fn serve(rest: Vec<String>) -> AnyResult {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let handles: Vec<_> = (0..jobs)
-        .map(|i| {
-            let mid = matrices[i % matrices.len()];
-            coord.submit(mid, JobInput::Pm1Mvp(rng.bits(n))).unwrap()
-        })
-        .collect();
+    // With an admission budget armed, an over-budget submit is an
+    // expected, typed outcome of the demo — count it, don't crash.
+    let mut handles = Vec::with_capacity(jobs);
+    let mut shed = 0usize;
+    for i in 0..jobs {
+        let mid = matrices[i % matrices.len()];
+        let opts = if deadline_ms > 0 {
+            JobOptions::within(Duration::from_millis(deadline_ms))
+        } else {
+            JobOptions::default()
+        };
+        match coord.submit_with(mid, JobInput::Pm1Mvp(rng.bits(n)), opts) {
+            Ok(h) => handles.push(h),
+            Err(PpacError::Job(JobError::Overloaded { .. }))
+            | Err(PpacError::Job(JobError::DeadlineExceeded)) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut expired = 0usize;
     for h in handles {
-        h.wait()?;
+        if matches!(h.wait()?.output, Err(JobError::DeadlineExceeded)) {
+            expired += 1;
+        }
     }
     let dt = t0.elapsed().as_secs_f64();
     let snap = coord.metrics.snapshot();
@@ -559,6 +605,13 @@ fn serve(rest: Vec<String>) -> AnyResult {
             snap.reducer_queue_depth
         );
     }
+    if max_inflight_jobs > 0 || shed > 0 || expired > 0 || snap.deadlines_exceeded > 0 {
+        println!(
+            "overload         : budget {} ({admission_name}), {} submits shed, {} jobs past deadline ({} counted), {} still parked",
+            max_inflight_jobs, shed, expired, snap.deadlines_exceeded,
+            snap.admission_queue_depth
+        );
+    }
     println!("occupancy        : per-worker (shard jobs served / batches / sim cycles / in-flight / replica hits)");
     for (i, w) in snap.per_worker.iter().enumerate() {
         println!(
@@ -566,6 +619,16 @@ fn serve(rest: Vec<String>) -> AnyResult {
             w.served, w.batches, w.sim_cycles, w.inflight, w.replica_hits
         );
     }
-    coord.shutdown();
+    // `--drain-ms` is the SIGINT-equivalent teardown: close admissions,
+    // wait (bounded) for in-flight gathers, then shut down.
+    if drain_ms > 0 {
+        let idle = coord.drain(Duration::from_millis(drain_ms));
+        println!(
+            "drain            : {}",
+            if idle { "idle within bound" } else { "timed out; leftovers cut off at shutdown" }
+        );
+    } else {
+        coord.shutdown();
+    }
     Ok(())
 }

@@ -23,8 +23,10 @@
 use std::time::{Duration, Instant};
 
 use ppac::coordinator::{
-    Coordinator, CoordinatorConfig, JobInput, JobOutput, MatrixSpec,
+    AdmissionPolicy, Coordinator, CoordinatorConfig, JobError, JobInput, JobOptions,
+    JobOutput, MatrixSpec,
 };
+use ppac::error::PpacError;
 use ppac::golden;
 use ppac::sim::PpacConfig;
 use ppac::util::rng::Xoshiro256pp;
@@ -218,5 +220,135 @@ fn restarted_slot_reloads_shards_and_serves_again() {
         2,
         "the cold incarnation reloads the shard exactly once"
     );
+    coord.shutdown();
+}
+
+/// The overload storm: offered load 4× the in-flight budget over a
+/// 4-worker grid, seeded tight deadlines and cancellations mixed into
+/// the traffic. No kills — the chaos here is pure pressure. Acceptance:
+/// every submit resolves as a correct success or one of the typed
+/// overload verdicts (`Overloaded`, `DeadlineExceeded`, `Cancelled`)
+/// within a bounded wait, every occupancy gauge drains back to zero,
+/// and the pool stays 4/4 live throughout.
+#[test]
+fn overload_storm_resolves_every_job_and_drains_all_gauges() {
+    let mut rng = Xoshiro256pp::seeded(702);
+    const BUDGET: usize = 64;
+    const OFFERED: usize = 4 * BUDGET;
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 4,
+        max_batch: 4,
+        replicas: 2,
+        retry_limit: 2,
+        heartbeat_ms: 2,
+        supervise: true,
+        restart_backoff_ms: 1,
+        reducers: 1,
+        max_reducers: 3,
+        max_inflight_jobs: BUDGET,
+        admission: AdmissionPolicy::Reject,
+        ..Default::default()
+    })
+    .unwrap();
+    // 64×96 on 32×32 tiles: 6 logical shards × 2 replicas = 12 pins.
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // Fire the whole offered load without waiting: seeded deadlines
+    // (1–4 ms, roughly half the jobs) and a seeded ~1/8 cancellation
+    // rate. Over-budget submits shed typed at the gate.
+    let mut handles = Vec::new();
+    let mut batches = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..OFFERED {
+        let x = rng.bits(96);
+        let opts = if rng.next_u64() % 2 == 0 {
+            JobOptions::within(Duration::from_millis(1 + rng.next_u64() % 4))
+        } else {
+            JobOptions::default()
+        };
+        let cancel = rng.next_u64() % 8 == 0;
+        match coord.submit_with(id, JobInput::Pm1Mvp(x.clone()), opts) {
+            Ok(h) => {
+                if cancel {
+                    h.cancel();
+                }
+                handles.push(h);
+                batches.push(x);
+            }
+            // The two legal submit-side verdicts under pressure: the
+            // gate shed the job, or its deadline lapsed while the
+            // submitting thread was descheduled.
+            Err(PpacError::Job(JobError::Overloaded { draining, .. })) => {
+                assert!(!draining, "nothing drains during the storm");
+                shed += 1;
+            }
+            Err(PpacError::Job(JobError::DeadlineExceeded)) => shed += 1,
+            Err(other) => panic!("illegal submit verdict under overload: {other:?}"),
+        }
+    }
+    assert!(shed > 0, "4x offered load must push the gate past its budget");
+
+    // Every admitted job resolves within a bounded wait — correct, or
+    // one of the typed overload verdicts. Nothing else, never a hang.
+    let (mut correct, mut expired, mut cancelled) = (0usize, 0usize, 0usize);
+    for (h, x) in handles.into_iter().zip(&batches) {
+        let mut h = h;
+        let r = h
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("a storm job hung past the 30 s bound");
+        match r.output {
+            Ok(out) => {
+                assert_eq!(out, pm1_golden(&a, x), "job {}", r.job_id);
+                correct += 1;
+            }
+            Err(JobError::DeadlineExceeded) => expired += 1,
+            Err(JobError::Cancelled) => cancelled += 1,
+            Err(other) => panic!("job {}: illegal storm verdict {other:?}", r.job_id),
+        }
+    }
+    let admitted = OFFERED - shed;
+    assert_eq!(correct + expired + cancelled, admitted, "every admitted job resolved");
+    assert!(correct > 0, "a live pool under pressure still serves some jobs");
+
+    // The pool never lost a worker: pressure is not a liveness fault.
+    let stats = coord.routing_stats();
+    assert_eq!(stats.live_workers, 4, "overload must not kill workers: {stats:?}");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.workers_lost, 0);
+    assert_eq!(snap.jobs_submitted, admitted as u64);
+    assert_eq!(snap.jobs_shed + snap.deadlines_exceeded + snap.jobs_cancelled,
+        (shed + expired + cancelled) as u64,
+        "submit-side sheds and gather-side verdicts all counted exactly once");
+
+    // No gauge may be left inflated once the storm drains: admission
+    // budget, park depth, per-worker occupancy, reducer queue.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            coord.inflight_jobs() == 0
+                && s.admission_queue_depth == 0
+                && s.per_worker.iter().all(|w| w.inflight == 0)
+                && s.reducer_queue_depth == 0
+        }),
+        "every gauge must drain to zero; snapshot: {:?}, inflight {}",
+        coord.metrics.snapshot(),
+        coord.inflight_jobs()
+    );
+    let reducers = coord.reducer_count();
+    assert!(
+        (1..=3).contains(&reducers),
+        "deadline-pressure autoscaling stays within [reducers, max_reducers], got {reducers}"
+    );
+
+    // Post-storm: the same pool at sane load is all-correct again.
+    let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let results = coord.submit_batch(id, &inputs).unwrap().wait().unwrap();
+    for (r, x) in results.iter().zip(&xs) {
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)), "post-storm pool must serve correctly");
+    }
     coord.shutdown();
 }

@@ -1,0 +1,382 @@
+//! Overload protection end to end: admission budgets, deadlines,
+//! cooperative cancellation, graceful drain, and teardown-racing waits.
+//!
+//! Determinism note: these tests hold the admission gate occupied by
+//! submitting one *large* batch (thousands of logical jobs through a
+//! small `max_batch`) — the gate's idle guard admits an oversized batch
+//! against an empty coordinator, and serving it takes orders of
+//! magnitude longer than the immediately-following over-budget submit.
+//! Assertions stay schedule-independent: every submit resolves (typed
+//! or correct) within a bounded wait, and every occupancy gauge drains
+//! to zero afterwards.
+
+use std::time::{Duration, Instant};
+
+use ppac::coordinator::{
+    AdmissionPolicy, Coordinator, CoordinatorConfig, JobError, JobInput, JobOptions,
+    JobOutput, MatrixSpec, Priority,
+};
+use ppac::error::PpacError;
+use ppac::golden;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+fn pm1_golden(a: &[Vec<bool>], x: &[bool]) -> JobOutput {
+    JobOutput::Ints(a.iter().map(|row| golden::pm1_inner(row, x)).collect())
+}
+
+/// Poll `cond` every couple of milliseconds until it holds or `timeout`
+/// elapses; returns the final verdict.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+fn overload_coord(max_inflight: usize, admission: AdmissionPolicy) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 1,
+        max_batch: 4,
+        max_inflight_jobs: max_inflight,
+        admission,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// A batch big enough that its gather is still holding the admission
+/// budget while the test pokes the gate from the submit side.
+const PRESSURE: usize = 2048;
+
+fn pressure_batch(rng: &mut Xoshiro256pp, n: usize) -> Vec<JobInput> {
+    (0..PRESSURE).map(|_| JobInput::Pm1Mvp(rng.bits(n))).collect()
+}
+
+#[test]
+fn reject_policy_sheds_typed_with_observed_depth() {
+    let mut rng = Xoshiro256pp::seeded(800);
+    let coord = overload_coord(8, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96); // 2×3 shard grid: slow to drain
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // Idle guard: a batch larger than the whole budget admits against
+    // an empty gate (degrades to one-at-a-time instead of starving).
+    let handle = coord.submit_batch(id, &pressure_batch(&mut rng, 96)).unwrap();
+    assert_eq!(coord.inflight_jobs(), PRESSURE as u64);
+
+    // Over budget now: a fresh submit sheds immediately, typed, with
+    // the depth observed at the decision.
+    let err = coord.submit(id, JobInput::Pm1Mvp(rng.bits(96))).unwrap_err();
+    match err {
+        PpacError::Job(JobError::Overloaded { inflight, limit, draining }) => {
+            assert_eq!(inflight, PRESSURE as u64);
+            assert_eq!(limit, 8);
+            assert!(!draining);
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert_eq!(coord.metrics.snapshot().jobs_shed, 1);
+
+    // The shed is not a corruption: the admitted batch still resolves
+    // fully and the budget returns.
+    let results = handle.wait().unwrap();
+    assert_eq!(results.len(), PRESSURE);
+    assert!(results.iter().all(|r| r.output.is_ok()));
+    assert!(
+        wait_until(Duration::from_secs(10), || coord.inflight_jobs() == 0),
+        "admission budget must return after the gather: {}",
+        coord.inflight_jobs()
+    );
+    let x = rng.bits(96);
+    let r = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x)));
+    coord.shutdown();
+}
+
+#[test]
+fn block_policy_parks_the_submitter_until_capacity_frees() {
+    let mut rng = Xoshiro256pp::seeded(801);
+    let coord = std::sync::Arc::new(overload_coord(
+        8,
+        AdmissionPolicy::Block { timeout: Duration::from_secs(30) },
+    ));
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let handle = coord.submit_batch(id, &pressure_batch(&mut rng, 96)).unwrap();
+
+    // A blocked submitter parks on the gate's condvar…
+    let x = rng.bits(96);
+    let (coord2, x2) = (std::sync::Arc::clone(&coord), x.clone());
+    let parked = std::thread::spawn(move || {
+        coord2.submit(id, JobInput::Pm1Mvp(x2)).unwrap().wait().unwrap()
+    });
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            coord.metrics.snapshot().admission_queue_depth == 1
+        }),
+        "the blocked submitter must show in the admission_queue_depth gauge"
+    );
+
+    // …and wakes — admitted, served, correct — when the pressure batch
+    // drains the budget. No shed on this path.
+    let results = handle.wait().unwrap();
+    assert!(results.iter().all(|r| r.output.is_ok()));
+    let r = parked.join().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x)));
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.jobs_shed, 0, "backpressure admitted, never shed");
+    assert_eq!(snap.admission_queue_depth, 0, "park gauge drained");
+    if let Ok(c) = std::sync::Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn per_matrix_budget_isolates_a_hot_matrix() {
+    let mut rng = Xoshiro256pp::seeded(802);
+    let coord = overload_coord(0, AdmissionPolicy::Reject); // global unbounded
+    let hot = rand_matrix(&mut rng, 64, 96);
+    let cold = rand_matrix(&mut rng, 32, 32);
+    let hot_id = coord.register(MatrixSpec::Bit1 { rows: hot.clone() }).unwrap();
+    let cold_id = coord.register(MatrixSpec::Bit1 { rows: cold.clone() }).unwrap();
+    coord.set_matrix_inflight_limit(hot_id, 8).unwrap();
+    assert!(coord.set_matrix_inflight_limit(9999, 8).is_err(), "unknown matrix is typed");
+
+    let handle = coord.submit_batch(hot_id, &pressure_batch(&mut rng, 96)).unwrap();
+    // The hot matrix is over its own budget…
+    let err = coord.submit(hot_id, JobInput::Pm1Mvp(rng.bits(96))).unwrap_err();
+    assert!(
+        matches!(err, PpacError::Job(JobError::Overloaded { limit: 8, .. })),
+        "expected the per-matrix budget in the verdict, got {err:?}"
+    );
+    // …while the cold matrix still admits: QoS isolation, one hot
+    // matrix cannot occupy the whole coordinator.
+    let x = rng.bits(32);
+    let r = coord.submit(cold_id, JobInput::Pm1Mvp(x.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&cold, &x)));
+
+    assert!(handle.wait().unwrap().iter().all(|r| r.output.is_ok()));
+    coord.shutdown();
+}
+
+#[test]
+fn priority_tiers_shed_low_first_and_never_high() {
+    let mut rng = Xoshiro256pp::seeded(803);
+    let coord = overload_coord(8, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let handle = coord.submit_batch(id, &pressure_batch(&mut rng, 96)).unwrap();
+
+    let low = JobOptions { deadline: None, priority: Priority::Low };
+    let normal = JobOptions::default();
+    let high = JobOptions { deadline: None, priority: Priority::High };
+    assert!(coord.submit_with(id, JobInput::Pm1Mvp(rng.bits(96)), low).is_err());
+    assert!(coord.submit_with(id, JobInput::Pm1Mvp(rng.bits(96)), normal).is_err());
+    // High is never shed for load: admitted over budget, counted, and
+    // served to a correct completion once the queue drains.
+    let x = rng.bits(96);
+    let h = coord.submit_with(id, JobInput::Pm1Mvp(x.clone()), high).unwrap();
+    assert_eq!(coord.inflight_jobs(), PRESSURE as u64 + 1);
+
+    assert!(handle.wait().unwrap().iter().all(|r| r.output.is_ok()));
+    assert_eq!(h.wait().unwrap().output, Ok(pm1_golden(&a, &x)));
+    assert_eq!(coord.metrics.snapshot().jobs_shed, 2, "one Low + one Normal shed");
+    coord.shutdown();
+}
+
+#[test]
+fn an_already_expired_deadline_is_refused_at_submit() {
+    let mut rng = Xoshiro256pp::seeded(804);
+    let coord = overload_coord(0, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 32, 32);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a }).unwrap();
+    let err = coord
+        .submit_with(id, JobInput::Pm1Mvp(rng.bits(32)), JobOptions::within(Duration::ZERO))
+        .unwrap_err();
+    assert!(matches!(err, PpacError::Job(JobError::DeadlineExceeded)), "got {err:?}");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.deadlines_exceeded, 1);
+    assert_eq!(snap.jobs_submitted, 0, "an expired job never reaches the scatter");
+    coord.shutdown();
+}
+
+#[test]
+fn tight_deadlines_resolve_typed_never_hang() {
+    let mut rng = Xoshiro256pp::seeded(805);
+    let coord = overload_coord(0, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    // 2048 six-shard jobs through one worker cannot finish in 2 ms: the
+    // tail expires in the queue (worker-side skip) or at the reducer
+    // (gather short-circuit). Both must surface the same typed error.
+    let xs: Vec<Vec<bool>> = (0..PRESSURE).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let mut handle = coord
+        .submit_batch_with(id, &inputs, JobOptions::within(Duration::from_millis(2)))
+        .unwrap();
+    let results = handle
+        .wait_timeout(Duration::from_secs(30))
+        .unwrap()
+        .expect("an expired batch must resolve, not hang");
+    assert_eq!(results.len(), PRESSURE);
+    let mut expired = 0usize;
+    for (r, x) in results.iter().zip(&xs) {
+        match &r.output {
+            // A job that beat its deadline must still be *correct*.
+            Ok(out) => assert_eq!(out, &pm1_golden(&a, x), "job {}", r.job_id),
+            Err(JobError::DeadlineExceeded) => expired += 1,
+            Err(other) => panic!("job {}: unexpected verdict {other:?}", r.job_id),
+        }
+    }
+    assert!(expired > 0, "2048 jobs in 2 ms must expire some of the tail");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.deadlines_exceeded, expired as u64, "counted once per logical job");
+
+    // Expiry leaks nothing: occupancy drains and the pool serves fresh
+    // work correctly afterwards.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            coord.inflight_jobs() == 0
+                && s.per_worker.iter().all(|w| w.inflight == 0)
+                && s.reducer_queue_depth == 0
+        }),
+        "occupancy must drain after expiry; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
+    let x = rng.bits(96);
+    let r = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x)));
+    coord.shutdown();
+}
+
+#[test]
+fn cancellation_resolves_open_jobs_and_reclaims_the_budget() {
+    let mut rng = Xoshiro256pp::seeded(806);
+    let coord = overload_coord(PRESSURE, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+
+    let handle = coord.submit_batch(id, &pressure_batch(&mut rng, 96)).unwrap();
+    handle.cancel();
+    handle.cancel(); // idempotent
+    let results = handle.wait().unwrap();
+    assert_eq!(results.len(), PRESSURE);
+    let cancelled =
+        results.iter().filter(|r| r.output == Err(JobError::Cancelled)).count();
+    assert!(
+        results
+            .iter()
+            .all(|r| r.output.is_ok() || r.output == Err(JobError::Cancelled)),
+        "cancel yields completed results and typed Cancelled, nothing else"
+    );
+    assert!(cancelled > 0, "a 2048-job gather cannot fully fold before the cancel");
+    assert_eq!(coord.metrics.snapshot().jobs_cancelled, cancelled as u64);
+
+    // The tombstoned gather releases everything: admission budget,
+    // worker occupancy (late answers serve into a dropped channel and
+    // still decrement), reducer queue.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            coord.inflight_jobs() == 0
+                && s.per_worker.iter().all(|w| w.inflight == 0)
+                && s.reducer_queue_depth == 0
+        }),
+        "cancellation must reclaim all accounting; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
+    // The freed budget admits and serves fresh work.
+    let x = rng.bits(96);
+    let r = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap().wait().unwrap();
+    assert_eq!(r.output, Ok(pm1_golden(&a, &x)));
+    coord.shutdown();
+}
+
+#[test]
+fn drain_waits_for_inflight_gathers_then_shuts_down() {
+    let mut rng = Xoshiro256pp::seeded(807);
+    let coord = overload_coord(0, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let xs: Vec<Vec<bool>> = (0..512).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let handle = coord.submit_batch(id, &inputs).unwrap();
+
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    assert!(
+        coord.drain(Duration::from_secs(30)),
+        "an in-flight batch must finish inside a generous drain bound"
+    );
+    // The drained gather's outcome was delivered before the teardown.
+    let results = handle.wait().unwrap();
+    for (r, x) in results.iter().zip(&xs) {
+        assert_eq!(r.output, Ok(pm1_golden(&a, x)), "drain completes, never drops");
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.drain_initiated, 1);
+    assert_eq!(snap.jobs_completed, 512);
+    assert_eq!(snap.jobs_failed, 0);
+}
+
+#[test]
+fn drain_on_an_idle_coordinator_returns_immediately() {
+    let coord = overload_coord(0, AdmissionPolicy::Reject);
+    let t0 = Instant::now();
+    assert!(coord.drain(Duration::from_secs(30)));
+    assert!(t0.elapsed() < Duration::from_secs(5), "idle drain must not sit out the bound");
+}
+
+/// Regression (satellite): a job submitted just before `shutdown` must
+/// never block its `wait` forever — the handle observes the teardown
+/// and resolves, either with the gather's delivered results or with the
+/// typed [`JobError::CoordinatorGone`].
+#[test]
+fn waits_racing_shutdown_resolve_instead_of_hanging() {
+    let mut rng = Xoshiro256pp::seeded(808);
+    let coord = overload_coord(0, AdmissionPolicy::Reject);
+    let a = rand_matrix(&mut rng, 64, 96);
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let xs: Vec<Vec<bool>> = (0..512).map(|_| rng.bits(96)).collect();
+    let inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let mut batch = coord.submit_batch(id, &inputs).unwrap();
+    let x = rng.bits(96);
+    let mut single = coord.submit(id, JobInput::Pm1Mvp(x.clone())).unwrap();
+
+    coord.shutdown();
+
+    match batch.wait_timeout(Duration::from_secs(30)) {
+        Ok(Some(results)) => {
+            assert_eq!(results.len(), 512);
+            for (r, x) in results.iter().zip(&xs) {
+                assert!(
+                    r.output == Ok(pm1_golden(&a, x)) || r.output.is_err(),
+                    "job {}: an answered job is correct, a dropped one typed",
+                    r.job_id
+                );
+            }
+        }
+        Ok(None) => panic!("a batch wait hung across shutdown"),
+        Err(PpacError::Job(JobError::CoordinatorGone)) => {} // typed teardown
+        Err(other) => panic!("expected results or CoordinatorGone, got {other:?}"),
+    }
+    match single.wait_timeout(Duration::from_secs(30)) {
+        Ok(Some(r)) => {
+            assert!(r.output == Ok(pm1_golden(&a, &x)) || r.output.is_err());
+        }
+        Ok(None) => panic!("a job wait hung across shutdown"),
+        Err(PpacError::Job(JobError::CoordinatorGone)) => {}
+        Err(other) => panic!("expected a result or CoordinatorGone, got {other:?}"),
+    }
+}

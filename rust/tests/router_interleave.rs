@@ -7,8 +7,8 @@
 //! small thread programs modeling the protocol's atomic steps, and the
 //! invariants must hold on all of them.
 //!
-//! Five protocols from `coordinator::router` / `coordinator::metrics` /
-//! `coordinator::supervisor`:
+//! Six protocols from `coordinator::router` / `coordinator::metrics` /
+//! `coordinator::supervisor` / `coordinator::mod`:
 //!
 //! - **Occupancy reclaim** (`mark_dead` vs. straggler completions):
 //!   `swap(0)` + saturating decrements always settle at zero. The old
@@ -38,6 +38,14 @@
 //!   shared-queue protocol (the restart reusing the old channel) is the
 //!   negative: the checker finds schedules where a pre-restart job is
 //!   served by the new incarnation.
+//! - **Cancellation tombstones** (model F: a client's cancel racing
+//!   late worker answers and retry-wave duplicates): `finalize_open`
+//!   flips every still-open pair in the `got` dedup bitmap, so a late
+//!   answer folds into the tombstone and every pair finalizes exactly
+//!   once — completion fires once and the `gathers_inflight` gauge
+//!   returns to zero on every schedule. Tombstoning *without* marking
+//!   the bitmap is the negative: the checker finds schedules where a
+//!   late answer double-finalizes a cancelled pair.
 
 use std::collections::BTreeSet;
 
@@ -609,6 +617,162 @@ fn a_shared_queue_restart_is_caught_answering_stale_jobs() {
             .count();
     });
     assert!(stale_answers > 0, "the checker must expose the stale-answer schedules");
+}
+
+// ---------------------------------------------------------------------
+// Model F: cancellation tombstones (cancel vs. late answers vs. retry
+// duplicates).
+// ---------------------------------------------------------------------
+
+/// One two-pair gather under cancellation. The reducer owns the gather
+/// (one thread), so its steps are the poll structure of
+/// `ActiveGather::poll`: a short-circuit check at the top of each pass
+/// (latch set → `finalize_open` tombstones every open pair *and* flips
+/// it in the `got` dedup bitmap), then absorption of queued arrivals
+/// (deduplicated through the same bitmap). Worker answers — including a
+/// retry-wave duplicate — only enqueue; the races are which arrivals
+/// the reducer sees before the tombstone pass, and where the client's
+/// cancel lands between passes.
+#[derive(Clone)]
+struct CancelGather {
+    /// The `got` dedup bitmap: absorbed *or* tombstoned.
+    got: [bool; 2],
+    /// Finalizations per pair — the invariant under test is ≤ 1 always,
+    /// == 1 at quiescence.
+    fin: [u8; 2],
+    /// Arrivals delivered but not yet absorbed (the response channel).
+    queue: Vec<usize>,
+    /// The handle's one-way cancel latch.
+    latch: bool,
+    /// Completions delivered to the handle (`finish_gather`).
+    completions: usize,
+    /// The `gathers_inflight`-style gauge: 1 while the gather owns its
+    /// TTL pin / admission claim, released exactly once at completion.
+    inflight: i64,
+    /// Negative-protocol switch: tombstone *without* flipping `got`.
+    tombstone_marks: bool,
+}
+
+#[derive(Clone, Copy)]
+enum CxStep {
+    /// A worker answers pair `p` (retry waves can deliver duplicates).
+    Deliver(usize),
+    /// The client raises the cancel latch.
+    Cancel,
+    /// Reducer poll-top: latch set → tombstone every open pair.
+    ShortCircuit,
+    /// Reducer drain: absorb queued arrivals through the dedup bitmap.
+    Absorb,
+}
+
+fn cx_complete(s: &mut CancelGather) {
+    if s.fin.iter().all(|&c| c >= 1) && s.completions == 0 {
+        s.completions = 1;
+        s.inflight -= 1; // finish_gather releases the pin once
+    }
+}
+
+fn cx_exec(s: &mut CancelGather, step: CxStep) {
+    match step {
+        CxStep::Deliver(p) => s.queue.push(p),
+        CxStep::Cancel => s.latch = true,
+        CxStep::ShortCircuit => {
+            if s.latch {
+                for p in 0..2 {
+                    if !s.got[p] {
+                        if s.tombstone_marks {
+                            s.got[p] = true;
+                        }
+                        s.fin[p] += 1;
+                    }
+                }
+                cx_complete(s);
+            }
+        }
+        CxStep::Absorb => {
+            for p in std::mem::take(&mut s.queue) {
+                if !s.got[p] {
+                    s.got[p] = true;
+                    s.fin[p] += 1;
+                }
+            }
+            cx_complete(s);
+        }
+    }
+}
+
+/// Drive the reducer to quiescence from a terminal schedule state: the
+/// real reducer keeps polling until the gather completes, so the last
+/// passes always run after the final arrival and the cancel.
+fn cx_quiesce(s: &CancelGather) -> CancelGather {
+    let mut s = s.clone();
+    cx_exec(&mut s, CxStep::ShortCircuit);
+    cx_exec(&mut s, CxStep::Absorb);
+    cx_exec(&mut s, CxStep::ShortCircuit);
+    s
+}
+
+#[test]
+fn cancel_tombstones_finalize_every_pair_once_on_every_schedule() {
+    let start = CancelGather {
+        got: [false; 2],
+        fin: [0; 2],
+        queue: Vec::new(),
+        latch: false,
+        completions: 0,
+        inflight: 1,
+        tombstone_marks: true,
+    };
+    // Pair 0 answers twice (a retry-wave duplicate), pair 1 once; the
+    // client cancels somewhere in between; the reducer runs two full
+    // poll passes — the quiescing drain supplies the rest.
+    let progs = vec![
+        vec![CxStep::Deliver(0), CxStep::Deliver(1), CxStep::Deliver(0)],
+        vec![CxStep::Cancel],
+        vec![CxStep::ShortCircuit, CxStep::Absorb, CxStep::ShortCircuit, CxStep::Absorb],
+    ];
+    let n = explore(&start, &progs, &cx_exec, &mut |s: &CancelGather| {
+        assert!(s.fin.iter().all(|&c| c <= 1), "no double-finalize mid-schedule: {:?}", s.fin);
+        let s = cx_quiesce(s);
+        assert_eq!(s.fin, [1, 1], "every pair finalizes exactly once");
+        assert!(s.got.iter().all(|&g| g), "absorbed or tombstoned, the bitmap closes");
+        assert!(s.queue.is_empty(), "late answers fold into tombstones, never queue up");
+        assert_eq!(s.completions, 1, "completion fires exactly once");
+        assert_eq!(s.inflight, 0, "the gather's pin releases exactly once");
+    });
+    assert_eq!(n, 280, "multinomial 8!/(3!·1!·4!) schedules");
+}
+
+#[test]
+fn tombstones_that_skip_the_dedup_bitmap_are_caught_double_finalizing() {
+    // Negative test: `finalize_error` without flipping `got` lets a
+    // late answer re-finalize a cancelled pair — the checker must find
+    // such a schedule, or model F proves nothing.
+    let start = CancelGather {
+        got: [false; 2],
+        fin: [0; 2],
+        queue: Vec::new(),
+        latch: false,
+        completions: 0,
+        inflight: 1,
+        tombstone_marks: false,
+    };
+    let progs = vec![
+        vec![CxStep::Deliver(0)],
+        vec![CxStep::Cancel],
+        vec![CxStep::ShortCircuit, CxStep::Absorb],
+    ];
+    let mut double_finalized = 0usize;
+    explore(&start, &progs, &cx_exec, &mut |s: &CancelGather| {
+        let s = cx_quiesce(s);
+        if s.fin.iter().any(|&c| c > 1) {
+            double_finalized += 1;
+        }
+    });
+    assert!(
+        double_finalized > 0,
+        "the checker must expose the unmarked-tombstone double count"
+    );
 }
 
 /// All permutations of `rest` appended to `prefix` (duplicates included;

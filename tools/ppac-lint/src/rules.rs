@@ -36,6 +36,8 @@ const HANDOFF: &[&str] = &[
     "gathers_inflight",
     "last_sweep_ms",
     "reducer_queue_depth",
+    "admission_queue_depth",
+    "cancelled",
 ];
 
 /// How many lines above a `Relaxed` use the `// ordering:` justification
@@ -46,7 +48,13 @@ const ORDERING_COMMENT_WINDOW: usize = 6;
 /// Occupancy gauges: a submission-side `fetch_add` must have a
 /// completion/reclaim decrement (`fetch_sub`/`fetch_update`/`swap`)
 /// somewhere in the corpus, or workers look busy forever.
-const GAUGES: &[&str] = &["inflight", "placed", "gathers_inflight", "reducer_queue_depth"];
+const GAUGES: &[&str] = &[
+    "inflight",
+    "placed",
+    "gathers_inflight",
+    "reducer_queue_depth",
+    "admission_queue_depth",
+];
 
 /// Submission counters and the completion-side counters that must
 /// absorb them (`submitted = completed + failed + lost` is the
@@ -80,6 +88,10 @@ const MONOTONIC: &[&str] = &[
     "served",
     "evictions",
     "replica_hits",
+    "jobs_shed",
+    "deadlines_exceeded",
+    "jobs_cancelled",
+    "drain_initiated",
 ];
 
 /// Id/tie-break sequences — `fetch_add` is the allocation itself.
