@@ -258,7 +258,7 @@ impl MultibitSpec {
 /// - [`Priority::Normal`] sheds when the in-flight budget is full;
 /// - [`Priority::Low`] sheds once half the budget is occupied, keeping
 ///   headroom for normal traffic under pressure.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum Priority {
     /// Best-effort: shed at half the in-flight budget.
     Low,

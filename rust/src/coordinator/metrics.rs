@@ -155,6 +155,25 @@ pub struct Metrics {
     /// under `AdmissionPolicy::Block` — the backpressure-depth gauge.
     /// Incremented before each bounded park, decremented on wake.
     pub admission_queue_depth: AtomicU64,
+    /// Wire connections currently open on the serving front end
+    /// (`server::Server`): incremented at accept, decremented when the
+    /// connection's session threads retire. Gauge.
+    pub connections_open: AtomicU64,
+    /// Wire connections ever accepted by the serving front end.
+    pub connections_total: AtomicU64,
+    /// Wire frames refused by the protocol layer (bad magic/version,
+    /// over the frame-size cap, malformed payload). Each one is
+    /// *answered* with a typed error status — this counts protocol
+    /// noise, not silent drops.
+    pub frames_rejected: AtomicU64,
+    /// Cross-client micro-batches: flushes of the serving batcher that
+    /// merged ≥ 2 independently submitted queries into one
+    /// `submit_batch` — the query-block economics the coalescing
+    /// window exists for.
+    pub batches_coalesced: AtomicU64,
+    /// Queries that rode a coalesced flush (the summed sizes of the
+    /// flushes counted by `batches_coalesced`).
+    pub coalesced_queries: AtomicU64,
     /// Matrices dropped via `unregister_matrix`.
     pub matrices_unregistered: AtomicU64,
     /// Matrices swept by the registry TTL (idle longer than
@@ -194,6 +213,11 @@ impl Default for Metrics {
             jobs_cancelled: AtomicU64::new(0),
             drain_initiated: AtomicU64::new(0),
             admission_queue_depth: AtomicU64::new(0),
+            connections_open: AtomicU64::new(0),
+            connections_total: AtomicU64::new(0),
+            frames_rejected: AtomicU64::new(0),
+            batches_coalesced: AtomicU64::new(0),
+            coalesced_queries: AtomicU64::new(0),
             matrices_unregistered: AtomicU64::new(0),
             auto_evictions: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -304,6 +328,13 @@ impl Metrics {
             // ordering: Relaxed — point-in-time report read of the
             // blocked-submitters gauge; staleness only skews one line.
             admission_queue_depth: self.admission_queue_depth.load(Ordering::Relaxed),
+            // ordering: Relaxed — point-in-time report read of the
+            // open-connections gauge; staleness only skews one line.
+            connections_open: self.connections_open.load(Ordering::Relaxed),
+            connections_total: self.connections_total.load(Ordering::Relaxed),
+            frames_rejected: self.frames_rejected.load(Ordering::Relaxed),
+            batches_coalesced: self.batches_coalesced.load(Ordering::Relaxed),
+            coalesced_queries: self.coalesced_queries.load(Ordering::Relaxed),
             matrices_unregistered: self.matrices_unregistered.load(Ordering::Relaxed),
             auto_evictions: self.auto_evictions.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -366,6 +397,11 @@ pub struct MetricsSnapshot {
     pub jobs_cancelled: u64,
     pub drain_initiated: u64,
     pub admission_queue_depth: u64,
+    pub connections_open: u64,
+    pub connections_total: u64,
+    pub frames_rejected: u64,
+    pub batches_coalesced: u64,
+    pub coalesced_queries: u64,
     pub matrices_unregistered: u64,
     pub auto_evictions: u64,
     pub batches: u64,

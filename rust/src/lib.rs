@@ -22,6 +22,7 @@
 //! - [`apps`] — BNN, LSH, GF(2) codes, Hadamard, CAM, PLA applications;
 //! - [`baselines`] — compute-cache cycle model and the Table IV database;
 //! - [`coordinator`] — multi-tile job router/batcher (the serving layer);
+//! - [`server`] — TCP wire front end with cross-client micro-batching;
 //! - [`runtime`] — PJRT loader executing the JAX/Pallas AOT artifacts;
 //! - [`util`] — in-repo substrates (PRNG, CLI, bench, prop-test, JSON).
 //!
@@ -38,6 +39,7 @@ pub mod golden;
 pub mod isa;
 pub mod power;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;
 

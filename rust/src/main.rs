@@ -14,7 +14,12 @@
 //! ppac serve [--workers --batch --jobs --replicas R --backend blocked|cycle --threads T --ttl-ms MS
 //!             --heartbeat-ms MS --supervise --max-reducers N
 //!             --max-inflight J --admission reject|block --admission-timeout-ms MS
-//!             --deadline-ms MS --drain-ms MS]   coordinator demo
+//!             --deadline-ms MS --drain-ms MS --selftest]   synthetic-load demo
+//! ppac serve --listen ADDR [--batch-window-us US --batch-max N --session-window N
+//!             --serve-ms MS --port-file PATH ...]   TCP serving front end
+//! ppac client --addr ADDR [--matrix ID --op pm1|hamming|gf2 --queries N
+//!             --clients C --rates R1,R2 --sweep-ms MS --deadline-ms MS
+//!             --json PATH --seed S]   wire client / load generator
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -27,7 +32,7 @@ use ppac::util::table::Table;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let expected = "table1|table2|table3|table4|cycles|ablate|area-breakdown|simulate|serve";
+    let expected = "table1|table2|table3|table4|cycles|ablate|area-breakdown|simulate|serve|client";
     let (cmd, rest) = match subcommand(args, expected) {
         Ok(x) => x,
         Err(e) => {
@@ -46,6 +51,7 @@ fn main() {
         "area-breakdown" => area_breakdown(rest),
         "simulate" => simulate(rest),
         "serve" => serve(rest),
+        "client" => client_cmd(rest),
         other => {
             eprintln!("unknown subcommand {other}; expected {expected}");
             std::process::exit(2);
@@ -474,6 +480,13 @@ fn serve(rest: Vec<String>) -> AnyResult {
         .opt("deadline-ms")
         .opt("drain-ms")
         .opt("config")
+        .opt("listen")
+        .opt("batch-window-us")
+        .opt("batch-max")
+        .opt("session-window")
+        .opt("serve-ms")
+        .opt("port-file")
+        .flag("selftest")
         .parse(rest)?;
     // Layering: file config (if given) provides defaults, flags override.
     let file = match p.str_opt("config") {
@@ -531,6 +544,23 @@ fn serve(rest: Vec<String>) -> AnyResult {
         admission,
         ..Default::default()
     })?;
+    if let Some(addr) = p.str_opt("listen") {
+        let window_us = p.usize_or("batch-window-us", 200)? as u64;
+        let batch_max = p.usize_or("batch-max", 32)?;
+        let session_window = p.usize_or("session-window", 256)?;
+        let serve_ms = p.usize_or("serve-ms", 0)? as u64;
+        let port_file = p.str_opt("port-file");
+        return serve_listen(
+            coord, &addr, m, n, window_us, batch_max, session_window, serve_ms, drain_ms,
+            port_file.as_deref(),
+        );
+    }
+    if !p.flag("selftest") {
+        println!(
+            "note: the synthetic-load loop is now `ppac serve --selftest`; \
+             a real TCP front end is available via `ppac serve --listen ADDR`."
+        );
+    }
     let mut rng = Xoshiro256pp::seeded(11);
     let matrices: Vec<_> = (0..workers)
         .map(|_| {
@@ -631,4 +661,293 @@ fn serve(rest: Vec<String>) -> AnyResult {
         coord.shutdown();
     }
     Ok(())
+}
+
+/// `ppac serve --listen ADDR`: the real TCP front end. Registers one
+/// m×n 1-bit matrix (deterministic seed 11, so clients know matrix 1
+/// exists), serves until `--serve-ms` elapses (0 = until killed), then
+/// drains.
+#[allow(clippy::too_many_arguments)]
+fn serve_listen(
+    coord: ppac::coordinator::Coordinator,
+    addr: &str,
+    m: usize,
+    n: usize,
+    window_us: u64,
+    batch_max: usize,
+    session_window: usize,
+    serve_ms: u64,
+    drain_ms: u64,
+    port_file: Option<&str>,
+) -> AnyResult {
+    use ppac::coordinator::MatrixSpec;
+    use ppac::server::{Server, ServerConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let mut rng = Xoshiro256pp::seeded(11);
+    let matrix =
+        coord.register(MatrixSpec::Bit1 { rows: (0..m).map(|_| rng.bits(n)).collect() })?;
+    let metrics = Arc::clone(&coord.metrics);
+    let cfg = ServerConfig {
+        batch_window: Duration::from_micros(window_us),
+        batch_max,
+        session_window,
+    };
+    let server = Server::start(coord, addr, cfg)?;
+    let local = server.local_addr();
+    println!("listening        : {local}");
+    println!("matrix           : id {matrix} ({m}x{n} 1-bit, seed 11)");
+    println!("batching         : window {window_us} us, max {batch_max}/block, session window {session_window}");
+    if let Some(path) = port_file {
+        std::fs::write(path, local.to_string())?;
+        println!("port file        : {path}");
+    }
+
+    if serve_ms > 0 {
+        std::thread::sleep(Duration::from_millis(serve_ms));
+    } else {
+        // Serve until killed; the smoke path always passes --serve-ms.
+        loop {
+            std::thread::sleep(Duration::from_millis(500));
+        }
+    }
+
+    let grace = if drain_ms > 0 { drain_ms } else { 500 };
+    let clean = server.drain(Duration::from_millis(grace));
+    let snap = metrics.snapshot();
+    println!(
+        "connections      : {} total, {} still open",
+        snap.connections_total, snap.connections_open
+    );
+    println!("frames rejected  : {}", snap.frames_rejected);
+    println!(
+        "coalescing       : {} cross-client blocks, {} queries coalesced",
+        snap.batches_coalesced, snap.coalesced_queries
+    );
+    let succeeded = snap.jobs_completed - snap.jobs_failed;
+    println!(
+        "jobs             : {succeeded} ok, {} failed, p50/p99 {:.0}/{:.0} us",
+        snap.jobs_failed, snap.p50_us, snap.p99_us
+    );
+    println!(
+        "drain            : {}",
+        if clean { "idle within bound" } else { "timed out; leftovers cut off at shutdown" }
+    );
+    Ok(())
+}
+
+/// `ppac client` — one-shot requests or an offered-load sweep against
+/// a running `ppac serve --listen` instance. The sweep is open-loop
+/// (queries are scheduled on a fixed clock regardless of completions),
+/// so the reported latency includes queueing delay — no coordinated
+/// omission.
+fn client_cmd(rest: Vec<String>) -> AnyResult {
+    use ppac::server::wire::{self, Op, Response};
+    use ppac::server::Client;
+    use ppac::util::json::{obj, Json};
+    use ppac::util::stats::percentile;
+    use std::time::{Duration, Instant};
+
+    let p = Spec::new()
+        .opt("addr")
+        .opt("matrix")
+        .opt("op")
+        .opt("queries")
+        .opt("clients")
+        .opt("rates")
+        .opt("sweep-ms")
+        .opt("deadline-ms")
+        .opt("json")
+        .opt("seed")
+        .parse(rest)?;
+    let addr = p
+        .str_opt("addr")
+        .ok_or("ppac client requires --addr HOST:PORT (see `ppac serve --listen`)")?;
+    let matrix = p.u64_or("matrix", 1)?;
+    let op_name = p.str_or("op", "pm1");
+    let op = Op::parse(&op_name).ok_or_else(|| format!("unknown op {op_name} (pm1|hamming|gf2)"))?;
+    let queries = p.usize_or("queries", 1)?;
+    let clients = p.usize_or("clients", 1)?.max(1);
+    let sweep_ms = p.usize_or("sweep-ms", 2000)? as u64;
+    let deadline_us = p.usize_or("deadline-ms", 0)? as u64 * 1000;
+    let seed = p.u64_or("seed", 42)?;
+    let rates: Vec<f64> = match p.str_opt("rates") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("bad --rates value: {e}"))?,
+        None => Vec::new(),
+    };
+
+    let mut probe = Client::connect(&addr)?;
+    let (rows, cols) = probe.info(matrix)?;
+    println!("server           : {addr}, matrix {matrix} = {rows}x{cols}");
+
+    if rates.is_empty() {
+        // One-shot mode: sequential round trips on one connection.
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let mut lat_us: Vec<f64> = Vec::with_capacity(queries);
+        for i in 0..queries {
+            let bits = rng.bits(cols as usize);
+            let t0 = Instant::now();
+            let resp = probe.query(matrix, op, bits, deadline_us, Default::default())?;
+            let dt = t0.elapsed().as_secs_f64() * 1e6;
+            match resp {
+                Response::Ints { coalesced, .. } | Response::Bits { coalesced, .. } => {
+                    lat_us.push(dt);
+                    if queries == 1 {
+                        println!(
+                            "query {i}          : ok in {dt:.0} us (coalesced with {} others)",
+                            coalesced.saturating_sub(1)
+                        );
+                    }
+                }
+                Response::Info { .. } => return Err("unexpected info reply to a query".into()),
+                Response::Error { code, message, .. } => {
+                    return Err(
+                        format!("query refused: {} ({message})", wire::status_name(code)).into()
+                    );
+                }
+            }
+        }
+        if queries > 1 {
+            println!(
+                "queries          : {queries} ok, p50/p99 {:.0}/{:.0} us",
+                percentile(&lat_us, 50.0),
+                percentile(&lat_us, 99.0)
+            );
+        }
+        return Ok(());
+    }
+
+    // Sweep mode: for each offered rate, `clients` connections send on
+    // an open-loop schedule for `sweep-ms`; latency is measured from
+    // the *scheduled* send time.
+    let mut rows_out: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        &format!("offered-load sweep — {clients} client(s), op {}, {sweep_ms} ms/point", op.name()),
+        &["offered/s", "achieved/s", "p50 us", "p99 us", "ok", "errors"],
+    );
+    for &rate in &rates {
+        if rate <= 0.0 {
+            return Err("--rates values must be positive".into());
+        }
+        let per_client: Vec<(Vec<f64>, usize)> = std::thread::scope(|scope| {
+            let mut joins = Vec::with_capacity(clients);
+            for idx in 0..clients {
+                let addr = addr.clone();
+                joins.push(scope.spawn(move || {
+                    client_sweep_thread(
+                        &addr, matrix, op, cols as usize, rate, clients, idx, sweep_ms,
+                        deadline_us, seed,
+                    )
+                }));
+            }
+            joins
+                .into_iter()
+                .map(|j| j.join().unwrap_or((Vec::new(), 1)))
+                .collect()
+        });
+        let mut lat_us: Vec<f64> = Vec::new();
+        let mut errors = 0usize;
+        for (lats, errs) in per_client {
+            lat_us.extend(lats);
+            errors += errs;
+        }
+        let ok = lat_us.len();
+        let achieved = ok as f64 / (sweep_ms as f64 / 1000.0);
+        let p50 = percentile(&lat_us, 50.0);
+        let p99 = percentile(&lat_us, 99.0);
+        table.row(&[
+            format!("{rate:.0}"),
+            format!("{achieved:.0}"),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            ok.to_string(),
+            errors.to_string(),
+        ]);
+        rows_out.push(obj(vec![
+            ("offered_per_s", Json::Num(rate)),
+            ("achieved_per_s", Json::Num(achieved)),
+            ("p50_us", Json::Num(p50)),
+            ("p99_us", Json::Num(p99)),
+            ("queries", Json::Int(ok as i64)),
+            ("errors", Json::Int(errors as i64)),
+        ]));
+    }
+    table.print();
+    let json_path = p.str_or("json", "BENCH_server.json");
+    let doc = obj(vec![
+        ("bench", Json::Str("server".into())),
+        ("addr", Json::Str(addr.clone())),
+        ("op", Json::Str(op.name().into())),
+        ("clients", Json::Int(clients as i64)),
+        ("sweep_ms", Json::Int(sweep_ms as i64)),
+        ("rows", Json::Arr(rows_out)),
+    ]);
+    std::fs::write(&json_path, doc.to_string())?;
+    println!("wrote {json_path}");
+    Ok(())
+}
+
+/// One sweep connection: send `rate/clients` queries per second for
+/// `sweep_ms`, measuring latency from each query's scheduled slot.
+#[allow(clippy::too_many_arguments)]
+fn client_sweep_thread(
+    addr: &str,
+    matrix: u64,
+    op: ppac::server::wire::Op,
+    cols: usize,
+    rate: f64,
+    clients: usize,
+    idx: usize,
+    sweep_ms: u64,
+    deadline_us: u64,
+    seed: u64,
+) -> (Vec<f64>, usize) {
+    use ppac::server::wire::Response;
+    use ppac::server::Client;
+    use std::time::{Duration, Instant};
+
+    let Ok(mut client) = Client::connect(addr) else {
+        return (Vec::new(), 1);
+    };
+    let _ = client.set_timeout(Some(Duration::from_secs(10)));
+    let mut rng = Xoshiro256pp::seeded(seed ^ (idx as u64).wrapping_mul(0x9e37_79b9));
+    let total = ((rate * sweep_ms as f64 / 1000.0) as usize).max(1);
+    let start = Instant::now();
+    let mut lat_us = Vec::with_capacity(total / clients + 1);
+    let mut errors = 0usize;
+    let mut i = idx;
+    while i < total {
+        // Global open-loop schedule: query i fires at start + i/rate,
+        // interleaved round-robin across client threads.
+        let scheduled = start + Duration::from_secs_f64(i as f64 / rate);
+        let now = Instant::now();
+        if scheduled > now {
+            std::thread::sleep(scheduled - now);
+        }
+        let bits = rng.bits(cols);
+        match client
+            .send_query(matrix, op, bits, deadline_us, Default::default())
+            .and_then(|_| client.recv_response())
+        {
+            Ok(Response::Ints { .. }) | Ok(Response::Bits { .. }) => {
+                lat_us.push(scheduled.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(_) => errors += 1,
+            Err(_) => {
+                errors += 1;
+                // The connection may be dead; try to reconnect once.
+                match Client::connect(addr) {
+                    Ok(c) => client = c,
+                    Err(_) => break,
+                }
+            }
+        }
+        i += clients;
+    }
+    (lat_us, errors)
 }

@@ -1,0 +1,512 @@
+//! Cross-client micro-batching: the stage that makes the wire front
+//! end fast rather than merely reachable.
+//!
+//! The engine's query-blocked kernel loads each stored row once per
+//! 32-query block, so the cost of a block is nearly flat in its
+//! occupancy — a block carrying one network query wastes ~31/32 of the
+//! row-load work. In-process callers can fill blocks themselves with
+//! `submit_batch`, but independent TCP clients each send one small
+//! query. The [`Coalescer`] holds such queries for a bounded window
+//! (`--batch-window-us`) and merges those that target the same
+//! (matrix, mode, priority) into one `submit_batch_with` call of up to
+//! `--batch-max` (= engine block size) queries, then demuxes the
+//! per-query results back to each owning session's writer.
+//!
+//! Flush triggers, in priority order:
+//! 1. **max-fill** — a bucket reaches `max_batch`: flush immediately,
+//!    the block is full and waiting buys nothing;
+//! 2. **deadline pressure** — a member's end-to-end deadline leaves
+//!    less than one window of slack: flush early rather than convert
+//!    a latency SLO into a timeout;
+//! 3. **window expiry** — the bucket's oldest member has waited the
+//!    full window;
+//! 4. **drain** — the server is shutting down: flush everything and
+//!    keep polling until every in-flight handle resolves, so no
+//!    session is left waiting on a reply that will never come.
+//!
+//! The demux invariant (ANALYSIS.md "Serving-batcher demux
+//! invariants"): every query that enters the coalescer produces exactly
+//! one response on its owning session's channel, on every path —
+//! success, typed job error, whole-batch submit rejection, coordinator
+//! loss, and early flush. The pairing is structural: a flush keeps its
+//! slots in submission order and zips them against the `BatchHandle`
+//! results, which the coordinator returns in the same order.
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    BatchHandle, Coordinator, JobError, JobInput, JobOptions, JobOutput, JobResult, MatrixId,
+    Metrics, ModeKey, Priority,
+};
+use crate::error::PpacError;
+use crate::util::sync::Ordering;
+
+use super::wire::{self, Response};
+
+/// One query parked in the coalescer, carrying everything needed to
+/// submit it and to route its answer home.
+pub struct PendingQuery {
+    /// Correlation id echoed to the client.
+    pub req_id: u64,
+    /// The query itself.
+    pub input: JobInput,
+    /// Absolute end-to-end deadline, if the request carried one.
+    pub deadline: Option<Instant>,
+    /// Admission tier.
+    pub priority: Priority,
+    /// The owning session's writer channel.
+    pub respond: Sender<Response>,
+}
+
+/// Commands a session can send the batcher thread.
+pub enum BatchCmd {
+    /// Park one query for coalescing.
+    Enqueue { matrix: MatrixId, query: PendingQuery },
+    /// Flush everything and exit once in-flight work resolves.
+    Shutdown,
+}
+
+/// A flush ready to submit: queries against one matrix sharing one
+/// mode and priority, in arrival order.
+pub struct Flush {
+    pub matrix: MatrixId,
+    pub priority: Priority,
+    pub queries: Vec<PendingQuery>,
+}
+
+struct Bucket {
+    queries: Vec<PendingQuery>,
+    /// When the bucket's first (oldest) member arrived — the window
+    /// clock runs from here so early members bound their own wait.
+    opened: Instant,
+    /// Tightest member deadline, for pressure-triggered early flush.
+    earliest_deadline: Option<Instant>,
+}
+
+/// Pure coalescing state machine. Time is an explicit argument to
+/// every method, which is what makes the unit tests deterministic: the
+/// tests drive `now` by hand instead of sleeping.
+pub struct Coalescer {
+    window: Duration,
+    max_batch: usize,
+    buckets: HashMap<(MatrixId, ModeKey, Priority), Bucket>,
+}
+
+impl Coalescer {
+    /// A coalescer with the given bounded wait and block size.
+    pub fn new(window: Duration, max_batch: usize) -> Self {
+        Coalescer { window, max_batch: max_batch.max(1), buckets: HashMap::new() }
+    }
+
+    /// Park a query; returns a [`Flush`] immediately when the bucket
+    /// hits `max_batch` (trigger 1 — a full block waits for nothing).
+    pub fn enqueue(&mut self, now: Instant, matrix: MatrixId, query: PendingQuery) -> Option<Flush> {
+        let key = (matrix, query.input.mode_key(), query.priority);
+        let bucket = self.buckets.entry(key).or_insert_with(|| Bucket {
+            queries: Vec::new(),
+            opened: now,
+            earliest_deadline: None,
+        });
+        bucket.earliest_deadline = match (bucket.earliest_deadline, query.deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        bucket.queries.push(query);
+        if bucket.queries.len() >= self.max_batch {
+            self.buckets
+                .remove(&key)
+                .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+        } else {
+            None
+        }
+    }
+
+    /// When a bucket must flush: the window end, pulled earlier if a
+    /// member deadline leaves less than one window of slack (trigger
+    /// 2 — better a part-filled block than a `DeadlineExceeded`).
+    fn flush_at(&self, bucket: &Bucket) -> Instant {
+        let window_end = bucket.opened + self.window;
+        match bucket.earliest_deadline {
+            Some(d) => match d.checked_sub(self.window) {
+                Some(pressure) => window_end.min(pressure),
+                // Deadline tighter than one window: due right away.
+                None => bucket.opened,
+            },
+            None => window_end,
+        }
+    }
+
+    /// Buckets whose flush time has arrived (triggers 2 and 3).
+    pub fn due(&mut self, now: Instant) -> Vec<Flush> {
+        let ripe: Vec<(MatrixId, ModeKey, Priority)> = self
+            .buckets
+            .iter()
+            .filter(|(_, b)| now >= self.flush_at(b))
+            .map(|(k, _)| *k)
+            .collect();
+        ripe.into_iter()
+            .filter_map(|key| {
+                self.buckets
+                    .remove(&key)
+                    .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+            })
+            .collect()
+    }
+
+    /// Flush every bucket regardless of age (trigger 4 — drain).
+    pub fn flush_all(&mut self) -> Vec<Flush> {
+        let keys: Vec<(MatrixId, ModeKey, Priority)> = self.buckets.keys().copied().collect();
+        keys.into_iter()
+            .filter_map(|key| {
+                self.buckets
+                    .remove(&key)
+                    .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+            })
+            .collect()
+    }
+
+    /// Time until the nearest flush is due, `None` when empty. The
+    /// batcher thread uses this to bound its receive timeout so a
+    /// parked query is never held past its window by an idle channel.
+    pub fn next_due(&self, now: Instant) -> Option<Duration> {
+        self.buckets
+            .values()
+            .map(|b| self.flush_at(b).saturating_duration_since(now))
+            .min()
+    }
+
+    /// Queries currently parked.
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(|b| b.queries.len()).sum()
+    }
+}
+
+/// A submitted flush still waiting on its `BatchHandle`. Slots keep
+/// submission order, which is the order the handle's results arrive in.
+struct ActiveFlush {
+    handle: BatchHandle,
+    slots: Vec<(u64, Sender<Response>)>,
+    coalesced: u16,
+}
+
+/// Convert one per-query [`JobResult`] into the wire response for its
+/// slot.
+fn response_for_result(req_id: u64, coalesced: u16, result: JobResult) -> Response {
+    let batch = result.batch_size.min(u16::MAX as usize) as u16;
+    match result.output {
+        Ok(JobOutput::Ints(values)) => Response::Ints { req_id, coalesced, batch, values },
+        Ok(JobOutput::Bits(bits)) => Response::Bits { req_id, coalesced, batch, bits },
+        Err(e) => wire::response_for_job_error(req_id, &e),
+    }
+}
+
+/// Answer every slot with the same typed error (whole-batch submit
+/// rejection, or the coordinator vanished). A dead session just means
+/// nobody is listening, so send results are deliberately ignored.
+fn reject_slots(slots: Vec<(u64, Sender<Response>)>, e: &JobError) {
+    for (req_id, respond) in slots {
+        let _ = respond.send(wire::response_for_job_error(req_id, e));
+    }
+}
+
+/// Submit one flush; on success it becomes an [`ActiveFlush`], on
+/// rejection every member is answered with the typed error right away.
+fn submit_flush(coord: &Coordinator, metrics: &Metrics, flush: Flush) -> Option<ActiveFlush> {
+    let n = flush.queries.len();
+    let coalesced = n.min(u16::MAX as usize) as u16;
+    let mut inputs = Vec::with_capacity(n);
+    let mut slots = Vec::with_capacity(n);
+    // The batch deadline is the loosest member deadline, and only when
+    // every member carries one: tighter members were already honored
+    // by pressure-triggered early flush, and a member with no deadline
+    // must not inherit a neighbor's.
+    let mut deadline: Option<Instant> = None;
+    let mut all_have_deadlines = true;
+    for q in flush.queries {
+        match q.deadline {
+            Some(d) => deadline = Some(deadline.map_or(d, |cur: Instant| cur.max(d))),
+            None => all_have_deadlines = false,
+        }
+        slots.push((q.req_id, q.respond));
+        inputs.push(q.input);
+    }
+    let opts = JobOptions {
+        deadline: if all_have_deadlines { deadline } else { None },
+        priority: flush.priority,
+    };
+    match coord.submit_batch_with(flush.matrix, &inputs, opts) {
+        Ok(handle) => {
+            if n >= 2 {
+                // ordering: Relaxed — coalescing counters are
+                // report-only; no reader infers cross-thread state
+                // from them.
+                metrics.batches_coalesced.fetch_add(1, Ordering::Relaxed);
+                metrics.coalesced_queries.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Some(ActiveFlush { handle, slots, coalesced })
+        }
+        Err(PpacError::Job(e)) => {
+            reject_slots(slots, &e);
+            None
+        }
+        Err(other) => {
+            reject_slots(slots, &JobError::from(other));
+            None
+        }
+    }
+}
+
+/// Poll an active flush once. `Some(flush)` means still pending; on
+/// completion (or handle failure) every slot has been answered.
+fn poll_flush(mut f: ActiveFlush) -> Option<ActiveFlush> {
+    match f.handle.try_wait() {
+        Ok(Some(results)) => {
+            let mut results = results.into_iter();
+            let mut slots = f.slots.into_iter();
+            loop {
+                match (slots.next(), results.next()) {
+                    (Some((req_id, respond)), Some(result)) => {
+                        let _ = respond.send(response_for_result(req_id, f.coalesced, result));
+                    }
+                    // The exactly-once backstop: a slot a short result
+                    // vector left unanswered gets a typed failure
+                    // instead of a hung client. (The coordinator
+                    // answers one result per input in order, so this
+                    // arm should be dead — it is here so a future
+                    // regression degrades to a typed error, not a
+                    // stuck connection.)
+                    (Some((req_id, respond)), None) => {
+                        let _ = respond
+                            .send(wire::response_for_job_error(req_id, &JobError::CoordinatorGone));
+                    }
+                    (None, _) => break,
+                }
+            }
+            None
+        }
+        Ok(None) => Some(f),
+        Err(_) => {
+            reject_slots(f.slots, &JobError::CoordinatorGone);
+            None
+        }
+    }
+}
+
+/// Handle one command; a max-fill flush is pushed onto `ready` for the
+/// main loop to submit.
+fn handle_cmd(
+    cmd: BatchCmd,
+    coalescer: &mut Coalescer,
+    ready: &mut Vec<Flush>,
+    shutting_down: &mut bool,
+    draining: &AtomicBool,
+) {
+    match cmd {
+        BatchCmd::Enqueue { matrix, query } => {
+            let now = Instant::now();
+            if *shutting_down || draining.load(Ordering::Acquire) {
+                let _ = query.respond.send(Response::Error {
+                    req_id: query.req_id,
+                    code: wire::ERR_SHUTTING_DOWN,
+                    message: "server draining: admissions closed".into(),
+                    overload: None,
+                });
+                return;
+            }
+            if query.deadline.is_some_and(|d| now >= d) {
+                let _ = query
+                    .respond
+                    .send(wire::response_for_job_error(query.req_id, &JobError::DeadlineExceeded));
+                return;
+            }
+            if let Some(flush) = coalescer.enqueue(now, matrix, query) {
+                ready.push(flush);
+            }
+        }
+        BatchCmd::Shutdown => *shutting_down = true,
+    }
+}
+
+/// Batcher thread main loop. Owns the [`Coalescer`] and the set of
+/// in-flight flushes; exits when it receives [`BatchCmd::Shutdown`] or
+/// every command sender hangs up, after resolving all in-flight work.
+pub fn run(
+    rx: Receiver<BatchCmd>,
+    coord: Arc<Coordinator>,
+    metrics: Arc<Metrics>,
+    window: Duration,
+    max_batch: usize,
+    draining: Arc<AtomicBool>,
+) {
+    let mut coalescer = Coalescer::new(window, max_batch);
+    let mut inflight: Vec<ActiveFlush> = Vec::new();
+    let mut ready: Vec<Flush> = Vec::new();
+    let mut shutting_down = false;
+
+    loop {
+        let now = Instant::now();
+        // Park until the nearest flush is due; poll fast while results
+        // are outstanding, slow when fully idle.
+        let park = match coalescer.next_due(now) {
+            Some(d) => d.min(Duration::from_millis(5)),
+            None if !inflight.is_empty() || shutting_down => Duration::from_micros(200),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(park.max(Duration::from_micros(50))) {
+            Ok(cmd) => {
+                handle_cmd(cmd, &mut coalescer, &mut ready, &mut shutting_down, &draining)
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // The channel returns Disconnected immediately from
+                // here on; sleep the park ourselves so the remaining
+                // in-flight polling does not busy-spin.
+                shutting_down = true;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        // Drain whatever else is already queued without re-parking —
+        // this is what lets concurrent arrivals coalesce instead of
+        // being submitted one per wakeup.
+        while let Ok(cmd) = rx.try_recv() {
+            handle_cmd(cmd, &mut coalescer, &mut ready, &mut shutting_down, &draining);
+        }
+
+        let now = Instant::now();
+        if shutting_down || draining.load(Ordering::Acquire) {
+            ready.extend(coalescer.flush_all());
+        } else {
+            ready.extend(coalescer.due(now));
+        }
+        for flush in ready.drain(..) {
+            if let Some(active) = submit_flush(&coord, &metrics, flush) {
+                inflight.push(active);
+            }
+        }
+
+        inflight = inflight.into_iter().filter_map(poll_flush).collect();
+
+        if shutting_down && inflight.is_empty() && coalescer.pending() == 0 {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn query(req_id: u64, deadline: Option<Instant>) -> (PendingQuery, Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            PendingQuery {
+                req_id,
+                input: JobInput::Pm1Mvp(vec![true, false, true, true]),
+                deadline,
+                priority: Priority::Normal,
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn window_expiry_flushes_after_bounded_wait() {
+        let base = Instant::now();
+        let window = Duration::from_micros(200);
+        let mut c = Coalescer::new(window, 32);
+        let (q, _rx) = query(1, None);
+        assert!(c.enqueue(base, 5, q).is_none());
+        // One tick before the window closes: nothing due yet.
+        assert!(c.due(base + window - Duration::from_micros(1)).is_empty());
+        assert_eq!(c.next_due(base), Some(window));
+        // At the window boundary the bucket flushes.
+        let flushes = c.due(base + window);
+        assert_eq!(flushes.len(), 1);
+        assert_eq!(flushes.first().map(|f| f.queries.len()), Some(1));
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn max_fill_flushes_immediately_without_waiting() {
+        let base = Instant::now();
+        let mut c = Coalescer::new(Duration::from_secs(3600), 4);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (q, rx) = query(i, None);
+            rxs.push(rx);
+            assert!(c.enqueue(base, 9, q).is_none(), "below max_batch nothing flushes");
+        }
+        let (q, rx) = query(3, None);
+        rxs.push(rx);
+        let flush = c.enqueue(base, 9, q).expect("fourth query fills the block");
+        assert_eq!(flush.matrix, 9);
+        assert_eq!(flush.queries.len(), 4);
+        let ids: Vec<u64> = flush.queries.iter().map(|q| q.req_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "submission order preserved for demux");
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn buckets_segregate_by_matrix() {
+        let base = Instant::now();
+        let window = Duration::from_micros(100);
+        let mut c = Coalescer::new(window, 32);
+        let (qa, _ra) = query(1, None);
+        let (qb, _rb) = query(2, None);
+        assert!(c.enqueue(base, 1, qa).is_none());
+        assert!(c.enqueue(base, 2, qb).is_none());
+        assert_eq!(c.pending(), 2);
+        let flushes = c.due(base + window);
+        assert_eq!(flushes.len(), 2, "different matrices never share a block");
+        let mut matrices: Vec<MatrixId> = flushes.iter().map(|f| f.matrix).collect();
+        matrices.sort_unstable();
+        assert_eq!(matrices, vec![1, 2]);
+        for f in &flushes {
+            assert_eq!(f.queries.len(), 1);
+        }
+    }
+
+    #[test]
+    fn deadline_pressure_flushes_early() {
+        let base = Instant::now();
+        let window = Duration::from_millis(10);
+        let mut c = Coalescer::new(window, 32);
+        // Deadline 12 ms out: pressure point is deadline − window =
+        // base + 2 ms, well before window expiry at base + 10 ms.
+        let (q, _rx) = query(1, Some(base + Duration::from_millis(12)));
+        assert!(c.enqueue(base, 3, q).is_none());
+        assert!(c.due(base + Duration::from_millis(1)).is_empty());
+        let flushes = c.due(base + Duration::from_millis(2));
+        assert_eq!(flushes.len(), 1, "deadline pressure beats window expiry");
+    }
+
+    #[test]
+    fn deadline_tighter_than_window_is_due_immediately() {
+        let base = Instant::now();
+        let window = Duration::from_secs(3600);
+        let mut c = Coalescer::new(window, 32);
+        let (q, _rx) = query(1, Some(base + Duration::from_millis(1)));
+        assert!(c.enqueue(base, 3, q).is_none());
+        assert_eq!(c.next_due(base), Some(Duration::ZERO));
+        assert_eq!(c.due(base).len(), 1);
+    }
+
+    #[test]
+    fn flush_all_empties_every_bucket() {
+        let base = Instant::now();
+        let mut c = Coalescer::new(Duration::from_secs(3600), 32);
+        let (qa, _ra) = query(1, None);
+        let (qb, _rb) = query(2, None);
+        let _ = c.enqueue(base, 1, qa);
+        let _ = c.enqueue(base, 2, qb);
+        assert_eq!(c.flush_all().len(), 2);
+        assert_eq!(c.pending(), 0);
+        assert!(c.next_due(base).is_none());
+    }
+}

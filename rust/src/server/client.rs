@@ -1,0 +1,159 @@
+//! Client side of the PPAC wire protocol, used by the `ppac client`
+//! load generator and the loopback e2e suite.
+//!
+//! The client is deliberately simple: one blocking TCP stream, the
+//! same [`FrameReader`] the server uses, and both a synchronous
+//! round-trip call ([`Client::query`]) and a pipelined pair
+//! ([`Client::send_query`] / [`Client::recv_response`]) for load
+//! generation. Typed server errors come back as
+//! [`Response::Error`] values, not transport failures — a client can
+//! tell `overloaded` from `deadline-exceeded` from a dead socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::Priority;
+
+use super::wire::{self, FrameReader, Op, Request, Response};
+
+/// Client-side failures.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The transport failed (connect, read, or write).
+    Io(std::io::Error),
+    /// The server sent bytes that do not parse as the protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport: {e}"),
+            ClientError::Protocol(what) => write!(f, "protocol: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// One connection to a PPAC server.
+pub struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7700`).
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, reader: FrameReader::new(), next_id: 1 })
+    }
+
+    /// Set a cap on how long a single `recv_response` may block.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Ask for a matrix's shape.
+    pub fn info(&mut self, matrix: u64) -> Result<(u32, u32), ClientError> {
+        let req_id = self.send(Op::Info, matrix, Vec::new(), 0, Priority::Normal)?;
+        match self.recv_response()? {
+            Response::Info { req_id: got, rows, cols } if got == req_id => Ok((rows, cols)),
+            Response::Error { code, message, .. } => Err(ClientError::Protocol(format!(
+                "info refused: {} ({message})",
+                wire::status_name(code)
+            ))),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected info reply with status {}",
+                wire::status_name(other.status())
+            ))),
+        }
+    }
+
+    /// Blocking round trip: send one query, wait for its response.
+    /// Typed server errors are returned as `Ok(Response::Error {..})`.
+    pub fn query(
+        &mut self,
+        matrix: u64,
+        op: Op,
+        bits: Vec<bool>,
+        deadline_us: u64,
+        priority: Priority,
+    ) -> Result<Response, ClientError> {
+        let req_id = self.send(op, matrix, bits, deadline_us, priority)?;
+        loop {
+            let resp = self.recv_response()?;
+            // Responses to pipelined traffic may interleave; a plain
+            // round-trip caller only ever has one outstanding id.
+            if resp.req_id() == req_id || resp.req_id() == 0 {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Pipelined send: returns the correlation id to match against
+    /// [`Client::recv_response`].
+    pub fn send_query(
+        &mut self,
+        matrix: u64,
+        op: Op,
+        bits: Vec<bool>,
+        deadline_us: u64,
+        priority: Priority,
+    ) -> Result<u64, ClientError> {
+        self.send(op, matrix, bits, deadline_us, priority)
+    }
+
+    fn send(
+        &mut self,
+        op: Op,
+        matrix: u64,
+        bits: Vec<bool>,
+        deadline_us: u64,
+        priority: Priority,
+    ) -> Result<u64, ClientError> {
+        let req_id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        let frame = wire::encode_request(&Request { req_id, op, priority, matrix, deadline_us, bits });
+        self.stream.write_all(&frame)?;
+        Ok(req_id)
+    }
+
+    /// Block until one complete response arrives.
+    pub fn recv_response(&mut self) -> Result<Response, ClientError> {
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.reader.next_frame() {
+                Ok(Some((kind, payload))) => {
+                    if kind != wire::KIND_RESPONSE {
+                        return Err(ClientError::Protocol(format!(
+                            "unexpected frame kind {kind} from server"
+                        )));
+                    }
+                    return wire::decode_response(&payload)
+                        .map_err(|fault| ClientError::Protocol(fault.message()));
+                }
+                Ok(None) => {}
+                Err(fault) => return Err(ClientError::Protocol(fault.message())),
+            }
+            let k = self.stream.read(&mut buf)?;
+            if k == 0 {
+                return Err(ClientError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                )));
+            }
+            self.reader.feed(buf.get(..k).unwrap_or_default());
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Network serving front end: a std-only TCP listener that turns PPAC
+//! into a service without giving up the query-blocked kernel's
+//! economics.
+//!
+//! Layering (ROADMAP item 1):
+//!
+//! ```text
+//! TcpListener (accept loop, nonblocking + stop flag)
+//!   └─ session threads  (wire.rs framing ⇄ typed responses,
+//!      │                 per-connection gate = TCP backpressure)
+//!      └─ batcher thread (batcher.rs: cross-client micro-batching
+//!         │               window → submit_batch_with full blocks)
+//!         └─ Coordinator (PR 1–8 stack: admission, deadlines,
+//!                         replication, self-healing)
+//! ```
+//!
+//! Everything is std: `TcpListener`/`TcpStream`, threads, mpsc — the
+//! same manifest policy the rest of the crate has held since the
+//! dependency purge. The wire protocol is versioned and length-
+//! prefixed ([`wire`]); clients get the same typed `JobError` taxonomy
+//! as in-process callers.
+//!
+//! Shutdown follows the coordinator's drain discipline: flip the
+//! draining flag (new queries answered `ERR_SHUTTING_DOWN`), stop
+//! accepting, give sessions a grace period to observe the refusals and
+//! hang up, force-close stragglers, retire the batcher (which resolves
+//! every in-flight flush first — the demux invariant holds across
+//! drain), then drain the coordinator itself.
+
+pub mod batcher;
+pub mod client;
+pub mod session;
+pub mod wire;
+
+pub use client::{Client, ClientError};
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, Metrics};
+use crate::error::{PpacError, Result};
+use crate::util::sync::{lock, Ordering};
+
+use batcher::BatchCmd;
+use session::SessionShared;
+
+/// Tunables for the serving front end.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bounded coalescing wait (`--batch-window-us`). The latency tax
+    /// a query pays, worst case, for the chance to share a block.
+    pub batch_window: Duration,
+    /// Coalescing cap (`--batch-max`); the engine block size (32) is
+    /// the natural value — beyond it a flush spills into a second
+    /// block anyway.
+    pub batch_max: usize,
+    /// Per-connection cap on decoded-but-unanswered frames (the
+    /// session gate; see `session.rs` on backpressure).
+    pub session_window: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_window: Duration::from_micros(200),
+            batch_max: 32,
+            session_window: 256,
+        }
+    }
+}
+
+struct SessionSlot {
+    stream: TcpStream,
+    handle: JoinHandle<()>,
+}
+
+/// A running serving front end. Owns the accept thread, the batcher
+/// thread, and every live session.
+pub struct Server {
+    local: std::net::SocketAddr,
+    coord: Arc<Coordinator>,
+    metrics: Arc<Metrics>,
+    draining: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    batcher_tx: Sender<BatchCmd>,
+    batcher: Option<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<SessionSlot>>>,
+}
+
+impl Server {
+    /// Bind `addr` and start serving `coord` (which the server takes
+    /// ownership of — `drain`/`shutdown` retire it too).
+    pub fn start(coord: Coordinator, addr: &str, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| PpacError::Coordinator(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| PpacError::Coordinator(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| PpacError::Coordinator(format!("set_nonblocking: {e}")))?;
+
+        let metrics = Arc::clone(&coord.metrics);
+        let coord = Arc::new(coord);
+        let draining = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<SessionSlot>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let (batcher_tx, batcher_rx) = mpsc::channel::<BatchCmd>();
+        let batcher = {
+            let coord = Arc::clone(&coord);
+            let metrics = Arc::clone(&metrics);
+            let draining = Arc::clone(&draining);
+            let window = cfg.batch_window;
+            let max = cfg.batch_max;
+            std::thread::spawn(move || batcher::run(batcher_rx, coord, metrics, window, max, draining))
+        };
+
+        let shared = Arc::new(SessionShared {
+            coord: Arc::clone(&coord),
+            metrics: Arc::clone(&metrics),
+            batcher: batcher_tx.clone(),
+            draining: Arc::clone(&draining),
+            window: cfg.session_window,
+        });
+
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let sessions = Arc::clone(&sessions);
+            let metrics = Arc::clone(&metrics);
+            std::thread::spawn(move || {
+                accept_loop(listener, stop, sessions, metrics, shared);
+            })
+        };
+
+        Ok(Server {
+            local,
+            coord,
+            metrics,
+            draining,
+            stop,
+            accept: Some(accept),
+            batcher_tx,
+            batcher: Some(batcher),
+            sessions,
+        })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local
+    }
+
+    /// The coordinator's metrics (shared with the server's counters).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Graceful stop: refuse new work, give live connections `grace`
+    /// to finish and hang up, then force the stragglers, retire the
+    /// batcher, and drain the coordinator. `true` when everything shut
+    /// down cleanly within budget.
+    pub fn drain(mut self, grace: Duration) -> bool {
+        let deadline = Instant::now() + grace;
+        // Release so session/batcher threads that Acquire-load the
+        // flag observe it before their next admission decision.
+        self.draining.store(true, Ordering::Release);
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+
+        // Grace period: poll for sessions to exit on their own (their
+        // clients see typed ERR_SHUTTING_DOWN refusals and hang up).
+        let mut sessions_clean = true;
+        loop {
+            let all_done = {
+                let g = lock(&self.sessions);
+                g.iter().all(|s| s.handle.is_finished())
+            };
+            if all_done {
+                break;
+            }
+            if Instant::now() >= deadline {
+                sessions_clean = false;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Force whatever is left: shut the sockets so blocked reads
+        // fail, then join every session thread. The guard must not
+        // live across the joins (scoped take).
+        let slots: Vec<SessionSlot> = {
+            let mut g = lock(&self.sessions);
+            std::mem::take(&mut *g)
+        };
+        for slot in slots {
+            let _ = slot.stream.shutdown(Shutdown::Both);
+            let _ = slot.handle.join();
+        }
+
+        // Retire the batcher: it flushes parked queries and resolves
+        // in-flight handles before exiting, keeping the exactly-once
+        // demux invariant across drain.
+        let _ = self.batcher_tx.send(BatchCmd::Shutdown);
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+
+        // All other coordinator handles are gone (sessions and batcher
+        // joined above), so the Arc is unique again and the
+        // coordinator gets its own drain for whatever the grace period
+        // has left.
+        match Arc::try_unwrap(self.coord) {
+            Ok(coord) => {
+                let left = deadline.saturating_duration_since(Instant::now());
+                let coord_clean = coord.drain(left.max(Duration::from_millis(50)));
+                sessions_clean && coord_clean
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Immediate stop: the drain path with a minimal grace period.
+    pub fn shutdown(self) {
+        let _ = self.drain(Duration::from_millis(50));
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    sessions: Arc<Mutex<Vec<SessionSlot>>>,
+    metrics: Arc<Metrics>,
+    shared: Arc<SessionShared>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+                // ordering: Relaxed — connection counters are
+                // report-only; the session's own lifecycle, not these
+                // counters, synchronizes its threads.
+                metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+                metrics.connections_open.fetch_add(1, Ordering::Relaxed);
+                let session_stream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // ordering: Relaxed — report-only gauge, see
+                        // the accept-path comment above.
+                        metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                };
+                let shared = Arc::clone(&shared);
+                let handle = std::thread::spawn(move || session::run_session(session_stream, shared));
+                let mut g = lock(&sessions);
+                // Sweep finished sessions so a long-lived server's
+                // slot list does not grow without bound.
+                g.retain(|s| !s.handle.is_finished());
+                g.push(SessionSlot { stream, handle });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Per-connection session threads: the translation layer between the
+//! wire protocol and the coordinator.
+//!
+//! Each accepted connection gets a reader (this thread) and a writer
+//! thread joined by an mpsc channel of [`Response`]s. The reader feeds
+//! a [`FrameReader`], decodes requests, and forwards queries to the
+//! batcher; the writer serializes responses back in completion order
+//! (responses carry `req_id`, so clients may pipeline).
+//!
+//! **Backpressure** is TCP-level and deliberate: the reader must
+//! acquire a [`Gate`] slot per frame *before* decoding it, and slots
+//! are released only as the writer flushes replies. A client that
+//! outruns the server — or whose jobs are parked behind a blocked
+//! admission gate — stops being read, its socket buffer fills, and the
+//! kernel's flow control pushes the stall back to the sender. No
+//! unbounded queue hides the overload; `JobError::Overloaded` and
+//! friends surface as typed wire statuses when admission itself sheds.
+
+use std::io::{BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, JobError, JobInput, Metrics};
+use crate::util::sync::Ordering;
+
+use super::batcher::{BatchCmd, PendingQuery};
+use super::wire::{self, FrameReader, Op, Request, Response};
+
+/// State shared by every session of one server.
+pub struct SessionShared {
+    pub coord: Arc<Coordinator>,
+    pub metrics: Arc<Metrics>,
+    pub batcher: Sender<BatchCmd>,
+    pub draining: Arc<AtomicBool>,
+    /// Per-connection cap on decoded-but-unanswered frames.
+    pub window: usize,
+}
+
+/// A counting gate bounding decoded-but-unanswered frames per
+/// connection. `acquire` parks the reader while the window is full —
+/// that parked reader is the backpressure mechanism described in the
+/// module docs. Closing the gate (writer death) unblocks and fails all
+/// future acquires so the reader can exit.
+struct Gate {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl Gate {
+    fn new(cap: usize) -> Self {
+        Gate { state: Mutex::new((0, false)), cv: Condvar::new(), cap: cap.max(1) }
+    }
+
+    /// Take one slot; `false` means the gate closed (stop reading).
+    fn acquire(&self) -> bool {
+        let mut g = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            let (used, closed) = *g;
+            if closed {
+                return false;
+            }
+            if used < self.cap {
+                g.0 = used + 1;
+                return true;
+            }
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Return one slot (one reply flushed).
+    fn release(&self) {
+        let mut g = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        g.0 = g.0.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Close the gate: wake and fail every parked or future acquire.
+    fn close(&self) {
+        let mut g = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        g.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Run one connection to completion. Consumes the stream; decrements
+/// `connections_open` on the way out.
+pub fn run_session(stream: TcpStream, shared: Arc<SessionShared>) {
+    let gate = Arc::new(Gate::new(shared.window));
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    let writer = stream.try_clone().ok().map(|out| {
+        let gate = Arc::clone(&gate);
+        std::thread::spawn(move || {
+            let mut out = BufWriter::new(out);
+            while let Ok(resp) = rx.recv() {
+                let frame = wire::encode_response(&resp);
+                if out.write_all(&frame).and_then(|()| out.flush()).is_err() {
+                    break;
+                }
+                gate.release();
+            }
+            gate.close();
+        })
+    });
+
+    if writer.is_some() {
+        read_loop(&stream, &shared, &gate, &tx);
+    }
+    // Reader done: drop our sender so the writer drains pending
+    // replies (batcher clones may still answer in-flight queries) and
+    // then exits on disconnect. Only after the writer has flushed do
+    // we shut the socket down — the accept loop holds another clone of
+    // this stream, so an explicit shutdown is what actually closes the
+    // connection.
+    drop(tx);
+    gate.close();
+    if let Some(handle) = writer {
+        let _ = handle.join();
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    // ordering: Relaxed — connections_open is a report-only gauge; its
+    // inc in the accept loop and this dec are not a synchronization
+    // edge, a stale read only skews one report line.
+    shared.metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Reader loop: bytes → frames → requests → batcher commands. Returns
+/// when the peer hangs up, a fatal framing fault is answered, or the
+/// gate closes.
+fn read_loop(
+    // `mut` binding: `Read` is implemented for `&TcpStream`, and
+    // `read` wants `&mut` of that reference.
+    mut stream: &TcpStream,
+    shared: &SessionShared,
+    gate: &Gate,
+    tx: &Sender<Response>,
+) {
+    let mut fr = FrameReader::new();
+    let mut buf = [0u8; 4096];
+    let mut peer_gone = false;
+    loop {
+        loop {
+            match fr.next_frame() {
+                Ok(Some((kind, payload))) => {
+                    // The gate slot is taken per frame *before* any
+                    // work: a full window parks us right here, which
+                    // stops the read loop — TCP backpressure.
+                    if !gate.acquire() {
+                        return;
+                    }
+                    if !handle_frame(kind, &payload, shared, tx) {
+                        return;
+                    }
+                }
+                Ok(None) => break,
+                Err(fault) => {
+                    // ordering: Relaxed — frames_rejected is a
+                    // report-only monotonic counter.
+                    shared.metrics.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                    if gate.acquire() {
+                        let _ = tx.send(Response::Error {
+                            req_id: 0,
+                            code: fault.code(),
+                            message: fault.message(),
+                            overload: None,
+                        });
+                    }
+                    // Framing faults surfaced here are fatal (the
+                    // stream cannot be resynchronized); answer, then
+                    // close.
+                    return;
+                }
+            }
+        }
+        if peer_gone {
+            return;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => peer_gone = true,
+            Ok(k) => fr.feed(buf.get(..k).unwrap_or_default()),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Read timeout tick: lets a drained server's sessions
+                // notice closed sockets promptly. Nothing to do.
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one well-framed payload. Returns `false` to close the
+/// connection. The caller has already charged the gate slot for this
+/// frame; every path here either sends exactly one response (the
+/// writer releases the slot) or releases the slot itself.
+fn handle_frame(
+    kind: u8,
+    payload: &[u8],
+    shared: &SessionShared,
+    tx: &Sender<Response>,
+) -> bool {
+    if kind != wire::KIND_REQUEST {
+        // ordering: Relaxed — frames_rejected is a report-only
+        // monotonic counter.
+        shared.metrics.frames_rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(Response::Error {
+            req_id: 0,
+            code: wire::ERR_BAD_FRAME,
+            message: format!("unexpected frame kind {kind} (want request)"),
+            overload: None,
+        });
+        return true;
+    }
+    let req = match wire::decode_request(payload) {
+        Ok(req) => req,
+        Err(fault) => {
+            // ordering: Relaxed — frames_rejected is a report-only
+            // monotonic counter.
+            shared.metrics.frames_rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response::Error {
+                req_id: 0,
+                code: fault.code(),
+                message: fault.message(),
+                overload: None,
+            });
+            // Malformed-payload faults keep the connection: the frame
+            // boundary was intact, so the stream is still in sync.
+            return !fault.fatal();
+        }
+    };
+    handle_request(req, shared, tx)
+}
+
+/// Answer one decoded request. Same slot contract as [`handle_frame`].
+fn handle_request(req: Request, shared: &SessionShared, tx: &Sender<Response>) -> bool {
+    let shape = shared.coord.matrix_shape(req.matrix);
+    if req.op == Op::Info {
+        let resp = match shape {
+            Some((m, n)) => Response::Info {
+                req_id: req.req_id,
+                rows: m.min(u32::MAX as usize) as u32,
+                cols: n.min(u32::MAX as usize) as u32,
+            },
+            None => unknown_matrix(req.req_id, req.matrix),
+        };
+        let _ = tx.send(resp);
+        return true;
+    }
+    let Some((_, cols)) = shape else {
+        let _ = tx.send(unknown_matrix(req.req_id, req.matrix));
+        return true;
+    };
+    if req.bits.len() != cols {
+        let _ = tx.send(wire::response_for_job_error(
+            req.req_id,
+            &JobError::DimMismatch {
+                context: "job input width",
+                expected: cols,
+                got: req.bits.len(),
+            },
+        ));
+        return true;
+    }
+    let input = match req.op {
+        Op::Pm1Mvp => JobInput::Pm1Mvp(req.bits),
+        Op::Hamming => JobInput::Hamming(req.bits),
+        Op::Gf2 => JobInput::Gf2(req.bits),
+        Op::Info => return true, // handled above
+    };
+    let deadline = (req.deadline_us > 0)
+        .then(|| Instant::now() + Duration::from_micros(req.deadline_us));
+    let query = PendingQuery {
+        req_id: req.req_id,
+        input,
+        deadline,
+        priority: req.priority,
+        respond: tx.clone(),
+    };
+    if shared.batcher.send(BatchCmd::Enqueue { matrix: req.matrix, query }).is_err() {
+        // Batcher already gone: the server is past drain. Answer
+        // typed shutdown ourselves (the enqueue never happened, so the
+        // batcher cannot).
+        let _ = tx.send(Response::Error {
+            req_id: req.req_id,
+            code: wire::ERR_SHUTTING_DOWN,
+            message: "server draining: admissions closed".into(),
+            overload: None,
+        });
+    }
+    // The response (from the batcher or the fallback above) releases
+    // the slot via the writer; nothing to release here.
+    true
+}
+
+fn unknown_matrix(req_id: u64, matrix: u64) -> Response {
+    Response::Error {
+        req_id,
+        code: wire::ERR_UNKNOWN_MATRIX,
+        message: format!("unknown matrix {matrix}"),
+        overload: None,
+    }
+}

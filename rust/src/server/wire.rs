@@ -1,0 +1,744 @@
+//! The PPAC wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Dependency-free by design (the manifest policy since the lint PR):
+//! fixed little-endian framing, hand-rolled encode/decode, and an
+//! incremental [`FrameReader`] that tolerates arbitrary read
+//! fragmentation. One frame is
+//!
+//! ```text
+//! magic   4 B   b"PPAC"
+//! version 2 B   u16 LE, currently 1
+//! kind    1 B   1 = request, 2 = response
+//! (pad)   1 B   0
+//! len     4 B   u32 LE payload length, hard-capped at MAX_PAYLOAD
+//! payload len B
+//! ```
+//!
+//! A request payload is a fixed 32-byte head (`req_id`, op, priority,
+//! matrix id, relative deadline in µs, query width in bits) followed by
+//! the query bits packed 8-per-byte, LSB first. A response payload is
+//! `req_id` + a status byte + a status-specific body; every
+//! [`JobError`](crate::coordinator::JobError) variant has a wire status
+//! code, so transport clients see the same typed outcomes as in-process
+//! callers. Protocol-level faults (bad magic, over-cap frames,
+//! malformed payloads) get their own codes — the session *answers* them
+//! instead of dropping the connection silently.
+
+use crate::coordinator::{JobError, MatrixId, Priority};
+
+/// Frame magic: the first four bytes of every PPAC frame.
+pub const MAGIC: [u8; 4] = *b"PPAC";
+/// Protocol version this build speaks.
+pub const VERSION: u16 = 1;
+/// Bytes of header before the payload.
+pub const HEADER_LEN: usize = 12;
+/// Hard cap on a frame's payload (1 MiB — a 256-wide bit query is 64
+/// bytes; even a 4M-row int response fits a later version's streaming,
+/// not one frame). A declared length above this is a typed
+/// [`WireFault::TooLarge`], answered then disconnected: the stream
+/// cannot be resynchronized without trusting the hostile length.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+
+/// `kind` byte of a request frame.
+pub const KIND_REQUEST: u8 = 1;
+/// `kind` byte of a response frame.
+pub const KIND_RESPONSE: u8 = 2;
+
+/// Response status: integer results follow.
+pub const STATUS_OK_INTS: u8 = 0;
+/// Response status: packed bit results follow.
+pub const STATUS_OK_BITS: u8 = 1;
+/// Response status: matrix shape info follows.
+pub const STATUS_INFO: u8 = 2;
+
+/// `JobError::UnknownShard` / unknown matrix id.
+pub const ERR_UNKNOWN_MATRIX: u8 = 0x10;
+/// `JobError::KindMismatch`.
+pub const ERR_KIND_MISMATCH: u8 = 0x11;
+/// `JobError::FormatRange`.
+pub const ERR_FORMAT_RANGE: u8 = 0x12;
+/// `JobError::DimMismatch`.
+pub const ERR_DIM_MISMATCH: u8 = 0x13;
+/// `JobError::Unsupported`.
+pub const ERR_UNSUPPORTED: u8 = 0x14;
+/// `JobError::WorkerLost`.
+pub const ERR_WORKER_LOST: u8 = 0x15;
+/// `JobError::Overloaded` — the body carries `inflight`/`limit`/
+/// `draining` so clients can implement typed backoff.
+pub const ERR_OVERLOADED: u8 = 0x16;
+/// `JobError::DeadlineExceeded`.
+pub const ERR_DEADLINE_EXCEEDED: u8 = 0x17;
+/// `JobError::Cancelled`.
+pub const ERR_CANCELLED: u8 = 0x18;
+/// `JobError::CoordinatorGone`.
+pub const ERR_COORDINATOR_GONE: u8 = 0x19;
+/// Protocol fault: bad magic/version or a malformed payload.
+pub const ERR_BAD_FRAME: u8 = 0x20;
+/// Protocol fault: declared payload length over [`MAX_PAYLOAD`].
+pub const ERR_FRAME_TOO_LARGE: u8 = 0x21;
+/// The server is draining: admissions are closed for this connection.
+pub const ERR_SHUTTING_DOWN: u8 = 0x22;
+
+/// Human-readable name of a response status code (client display).
+pub fn status_name(code: u8) -> &'static str {
+    match code {
+        STATUS_OK_INTS => "ok-ints",
+        STATUS_OK_BITS => "ok-bits",
+        STATUS_INFO => "info",
+        ERR_UNKNOWN_MATRIX => "unknown-matrix",
+        ERR_KIND_MISMATCH => "kind-mismatch",
+        ERR_FORMAT_RANGE => "format-range",
+        ERR_DIM_MISMATCH => "dim-mismatch",
+        ERR_UNSUPPORTED => "unsupported",
+        ERR_WORKER_LOST => "worker-lost",
+        ERR_OVERLOADED => "overloaded",
+        ERR_DEADLINE_EXCEEDED => "deadline-exceeded",
+        ERR_CANCELLED => "cancelled",
+        ERR_COORDINATOR_GONE => "coordinator-gone",
+        ERR_BAD_FRAME => "bad-frame",
+        ERR_FRAME_TOO_LARGE => "frame-too-large",
+        ERR_SHUTTING_DOWN => "shutting-down",
+        _ => "unknown-status",
+    }
+}
+
+/// Operations a request frame can carry. The three 1-bit query modes
+/// ship packed bit payloads; `Info` asks for a matrix's shape (so a
+/// client can size its queries without out-of-band coordination).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// 1-bit {±1} MVP (`JobInput::Pm1Mvp`).
+    Pm1Mvp,
+    /// Hamming similarity (`JobInput::Hamming`).
+    Hamming,
+    /// GF(2) MVP (`JobInput::Gf2`).
+    Gf2,
+    /// Matrix shape query (no job submitted).
+    Info,
+}
+
+impl Op {
+    /// Wire code of this op.
+    pub fn code(self) -> u8 {
+        match self {
+            Op::Pm1Mvp => 1,
+            Op::Hamming => 2,
+            Op::Gf2 => 3,
+            Op::Info => 4,
+        }
+    }
+
+    /// Op for a wire code.
+    pub fn from_code(code: u8) -> Option<Op> {
+        match code {
+            1 => Some(Op::Pm1Mvp),
+            2 => Some(Op::Hamming),
+            3 => Some(Op::Gf2),
+            4 => Some(Op::Info),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`pm1`/`hamming`/`gf2`).
+    pub fn parse(name: &str) -> Option<Op> {
+        match name {
+            "pm1" | "pm1_mvp" => Some(Op::Pm1Mvp),
+            "hamming" => Some(Op::Hamming),
+            "gf2" | "gf2_mvp" => Some(Op::Gf2),
+            "info" => Some(Op::Info),
+            _ => None,
+        }
+    }
+
+    /// CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Pm1Mvp => "pm1",
+            Op::Hamming => "hamming",
+            Op::Gf2 => "gf2",
+            Op::Info => "info",
+        }
+    }
+}
+
+fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::Low => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    }
+}
+
+fn priority_from_code(code: u8) -> Option<Priority> {
+    match code {
+        0 => Some(Priority::Low),
+        1 => Some(Priority::Normal),
+        2 => Some(Priority::High),
+        _ => None,
+    }
+}
+
+/// One decoded request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed verbatim in the response.
+    pub req_id: u64,
+    /// What to run.
+    pub op: Op,
+    /// Admission tier for the resulting job.
+    pub priority: Priority,
+    /// Target matrix.
+    pub matrix: MatrixId,
+    /// Relative end-to-end deadline in µs from server receipt (0 =
+    /// none). Relative — not absolute — so clients and server need no
+    /// clock agreement.
+    pub deadline_us: u64,
+    /// Query bits (empty for `Op::Info`).
+    pub bits: Vec<bool>,
+}
+
+/// One decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Integer results (`JobOutput::Ints`).
+    Ints {
+        req_id: u64,
+        /// How many queries the serving batcher coalesced into the
+        /// block this one rode in (the cross-client fan-in).
+        coalesced: u16,
+        /// Worker pipeline batch size the job was served in.
+        batch: u16,
+        values: Vec<i64>,
+    },
+    /// Bit results (`JobOutput::Bits`).
+    Bits { req_id: u64, coalesced: u16, batch: u16, bits: Vec<bool> },
+    /// Matrix shape (answer to `Op::Info`).
+    Info { req_id: u64, rows: u32, cols: u32 },
+    /// A typed error: one of the `ERR_*` status codes.
+    Error {
+        req_id: u64,
+        code: u8,
+        message: String,
+        /// `(inflight, limit, draining)` — present iff `code` is
+        /// [`ERR_OVERLOADED`].
+        overload: Option<(u64, u64, bool)>,
+    },
+}
+
+impl Response {
+    /// The correlation id this response answers.
+    pub fn req_id(&self) -> u64 {
+        match self {
+            Response::Ints { req_id, .. }
+            | Response::Bits { req_id, .. }
+            | Response::Info { req_id, .. }
+            | Response::Error { req_id, .. } => *req_id,
+        }
+    }
+
+    /// The wire status code this response carries.
+    pub fn status(&self) -> u8 {
+        match self {
+            Response::Ints { .. } => STATUS_OK_INTS,
+            Response::Bits { .. } => STATUS_OK_BITS,
+            Response::Info { .. } => STATUS_INFO,
+            Response::Error { code, .. } => *code,
+        }
+    }
+}
+
+/// A protocol-level fault. `BadMagic`/`BadVersion`/`TooLarge` are
+/// *fatal*: the stream cannot be resynchronized, so the session answers
+/// the typed error and closes. `Malformed` means the frame boundary was
+/// intact but the payload did not parse — answered, connection kept.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireFault {
+    /// First four bytes were not [`MAGIC`].
+    BadMagic,
+    /// Version field did not match [`VERSION`].
+    BadVersion(u16),
+    /// Declared payload length over [`MAX_PAYLOAD`].
+    TooLarge(u32),
+    /// Frame parsed but the payload did not.
+    Malformed(&'static str),
+}
+
+impl WireFault {
+    /// The wire status code the session answers this fault with.
+    pub fn code(&self) -> u8 {
+        match self {
+            WireFault::TooLarge(_) => ERR_FRAME_TOO_LARGE,
+            _ => ERR_BAD_FRAME,
+        }
+    }
+
+    /// Whether the session must close the connection after answering
+    /// (the stream cannot be resynchronized past this fault).
+    pub fn fatal(&self) -> bool {
+        !matches!(self, WireFault::Malformed(_))
+    }
+
+    /// Human-readable description shipped in the error response.
+    pub fn message(&self) -> String {
+        match self {
+            WireFault::BadMagic => "bad frame magic (expected b\"PPAC\")".into(),
+            WireFault::BadVersion(v) => format!("unsupported protocol version {v} (speak {VERSION})"),
+            WireFault::TooLarge(len) => format!("declared payload {len} B over the {MAX_PAYLOAD} B cap"),
+            WireFault::Malformed(what) => format!("malformed payload: {what}"),
+        }
+    }
+}
+
+/// Pack bits 8-per-byte, LSB first.
+pub fn pack_bits(bits: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; bits.len().div_ceil(8)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            if let Some(byte) = out.get_mut(i >> 3) {
+                *byte |= 1 << (i & 7);
+            }
+        }
+    }
+    out
+}
+
+/// Unpack `n` bits packed by [`pack_bits`]; `None` if `bytes` is short.
+pub fn unpack_bits(bytes: &[u8], n: usize) -> Option<Vec<bool>> {
+    if bytes.len() < n.div_ceil(8) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = *bytes.get(i >> 3)?;
+        out.push(byte & (1 << (i & 7)) != 0);
+    }
+    Some(out)
+}
+
+// -- encode ----------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    put_u16(&mut out, VERSION);
+    out.push(kind);
+    out.push(0);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a request into a complete frame (header + payload).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let packed = pack_bits(&req.bits);
+    let mut p = Vec::with_capacity(32 + packed.len());
+    put_u64(&mut p, req.req_id);
+    p.push(req.op.code());
+    p.push(priority_code(req.priority));
+    put_u16(&mut p, 0);
+    put_u64(&mut p, req.matrix);
+    put_u64(&mut p, req.deadline_us);
+    put_u32(&mut p, req.bits.len() as u32);
+    p.extend_from_slice(&packed);
+    frame(KIND_REQUEST, &p)
+}
+
+/// Encode a response into a complete frame (header + payload).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, resp.req_id());
+    p.push(resp.status());
+    match resp {
+        Response::Ints { coalesced, batch, values, .. } => {
+            put_u16(&mut p, *coalesced);
+            put_u16(&mut p, *batch);
+            put_u32(&mut p, values.len() as u32);
+            for v in values {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Response::Bits { coalesced, batch, bits, .. } => {
+            put_u16(&mut p, *coalesced);
+            put_u16(&mut p, *batch);
+            put_u32(&mut p, bits.len() as u32);
+            p.extend_from_slice(&pack_bits(bits));
+        }
+        Response::Info { rows, cols, .. } => {
+            put_u32(&mut p, *rows);
+            put_u32(&mut p, *cols);
+        }
+        Response::Error { message, overload, .. } => {
+            let (inflight, limit, draining) = overload.unwrap_or((0, 0, false));
+            put_u64(&mut p, inflight);
+            put_u64(&mut p, limit);
+            p.push(draining as u8);
+            let msg = message.as_bytes();
+            let take = msg.len().min(4096);
+            put_u32(&mut p, take as u32);
+            p.extend_from_slice(msg.get(..take).unwrap_or_default());
+        }
+    }
+    frame(KIND_RESPONSE, &p)
+}
+
+// -- decode ----------------------------------------------------------------
+
+/// A little-endian cursor over a payload; every read is bounds-checked.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, off: 0 }
+    }
+    fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.b.get(self.off..self.off.checked_add(n)?)?;
+        self.off += n;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        self.bytes(1).and_then(|s| s.first().copied())
+    }
+    fn u16(&mut self) -> Option<u16> {
+        self.bytes(2).and_then(|s| Some(u16::from_le_bytes(s.try_into().ok()?)))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.bytes(4).and_then(|s| Some(u32::from_le_bytes(s.try_into().ok()?)))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.bytes(8).and_then(|s| Some(u64::from_le_bytes(s.try_into().ok()?)))
+    }
+    fn i64(&mut self) -> Option<i64> {
+        self.u64().map(|v| v as i64)
+    }
+}
+
+/// Decode a request payload (the bytes after the frame header).
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireFault> {
+    let mut r = Rd::new(payload);
+    let req_id = r.u64().ok_or(WireFault::Malformed("request head truncated"))?;
+    let op_code = r.u8().ok_or(WireFault::Malformed("request head truncated"))?;
+    let op = Op::from_code(op_code).ok_or(WireFault::Malformed("unknown op code"))?;
+    let prio_code = r.u8().ok_or(WireFault::Malformed("request head truncated"))?;
+    let priority =
+        priority_from_code(prio_code).ok_or(WireFault::Malformed("unknown priority code"))?;
+    let _pad = r.u16().ok_or(WireFault::Malformed("request head truncated"))?;
+    let matrix = r.u64().ok_or(WireFault::Malformed("request head truncated"))?;
+    let deadline_us = r.u64().ok_or(WireFault::Malformed("request head truncated"))?;
+    let nbits = r.u32().ok_or(WireFault::Malformed("request head truncated"))? as usize;
+    let packed = r
+        .bytes(nbits.div_ceil(8))
+        .ok_or(WireFault::Malformed("query bits shorter than the declared width"))?;
+    let bits =
+        unpack_bits(packed, nbits).ok_or(WireFault::Malformed("query bits failed to unpack"))?;
+    Ok(Request { req_id, op, priority, matrix, deadline_us, bits })
+}
+
+/// Decode a response payload (the bytes after the frame header).
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireFault> {
+    let mut r = Rd::new(payload);
+    let req_id = r.u64().ok_or(WireFault::Malformed("response head truncated"))?;
+    let status = r.u8().ok_or(WireFault::Malformed("response head truncated"))?;
+    match status {
+        STATUS_OK_INTS => {
+            let coalesced = r.u16().ok_or(WireFault::Malformed("ints body truncated"))?;
+            let batch = r.u16().ok_or(WireFault::Malformed("ints body truncated"))?;
+            let count = r.u32().ok_or(WireFault::Malformed("ints body truncated"))? as usize;
+            let mut values = Vec::with_capacity(count.min(1 << 17));
+            for _ in 0..count {
+                values.push(r.i64().ok_or(WireFault::Malformed("ints body truncated"))?);
+            }
+            Ok(Response::Ints { req_id, coalesced, batch, values })
+        }
+        STATUS_OK_BITS => {
+            let coalesced = r.u16().ok_or(WireFault::Malformed("bits body truncated"))?;
+            let batch = r.u16().ok_or(WireFault::Malformed("bits body truncated"))?;
+            let count = r.u32().ok_or(WireFault::Malformed("bits body truncated"))? as usize;
+            let packed =
+                r.bytes(count.div_ceil(8)).ok_or(WireFault::Malformed("bits body truncated"))?;
+            let bits =
+                unpack_bits(packed, count).ok_or(WireFault::Malformed("bits failed to unpack"))?;
+            Ok(Response::Bits { req_id, coalesced, batch, bits })
+        }
+        STATUS_INFO => {
+            let rows = r.u32().ok_or(WireFault::Malformed("info body truncated"))?;
+            let cols = r.u32().ok_or(WireFault::Malformed("info body truncated"))?;
+            Ok(Response::Info { req_id, rows, cols })
+        }
+        code => {
+            let inflight = r.u64().ok_or(WireFault::Malformed("error body truncated"))?;
+            let limit = r.u64().ok_or(WireFault::Malformed("error body truncated"))?;
+            let draining = r.u8().ok_or(WireFault::Malformed("error body truncated"))? != 0;
+            let msg_len = r.u32().ok_or(WireFault::Malformed("error body truncated"))? as usize;
+            let msg = r.bytes(msg_len).ok_or(WireFault::Malformed("error body truncated"))?;
+            let message = String::from_utf8_lossy(msg).into_owned();
+            let overload = (code == ERR_OVERLOADED).then_some((inflight, limit, draining));
+            Ok(Response::Error { req_id, code, message, overload })
+        }
+    }
+}
+
+/// Incremental frame decoder: feed raw reads in, take complete frames
+/// out. Tolerates any fragmentation (partial headers, partial payloads,
+/// several frames per read). A fault is sticky — once the stream is
+/// desynchronized every later call reports the same fault.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// An empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes read from the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to take one complete frame: `Ok(Some((kind, payload)))` when
+    /// a frame is buffered, `Ok(None)` when more bytes are needed,
+    /// `Err` on a framing fault.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, WireFault> {
+        if self.buf.len() >= MAGIC.len() && !self.buf.starts_with(&MAGIC) {
+            return Err(WireFault::BadMagic);
+        }
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let mut head = Rd::new(&self.buf);
+        let _magic = head.bytes(4);
+        let version = head.u16().unwrap_or(0);
+        if version != VERSION {
+            return Err(WireFault::BadVersion(version));
+        }
+        let kind = head.u8().unwrap_or(0);
+        let _pad = head.u8();
+        let len = head.u32().unwrap_or(0);
+        if len > MAX_PAYLOAD {
+            return Err(WireFault::TooLarge(len));
+        }
+        let total = HEADER_LEN + len as usize;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let payload: Vec<u8> = self.buf.drain(..total).skip(HEADER_LEN).collect();
+        Ok(Some((kind, payload)))
+    }
+}
+
+/// The wire status code for a typed [`JobError`].
+pub fn job_error_code(e: &JobError) -> u8 {
+    match e {
+        JobError::UnknownShard { .. } => ERR_UNKNOWN_MATRIX,
+        JobError::KindMismatch { .. } => ERR_KIND_MISMATCH,
+        JobError::FormatRange { .. } => ERR_FORMAT_RANGE,
+        JobError::DimMismatch { .. } => ERR_DIM_MISMATCH,
+        JobError::Unsupported { .. } => ERR_UNSUPPORTED,
+        JobError::WorkerLost => ERR_WORKER_LOST,
+        JobError::Overloaded { .. } => ERR_OVERLOADED,
+        JobError::DeadlineExceeded => ERR_DEADLINE_EXCEEDED,
+        JobError::Cancelled => ERR_CANCELLED,
+        JobError::CoordinatorGone => ERR_COORDINATOR_GONE,
+    }
+}
+
+/// The typed error response for a [`JobError`], preserving the
+/// `Overloaded` introspection fields.
+pub fn response_for_job_error(req_id: u64, e: &JobError) -> Response {
+    let overload = match e {
+        JobError::Overloaded { inflight, limit, draining } => {
+            Some((*inflight, *limit, *draining))
+        }
+        _ => None,
+    };
+    Response::Error { req_id, code: job_error_code(e), message: e.to_string(), overload }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_request(req: Request) {
+        let frame = encode_request(&req);
+        let mut fr = FrameReader::new();
+        // Byte-at-a-time feeding exercises every partial-read path.
+        for b in &frame {
+            fr.feed(&[*b]);
+        }
+        let (kind, payload) = fr.next_frame().unwrap().expect("one whole frame buffered");
+        assert_eq!(kind, KIND_REQUEST);
+        assert_eq!(decode_request(&payload).unwrap(), req);
+        assert!(fr.next_frame().unwrap().is_none(), "no trailing frame");
+    }
+
+    #[test]
+    fn request_round_trips_bytewise() {
+        rt_request(Request {
+            req_id: 7,
+            op: Op::Pm1Mvp,
+            priority: Priority::High,
+            matrix: 3,
+            deadline_us: 1500,
+            bits: (0..67).map(|i| i % 3 == 0).collect(),
+        });
+        rt_request(Request {
+            req_id: u64::MAX,
+            op: Op::Info,
+            priority: Priority::Low,
+            matrix: 1,
+            deadline_us: 0,
+            bits: Vec::new(),
+        });
+    }
+
+    #[test]
+    fn response_round_trips() {
+        for resp in [
+            Response::Ints { req_id: 9, coalesced: 17, batch: 32, values: vec![-5, 0, 1 << 40] },
+            Response::Bits { req_id: 2, coalesced: 1, batch: 1, bits: vec![true, false, true] },
+            Response::Info { req_id: 4, rows: 256, cols: 192 },
+            Response::Error {
+                req_id: 11,
+                code: ERR_OVERLOADED,
+                message: "overloaded: 64 jobs in flight at limit 64".into(),
+                overload: Some((64, 64, false)),
+            },
+            Response::Error {
+                req_id: 12,
+                code: ERR_SHUTTING_DOWN,
+                message: "server draining".into(),
+                overload: None,
+            },
+        ] {
+            let frame = encode_response(&resp);
+            let mut fr = FrameReader::new();
+            fr.feed(&frame);
+            let (kind, payload) = fr.next_frame().unwrap().unwrap();
+            assert_eq!(kind, KIND_RESPONSE);
+            assert_eq!(decode_response(&payload).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn two_frames_in_one_feed() {
+        let a = encode_response(&Response::Info { req_id: 1, rows: 2, cols: 3 });
+        let b = encode_response(&Response::Info { req_id: 2, rows: 4, cols: 5 });
+        let mut joined = a.clone();
+        joined.extend_from_slice(&b);
+        let mut fr = FrameReader::new();
+        fr.feed(&joined);
+        let (_, p1) = fr.next_frame().unwrap().unwrap();
+        let (_, p2) = fr.next_frame().unwrap().unwrap();
+        assert_eq!(decode_response(&p1).unwrap().req_id(), 1);
+        assert_eq!(decode_response(&p2).unwrap().req_id(), 2);
+        assert!(fr.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_is_fatal_and_sticky() {
+        let mut fr = FrameReader::new();
+        fr.feed(b"GETX/ HTTP/1.1\r\n");
+        let fault = fr.next_frame().unwrap_err();
+        assert_eq!(fault, WireFault::BadMagic);
+        assert!(fault.fatal());
+        assert_eq!(fault.code(), ERR_BAD_FRAME);
+        assert_eq!(fr.next_frame().unwrap_err(), WireFault::BadMagic, "sticky");
+    }
+
+    #[test]
+    fn oversized_declared_length_is_refused_before_buffering() {
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC);
+        hdr.extend_from_slice(&VERSION.to_le_bytes());
+        hdr.push(KIND_REQUEST);
+        hdr.push(0);
+        hdr.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let mut fr = FrameReader::new();
+        fr.feed(&hdr);
+        let fault = fr.next_frame().unwrap_err();
+        assert_eq!(fault, WireFault::TooLarge(MAX_PAYLOAD + 1));
+        assert_eq!(fault.code(), ERR_FRAME_TOO_LARGE);
+        assert!(fault.fatal());
+    }
+
+    #[test]
+    fn truncated_payload_is_malformed_not_fatal() {
+        // Frame boundary is intact (len covers the bytes sent) but the
+        // payload declares 256 query bits and ships none.
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u64.to_le_bytes()); // req_id
+        p.push(Op::Pm1Mvp.code());
+        p.push(1); // normal priority
+        p.extend_from_slice(&0u16.to_le_bytes());
+        p.extend_from_slice(&1u64.to_le_bytes()); // matrix
+        p.extend_from_slice(&0u64.to_le_bytes()); // deadline
+        p.extend_from_slice(&256u32.to_le_bytes()); // nbits, but no bits follow
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&MAGIC);
+        framed.extend_from_slice(&VERSION.to_le_bytes());
+        framed.push(KIND_REQUEST);
+        framed.push(0);
+        framed.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&p);
+        let mut fr = FrameReader::new();
+        fr.feed(&framed);
+        let (kind, payload) = fr.next_frame().unwrap().unwrap();
+        assert_eq!(kind, KIND_REQUEST);
+        let fault = decode_request(&payload).unwrap_err();
+        assert!(matches!(fault, WireFault::Malformed(_)));
+        assert!(!fault.fatal(), "connection survives a malformed payload");
+    }
+
+    #[test]
+    fn job_errors_all_have_distinct_codes() {
+        let errors = [
+            JobError::UnknownShard { shard: 1 },
+            JobError::KindMismatch { matrix: "bit", job: "multibit" },
+            JobError::FormatRange { value: 9, nbits: 2, fmt: "uint" },
+            JobError::DimMismatch { context: "w", expected: 1, got: 2 },
+            JobError::Unsupported { reason: "x".into() },
+            JobError::WorkerLost,
+            JobError::Overloaded { inflight: 1, limit: 1, draining: false },
+            JobError::DeadlineExceeded,
+            JobError::Cancelled,
+            JobError::CoordinatorGone,
+        ];
+        let codes: Vec<u8> = errors.iter().map(job_error_code).collect();
+        let mut dedup = codes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len(), "codes must be distinct: {codes:?}");
+    }
+
+    #[test]
+    fn overload_fields_survive_the_wire() {
+        let e = JobError::Overloaded { inflight: 31, limit: 32, draining: true };
+        let resp = response_for_job_error(40, &e);
+        let frame = encode_response(&resp);
+        let mut fr = FrameReader::new();
+        fr.feed(&frame);
+        let (_, payload) = fr.next_frame().unwrap().unwrap();
+        match decode_response(&payload).unwrap() {
+            Response::Error { code, overload, .. } => {
+                assert_eq!(code, ERR_OVERLOADED);
+                assert_eq!(overload, Some((31, 32, true)));
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

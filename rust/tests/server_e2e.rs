@@ -1,0 +1,357 @@
+//! Loopback end-to-end tests for the TCP serving front end: wire
+//! round-trip correctness against the in-process golden path,
+//! cross-client coalescing, typed protocol-fault answers, and drain
+//! mid-connection.
+//!
+//! Every server binds 127.0.0.1:0 (kernel-assigned port), so the suite
+//! is parallel-safe and needs no fixed ports.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use ppac::coordinator::{Coordinator, CoordinatorConfig, MatrixSpec, Metrics, Priority};
+use ppac::golden;
+use ppac::server::wire::{self, Op, Response};
+use ppac::server::{Client, Server, ServerConfig};
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+/// Start a coordinator + server on a loopback port over one registered
+/// `m`×`n` matrix. Returns the server, its address string, the matrix
+/// rows (for golden checks), the matrix id, and the shared metrics.
+fn serve_matrix(
+    seed: u64,
+    m: usize,
+    n: usize,
+    cfg: ServerConfig,
+) -> (Server, String, Vec<Vec<bool>>, u64, Arc<Metrics>) {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let a = rand_matrix(&mut rng, m, n);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(64, 64),
+        workers: 2,
+        max_batch: 32,
+        ..Default::default()
+    })
+    .unwrap();
+    let id = coord.register(MatrixSpec::Bit1 { rows: a.clone() }).unwrap();
+    let metrics = Arc::clone(&coord.metrics);
+    let server = Server::start(coord, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr, a, id, metrics)
+}
+
+#[test]
+fn round_trip_matches_golden_on_all_ops() {
+    // 100×150 over a 64×64 tile: a 2×3 shard grid, so the round trip
+    // also exercises scatter/gather across shards.
+    let (server, addr, a, id, _metrics) =
+        serve_matrix(4200, 100, 150, ServerConfig::default());
+    let mut rng = Xoshiro256pp::seeded(77);
+    let mut client = Client::connect(&addr).unwrap();
+
+    assert_eq!(client.info(id).unwrap(), (100, 150));
+
+    for _ in 0..4 {
+        let x = rng.bits(150);
+
+        match client.query(id, Op::Pm1Mvp, x.clone(), 0, Priority::Normal).unwrap() {
+            Response::Ints { values, .. } => {
+                let want: Vec<i64> = a.iter().map(|row| golden::pm1_inner(row, &x)).collect();
+                assert_eq!(values, want, "pm1 over the wire == golden");
+            }
+            other => panic!("expected ints, got {other:?}"),
+        }
+
+        match client.query(id, Op::Hamming, x.clone(), 0, Priority::Normal).unwrap() {
+            Response::Ints { values, .. } => {
+                let want: Vec<i64> =
+                    a.iter().map(|row| golden::hamming_similarity(row, &x) as i64).collect();
+                assert_eq!(values, want, "hamming over the wire == golden");
+            }
+            other => panic!("expected ints, got {other:?}"),
+        }
+
+        match client.query(id, Op::Gf2, x.clone(), 0, Priority::Normal).unwrap() {
+            Response::Bits { bits, .. } => {
+                let want: Vec<bool> = a.iter().map(|row| golden::gf2_inner(row, &x)).collect();
+                assert_eq!(bits, want, "gf2 over the wire == golden");
+            }
+            other => panic!("expected bits, got {other:?}"),
+        }
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_single_query_clients_coalesce() {
+    // A wide window so all 8 clients land inside one coalescing
+    // window regardless of scheduling noise.
+    let cfg = ServerConfig {
+        batch_window: Duration::from_millis(150),
+        batch_max: 32,
+        session_window: 64,
+    };
+    let (server, addr, a, id, metrics) = serve_matrix(4300, 64, 64, cfg);
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+
+    let fan_ins: Vec<u16> = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(CLIENTS);
+        for i in 0..CLIENTS {
+            let addr = addr.clone();
+            let a = &a;
+            let barrier = Arc::clone(&barrier);
+            joins.push(scope.spawn(move || {
+                let mut rng = Xoshiro256pp::seeded(9000 + i as u64);
+                let x = rng.bits(64);
+                let mut client = Client::connect(&addr).unwrap();
+                // All 8 connections release their single query at
+                // once, from independent sockets.
+                barrier.wait();
+                match client.query(id, Op::Pm1Mvp, x.clone(), 0, Priority::Normal).unwrap() {
+                    Response::Ints { values, coalesced, .. } => {
+                        let want: Vec<i64> =
+                            a.iter().map(|row| golden::pm1_inner(row, &x)).collect();
+                        assert_eq!(values, want, "client {i} got the right answer");
+                        coalesced
+                    }
+                    other => panic!("client {i}: expected ints, got {other:?}"),
+                }
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    let snap = metrics.snapshot();
+    assert!(
+        snap.batches_coalesced > 0,
+        "8 simultaneous single-query clients must produce at least one coalesced block \
+         (got batches_coalesced = {})",
+        snap.batches_coalesced
+    );
+    let max_fan_in = fan_ins.iter().copied().max().unwrap_or(0);
+    assert!(
+        max_fan_in > 1,
+        "at least one block must carry more than one client's query (fan-ins: {fan_ins:?})"
+    );
+    assert!(
+        snap.coalesced_queries >= u64::from(max_fan_in),
+        "coalesced_queries ({}) must cover the widest observed block ({max_fan_in})",
+        snap.coalesced_queries
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_typed_answers() {
+    use std::io::{Read, Write};
+
+    let (server, addr, _a, id, metrics) = serve_matrix(4400, 64, 64, ServerConfig::default());
+
+    // (1) Garbage magic: answered ERR_BAD_FRAME, then the connection
+    // closes (the stream cannot be resynchronized).
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let resp = read_one_response(&mut s);
+        assert_eq!(resp.status(), wire::ERR_BAD_FRAME, "bad magic → typed error");
+        // After the typed answer the server closes: reads reach EOF.
+        let mut rest = Vec::new();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(
+            s.read_to_end(&mut rest).map(|k| k == 0).unwrap_or(true),
+            "no further frames after a fatal fault"
+        );
+    }
+
+    // (2) Oversized declared length: answered ERR_FRAME_TOO_LARGE
+    // without buffering the 64 MiB the header promises.
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&wire::MAGIC);
+        hdr.extend_from_slice(&wire::VERSION.to_le_bytes());
+        hdr.push(wire::KIND_REQUEST);
+        hdr.push(0);
+        hdr.extend_from_slice(&(64u32 << 20).to_le_bytes());
+        s.write_all(&hdr).unwrap();
+        let resp = read_one_response(&mut s);
+        assert_eq!(resp.status(), wire::ERR_FRAME_TOO_LARGE);
+    }
+
+    // (3) Truncated payload (intact frame boundary, short bits): typed
+    // ERR_BAD_FRAME and the connection *survives* — a valid query on
+    // the same socket still succeeds.
+    {
+        let mut p = Vec::new();
+        p.extend_from_slice(&5u64.to_le_bytes()); // req_id
+        p.push(1); // op = pm1
+        p.push(1); // priority = normal
+        p.extend_from_slice(&0u16.to_le_bytes());
+        p.extend_from_slice(&id.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&256u32.to_le_bytes()); // declares 256 bits, ships none
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&wire::MAGIC);
+        framed.extend_from_slice(&wire::VERSION.to_le_bytes());
+        framed.push(wire::KIND_REQUEST);
+        framed.push(0);
+        framed.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&p);
+
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&framed).unwrap();
+        let resp = read_one_response(&mut s);
+        assert_eq!(resp.status(), wire::ERR_BAD_FRAME, "truncated payload → typed error");
+
+        // The frame boundary was intact, so the *same* connection must
+        // survive: a valid query right behind the bad one succeeds.
+        let mut rng = Xoshiro256pp::seeded(1);
+        let good = wire::encode_request(&wire::Request {
+            req_id: 6,
+            op: Op::Pm1Mvp,
+            priority: Priority::Normal,
+            matrix: id,
+            deadline_us: 0,
+            bits: rng.bits(64),
+        });
+        s.write_all(&good).unwrap();
+        match read_one_response(&mut s) {
+            Response::Ints { req_id, .. } => {
+                assert_eq!(req_id, 6, "answered, not disconnected")
+            }
+            other => panic!("expected ints on the surviving connection, got {other:?}"),
+        }
+    }
+
+    // (4) Unknown matrix and width mismatch come back typed, on a
+    // connection that stays healthy for the next query.
+    {
+        let mut client = Client::connect(&addr).unwrap();
+        let mut rng = Xoshiro256pp::seeded(2);
+        match client.query(id + 999, Op::Pm1Mvp, rng.bits(64), 0, Priority::Normal).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, wire::ERR_UNKNOWN_MATRIX),
+            other => panic!("expected unknown-matrix, got {other:?}"),
+        }
+        match client.query(id, Op::Pm1Mvp, rng.bits(17), 0, Priority::Normal).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, wire::ERR_DIM_MISMATCH),
+            other => panic!("expected dim-mismatch, got {other:?}"),
+        }
+        match client.query(id, Op::Pm1Mvp, rng.bits(64), 0, Priority::Normal).unwrap() {
+            Response::Ints { .. } => {}
+            other => panic!("typed errors must not poison the connection, got {other:?}"),
+        }
+    }
+
+    let snap = metrics.snapshot();
+    assert!(
+        snap.frames_rejected >= 3,
+        "the three protocol faults must be counted (got {})",
+        snap.frames_rejected
+    );
+
+    server.shutdown();
+}
+
+/// Read frames from a raw socket until one complete response decodes.
+fn read_one_response(s: &mut std::net::TcpStream) -> Response {
+    use std::io::Read;
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut fr = wire::FrameReader::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        if let Some((kind, payload)) = fr.next_frame().unwrap() {
+            assert_eq!(kind, wire::KIND_RESPONSE);
+            return wire::decode_response(&payload).unwrap();
+        }
+        let k = s.read(&mut buf).unwrap();
+        assert!(k > 0, "server hung up before answering");
+        fr.feed(&buf[..k]);
+    }
+}
+
+#[test]
+fn drain_mid_connection_yields_typed_shutdown() {
+    let (server, addr, _a, id, _metrics) = serve_matrix(4500, 64, 64, ServerConfig::default());
+    let mut rng = Xoshiro256pp::seeded(3);
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Healthy query first: the connection is live and correct.
+    match client.query(id, Op::Pm1Mvp, rng.bits(64), 0, Priority::Normal).unwrap() {
+        Response::Ints { .. } => {}
+        other => panic!("expected ints, got {other:?}"),
+    }
+
+    // Start draining with a grace window, then query again on the same
+    // still-open connection while the window is active.
+    let drainer = std::thread::spawn(move || server.drain(Duration::from_millis(1500)));
+    std::thread::sleep(Duration::from_millis(200));
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut saw_shutdown = false;
+    while Instant::now() < deadline {
+        match client.query(id, Op::Pm1Mvp, rng.bits(64), 0, Priority::Normal) {
+            Ok(Response::Error { code, .. }) if code == wire::ERR_SHUTTING_DOWN => {
+                saw_shutdown = true;
+                break;
+            }
+            // A request racing the drain flag may still be served, or
+            // shed via the admission path — keep probing within the
+            // grace window.
+            Ok(_) => std::thread::sleep(Duration::from_millis(20)),
+            // Force-close after the grace window: acceptable, but only
+            // if we already observed the typed refusal.
+            Err(_) => break,
+        }
+    }
+    assert!(
+        saw_shutdown,
+        "a query during the drain grace window must be answered with ERR_SHUTTING_DOWN"
+    );
+
+    drop(client);
+    assert!(drainer.join().unwrap(), "drain must complete cleanly once clients hang up");
+}
+
+#[test]
+fn deadline_pressure_is_answered_typed_over_the_wire() {
+    // A huge window (1 s) with a 5 ms deadline: the deadline-pressure
+    // path must flush early or answer typed — the client must never
+    // wait out the full window only to time out.
+    let cfg = ServerConfig {
+        batch_window: Duration::from_secs(1),
+        batch_max: 32,
+        session_window: 64,
+    };
+    let (server, addr, _a, id, _metrics) = serve_matrix(4600, 64, 64, cfg);
+    let mut rng = Xoshiro256pp::seeded(4);
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    let t0 = Instant::now();
+    let resp = client.query(id, Op::Pm1Mvp, rng.bits(64), 5_000, Priority::Normal).unwrap();
+    let waited = t0.elapsed();
+    match resp {
+        Response::Ints { .. } => {}
+        Response::Error { code, .. } => assert_eq!(
+            code,
+            wire::ERR_DEADLINE_EXCEEDED,
+            "a deadlined query may only fail typed-deadline"
+        ),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    assert!(
+        waited < Duration::from_millis(900),
+        "deadline pressure must beat the 1 s window (waited {waited:?})"
+    );
+
+    server.shutdown();
+}

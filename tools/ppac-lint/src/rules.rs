@@ -11,9 +11,11 @@ pub const KNOWN_RULES: &[&str] =
 
 /// Directories the panic-freedom rules police. Code here runs on worker
 /// and reducer threads where a panic kills the thread and strands every
-/// job queued behind it; `util/`, `sim/`, `formats/` and the binaries
-/// run on caller threads where Rust's panic = bug convention is fine.
-const PANIC_FREE_AREAS: &[&str] = &["coordinator/", "engine/", "isa/"];
+/// job queued behind it — and, in `server/`, on session/batcher threads
+/// where a panic strands a client connection; `util/`, `sim/`,
+/// `formats/` and the binaries run on caller threads where Rust's
+/// panic = bug convention is fine.
+const PANIC_FREE_AREAS: &[&str] = &["coordinator/", "engine/", "isa/", "server/"];
 
 /// Idents that look like an index-expression head but are keywords
 /// (`let [a, b] = …` is a slice pattern, not an indexing).
@@ -38,6 +40,7 @@ const HANDOFF: &[&str] = &[
     "reducer_queue_depth",
     "admission_queue_depth",
     "cancelled",
+    "connections_open",
 ];
 
 /// How many lines above a `Relaxed` use the `// ordering:` justification
@@ -54,6 +57,7 @@ const GAUGES: &[&str] = &[
     "gathers_inflight",
     "reducer_queue_depth",
     "admission_queue_depth",
+    "connections_open",
 ];
 
 /// Submission counters and the completion-side counters that must
@@ -92,6 +96,10 @@ const MONOTONIC: &[&str] = &[
     "deadlines_exceeded",
     "jobs_cancelled",
     "drain_initiated",
+    "connections_total",
+    "frames_rejected",
+    "batches_coalesced",
+    "coalesced_queries",
 ];
 
 /// Id/tie-break sequences — `fetch_add` is the allocation itself.
@@ -455,12 +463,13 @@ struct CounterOp {
 }
 
 /// `metric-pairing`: corpus-global accounting-balance rule over the
-/// coordinator area. See [`GAUGES`], [`PAIRS`], [`MONOTONIC`],
-/// [`SEQUENCE`].
+/// coordinator and server areas (the serving front end shares the
+/// coordinator's `Metrics` struct, so its counters obey the same
+/// tables). See [`GAUGES`], [`PAIRS`], [`MONOTONIC`], [`SEQUENCE`].
 pub fn metric_pairing(ctxs: &[FileCtx]) -> Vec<Finding> {
     let mut ops: Vec<CounterOp> = Vec::new();
     for ctx in ctxs {
-        if !ctx.in_area(&["coordinator/"]) {
+        if !ctx.in_area(&["coordinator/", "server/"]) {
             continue;
         }
         let toks = &ctx.lexed.tokens;
