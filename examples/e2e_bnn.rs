@@ -7,8 +7,12 @@
 //!      API — the golden functional reference.
 //!   2. **L3 simulator**: the same network runs on the cycle-accurate
 //!      PPAC simulator (three 1-bit ±1 MVP layers, biases in δ_m).
-//!   3. **L3 coordinator**: the first layer additionally runs as batched
-//!      jobs through the multi-tile serving layer.
+//!   3. **L3 coordinator**: the full three-layer network additionally
+//!      runs as ONE submitted job graph (`register_pipeline` /
+//!      `submit_pipeline`) through the multi-tile serving layer —
+//!      hidden activations stay worker-resident between stages — and is
+//!      raced against the pre-pipeline pattern (one batch per layer,
+//!      activations binarized on the host between round trips).
 //!
 //! All three answers must agree **bit-exactly**; the run then reports the
 //! paper's headline metrics for this workload (throughput at modelled
@@ -22,7 +26,7 @@
 use std::time::Instant;
 
 use ppac::apps::{BnnLayer, BnnOnPpac, TeacherDataset};
-use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput, MatrixSpec};
+use ppac::coordinator::{Coordinator, CoordinatorConfig, JobInput, JobOutput};
 use ppac::isa::{OpMode, PpacUnit};
 use ppac::power::{EnergyModel, ImplModel};
 use ppac::runtime::Runtime;
@@ -145,41 +149,79 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     assert_eq!(correct, ds.labels.len());
 
-    // ---------------- 3) coordinator serving path -----------------------
+    // ---------------- 3) coordinator serving: pipeline vs host loop -----
     let coord = Coordinator::start(CoordinatorConfig {
         tile: cfg,
         workers: 4,
         max_batch: 64,
+        replicas: 4, // full replication: every stage co-locates on every worker
         ..Default::default()
     })?;
-    let mid = coord.register(MatrixSpec::Bit1 { rows: layers[0].weights.clone() })?;
-    let t_serve = Instant::now();
-    let handles: Vec<_> = ds
-        .inputs
-        .iter()
-        .map(|x| coord.submit(mid, JobInput::Pm1Mvp(x.clone())))
-        .collect::<ppac::Result<_>>()?;
-    let mut served = 0usize;
-    for (i, h) in handles.into_iter().enumerate() {
-        let r = h.wait()?;
-        let Ok(JobOutput::Ints(y)) = r.output else { panic!("wrong output kind") };
-        // The coordinator's raw MVP plus the bias must equal the layer's
-        // golden pre-activation.
-        let want = layers[0].preact(&ds.inputs[i]);
-        let got: Vec<i64> =
-            y.iter().zip(&layers[0].bias).map(|(v, &b)| v + b).collect();
-        assert_eq!(got[..layers[0].out_dim()], want[..], "sample {i}");
-        served += 1;
+    // Compile the network to a job graph. Keep the stage matrix ids so
+    // the host-loop baseline below can drive the same shards directly.
+    let spec = net.to_pipeline_spec(&coord)?;
+    let stage_ids: Vec<_> = spec.stages.iter().map(|s| s.matrix).collect();
+    let pipeline = coord.register_pipeline(spec)?;
+
+    // (a) The whole network as ONE submitted job graph: hidden
+    // activations stay worker-resident between stages, zero host round
+    // trips inside a chain.
+    let t_pipe = Instant::now();
+    let results = coord.submit_pipeline(pipeline, &ds.inputs)?.wait()?;
+    let pipe_s = t_pipe.elapsed().as_secs_f64();
+    for (i, r) in results.iter().enumerate() {
+        let Ok(JobOutput::Ints(y)) = &r.output else { panic!("wrong output kind") };
+        assert_eq!(y, &sim_scores[i], "sample {i}: pipeline vs simulator diverged");
     }
-    let serve_s = t_serve.elapsed().as_secs_f64();
+    println!(
+        "[3a] pipeline: {} 3-stage inferences in {:.2}s ({:.0} samples/s)",
+        results.len(),
+        pipe_s,
+        results.len() as f64 / pipe_s
+    );
+
+    // (b) The pre-pipeline serving pattern: one batch per layer,
+    // activations gathered to the host, bias + binarize applied here,
+    // then re-submitted — two extra host round trips per sample.
+    let t_host = Instant::now();
+    let mut acts: Vec<Vec<bool>> = ds.inputs.clone();
+    let mut host_scores: Vec<Vec<i64>> = Vec::with_capacity(ds.inputs.len());
+    for (li, layer) in layers.iter().enumerate() {
+        let inputs: Vec<JobInput> = acts.iter().cloned().map(JobInput::Pm1Mvp).collect();
+        let batch_results = coord.submit_batch(stage_ids[li], &inputs)?.wait()?;
+        let last = li + 1 == layers.len();
+        let mut next: Vec<Vec<bool>> = Vec::with_capacity(acts.len());
+        for r in &batch_results {
+            let Ok(JobOutput::Ints(y)) = &r.output else { panic!("wrong output kind") };
+            // zip with the bias truncates the tile's padded rows to the
+            // layer's logical out_dim.
+            let z: Vec<i64> = y.iter().zip(&layer.bias).map(|(v, &b)| v + b).collect();
+            if last {
+                host_scores.push(z);
+            } else {
+                next.push(z.iter().map(|&v| v >= 0).collect());
+            }
+        }
+        acts = next;
+    }
+    let host_s = t_host.elapsed().as_secs_f64();
+    for (i, (a, b)) in host_scores.iter().zip(&sim_scores).enumerate() {
+        assert_eq!(a, b, "sample {i}: host loop vs simulator diverged");
+    }
+    println!(
+        "[3b] host loop: {} samples in {:.2}s ({:.0} samples/s) — pipeline speedup {:.2}x",
+        host_scores.len(),
+        host_s,
+        host_scores.len() as f64 / host_s,
+        host_s / pipe_s
+    );
+
     let snap = coord.metrics.snapshot();
     println!(
-        "[3] coordinator: {served} layer-1 jobs in {:.2}s ({:.0} jobs/s, mean batch {:.1}, p99 {:.0}µs)",
-        serve_s,
-        served as f64 / serve_s,
-        snap.mean_batch_size,
-        snap.p99_us
+        "     stages executed {}, spills {}, intermediates resident {} (chains keep activations on-worker)",
+        snap.pipeline_stages_executed, snap.stage_spills, snap.intermediates_resident
     );
+    assert_eq!(snap.jobs_failed, 0, "no job may fail on a healthy pool");
     coord.shutdown();
 
     // ---------------- headline metrics ----------------------------------

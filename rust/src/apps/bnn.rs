@@ -6,6 +6,7 @@
 //! fully-connected layer"). The sign is the complement of the output MSB,
 //! so a layer's activations are directly the match bits.
 
+use crate::coordinator::{Coordinator, MatrixSpec, PipelineId, PipelineSpec, StageOp, StageSpec};
 use crate::error::{PpacError, Result};
 use crate::isa::{OpMode, PpacUnit};
 use crate::sim::PpacConfig;
@@ -147,6 +148,42 @@ impl BnnOnPpac {
         }
         self.layers.last().unwrap().preact(&act)
     }
+
+    /// Compile the network into a coordinator job-graph description:
+    /// register each layer's *raw* weights as a 1-bit matrix (the
+    /// coordinator tiles and pads per its own array geometry) and
+    /// describe each layer as a ±1-MVP stage that keeps `out_dim`
+    /// rows and applies the bias between stages. Hidden stages
+    /// binarize on the worker holding the weights; the final stage
+    /// returns raw integer scores — exactly [`Self::forward_batch`].
+    pub fn to_pipeline_spec(&self, coord: &Coordinator) -> Result<PipelineSpec> {
+        pipeline_spec_for(&self.layers, coord)
+    }
+
+    /// [`Self::to_pipeline_spec`] + [`Coordinator::register_pipeline`]:
+    /// one call from a compiled network to a submittable pipeline id.
+    pub fn register_pipeline(&self, coord: &Coordinator) -> Result<PipelineId> {
+        coord.register_pipeline(self.to_pipeline_spec(coord)?)
+    }
+}
+
+/// Build (and register the matrices of) a pipeline spec for a layer
+/// stack without compiling local [`PpacUnit`]s first — for callers
+/// that run inference only through the coordinator.
+pub fn pipeline_spec_for(layers: &[BnnLayer], coord: &Coordinator) -> Result<PipelineSpec> {
+    let mut stages = Vec::with_capacity(layers.len());
+    for layer in layers {
+        let matrix = coord.register(MatrixSpec::Bit1 {
+            rows: layer.weights.clone(),
+        })?;
+        stages.push(StageSpec {
+            matrix,
+            op: StageOp::Pm1Mvp,
+            take: layer.out_dim(),
+            bias: layer.bias.clone(),
+        });
+    }
+    Ok(PipelineSpec { stages })
 }
 
 /// A synthetic-but-meaningful classification workload: the *labels are
@@ -191,6 +228,7 @@ impl TeacherDataset {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{CoordinatorConfig, JobOutput};
 
     fn cfg_16x32() -> PpacConfig {
         let mut cfg = PpacConfig::new(16, 32);
@@ -252,6 +290,51 @@ mod tests {
         assert!(BnnOnPpac::compile(vec![layer], cfg_16x32()).is_err());
         let too_many = BnnLayer::random(&mut rng, 17, 32); // M > 16
         assert!(BnnOnPpac::compile(vec![too_many], cfg_16x32()).is_err());
+    }
+
+    /// Property test: across layer counts and batch sizes, the
+    /// job-graph path is bit-exact against the host-loop
+    /// `forward_batch` reference — same raw integer scores from the
+    /// final stage, same hidden binarization in between. The host
+    /// loop stays the golden oracle for the pipeline forever.
+    #[test]
+    fn pipeline_matches_host_forward_batch_across_shapes() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            tile: PpacConfig::new(32, 32),
+            workers: 2,
+            replicas: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Xoshiro256pp::seeded(25);
+        let cfg = PpacConfig::new(32, 32);
+        for depth in 1..=3usize {
+            let mut layers: Vec<BnnLayer> = (1..depth)
+                .map(|_| BnnLayer::random(&mut rng, 32, 32))
+                .collect();
+            layers.push(BnnLayer::random(&mut rng, 10, 32));
+            let mut net = BnnOnPpac::compile(layers, cfg).unwrap();
+            let pipeline = net.register_pipeline(&coord).unwrap();
+            for &batch in &[1usize, 3, 8] {
+                let xs: Vec<Vec<bool>> = (0..batch).map(|_| rng.bits(32)).collect();
+                let want = net.forward_batch(&xs).unwrap();
+                let results = coord
+                    .submit_pipeline(pipeline, &xs)
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(results.len(), batch);
+                for (i, r) in results.into_iter().enumerate() {
+                    let got = match r.output {
+                        Ok(JobOutput::Ints(v)) => v,
+                        other => {
+                            panic!("depth {depth} batch {batch} token {i}: {other:?}")
+                        }
+                    };
+                    assert_eq!(got, want[i], "depth {depth} batch {batch} token {i}");
+                }
+            }
+        }
     }
 
     #[test]

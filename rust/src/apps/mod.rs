@@ -17,7 +17,7 @@ pub mod pla;
 pub mod tiled;
 pub mod tracks;
 
-pub use bnn::{BnnLayer, BnnOnPpac, TeacherDataset};
+pub use bnn::{pipeline_spec_for, BnnLayer, BnnOnPpac, TeacherDataset};
 pub use cam::CamTable;
 pub use gf2codes::{LinearCode, PpacEncoder};
 pub use hadamard::PpacHadamard;

@@ -184,6 +184,22 @@ pub struct Metrics {
     pub batched_jobs: AtomicU64,
     pub matrix_loads: AtomicU64,
     pub sim_cycles: AtomicU64,
+    /// Pipeline stage executions: one per stage a registered pipeline
+    /// ran, whether on-worker (a chained segment) or as a host hop.
+    /// Retried stages count again — this is work done, not stages
+    /// declared.
+    pub pipeline_stages_executed: AtomicU64,
+    /// Pipeline stages that fell back to a host round-trip because no
+    /// single worker could host every shard of the chained segment (or
+    /// the stage was multi-shard to begin with). The co-location
+    /// scheduler exists to keep this at zero.
+    pub stage_spills: AtomicU64,
+    /// Stage intermediates currently resident on workers (the
+    /// `StageBuffer` table's population). Incremented when a chained
+    /// stage parks its inputs on the serving worker, decremented when
+    /// the stage completes — or reclaimed by the supervisor's
+    /// epoch-guarded invalidation sweep after the worker dies. Gauge.
+    pub intermediates_resident: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
     workers: Vec<WorkerMetrics>,
 }
@@ -224,6 +240,9 @@ impl Default for Metrics {
             batched_jobs: AtomicU64::new(0),
             matrix_loads: AtomicU64::new(0),
             sim_cycles: AtomicU64::new(0),
+            pipeline_stages_executed: AtomicU64::new(0),
+            stage_spills: AtomicU64::new(0),
+            intermediates_resident: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
             workers: Vec::new(),
         }
@@ -341,6 +360,12 @@ impl Metrics {
             mean_batch_size: self.mean_batch_size(),
             matrix_loads: self.matrix_loads.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            pipeline_stages_executed: self.pipeline_stages_executed.load(Ordering::Relaxed),
+            stage_spills: self.stage_spills.load(Ordering::Relaxed),
+            // ordering: Relaxed — point-in-time report read of the
+            // resident-intermediates gauge; staleness only skews one
+            // report line.
+            intermediates_resident: self.intermediates_resident.load(Ordering::Relaxed),
             p50_us: self.latency_percentile(50.0),
             p99_us: self.latency_percentile(99.0),
             per_worker: self
@@ -408,6 +433,9 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     pub matrix_loads: u64,
     pub sim_cycles: u64,
+    pub pipeline_stages_executed: u64,
+    pub stage_spills: u64,
+    pub intermediates_resident: u64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub per_worker: Vec<WorkerSnapshot>,

@@ -104,6 +104,7 @@
 mod admission;
 pub mod job;
 pub mod metrics;
+pub mod pipeline;
 mod router;
 mod supervisor;
 pub mod worker;
@@ -130,6 +131,8 @@ pub use job::{
     MatrixSpec, ModeKey, MultibitSpec, Priority, ShardId,
 };
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
+pub use pipeline::{PipelineId, PipelineSpec, StageOp, StageSpec};
+use pipeline::{PipelinePlan, StageBufferTable};
 pub use router::RoutingStats;
 use router::{Router, SendStatus};
 use supervisor::{ReducerPool, Supervisor, WorkerSlots};
@@ -1207,9 +1210,21 @@ pub struct Coordinator {
     /// Engine options each worker was built with (defaults + builder
     /// overrides), for introspection.
     engine_opts: Vec<EngineOpts>,
+    /// Registered pipelines ([`Coordinator::register_pipeline`]): the
+    /// validated stage plans keyed by pipeline id. The TTL sweep reads
+    /// this to keep a live pipeline's matrices out of eviction.
+    pipelines: RwLock<HashMap<PipelineId, Arc<PipelinePlan>>>,
+    /// Residency table of worker-parked pipeline intermediates, shared
+    /// with every worker (which parks/removes entries around each
+    /// chained stage) and the supervisor (whose restart path
+    /// invalidates a dead incarnation's entries by epoch).
+    stage_buffers: Arc<StageBufferTable>,
     next_matrix: AtomicU64,
     next_shard: AtomicU64,
-    next_job: AtomicU64,
+    next_pipeline: AtomicU64,
+    /// Shared with pipeline driver threads, which allocate fresh job
+    /// ids for each host-hop stage gather.
+    next_job: Arc<AtomicU64>,
     /// TTL sweep pacing (millis since `epoch` of the last sweep).
     epoch: Instant,
     last_sweep_ms: AtomicU64,
@@ -1254,6 +1269,7 @@ impl Coordinator {
         }
         let registry: MatrixRegistry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::for_workers(cfg.workers));
+        let stage_buffers = Arc::new(StageBufferTable::new(Arc::clone(&metrics)));
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut slot_parts = Vec::with_capacity(cfg.workers);
         for (id, &opts) in engine_opts.iter().enumerate() {
@@ -1268,6 +1284,7 @@ impl Coordinator {
                 cfg.backend,
                 opts,
                 Arc::clone(&killed),
+                Arc::clone(&stage_buffers),
             )?;
             slot_parts.push((std::thread::spawn(move || worker.run(rx)), killed));
             senders.push(tx);
@@ -1294,6 +1311,7 @@ impl Coordinator {
                 Arc::clone(&shards),
                 Arc::clone(&slots),
                 Arc::clone(&reducers),
+                Arc::clone(&stage_buffers),
                 engine_opts.clone(),
                 stop_rx,
             );
@@ -1307,9 +1325,12 @@ impl Coordinator {
             reducers,
             supervisor,
             engine_opts,
+            pipelines: RwLock::new(HashMap::new()),
+            stage_buffers,
             next_matrix: AtomicU64::new(1),
             next_shard: AtomicU64::new(1),
-            next_job: AtomicU64::new(1),
+            next_pipeline: AtomicU64::new(1),
+            next_job: Arc::new(AtomicU64::new(1)),
             epoch: Instant::now(),
             last_sweep_ms: AtomicU64::new(0),
             admission: Arc::new(AdmissionGate::new(cfg.max_inflight_jobs as u64)),
@@ -1573,13 +1594,22 @@ impl Coordinator {
         {
             return; // another thread is sweeping
         }
+        // A matrix referenced by a registered pipeline is pinned even
+        // while idle: an evicted middle layer would fail every future
+        // submit of the chain typed, which is strictly worse than
+        // holding a registration the client has declared live.
+        let pinned: std::collections::HashSet<MatrixId> = read_lock(&self.pipelines)
+            .values()
+            .flat_map(|p| p.stages.iter().map(|s| s.matrix))
+            .collect();
         let expired: Vec<MatrixId> = read_lock(&self.shards)
             .iter()
-            .filter(|(_, s)| {
+            .filter(|(id, s)| {
                 // ordering: Relaxed — the eviction guard only compares
                 // against zero; remove_matrix re-checks nothing because
                 // reducers hold the ShardData Arcs alive regardless.
-                s.gathers_inflight.load(Ordering::Relaxed) == 0
+                !pinned.contains(id)
+                    && s.gathers_inflight.load(Ordering::Relaxed) == 0
                     && lock(&s.last_used).elapsed() >= ttl
             })
             .map(|(&id, _)| id)

@@ -1,0 +1,1227 @@
+//! Job-graph pipelines: multi-stage workloads whose intermediates stay
+//! resident on the worker that produced them.
+//!
+//! A single submit today is one MVP round-trip — scatter, serve, gather
+//! to the host. Multi-layer workloads (BNN inference, GF(2)
+//! encode→decode chains, LSH-then-match) pay that round-trip *per
+//! stage*, which is exactly the off-chip data movement PIM exists to
+//! eliminate. This module adds a dataflow description
+//! ([`PipelineSpec`]: stages referencing registered matrices, a
+//! per-stage op mode, output width and bias) registered once via
+//! [`Coordinator::register_pipeline`], and a scheduling pass under
+//! [`Coordinator::submit_pipeline`] that:
+//!
+//! 1. splits the stage list into maximal *chainable segments* (runs of
+//!    single-shard stages),
+//! 2. prefers **co-locating** a whole segment on one worker hosting a
+//!    replica of every stage's shard — the segment then ships as one
+//!    [`WorkerMsg::Pipeline`] message and the inter-stage intermediates
+//!    never travel back to the host (the worker re-binarizes `z ≥ 0`
+//!    between ±1/Hamming stages and parks each stage's inputs in the
+//!    shared [`StageBufferTable`] while it runs),
+//! 3. falls back to a **host hop** (`stage_spills`) through the
+//!    existing scatter/gather machinery when a stage is multi-shard or
+//!    no single worker can host the segment — so a pipeline degrades
+//!    gracefully to the per-stage round-trips it replaces, never to an
+//!    error.
+//!
+//! Residency is crash-safe by construction: stage buffers are keyed by
+//! (pipeline, stage, shard, worker, **epoch**), the driver stamps the
+//! worker's router-slot incarnation into every chained send, and the
+//! supervisor invalidates an older incarnation's entries right after a
+//! restart bumps the epoch — a restarted worker can never serve (or
+//! leak) a dead incarnation's intermediates. The `intermediates_resident`
+//! gauge mirrors the table's population end to end.
+//!
+//! The single-stage submit path is the degenerate one-stage graph: a
+//! one-stage pipeline and a plain `submit_batch` produce identical
+//! results through the same gather arithmetic.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{PpacError, Result};
+use crate::util::sync::{lock, read_lock, write_lock, AtomicBool, AtomicU64, Ordering};
+
+use super::admission::AdmissionPermit;
+use super::job::Job;
+use super::metrics::Metrics;
+use super::router::{Router, SendStatus};
+use super::supervisor::ReducerPool;
+use super::worker::{ChainStage, PipeToken, PipelineJob, WorkerMsg};
+use super::{
+    BatchHandle, Coordinator, CoordinatorConfig, GatherPlan, GatherState, JobError, JobInput,
+    JobOptions, JobOutput, JobResult, MatrixId, MatrixKind, ModeKey, ReduceTask, RetryCtx,
+    ShardId, ShardedMatrix,
+};
+
+/// Identifier of a registered pipeline.
+pub type PipelineId = u64;
+
+/// How often a chained-segment collect loop wakes to poll the cancel
+/// latch and the deadline while waiting on a worker.
+const CHAIN_POLL: Duration = Duration::from_millis(25);
+
+/// Operation mode of one pipeline stage. Only the 1-bit modes chain:
+/// their outputs re-binarize (or, for GF(2), already *are* bits) into
+/// the next stage's input without a host round-trip. Multi-bit jobs
+/// keep the single-stage submit path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageOp {
+    /// ±1 MVP (§III-B1) — the BNN layer op. Integer accumulators out;
+    /// hidden stages re-binarize `z ≥ 0` into the next stage's bits.
+    Pm1Mvp,
+    /// Hamming similarity (§III-B2). Integer counts out; hidden stages
+    /// re-binarize like ±1.
+    Hamming,
+    /// GF(2) MVP (§III-B3) — XOR chains (encode→decode). Bits out;
+    /// hidden stages pass them on unchanged.
+    Gf2,
+}
+
+impl StageOp {
+    pub(crate) fn mode_key(self) -> ModeKey {
+        match self {
+            StageOp::Pm1Mvp => ModeKey::Pm1Mvp,
+            StageOp::Hamming => ModeKey::Hamming,
+            StageOp::Gf2 => ModeKey::Gf2,
+        }
+    }
+
+    /// Wrap a stage's input bits as the matching single-stage payload
+    /// (the host-hop fallback path).
+    fn input(self, bits: Vec<bool>) -> JobInput {
+        match self {
+            StageOp::Pm1Mvp => JobInput::Pm1Mvp(bits),
+            StageOp::Hamming => JobInput::Hamming(bits),
+            StageOp::Gf2 => JobInput::Gf2(bits),
+        }
+    }
+
+    /// Per-row correction per zero-padded boundary column — the 1-bit
+    /// rows of [`GatherPlan::pad_adjust`]: a pad matches under XNOR for
+    /// ±1/Hamming, GF(2) pads are neutral.
+    fn pad_adjust(self) -> i64 {
+        match self {
+            StageOp::Pm1Mvp | StageOp::Hamming => -1,
+            StageOp::Gf2 => 0,
+        }
+    }
+}
+
+/// One stage of a pipeline, as the client declares it.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// The registered matrix this stage multiplies against. Must be a
+    /// 1-bit registration ([`super::MatrixSpec::Bit1`]).
+    pub matrix: MatrixId,
+    pub op: StageOp,
+    /// Logical output rows of this stage (≤ the matrix's row count) —
+    /// the token width the next stage consumes. Lets a stage use a
+    /// matrix padded beyond its logical shape.
+    pub take: usize,
+    /// Per-row bias added to the accumulator before re-binarizing
+    /// (`sign(W·x + b)` — the BNN layer form). Empty means zeros; must
+    /// be empty for [`StageOp::Gf2`] (an XOR output has no
+    /// accumulator) and `take`-long otherwise.
+    pub bias: Vec<i64>,
+}
+
+/// A dataflow description: stages applied in order to each input token.
+/// Validated and frozen by [`Coordinator::register_pipeline`].
+#[derive(Debug, Clone, Default)]
+pub struct PipelineSpec {
+    pub stages: Vec<StageSpec>,
+}
+
+/// One stage of a registered pipeline, validated and bias-shared.
+pub(crate) struct StagePlan {
+    pub(crate) matrix: MatrixId,
+    pub(crate) op: StageOp,
+    pub(crate) take: usize,
+    pub(crate) bias: Arc<Vec<i64>>,
+}
+
+/// A registered pipeline: its validated stages and end-to-end shape.
+pub(crate) struct PipelinePlan {
+    pub(crate) stages: Vec<StagePlan>,
+    /// Input width (the first stage's matrix column count).
+    pub(crate) in_width: usize,
+    /// Output width (the last stage's `take`).
+    pub(crate) out_width: usize,
+}
+
+/// Key of one parked intermediate: which pipeline stage's inputs, on
+/// which worker incarnation. The epoch is the router slot's incarnation
+/// number at dispatch time — a supervisor restart bumps it, so the
+/// post-restart sweep can drop exactly the dead incarnation's entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct StageKey {
+    pub(crate) pipeline: PipelineId,
+    pub(crate) stage: u32,
+    pub(crate) shard: ShardId,
+    pub(crate) worker: usize,
+    pub(crate) epoch: u64,
+}
+
+/// The residency table of worker-parked stage intermediates. Workers
+/// insert a stage's inputs before serving it and remove them after; an
+/// entry that outlives its chain (the worker crashed mid-segment) is
+/// reclaimed by the supervisor's epoch-guarded
+/// [`StageBufferTable::invalidate_worker`] sweep. The
+/// `intermediates_resident` gauge mirrors the population.
+pub struct StageBufferTable {
+    inner: Mutex<HashMap<StageKey, Vec<Vec<bool>>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl StageBufferTable {
+    pub(crate) fn new(metrics: Arc<Metrics>) -> Self {
+        Self { inner: Mutex::new(HashMap::new()), metrics }
+    }
+
+    /// Park one stage's inputs. Re-parking the same key (a retry wave
+    /// re-ran the segment on the same incarnation) replaces the entry
+    /// without double-counting the gauge.
+    pub(crate) fn insert(&self, key: StageKey, bits: Vec<Vec<bool>>) {
+        let fresh = lock(&self.inner).insert(key, bits).is_none();
+        if fresh {
+            // ordering: Relaxed — intermediates_resident is a gauge
+            // reports read point-in-time; the table mutex is the real
+            // synchronization for the entries themselves.
+            self.metrics.intermediates_resident.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop a served stage's entry (a no-op if a sweep got there
+    /// first).
+    pub(crate) fn remove(&self, key: &StageKey) {
+        let removed = lock(&self.inner).remove(key).is_some();
+        if removed {
+            // ordering: Relaxed — gauge decrement paired with the
+            // insert above; the mutex already ordered the table ops.
+            self.metrics.intermediates_resident.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every intermediate an *older* incarnation of `worker`
+    /// parked: entries whose epoch predates `epoch` belong to chains
+    /// that died with the worker and can never be consumed. Called by
+    /// the supervisor right after a restart bumps the slot epoch — this
+    /// is what drains `intermediates_resident` back to 0 after a
+    /// mid-pipeline crash.
+    pub(crate) fn invalidate_worker(&self, worker: usize, epoch: u64) {
+        let mut inner = lock(&self.inner);
+        let before = inner.len();
+        inner.retain(|k, _| k.worker != worker || k.epoch >= epoch);
+        let dropped = (before - inner.len()) as u64;
+        drop(inner);
+        if dropped > 0 {
+            // ordering: Relaxed — gauge decrement paired with insert;
+            // the sweep's correctness rests on the mutex, not on this
+            // counter.
+            self.metrics.intermediates_resident.fetch_sub(dropped, Ordering::Relaxed);
+        }
+    }
+
+    /// Entries currently parked (the gauge mirrors this).
+    pub(crate) fn resident(&self) -> usize {
+        lock(&self.inner).len()
+    }
+}
+
+/// A stage resolved against the live registry for one submission.
+struct StageRun {
+    sharded: Arc<ShardedMatrix>,
+    /// Stage index within the pipeline (keys the stage buffer).
+    index: u32,
+    op: StageOp,
+    take: usize,
+    bias: Arc<Vec<i64>>,
+    /// Pipeline-final stages answer the raw accumulator; hidden stages
+    /// re-binarize into the next stage's input bits.
+    last: bool,
+}
+
+/// Everything the detached pipeline driver needs from the coordinator.
+struct PipelineRt {
+    pipeline: PipelineId,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    reducers: Arc<ReducerPool>,
+    next_job: Arc<AtomicU64>,
+    cfg: CoordinatorConfig,
+}
+
+/// Per-submission context shared by every stage dispatch.
+struct RunCtx {
+    /// First logical job id of the batch; token `i` is `base + i`.
+    base: u64,
+    opts: JobOptions,
+    cancelled: Arc<AtomicBool>,
+    submitted: Instant,
+}
+
+/// A token mid-flight: its submission index and its current bits (the
+/// original input, or the re-binarized intermediate of the last stage
+/// it cleared).
+type Token = (usize, Vec<bool>);
+
+/// What one chained answer means for its token.
+enum Verdict {
+    /// Final (the segment included the pipeline's last stage, or the
+    /// worker answered a typed error).
+    Done(JobResult),
+    /// The hidden segment cleared; these bits feed the next stage.
+    Next(Vec<bool>),
+}
+
+impl Coordinator {
+    /// Validate and register a pipeline. Every stage must reference a
+    /// registered 1-bit matrix, widths must chain (`take` of stage *i*
+    /// = column count of stage *i+1*), and biases must match their
+    /// stage's `take`. Matrix ids are never reused, so the shapes
+    /// frozen here stay valid for the pipeline's lifetime — a stage
+    /// matrix *unregistered* later fails the next submit typed.
+    pub fn register_pipeline(&self, spec: PipelineSpec) -> Result<PipelineId> {
+        if spec.stages.is_empty() {
+            return Err(PpacError::Config("a pipeline needs at least one stage".into()));
+        }
+        let mut plans = Vec::with_capacity(spec.stages.len());
+        let mut in_width = 0usize;
+        let mut prev_take: Option<usize> = None;
+        {
+            let shards = read_lock(&self.shards);
+            for (i, stage) in spec.stages.iter().enumerate() {
+                let sharded = shards.get(&stage.matrix).ok_or_else(|| {
+                    PpacError::Coordinator(format!(
+                        "pipeline stage {i} references unknown matrix {}",
+                        stage.matrix
+                    ))
+                })?;
+                if !matches!(sharded.kind, MatrixKind::Bit1) {
+                    return Err(PpacError::Config(format!(
+                        "pipeline stage {i}: 1-bit chains cannot run over a {} matrix",
+                        sharded.kind.name()
+                    )));
+                }
+                if stage.take == 0 || stage.take > sharded.part.m {
+                    return Err(PpacError::Config(format!(
+                        "pipeline stage {i}: take {} outside 1..={} (matrix rows)",
+                        stage.take, sharded.part.m
+                    )));
+                }
+                if matches!(stage.op, StageOp::Gf2) && !stage.bias.is_empty() {
+                    return Err(PpacError::Config(format!(
+                        "pipeline stage {i}: GF(2) stages carry no bias (an XOR output has no accumulator)"
+                    )));
+                }
+                if !stage.bias.is_empty() && stage.bias.len() != stage.take {
+                    return Err(PpacError::Config(format!(
+                        "pipeline stage {i}: bias length {} != take {}",
+                        stage.bias.len(),
+                        stage.take
+                    )));
+                }
+                if let Some(prev) = prev_take {
+                    if sharded.part.n != prev {
+                        return Err(PpacError::DimMismatch {
+                            context: "pipeline stage input width",
+                            expected: sharded.part.n,
+                            got: prev,
+                        });
+                    }
+                } else {
+                    in_width = sharded.part.n;
+                }
+                prev_take = Some(stage.take);
+                plans.push(StagePlan {
+                    matrix: stage.matrix,
+                    op: stage.op,
+                    take: stage.take,
+                    bias: Arc::new(stage.bias.clone()),
+                });
+            }
+        }
+        let out_width = prev_take.unwrap_or(0);
+        let id = self.next_pipeline.fetch_add(1, Ordering::Relaxed);
+        write_lock(&self.pipelines)
+            .insert(id, Arc::new(PipelinePlan { stages: plans, in_width, out_width }));
+        Ok(id)
+    }
+
+    /// Drop a registered pipeline. Its stage matrices stay registered
+    /// (and become eligible for the TTL sweep again if nothing else
+    /// pins them).
+    pub fn unregister_pipeline(&self, pipeline: PipelineId) -> Result<()> {
+        write_lock(&self.pipelines)
+            .remove(&pipeline)
+            .map(|_| ())
+            .ok_or_else(|| PpacError::Coordinator(format!("unknown pipeline {pipeline}")))
+    }
+
+    /// End-to-end shape of a registered pipeline: (input bits, output
+    /// entries).
+    pub fn pipeline_shape(&self, pipeline: PipelineId) -> Option<(usize, usize)> {
+        read_lock(&self.pipelines).get(&pipeline).map(|p| (p.in_width, p.out_width))
+    }
+
+    /// Submit a batch of input tokens through a registered pipeline;
+    /// one result per token, in submission order, through the same
+    /// [`BatchHandle`] machinery as `submit_batch`.
+    pub fn submit_pipeline(
+        &self,
+        pipeline: PipelineId,
+        inputs: &[Vec<bool>],
+    ) -> Result<BatchHandle> {
+        self.submit_pipeline_with(pipeline, inputs, JobOptions::default())
+    }
+
+    /// [`Coordinator::submit_pipeline`] with explicit [`JobOptions`];
+    /// the deadline and priority apply end-to-end across every stage.
+    pub fn submit_pipeline_with(
+        &self,
+        pipeline: PipelineId,
+        inputs: &[Vec<bool>],
+        opts: JobOptions,
+    ) -> Result<BatchHandle> {
+        let plan = read_lock(&self.pipelines)
+            .get(&pipeline)
+            .cloned()
+            .ok_or_else(|| PpacError::Coordinator(format!("unknown pipeline {pipeline}")))?;
+        // Resolve every stage against the live registry up front: a
+        // stage matrix unregistered since registration fails the whole
+        // submit typed instead of failing tokens one stage at a time
+        // mid-run. Touch each matrix before sweeping, like scatter.
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        {
+            let shards = read_lock(&self.shards);
+            let last = plan.stages.len().saturating_sub(1);
+            for (i, sp) in plan.stages.iter().enumerate() {
+                let sharded = shards.get(&sp.matrix).cloned().ok_or_else(|| {
+                    PpacError::Coordinator(format!(
+                        "pipeline {pipeline} stage {i}: matrix {} left the registry",
+                        sp.matrix
+                    ))
+                })?;
+                *lock(&sharded.last_used) = Instant::now();
+                stages.push(StageRun {
+                    sharded,
+                    index: i as u32,
+                    op: sp.op,
+                    take: sp.take,
+                    bias: Arc::clone(&sp.bias),
+                    last: i == last,
+                });
+            }
+        }
+        self.maybe_sweep();
+        if inputs.is_empty() {
+            return Err(PpacError::Coordinator("empty batch".into()));
+        }
+        // A deadline already passed never reaches the admission gate —
+        // counted here because the batch never reaches the driver (the
+        // per-logical-job counting point for pipelined work).
+        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics
+                .deadlines_exceeded
+                .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+            return Err(PpacError::Job(JobError::DeadlineExceeded));
+        }
+        for input in inputs {
+            if input.len() != plan.in_width {
+                return Err(PpacError::DimMismatch {
+                    context: "pipeline input width",
+                    expected: plan.in_width,
+                    got: input.len(),
+                });
+            }
+        }
+        let Some(first) = stages.first() else {
+            return Err(PpacError::Coordinator("empty pipeline".into()));
+        };
+        // Admission: global gate, then the entry matrix's own — the
+        // same stacking a plain submit sees. The permit rides the
+        // driver thread and releases when the run settles.
+        let permit = AdmissionPermit::acquire(
+            &self.admission,
+            &first.sharded.admission,
+            inputs.len() as u64,
+            opts.priority,
+            self.cfg.admission,
+            opts.deadline,
+            &self.metrics,
+        )
+        .map_err(PpacError::Job)?;
+        let n = inputs.len();
+        let base = self.next_job.fetch_add(n as u64, Ordering::Relaxed);
+        self.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
+        // Pin every stage matrix against the TTL sweep for the whole
+        // run — the registered-pipeline guard covers *idle* pipelines,
+        // this covers the run itself, exactly like a gather pins its
+        // matrix.
+        let pins: Vec<Arc<AtomicU64>> =
+            stages.iter().map(|s| Arc::clone(&s.sharded.gathers_inflight)).collect();
+        for gathers_inflight in &pins {
+            // ordering: Relaxed — pins the matrix against the TTL
+            // sweep, which only compares this count against zero; the
+            // registry locks provide the real eviction
+            // synchronization.
+            gathers_inflight.fetch_add(1, Ordering::Relaxed);
+        }
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let (done_tx, done_rx) = channel();
+        let rt = PipelineRt {
+            pipeline,
+            router: Arc::clone(&self.router),
+            metrics: Arc::clone(&self.metrics),
+            reducers: Arc::clone(&self.reducers),
+            next_job: Arc::clone(&self.next_job),
+            cfg: self.cfg,
+        };
+        let ctx = RunCtx {
+            base,
+            opts,
+            cancelled: Arc::clone(&cancelled),
+            submitted: Instant::now(),
+        };
+        let tokens: Vec<Vec<bool>> = inputs.to_vec();
+        // The driver runs detached: it blocks on per-stage collects and
+        // host-hop gathers, which must overlap the client's next
+        // scatter exactly like the reducer pool does for plain batches.
+        std::thread::spawn(move || {
+            let results = drive(&rt, &ctx, &stages, tokens);
+            settle(&rt.metrics, &results);
+            for gathers_inflight in &pins {
+                // ordering: Relaxed — releases the TTL-sweep pin taken
+                // at submit time; same contract as the gather's
+                // release.
+                gathers_inflight.fetch_sub(1, Ordering::Relaxed);
+            }
+            drop(permit);
+            let _ = done_tx.send(Ok(results));
+        });
+        Ok(BatchHandle {
+            base_job_id: base,
+            count: n,
+            done: done_rx,
+            taken: false,
+            cancelled,
+        })
+    }
+}
+
+/// End of the chainable run starting at `from`: the maximal prefix of
+/// consecutive single-shard stages. A multi-shard stage can only run
+/// through the host gather (its column blocks must reduce somewhere).
+fn segment_end(stages: &[StageRun], from: usize) -> usize {
+    let mut end = from;
+    while let Some(stage) = stages.get(end) {
+        if stage.sharded.part.shards() != 1 {
+            break;
+        }
+        end += 1;
+    }
+    end
+}
+
+/// Pick one live worker hosting a replica of *every* stage in the
+/// segment (forcing placement of any unpinned group first), preferring
+/// the least-loaded candidate. Returns the worker, its current router
+/// epoch (stamped into the chained send for residency invalidation)
+/// and the replica id to serve per stage.
+fn plan_colocated(rt: &PipelineRt, seg: &[StageRun]) -> Option<(usize, u64, Vec<ShardId>)> {
+    let mut per_stage: Vec<Vec<(ShardId, usize)>> = Vec::with_capacity(seg.len());
+    for stage in seg {
+        let replicas = stage.sharded.shard_replicas.first()?;
+        // Force placement of an unpinned group; None = all workers
+        // dead, so no chained dispatch is possible at all.
+        rt.router.route(replicas)?;
+        let pins = rt.router.workers_for(replicas);
+        if pins.is_empty() {
+            return None;
+        }
+        per_stage.push(pins);
+    }
+    let first = per_stage.first()?;
+    let mut best: Option<(usize, u64)> = None;
+    for &(_, w) in first {
+        if per_stage.iter().all(|pins| pins.iter().any(|&(_, pw)| pw == w)) {
+            let load = rt.metrics.worker_inflight(w);
+            let better = match best {
+                None => true,
+                Some((_, b)) => load < b,
+            };
+            if better {
+                best = Some((w, load));
+            }
+        }
+    }
+    let (worker, _) = best?;
+    let shards: Option<Vec<ShardId>> = per_stage
+        .iter()
+        .map(|pins| pins.iter().find(|&&(_, pw)| pw == worker).map(|&(sid, _)| sid))
+        .collect();
+    Some((worker, rt.router.epoch(worker), shards?))
+}
+
+/// Run the pipeline for one batch: walk the stages, dispatching each
+/// chainable segment co-located (one worker, zero host round-trips
+/// inside it) and hopping through the host where it must. Returns one
+/// result per token, in submission order.
+fn drive(
+    rt: &PipelineRt,
+    ctx: &RunCtx,
+    stages: &[StageRun],
+    inputs: Vec<Vec<bool>>,
+) -> Vec<JobResult> {
+    let n = inputs.len();
+    let fan = stages.len();
+    let mut finals: Vec<Option<JobResult>> = Vec::new();
+    finals.resize_with(n, || None);
+    let mut live: Vec<Token> = inputs.into_iter().enumerate().collect();
+    let mut si = 0usize;
+    while si < stages.len() && !live.is_empty() {
+        // ordering: Relaxed — cancelled is a one-way latch the client
+        // raises; the driver re-reads it before every stage dispatch,
+        // so a lagging read only delays the typed finalization.
+        if ctx.cancelled.load(Ordering::Relaxed) {
+            finalize_all(&mut finals, &live, ctx, JobError::Cancelled, fan);
+            live.clear();
+            break;
+        }
+        if ctx.opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            finalize_all(&mut finals, &live, ctx, JobError::DeadlineExceeded, fan);
+            live.clear();
+            break;
+        }
+        let seg_end = segment_end(stages, si);
+        if seg_end == si {
+            // Multi-shard stage: the host gather is the only place its
+            // column-block partials can reduce.
+            let Some(stage) = stages.get(si) else { break };
+            live = host_stage(rt, ctx, stage, live, &mut finals);
+            si += 1;
+            continue;
+        }
+        // Longest prefix of the chainable run some live worker can
+        // host wholesale.
+        let mut end = seg_end;
+        while end > si {
+            let feasible = stages
+                .get(si..end)
+                .is_some_and(|seg| plan_colocated(rt, seg).is_some());
+            if feasible {
+                break;
+            }
+            end -= 1;
+        }
+        if end == si {
+            // Not even one stage is placeable right now: the host path
+            // degrades all the way to typed WorkerLost partials.
+            let Some(stage) = stages.get(si) else { break };
+            live = host_stage(rt, ctx, stage, live, &mut finals);
+            si += 1;
+            continue;
+        }
+        if end < seg_end {
+            // The chainable run splits across workers; the
+            // intermediate at the seam takes a host hop.
+            rt.metrics.stage_spills.fetch_add(1, Ordering::Relaxed);
+        }
+        let Some(seg) = stages.get(si..end) else { break };
+        live = run_chained(rt, ctx, seg, live, &mut finals);
+        si = end;
+    }
+    for (idx, _) in &live {
+        // Defensive: a token that cleared every stage without being
+        // finalized can only mean a driver bug — answer typed rather
+        // than hang the handle.
+        set_final(&mut finals, *idx, typed_result(ctx, *idx, JobError::WorkerLost, fan));
+    }
+    finals
+        .into_iter()
+        .enumerate()
+        .map(|(idx, slot)| {
+            slot.unwrap_or_else(|| typed_result(ctx, idx, JobError::WorkerLost, fan))
+        })
+        .collect()
+}
+
+/// Dispatch one co-located segment as chained [`WorkerMsg::Pipeline`]
+/// waves: replan after a crash, retry unanswered tokens within the
+/// failover budget, fall back to host hops if co-location vanishes.
+/// Returns the tokens that cleared the segment (empty if it included
+/// the pipeline's final stage — those finalize instead).
+fn run_chained(
+    rt: &PipelineRt,
+    ctx: &RunCtx,
+    seg: &[StageRun],
+    live: Vec<Token>,
+    finals: &mut Vec<Option<JobResult>>,
+) -> Vec<Token> {
+    let seg_len = seg.len() as u64;
+    let fan = seg.len();
+    let includes_last = seg.last().is_some_and(|s| s.last);
+    let mut advanced: Vec<Token> = Vec::new();
+    let mut pending = live;
+    let mut budget = rt.cfg.retry_limit;
+    let mut attempt: u32 = 0;
+    while !pending.is_empty() {
+        // ordering: Relaxed — cancelled is a one-way latch; the driver
+        // re-reads it every wave, so a lagging read only delays the
+        // typed finalization by one poll interval.
+        if ctx.cancelled.load(Ordering::Relaxed) {
+            finalize_all(finals, &pending, ctx, JobError::Cancelled, fan);
+            return advanced;
+        }
+        if ctx.opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            finalize_all(finals, &pending, ctx, JobError::DeadlineExceeded, fan);
+            return advanced;
+        }
+        let Some((worker, epoch, shard_ids)) = plan_colocated(rt, seg) else {
+            // Co-location vanished mid-run (deaths shrank the replica
+            // intersection): hop the remaining tokens through the host
+            // stage by stage — the spill path, graceful by
+            // construction.
+            for stage in seg {
+                pending = host_stage(rt, ctx, stage, pending, finals);
+                if pending.is_empty() {
+                    break;
+                }
+            }
+            advanced.append(&mut pending);
+            return advanced;
+        };
+        let total = pending.len() as u64 * seg_len;
+        let chain: Vec<ChainStage> = seg
+            .iter()
+            .zip(&shard_ids)
+            .map(|(stage, &sid)| ChainStage {
+                shard: sid,
+                index: stage.index,
+                mode: stage.op.mode_key(),
+                pad: stage.op.pad_adjust() * stage.sharded.part.pad_cols as i64,
+                bias: Arc::clone(&stage.bias),
+                take: stage.take,
+                last: stage.last,
+            })
+            .collect();
+        let (tx, rx) = channel();
+        let tokens: Vec<PipeToken> = pending
+            .iter()
+            .map(|(idx, bits)| PipeToken {
+                job_id: ctx.base + *idx as u64,
+                bits: bits.clone(),
+            })
+            .collect();
+        if let Some(wm) = rt.metrics.worker(worker) {
+            // ordering: Relaxed — occupancy is a placement hint;
+            // mark_dead's AcqRel swap is the only reclaim edge and no
+            // other memory hangs off this count.
+            wm.inflight.fetch_add(total, Ordering::Relaxed);
+        }
+        let msg = WorkerMsg::Pipeline(Box::new(PipelineJob {
+            pipeline: rt.pipeline,
+            epoch,
+            stages: chain,
+            tokens,
+            submitted: ctx.submitted,
+            deadline: ctx.opts.deadline,
+            attempt,
+            respond: tx,
+        }));
+        match rt.router.send(worker, msg) {
+            SendStatus::Sent => {
+                rt.metrics.shard_jobs_submitted.fetch_add(total, Ordering::Relaxed);
+            }
+            SendStatus::Dead => {
+                // The failed send marked the worker dead — which also
+                // reclaimed the in-flight bump. Replan on survivors.
+                rt.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            SendStatus::Stale => {
+                // The failure hit an incarnation a restart has since
+                // replaced: the mark was refused and the bump is ours
+                // to roll back.
+                if let Some(wm) = rt.metrics.worker(worker) {
+                    wm.complete(total);
+                }
+                rt.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+        // Collect the wave, polling the cancel latch and the deadline.
+        let mut verdicts: HashMap<usize, Verdict> = HashMap::with_capacity(pending.len());
+        let mut disconnected = false;
+        let mut expired = false;
+        while verdicts.len() < pending.len() {
+            // ordering: Relaxed — same one-way cancel latch as above.
+            if ctx.cancelled.load(Ordering::Relaxed) {
+                break;
+            }
+            if ctx.opts.deadline.is_some_and(|d| Instant::now() >= d) {
+                expired = true;
+                break;
+            }
+            match rx.recv_timeout(CHAIN_POLL) {
+                Ok(res) => {
+                    let idx = res.job_id.wrapping_sub(ctx.base) as usize;
+                    if pending.iter().any(|(i, _)| *i == idx) && !verdicts.contains_key(&idx) {
+                        verdicts.insert(idx, classify(res, includes_last));
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if disconnected {
+            // The worker crashed mid-chain. Fence the mark on the
+            // epoch we dispatched under, so a restart that already
+            // revived the slot is not re-killed; the mark (if ours)
+            // reclaims the in-flight claim wholesale.
+            rt.router.mark_dead_if(worker, epoch);
+        }
+        // ordering: Relaxed — one-way cancel latch; read once for the
+        // whole partition below.
+        let was_cancelled = ctx.cancelled.load(Ordering::Relaxed);
+        let mut retry: Vec<Token> = Vec::new();
+        let mut lost = 0u64;
+        for (idx, bits) in pending {
+            match verdicts.remove(&idx) {
+                Some(Verdict::Done(res)) => set_final(finals, idx, res),
+                Some(Verdict::Next(b)) => advanced.push((idx, b)),
+                None => {
+                    if expired {
+                        set_final(
+                            finals,
+                            idx,
+                            typed_result(ctx, idx, JobError::DeadlineExceeded, fan),
+                        );
+                    } else if was_cancelled {
+                        set_final(finals, idx, typed_result(ctx, idx, JobError::Cancelled, fan));
+                    } else {
+                        lost += 1;
+                        retry.push((idx, bits));
+                    }
+                }
+            }
+        }
+        if lost > 0 {
+            rt.metrics.shard_jobs_lost.fetch_add(lost * seg_len, Ordering::Relaxed);
+        }
+        pending = retry;
+        if pending.is_empty() {
+            break;
+        }
+        if budget == 0 {
+            finalize_all(finals, &pending, ctx, JobError::WorkerLost, fan);
+            break;
+        }
+        budget -= 1;
+        attempt += 1;
+        rt.metrics
+            .retries
+            .fetch_add(pending.len() as u64 * seg_len, Ordering::Relaxed);
+    }
+    advanced
+}
+
+/// What one chained answer means for its token. Typed errors are final
+/// in the chained path — only *unanswered* tokens (the worker crashed)
+/// retry, so a deterministic refusal is never re-burned against the
+/// failover budget.
+fn classify(res: JobResult, includes_last: bool) -> Verdict {
+    if includes_last || res.output.is_err() {
+        return Verdict::Done(res);
+    }
+    let JobResult {
+        job_id,
+        output,
+        latency_us,
+        cycles_share,
+        worker,
+        batch_size,
+        shard,
+        fan_out,
+        attempt,
+    } = res;
+    match output {
+        Ok(JobOutput::Bits(b)) => Verdict::Next(b),
+        _ => Verdict::Done(JobResult {
+            job_id,
+            output: Err(JobError::Unsupported {
+                reason: "pipeline stage answered the wrong payload kind".into(),
+            }),
+            latency_us,
+            cycles_share,
+            worker,
+            batch_size,
+            shard,
+            fan_out,
+            attempt,
+        }),
+    }
+}
+
+/// Run one stage through the host: scatter the live tokens as a plain
+/// shard-job batch over the stage's matrix, gather through the shared
+/// reducer machinery (dedup, bounded retry waves, deadline and
+/// cancellation included), then apply bias and re-binarize host-side.
+/// This is the `stage_spills` fallback — and the only path a
+/// multi-shard stage can take.
+fn host_stage(
+    rt: &PipelineRt,
+    ctx: &RunCtx,
+    stage: &StageRun,
+    live: Vec<Token>,
+    finals: &mut Vec<Option<JobResult>>,
+) -> Vec<Token> {
+    if live.is_empty() {
+        return live;
+    }
+    let n = live.len();
+    rt.metrics.stage_spills.fetch_add(1, Ordering::Relaxed);
+    rt.metrics.pipeline_stages_executed.fetch_add(1, Ordering::Relaxed);
+    let sharded = &stage.sharded;
+    *lock(&sharded.last_used) = Instant::now();
+    let part = sharded.part;
+    let mode = stage.op.mode_key();
+    let inputs: Vec<JobInput> =
+        live.iter().map(|(_, bits)| stage.op.input(bits.clone())).collect();
+    let base = rt.next_job.fetch_add(n as u64, Ordering::Relaxed);
+    // Each host hop is its own logical batch through the shared gather
+    // machinery — submitted here, completed in its GatherState::finish
+    // — so the job books balance at the hop level exactly as they do
+    // for the pipeline's own logical jobs at the driver level.
+    rt.metrics.jobs_submitted.fetch_add(n as u64, Ordering::Relaxed);
+    let (tx, rx) = channel();
+    let submitted = Instant::now();
+    for (s_idx, replicas) in sharded.shard_replicas.iter().enumerate() {
+        let cb = s_idx % part.col_blocks;
+        loop {
+            let Some((sid, worker)) = rt.router.route(replicas) else {
+                // Every worker is dead: answer this shard's jobs with
+                // synthetic typed partials so the gather finalizes
+                // cleanly (same contract as the scatter path).
+                for j in 0..n {
+                    let _ = tx.send(JobResult {
+                        job_id: base + j as u64,
+                        output: Err(JobError::WorkerLost),
+                        latency_us: 0.0,
+                        cycles_share: 0.0,
+                        worker: 0,
+                        batch_size: 0,
+                        shard: s_idx,
+                        fan_out: 1,
+                        attempt: 0,
+                    });
+                }
+                break;
+            };
+            if let Some(wm) = rt.metrics.worker(worker) {
+                // ordering: Relaxed — occupancy is a placement hint;
+                // mark_dead's AcqRel swap is the only reclaim edge and
+                // no other memory hangs off this count.
+                wm.inflight.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            let mut outcome = SendStatus::Sent;
+            for (j, input) in inputs.iter().enumerate() {
+                let job = Job {
+                    job_id: base + j as u64,
+                    shard: sid,
+                    shard_index: s_idx,
+                    input: input.split(&part, cb),
+                    submitted,
+                    attempt: 0,
+                    deadline: ctx.opts.deadline,
+                    priority: ctx.opts.priority,
+                    respond: tx.clone(),
+                };
+                outcome = rt.router.send(worker, WorkerMsg::Job(job));
+                if outcome != SendStatus::Sent {
+                    break;
+                }
+            }
+            match outcome {
+                SendStatus::Sent => {
+                    rt.metrics
+                        .shard_jobs_submitted
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                    if replicas.len() > 1 {
+                        if let Some(wm) = rt.metrics.worker(worker) {
+                            wm.replica_hits.fetch_add(n as u64, Ordering::Relaxed);
+                        }
+                    }
+                    break;
+                }
+                SendStatus::Dead => {
+                    // The failed send marked the worker dead and
+                    // reclaimed the bump; re-dispatch the run on a
+                    // surviving replica.
+                }
+                SendStatus::Stale => {
+                    if let Some(wm) = rt.metrics.worker(worker) {
+                        wm.complete(n as u64);
+                    }
+                }
+            }
+            rt.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    drop(tx);
+    let plan = GatherPlan { part, mode, pad_adjust: stage.op.pad_adjust() };
+    let state = GatherState::new(plan, base, n, Arc::clone(&rt.metrics));
+    let (done_tx, done_rx) = channel();
+    let inflight = Arc::clone(&sharded.gathers_inflight);
+    // ordering: Relaxed — pins the matrix against the TTL sweep, which
+    // only compares this count against zero; the registry locks
+    // provide the real eviction synchronization.
+    inflight.fetch_add(1, Ordering::Relaxed);
+    let retry = (rt.cfg.retry_limit > 0).then(|| RetryCtx {
+        router: Arc::clone(&rt.router),
+        matrix: Arc::clone(sharded),
+        inputs: inputs.clone(),
+        submitted,
+        budget: rt.cfg.retry_limit,
+        opts: ctx.opts,
+    });
+    let task = ReduceTask {
+        rx,
+        state,
+        done: done_tx,
+        inflight: Arc::clone(&inflight),
+        retry,
+        deadline: ctx.opts.deadline,
+        // The hop's gather shares the pipeline's cancel latch, so a
+        // BatchHandle::cancel reaches a stage mid-gather.
+        cancelled: Arc::clone(&ctx.cancelled),
+        permit: None,
+    };
+    if !rt.reducers.submit(task) {
+        // ordering: Relaxed — releases the TTL-sweep pin taken above;
+        // the task never reached a reducer.
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        finalize_all(finals, &live, ctx, JobError::CoordinatorGone, 1);
+        return Vec::new();
+    }
+    let results = match done_rx.recv() {
+        Ok(Ok(results)) => results,
+        // A gather-level error or a torn-down reducer pool: the hop
+        // can never produce results, so the tokens resolve typed.
+        Ok(Err(_)) | Err(_) => {
+            finalize_all(finals, &live, ctx, JobError::CoordinatorGone, 1);
+            return Vec::new();
+        }
+    };
+    // Post-process host-side: the gather already stripped row padding
+    // and applied the pad correction; add the bias, then either
+    // finalize (pipeline-final stage) or re-binarize into the next
+    // stage's bits.
+    let mut next: Vec<Token> = Vec::with_capacity(n);
+    for ((idx, _), res) in live.into_iter().zip(results) {
+        let JobResult {
+            output,
+            latency_us,
+            cycles_share,
+            worker,
+            batch_size,
+            fan_out,
+            attempt,
+            ..
+        } = res;
+        match output {
+            Err(e) => set_final(
+                finals,
+                idx,
+                JobResult {
+                    job_id: ctx.base + idx as u64,
+                    output: Err(e),
+                    latency_us,
+                    cycles_share,
+                    worker,
+                    batch_size,
+                    shard: 0,
+                    fan_out,
+                    attempt,
+                },
+            ),
+            Ok(JobOutput::Ints(y)) => {
+                let mut z: Vec<i64> = y.iter().take(stage.take).copied().collect();
+                for (r, v) in z.iter_mut().enumerate() {
+                    *v += stage.bias.get(r).copied().unwrap_or(0);
+                }
+                if stage.last {
+                    set_final(
+                        finals,
+                        idx,
+                        JobResult {
+                            job_id: ctx.base + idx as u64,
+                            output: Ok(JobOutput::Ints(z)),
+                            latency_us,
+                            cycles_share,
+                            worker,
+                            batch_size,
+                            shard: 0,
+                            fan_out,
+                            attempt,
+                        },
+                    );
+                } else {
+                    next.push((idx, z.iter().map(|&v| v >= 0).collect()));
+                }
+            }
+            Ok(JobOutput::Bits(b)) => {
+                let bits: Vec<bool> = b.iter().take(stage.take).copied().collect();
+                if stage.last {
+                    set_final(
+                        finals,
+                        idx,
+                        JobResult {
+                            job_id: ctx.base + idx as u64,
+                            output: Ok(JobOutput::Bits(bits)),
+                            latency_us,
+                            cycles_share,
+                            worker,
+                            batch_size,
+                            shard: 0,
+                            fan_out,
+                            attempt,
+                        },
+                    );
+                } else {
+                    next.push((idx, bits));
+                }
+            }
+        }
+    }
+    next
+}
+
+/// Store a token's final result exactly once (first writer wins — a
+/// late duplicate from a replanned wave is dropped, mirroring the
+/// gather's dedup bitmap).
+fn set_final(finals: &mut [Option<JobResult>], idx: usize, res: JobResult) {
+    if let Some(slot) = finals.get_mut(idx) {
+        if slot.is_none() {
+            *slot = Some(res);
+        }
+    }
+}
+
+/// A typed per-token error result, stamped with the pipeline's logical
+/// job id.
+fn typed_result(ctx: &RunCtx, idx: usize, err: JobError, fan_out: usize) -> JobResult {
+    JobResult {
+        job_id: ctx.base + idx as u64,
+        output: Err(err),
+        latency_us: ctx.submitted.elapsed().as_secs_f64() * 1e6,
+        cycles_share: 0.0,
+        worker: 0,
+        batch_size: 0,
+        shard: 0,
+        fan_out,
+        attempt: 0,
+    }
+}
+
+/// Finalize every listed token with the same typed error.
+fn finalize_all(
+    finals: &mut [Option<JobResult>],
+    live: &[Token],
+    ctx: &RunCtx,
+    err: JobError,
+    fan_out: usize,
+) {
+    for (idx, _) in live {
+        set_final(finals, *idx, typed_result(ctx, *idx, err.clone(), fan_out));
+    }
+}
+
+/// Pipeline-level job accounting, mirroring [`GatherState`]'s finish:
+/// every token completes exactly once here, failures (and their
+/// cancelled/expired subsets) counted from the typed outputs.
+fn settle(metrics: &Metrics, results: &[JobResult]) {
+    let mut failed = 0u64;
+    let mut cancelled = 0u64;
+    let mut expired = 0u64;
+    for r in results {
+        if let Err(e) = &r.output {
+            failed += 1;
+            match e {
+                JobError::Cancelled => cancelled += 1,
+                JobError::DeadlineExceeded => expired += 1,
+                _ => {}
+            }
+        }
+    }
+    metrics
+        .jobs_completed
+        .fetch_add(results.len() as u64, Ordering::Relaxed);
+    if failed > 0 {
+        metrics.jobs_failed.fetch_add(failed, Ordering::Relaxed);
+    }
+    if cancelled > 0 {
+        metrics.jobs_cancelled.fetch_add(cancelled, Ordering::Relaxed);
+    }
+    if expired > 0 {
+        metrics.deadlines_exceeded.fetch_add(expired, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> StageBufferTable {
+        StageBufferTable::new(Arc::new(Metrics::for_workers(1)))
+    }
+
+    fn key(worker: usize, epoch: u64, stage: u32) -> StageKey {
+        StageKey { pipeline: 1, stage, shard: 7, worker, epoch }
+    }
+
+    #[test]
+    fn gauge_tracks_inserts_and_removes() {
+        let t = table();
+        t.insert(key(0, 1, 0), vec![vec![true]]);
+        t.insert(key(0, 1, 0), vec![vec![false]]); // replace: not fresh
+        t.insert(key(0, 1, 1), vec![vec![true]]);
+        assert_eq!(t.resident(), 2);
+        assert_eq!(t.metrics.intermediates_resident.load(Ordering::Relaxed), 2);
+        t.remove(&key(0, 1, 0));
+        t.remove(&key(0, 1, 0)); // double remove: no underflow
+        assert_eq!(t.resident(), 1);
+        assert_eq!(t.metrics.intermediates_resident.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn invalidation_is_epoch_and_worker_scoped() {
+        let t = table();
+        t.insert(key(0, 1, 0), Vec::new());
+        t.insert(key(0, 2, 1), Vec::new());
+        t.insert(key(1, 1, 2), Vec::new());
+        t.invalidate_worker(0, 2);
+        // Worker 0's epoch-1 entry dropped; its epoch-2 entry and
+        // worker 1's survive.
+        assert_eq!(t.resident(), 2);
+        assert_eq!(t.metrics.intermediates_resident.load(Ordering::Relaxed), 2);
+        assert!(lock(&t.inner).contains_key(&key(0, 2, 1)));
+        assert!(lock(&t.inner).contains_key(&key(1, 1, 2)));
+    }
+
+    #[test]
+    fn invalidation_of_unknown_worker_is_a_noop() {
+        let t = table();
+        t.insert(key(0, 1, 0), Vec::new());
+        t.invalidate_worker(5, 9);
+        assert_eq!(t.resident(), 1);
+        assert_eq!(t.metrics.intermediates_resident.load(Ordering::Relaxed), 1);
+    }
+}

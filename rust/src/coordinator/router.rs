@@ -227,7 +227,7 @@ impl Router {
     /// failed send snapshotted. Returns whether the mark happened —
     /// `false` means the slot was revived in between (the failure
     /// belongs to a stale incarnation) and nothing was touched.
-    fn mark_dead_if(&self, worker: usize, epoch: u64) -> bool {
+    pub(crate) fn mark_dead_if(&self, worker: usize, epoch: u64) -> bool {
         let Some(slot) = self.senders.get(worker) else { return false };
         // Read lock: excludes `revive`, making the epoch comparison and
         // the mark one atomic step against it — the ABA guard modeled
@@ -538,6 +538,27 @@ impl Router {
     /// while one still present was a transient race worth retrying.
     pub(crate) fn shard_known(&self, sid: ShardId) -> bool {
         read_lock(&self.registry).contains_key(&sid)
+    }
+
+    /// The slot's current incarnation number (0 for out-of-range ids).
+    /// The pipeline driver stamps this into chained stage sends so the
+    /// supervisor's post-restart invalidation can tell this
+    /// incarnation's resident intermediates from the next one's.
+    pub(crate) fn epoch(&self, worker: usize) -> u64 {
+        self.senders.get(worker).map_or(0, |s| read_lock(s).epoch)
+    }
+
+    /// Live (replica, worker) pins of a replica group — what the
+    /// co-location scheduler intersects across consecutive stages.
+    /// Reads existing pins only; call [`Router::route`] first to force
+    /// placement of an unpinned group.
+    pub(crate) fn workers_for(&self, replicas: &[ShardId]) -> Vec<(ShardId, usize)> {
+        let aff = read_lock(&self.affinity);
+        replicas
+            .iter()
+            .filter_map(|sid| aff.get(sid).map(|&w| (*sid, w)))
+            .filter(|&(_, w)| !self.is_dead(w))
+            .collect()
     }
 
     pub(crate) fn stats(&self) -> RoutingStats {

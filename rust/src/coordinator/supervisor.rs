@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 use crate::engine::EngineOpts;
 use crate::util::sync::{lock, read_lock, AtomicBool, AtomicU64, Ordering};
 
+use super::pipeline::StageBufferTable;
 use super::router::{Router, SendStatus};
 use super::worker::{MatrixRegistry, Worker, WorkerMsg};
 use super::{run_reducer, CoordinatorConfig, Metrics, ReduceTask, SharedShards, ShardId};
@@ -244,6 +245,9 @@ pub(crate) struct Supervisor {
     shards: SharedShards,
     slots: Arc<WorkerSlots>,
     reducers: Arc<ReducerPool>,
+    /// Pipeline-intermediate residency table: a restart invalidates the
+    /// dead incarnation's parked entries right after the epoch bump.
+    stage_buffers: Arc<StageBufferTable>,
     engine_opts: Vec<EngineOpts>,
     stop: Receiver<()>,
     state: Vec<SlotState>,
@@ -264,6 +268,7 @@ impl Supervisor {
         shards: SharedShards,
         slots: Arc<WorkerSlots>,
         reducers: Arc<ReducerPool>,
+        stage_buffers: Arc<StageBufferTable>,
         engine_opts: Vec<EngineOpts>,
         stop: Receiver<()>,
     ) -> Self {
@@ -285,6 +290,7 @@ impl Supervisor {
             shards,
             slots,
             reducers,
+            stage_buffers,
             engine_opts,
             stop,
             state,
@@ -385,6 +391,7 @@ impl Supervisor {
             self.cfg.backend,
             opts,
             Arc::clone(&killed),
+            Arc::clone(&self.stage_buffers),
         ) {
             Ok(worker) => worker,
             // Tile allocation failed (resource pressure): leave the
@@ -394,6 +401,11 @@ impl Supervisor {
         let handle = std::thread::spawn(move || worker.run(rx));
         self.slots.install(w, handle, killed);
         self.router.revive(w, tx);
+        // The epoch just bumped: every stage intermediate the dead
+        // incarnation parked is unreachable now (its chain died with
+        // the receiver join above), so reclaim it — this is what
+        // drains `intermediates_resident` after a mid-pipeline crash.
+        self.stage_buffers.invalidate_worker(w, self.router.epoch(w));
         self.metrics.workers_restarted.fetch_add(1, Ordering::Relaxed);
         true
     }

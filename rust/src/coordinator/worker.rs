@@ -19,7 +19,7 @@
 //! take down valid jobs that merely coalesced into the same batch.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -33,6 +33,7 @@ use crate::sim::PpacConfig;
 
 use super::job::{Job, JobError, JobInput, JobOutput, JobResult, ModeKey, ShardId};
 use super::metrics::Metrics;
+use super::pipeline::{PipelineId, StageBufferTable, StageKey};
 
 /// The packed bit payloads of a 1-bit batch (`None` if a multi-bit job
 /// slipped into it, which the mode-key grouping rules out).
@@ -43,6 +44,12 @@ fn collect_bits(batch: &[Job]) -> Option<Vec<Vec<bool>>> {
 /// Messages a worker consumes.
 pub enum WorkerMsg {
     Job(Job),
+    /// A chained multi-stage segment of a registered pipeline: every
+    /// stage's shard is (or will become) resident on this worker, so
+    /// the intermediates between stages never travel back to the host.
+    /// Boxed: the payload is an order of magnitude larger than the
+    /// other variants and would bloat every queued message otherwise.
+    Pipeline(Box<PipelineJob>),
     /// Drop residency of a shard (sent when its matrix unregisters).
     /// With replication, every replica id pinned here gets its own
     /// eviction — replicas are independent residencies.
@@ -59,6 +66,54 @@ pub enum WorkerMsg {
     /// proactive death discovery, and a counter that stops advancing
     /// while sends succeed flags a live-but-stalled worker.
     Ping,
+}
+
+/// One chained segment of a registered pipeline, dispatched as a
+/// single message: the worker runs every stage back to back on its
+/// tile, re-binarizing between stages, and answers one result per
+/// token. Built by the scheduler in [`super::pipeline`].
+pub struct PipelineJob {
+    pub pipeline: PipelineId,
+    /// This worker's incarnation number, stamped by the driver at send
+    /// time. Keys the [`StageBufferTable`] entries so the supervisor's
+    /// post-restart sweep invalidates exactly this incarnation's
+    /// abandoned intermediates.
+    pub epoch: u64,
+    pub stages: Vec<ChainStage>,
+    pub tokens: Vec<PipeToken>,
+    pub submitted: Instant,
+    pub deadline: Option<Instant>,
+    pub attempt: u32,
+    pub respond: Sender<JobResult>,
+}
+
+/// One stage of a chained segment, pre-resolved by the scheduler to
+/// the replica this worker hosts.
+pub struct ChainStage {
+    /// Registry id of the replica to serve from (resident or lazily
+    /// loaded, like any shard job).
+    pub shard: ShardId,
+    /// Stage index within the whole pipeline (keys the stage buffer).
+    pub index: u32,
+    pub mode: ModeKey,
+    /// Additive zero-padding correction (`pad_adjust * pad_cols`) —
+    /// the same term the host-side gather adds in `finish`, applied
+    /// here because the accumulator never reaches the host.
+    pub pad: i64,
+    /// Per-row bias added after the pad correction; empty means zeros.
+    pub bias: Arc<Vec<i64>>,
+    /// Logical rows of this stage's matrix (strips the tile's row
+    /// padding before re-binarizing).
+    pub take: usize,
+    /// Pipeline-final stages answer the raw accumulator; hidden stages
+    /// re-binarize (`z >= 0`) into the next stage's input bits.
+    pub last: bool,
+}
+
+/// One input token of a chained segment.
+pub struct PipeToken {
+    pub job_id: u64,
+    pub bits: Vec<bool>,
 }
 
 /// One resident-able block of a registered matrix, in the form its
@@ -93,6 +148,12 @@ pub struct Worker {
     /// gracefully first, which is not what a crash does. At most the
     /// batch already in flight still gets served.
     killed: Arc<AtomicBool>,
+    /// Shared residency table of chained-stage intermediates, keyed by
+    /// (pipeline, stage, shard, worker, epoch). The worker parks each
+    /// stage's inputs here while the stage runs and removes them when
+    /// it completes; a crash mid-chain abandons them, and the
+    /// supervisor's epoch-guarded sweep reclaims the leak.
+    stage_buffers: Arc<StageBufferTable>,
 }
 
 impl Worker {
@@ -106,6 +167,7 @@ impl Worker {
         backend: Backend,
         engine: EngineOpts,
         killed: Arc<AtomicBool>,
+        stage_buffers: Arc<StageBufferTable>,
     ) -> Result<Self> {
         let mut unit = PpacUnit::new(cfg)?;
         unit.configure_engine(backend, engine);
@@ -117,6 +179,7 @@ impl Worker {
             metrics,
             max_batch,
             killed,
+            stage_buffers,
         })
     }
 
@@ -139,6 +202,10 @@ impl Worker {
                 Some(j) => j,
                 None => match rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(WorkerMsg::Job(j)) => j,
+                    Ok(WorkerMsg::Pipeline(pj)) => {
+                        self.serve_pipeline(*pj);
+                        continue;
+                    }
                     Ok(WorkerMsg::Evict(sid)) => {
                         self.evict(sid);
                         continue;
@@ -156,6 +223,7 @@ impl Worker {
             let key = (head.shard, head.input.mode_key());
             let mut batch = vec![head];
             let mut shutdown = false;
+            let mut pending_pipe: Option<Box<PipelineJob>> = None;
             while batch.len() < self.max_batch {
                 match rx.try_recv() {
                     Ok(WorkerMsg::Job(j)) => {
@@ -165,6 +233,14 @@ impl Worker {
                             pending = Some(j);
                             break;
                         }
+                    }
+                    // A chained segment never merges into a shard-job
+                    // batch: serve the collected batch first, then the
+                    // segment (its residency run would break the batch's
+                    // key anyway).
+                    Ok(WorkerMsg::Pipeline(pj)) => {
+                        pending_pipe = Some(pj);
+                        break;
                     }
                     Ok(WorkerMsg::Evict(sid)) => self.evict(sid),
                     Ok(WorkerMsg::Ping) => self.beat(),
@@ -199,6 +275,9 @@ impl Worker {
             // reclaim without wrapping (see WorkerMetrics::complete).
             if let Some(w) = self.metrics.worker(self.id) {
                 w.complete(served);
+            }
+            if let Some(pj) = pending_pipe {
+                self.serve_pipeline(*pj);
             }
             if shutdown {
                 return;
@@ -252,6 +331,98 @@ impl Worker {
         }
     }
 
+    /// Reload + reconfigure the tile for `key` if residency changed.
+    /// Returns `Some(load_cycles)` when a reload happened, `None` when
+    /// the shard was already resident in this mode. Shared by the
+    /// shard-job batch path and the chained-pipeline path.
+    fn ensure_resident(
+        &mut self,
+        key: (ShardId, ModeKey),
+    ) -> std::result::Result<Option<u64>, JobError> {
+        let (shard_id, mode) = key;
+        if self.resident == Some(key) {
+            return Ok(None);
+        }
+        let data = {
+            let reg = read_lock(&self.registry);
+            reg.get(&shard_id).cloned()
+        };
+        let Some(data) = data else {
+            return Err(JobError::UnknownShard { shard: shard_id });
+        };
+        // The load below overwrites the latch plane; if it (or the
+        // configure) fails midway, the previous resident is gone, so
+        // the residency marker must drop *before* the attempt.
+        self.resident = None;
+        let op_mode = match (&*data, mode) {
+            (ShardData::Bit1(_), ModeKey::Pm1Mvp) => OpMode::Pm1Mvp,
+            (ShardData::Bit1(_), ModeKey::Hamming) => OpMode::Hamming,
+            (ShardData::Bit1(_), ModeKey::Gf2) => OpMode::Gf2Mvp,
+            (ShardData::Bit1(_), ModeKey::Multibit(spec)) => OpMode::MultibitVector {
+                lbits: spec.lbits,
+                x_fmt: spec.x_fmt,
+                matrix: spec.matrix,
+            },
+            (ShardData::Multibit { kbits, a_fmt, .. }, ModeKey::Multibit(spec)) => {
+                OpMode::MultibitMatrix {
+                    kbits: *kbits,
+                    lbits: spec.lbits,
+                    a_fmt: *a_fmt,
+                    x_fmt: spec.x_fmt,
+                }
+            }
+            (ShardData::Multibit { .. }, other) => {
+                return Err(JobError::KindMismatch {
+                    matrix: "multibit",
+                    job: other.name(),
+                })
+            }
+        };
+        let cyc0 = self.unit.setup_cycles() + self.unit.compute_cycles();
+        match &*data {
+            ShardData::Bit1(rows) => self.unit.load_bit_matrix_padded(rows)?,
+            ShardData::Multibit { rows, kbits, a_fmt } => {
+                self.unit.load_multibit_matrix_padded(rows, *kbits, *a_fmt)?
+            }
+        }
+        self.unit.configure(op_mode)?;
+        let cyc1 = self.unit.setup_cycles() + self.unit.compute_cycles();
+        self.resident = Some(key);
+        Ok(Some(cyc1 - cyc0))
+    }
+
+    /// Settle residency and run one packed-bit batch through the tile —
+    /// the shared compute core of 1-bit shard jobs and chained pipeline
+    /// stages (which is why multibit, never chainable, is not handled
+    /// here).
+    fn run_stage(
+        &mut self,
+        key: (ShardId, ModeKey),
+        inputs: &[Vec<bool>],
+        load_cycles: &mut Option<u64>,
+    ) -> std::result::Result<Vec<JobOutput>, JobError> {
+        *load_cycles = self.ensure_resident(key)?;
+        match key.1 {
+            ModeKey::Pm1Mvp => {
+                Ok(self.unit.mvp1_batch(inputs)?.into_iter().map(JobOutput::Ints).collect())
+            }
+            ModeKey::Hamming => {
+                Ok(self
+                    .unit
+                    .hamming_batch(inputs)?
+                    .into_iter()
+                    .map(JobOutput::Ints)
+                    .collect())
+            }
+            ModeKey::Gf2 => {
+                Ok(self.unit.gf2_batch(inputs)?.into_iter().map(JobOutput::Bits).collect())
+            }
+            ModeKey::Multibit(_) => Err(JobError::Unsupported {
+                reason: "multibit payloads cannot chain".into(),
+            }),
+        }
+    }
+
     /// Reload + reconfigure (if residency changed) and execute the
     /// batch, returning one output per job or the typed error the whole
     /// batch shares. `load_cycles` reports the reload cost if one
@@ -262,76 +433,10 @@ impl Worker {
         batch: &[Job],
         load_cycles: &mut Option<u64>,
     ) -> std::result::Result<Vec<JobOutput>, JobError> {
-        let (shard_id, mode) = key;
-        if self.resident != Some(key) {
-            let data = {
-                let reg = read_lock(&self.registry);
-                reg.get(&shard_id).cloned()
-            };
-            let Some(data) = data else {
-                return Err(JobError::UnknownShard { shard: shard_id });
-            };
-            // The load below overwrites the latch plane; if it (or the
-            // configure) fails midway, the previous resident is gone, so
-            // the residency marker must drop *before* the attempt.
-            self.resident = None;
-            let op_mode = match (&*data, mode) {
-                (ShardData::Bit1(_), ModeKey::Pm1Mvp) => OpMode::Pm1Mvp,
-                (ShardData::Bit1(_), ModeKey::Hamming) => OpMode::Hamming,
-                (ShardData::Bit1(_), ModeKey::Gf2) => OpMode::Gf2Mvp,
-                (ShardData::Bit1(_), ModeKey::Multibit(spec)) => OpMode::MultibitVector {
-                    lbits: spec.lbits,
-                    x_fmt: spec.x_fmt,
-                    matrix: spec.matrix,
-                },
-                (ShardData::Multibit { kbits, a_fmt, .. }, ModeKey::Multibit(spec)) => {
-                    OpMode::MultibitMatrix {
-                        kbits: *kbits,
-                        lbits: spec.lbits,
-                        a_fmt: *a_fmt,
-                        x_fmt: spec.x_fmt,
-                    }
-                }
-                (ShardData::Multibit { .. }, other) => {
-                    return Err(JobError::KindMismatch {
-                        matrix: "multibit",
-                        job: other.name(),
-                    })
-                }
-            };
-            let cyc0 = self.unit.setup_cycles() + self.unit.compute_cycles();
-            match &*data {
-                ShardData::Bit1(rows) => self.unit.load_bit_matrix_padded(rows)?,
-                ShardData::Multibit { rows, kbits, a_fmt } => {
-                    self.unit.load_multibit_matrix_padded(rows, *kbits, *a_fmt)?
-                }
-            }
-            self.unit.configure(op_mode)?;
-            let cyc1 = self.unit.setup_cycles() + self.unit.compute_cycles();
-            *load_cycles = Some(cyc1 - cyc0);
-            self.resident = Some(key);
-        }
-
         let mixed = || JobError::Unsupported { reason: "mixed payloads in one batch".into() };
-        match mode {
-            ModeKey::Pm1Mvp => {
-                let inputs = collect_bits(batch).ok_or_else(mixed)?;
-                Ok(self.unit.mvp1_batch(&inputs)?.into_iter().map(JobOutput::Ints).collect())
-            }
-            ModeKey::Hamming => {
-                let inputs = collect_bits(batch).ok_or_else(mixed)?;
-                Ok(self
-                    .unit
-                    .hamming_batch(&inputs)?
-                    .into_iter()
-                    .map(JobOutput::Ints)
-                    .collect())
-            }
-            ModeKey::Gf2 => {
-                let inputs = collect_bits(batch).ok_or_else(mixed)?;
-                Ok(self.unit.gf2_batch(&inputs)?.into_iter().map(JobOutput::Bits).collect())
-            }
+        match key.1 {
             ModeKey::Multibit(_) => {
+                *load_cycles = self.ensure_resident(key)?;
                 let mut xs = Vec::with_capacity(batch.len());
                 for j in batch {
                     // Grouping by mode key guarantees this shape.
@@ -344,6 +449,10 @@ impl Worker {
                     .into_iter()
                     .map(JobOutput::Ints)
                     .collect())
+            }
+            _ => {
+                let inputs = collect_bits(batch).ok_or_else(mixed)?;
+                self.run_stage(key, &inputs, load_cycles)
             }
         }
     }
@@ -422,6 +531,171 @@ impl Worker {
                     });
                 }
             }
+        }
+    }
+
+    /// Serve one chained segment. Occupancy: the driver bumped this
+    /// worker's in-flight gauge by tokens × stages at send time; the
+    /// whole claim completes here unless a crash injection fired
+    /// mid-chain — then the claim belongs to `mark_dead`'s reclaim,
+    /// exactly like a dropped queue.
+    fn serve_pipeline(&mut self, pj: PipelineJob) {
+        let total = pj.tokens.len() as u64 * pj.stages.len() as u64;
+        let crashed = self.run_pipeline(pj);
+        if !crashed {
+            if let Some(w) = self.metrics.worker(self.id) {
+                w.complete(total);
+            }
+        }
+    }
+
+    /// Run every stage of a chained segment back to back, parking each
+    /// stage's inputs in the shared stage buffer while it runs. Returns
+    /// `true` when a crash injection fired mid-chain — the chain (and
+    /// any parked intermediate) is abandoned unanswered, which is the
+    /// leak the supervisor's epoch-guarded sweep exists to reclaim.
+    fn run_pipeline(&mut self, pj: PipelineJob) -> bool {
+        let n = pj.tokens.len();
+        let stages = pj.stages.len();
+        if n == 0 || stages == 0 {
+            return false;
+        }
+        // A segment whose deadline passed while queued is refused
+        // whole, typed, without touching the tile — mirroring
+        // `refuse_expired` for shard jobs.
+        if pj.deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics
+                .shard_jobs_failed
+                .fetch_add(n as u64 * stages as u64, Ordering::Relaxed);
+            self.refuse_pipeline(&pj, JobError::DeadlineExceeded);
+            return false;
+        }
+        let mut inputs: Vec<Vec<bool>> = pj.tokens.iter().map(|t| t.bits.clone()).collect();
+        let mut outputs: Vec<JobOutput> = Vec::with_capacity(n);
+        let mut cycles_total = 0u64;
+        for (si, stage) in pj.stages.iter().enumerate() {
+            // Park this stage's inputs: they are the worker-resident
+            // intermediate the scheduler co-located this segment for.
+            let key = StageKey {
+                pipeline: pj.pipeline,
+                stage: stage.index,
+                shard: stage.shard,
+                worker: self.id,
+                epoch: pj.epoch,
+            };
+            self.stage_buffers.insert(key, inputs.clone());
+            // Crash injection lands between stages too: abandon the
+            // chain with the intermediate still parked, like a real
+            // crash abandons whatever the tile held.
+            // ordering: Relaxed — killed is the same monotonic crash
+            // flag the batch loop polls; one extra stage before the
+            // "crash" lands is within the fault-injection semantics.
+            if self.killed.load(Ordering::Relaxed) {
+                return true;
+            }
+            let mut load_cycles = None;
+            let before = self.unit.compute_cycles();
+            match self.run_stage((stage.shard, stage.mode), &inputs, &mut load_cycles) {
+                Ok(outs) => {
+                    let cycles = self.unit.compute_cycles() - before;
+                    cycles_total += cycles + load_cycles.unwrap_or(0);
+                    self.metrics.record_batch(self.id, n, cycles, load_cycles);
+                    self.metrics
+                        .pipeline_stages_executed
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.stage_buffers.remove(&key);
+                    let mut next = Vec::with_capacity(n);
+                    for out in outs {
+                        match out {
+                            JobOutput::Ints(y) => {
+                                let mut z: Vec<i64> =
+                                    y.iter().take(stage.take).copied().collect();
+                                for (r, v) in z.iter_mut().enumerate() {
+                                    *v += stage.pad + stage.bias.get(r).copied().unwrap_or(0);
+                                }
+                                if stage.last {
+                                    outputs.push(JobOutput::Ints(z));
+                                } else {
+                                    next.push(z.iter().map(|&v| v >= 0).collect());
+                                }
+                            }
+                            JobOutput::Bits(b) => {
+                                let bits: Vec<bool> =
+                                    b.iter().take(stage.take).copied().collect();
+                                if stage.last {
+                                    outputs.push(JobOutput::Bits(bits));
+                                } else {
+                                    next.push(bits);
+                                }
+                            }
+                        }
+                    }
+                    if !stage.last {
+                        inputs = next;
+                    }
+                }
+                Err(err) => {
+                    // A reload that succeeded before the serve error is
+                    // still accounted (the shard *is* resident now).
+                    if load_cycles.is_some() {
+                        self.metrics.record_batch(self.id, 0, 0, load_cycles);
+                    }
+                    self.stage_buffers.remove(&key);
+                    // This stage and every one behind it fail typed for
+                    // every token; the shard-job books must absorb the
+                    // whole remaining claim.
+                    let remaining = n as u64 * (stages - si) as u64;
+                    self.metrics
+                        .shard_jobs_failed
+                        .fetch_add(remaining, Ordering::Relaxed);
+                    self.refuse_pipeline(&pj, err);
+                    return false;
+                }
+            }
+        }
+        if outputs.is_empty() {
+            // The segment ended on a hidden stage (the pipeline's final
+            // stage lives on another worker or takes the host path):
+            // ship the re-binarized intermediate back as bits for the
+            // driver to feed into the next stage.
+            outputs = inputs.into_iter().map(JobOutput::Bits).collect();
+        }
+        let share = cycles_total as f64 / n as f64;
+        for (token, output) in pj.tokens.iter().zip(outputs) {
+            let latency_us = pj.submitted.elapsed().as_secs_f64() * 1e6;
+            self.metrics.record_latency(latency_us);
+            // A dropped receiver just means the client went away.
+            let _ = pj.respond.send(JobResult {
+                job_id: token.job_id,
+                output: Ok(output),
+                latency_us,
+                cycles_share: share,
+                worker: self.id,
+                batch_size: n,
+                shard: 0,
+                fan_out: stages,
+                attempt: pj.attempt,
+            });
+        }
+        false
+    }
+
+    /// Answer every token of a chained segment with the same typed
+    /// error.
+    fn refuse_pipeline(&self, pj: &PipelineJob, err: JobError) {
+        for token in &pj.tokens {
+            let latency_us = pj.submitted.elapsed().as_secs_f64() * 1e6;
+            let _ = pj.respond.send(JobResult {
+                job_id: token.job_id,
+                output: Err(err.clone()),
+                latency_us,
+                cycles_share: 0.0,
+                worker: self.id,
+                batch_size: 0,
+                shard: 0,
+                fan_out: pj.stages.len(),
+                attempt: pj.attempt,
+            });
         }
     }
 }

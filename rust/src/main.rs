@@ -17,9 +17,9 @@
 //!             --deadline-ms MS --drain-ms MS --selftest]   synthetic-load demo
 //! ppac serve --listen ADDR [--batch-window-us US --batch-max N --session-window N
 //!             --serve-ms MS --port-file PATH ...]   TCP serving front end
-//! ppac client --addr ADDR [--matrix ID --op pm1|hamming|gf2 --queries N
-//!             --clients C --rates R1,R2 --sweep-ms MS --deadline-ms MS
-//!             --json PATH --seed S]   wire client / load generator
+//! ppac client --addr ADDR [--matrix ID --op pm1|hamming|gf2|pipeline --queries N
+//!             --pipeline ID --width N --clients C --rates R1,R2 --sweep-ms MS
+//!             --deadline-ms MS --json PATH --seed S]   wire client / load generator
 //! ```
 
 use ppac::formats::NumberFormat;
@@ -665,8 +665,9 @@ fn serve(rest: Vec<String>) -> AnyResult {
 
 /// `ppac serve --listen ADDR`: the real TCP front end. Registers one
 /// m×n 1-bit matrix (deterministic seed 11, so clients know matrix 1
-/// exists), serves until `--serve-ms` elapses (0 = until killed), then
-/// drains.
+/// exists) plus a two-stage demo pipeline chained onto an m×m second
+/// matrix (seed 12), serves until `--serve-ms` elapses (0 = until
+/// killed), then drains.
 #[allow(clippy::too_many_arguments)]
 fn serve_listen(
     coord: ppac::coordinator::Coordinator,
@@ -680,7 +681,7 @@ fn serve_listen(
     drain_ms: u64,
     port_file: Option<&str>,
 ) -> AnyResult {
-    use ppac::coordinator::MatrixSpec;
+    use ppac::coordinator::{MatrixSpec, PipelineSpec, StageOp, StageSpec};
     use ppac::server::{Server, ServerConfig};
     use std::sync::Arc;
     use std::time::Duration;
@@ -688,6 +689,18 @@ fn serve_listen(
     let mut rng = Xoshiro256pp::seeded(11);
     let matrix =
         coord.register(MatrixSpec::Bit1 { rows: (0..m).map(|_| rng.bits(n)).collect() })?;
+    // The chained-inference demo: stage 1 is the matrix above, its m
+    // binarized outputs feed a second m×m matrix (seed 12). Clients
+    // drive it end-to-end with `ppac client --pipeline <id>`.
+    let mut rng2 = Xoshiro256pp::seeded(12);
+    let second =
+        coord.register(MatrixSpec::Bit1 { rows: (0..m).map(|_| rng2.bits(m)).collect() })?;
+    let pipeline = coord.register_pipeline(PipelineSpec {
+        stages: vec![
+            StageSpec { matrix, op: StageOp::Pm1Mvp, take: m, bias: vec![0; m] },
+            StageSpec { matrix: second, op: StageOp::Pm1Mvp, take: m, bias: vec![0; m] },
+        ],
+    })?;
     let metrics = Arc::clone(&coord.metrics);
     let cfg = ServerConfig {
         batch_window: Duration::from_micros(window_us),
@@ -698,6 +711,7 @@ fn serve_listen(
     let local = server.local_addr();
     println!("listening        : {local}");
     println!("matrix           : id {matrix} ({m}x{n} 1-bit, seed 11)");
+    println!("pipeline         : id {pipeline} (2 stages: {m}x{n} seed 11 -> {m}x{m} seed 12)");
     println!("batching         : window {window_us} us, max {batch_max}/block, session window {session_window}");
     if let Some(path) = port_file {
         std::fs::write(path, local.to_string())?;
@@ -753,6 +767,8 @@ fn client_cmd(rest: Vec<String>) -> AnyResult {
         .opt("addr")
         .opt("matrix")
         .opt("op")
+        .opt("pipeline")
+        .opt("width")
         .opt("queries")
         .opt("clients")
         .opt("rates")
@@ -766,7 +782,19 @@ fn client_cmd(rest: Vec<String>) -> AnyResult {
         .ok_or("ppac client requires --addr HOST:PORT (see `ppac serve --listen`)")?;
     let matrix = p.u64_or("matrix", 1)?;
     let op_name = p.str_or("op", "pm1");
-    let op = Op::parse(&op_name).ok_or_else(|| format!("unknown op {op_name} (pm1|hamming|gf2)"))?;
+    let op = Op::parse(&op_name)
+        .ok_or_else(|| format!("unknown op {op_name} (pm1|hamming|gf2|pipeline)"))?;
+    // `--pipeline ID` is sugar for `--op pipeline` with the target id:
+    // the request's matrix field carries the pipeline id on the wire.
+    let pipeline = p.u64_or("pipeline", 0)?;
+    let (op, target) = if pipeline > 0 {
+        (Op::Pipeline, pipeline)
+    } else {
+        (op, matrix)
+    };
+    if op == Op::Pipeline && target == 0 {
+        return Err("pipeline queries need --pipeline ID (or --matrix as the pipeline id)".into());
+    }
     let queries = p.usize_or("queries", 1)?;
     let clients = p.usize_or("clients", 1)?.max(1);
     let sweep_ms = p.usize_or("sweep-ms", 2000)? as u64;
@@ -782,8 +810,27 @@ fn client_cmd(rest: Vec<String>) -> AnyResult {
     };
 
     let mut probe = Client::connect(&addr)?;
-    let (rows, cols) = probe.info(matrix)?;
-    println!("server           : {addr}, matrix {matrix} = {rows}x{cols}");
+    let cols = if op == Op::Pipeline {
+        // There is no Info op for pipelines: take `--width`, falling
+        // back to the first registered matrix's column count (the demo
+        // pipeline's entry stage is exactly that matrix).
+        let w = p.usize_or("width", 0)? as u32;
+        if w > 0 {
+            println!("server           : {addr}, pipeline {target}, token width {w}");
+            w
+        } else {
+            let (rows, cols) = probe.info(matrix)?;
+            println!(
+                "server           : {addr}, pipeline {target}, token width {cols} \
+                 (probed from matrix {matrix} = {rows}x{cols})"
+            );
+            cols
+        }
+    } else {
+        let (rows, cols) = probe.info(target)?;
+        println!("server           : {addr}, matrix {target} = {rows}x{cols}");
+        cols
+    };
 
     if rates.is_empty() {
         // One-shot mode: sequential round trips on one connection.
@@ -792,7 +839,7 @@ fn client_cmd(rest: Vec<String>) -> AnyResult {
         for i in 0..queries {
             let bits = rng.bits(cols as usize);
             let t0 = Instant::now();
-            let resp = probe.query(matrix, op, bits, deadline_us, Default::default())?;
+            let resp = probe.query(target, op, bits, deadline_us, Default::default())?;
             let dt = t0.elapsed().as_secs_f64() * 1e6;
             match resp {
                 Response::Ints { coalesced, .. } | Response::Bits { coalesced, .. } => {
@@ -840,7 +887,7 @@ fn client_cmd(rest: Vec<String>) -> AnyResult {
                 let addr = addr.clone();
                 joins.push(scope.spawn(move || {
                     client_sweep_thread(
-                        &addr, matrix, op, cols as usize, rate, clients, idx, sweep_ms,
+                        &addr, target, op, cols as usize, rate, clients, idx, sweep_ms,
                         deadline_us, seed,
                     )
                 }));

@@ -8,9 +8,11 @@
 //! `submit_batch`, but independent TCP clients each send one small
 //! query. The [`Coalescer`] holds such queries for a bounded window
 //! (`--batch-window-us`) and merges those that target the same
-//! (matrix, mode, priority) into one `submit_batch_with` call of up to
-//! `--batch-max` (= engine block size) queries, then demuxes the
-//! per-query results back to each owning session's writer.
+//! (target, mode, priority) — where a target is a matrix or a
+//! registered job-graph pipeline — into one `submit_batch_with` /
+//! `submit_pipeline_with` call of up to `--batch-max` (= engine block
+//! size) queries, then demuxes the per-query results back to each
+//! owning session's writer.
 //!
 //! Flush triggers, in priority order:
 //! 1. **max-fill** — a bucket reaches `max_batch`: flush immediately,
@@ -40,7 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     BatchHandle, Coordinator, JobError, JobInput, JobOptions, JobOutput, JobResult, MatrixId,
-    Metrics, ModeKey, Priority,
+    Metrics, ModeKey, PipelineId, Priority,
 };
 use crate::error::PpacError;
 use crate::util::sync::Ordering;
@@ -62,18 +64,29 @@ pub struct PendingQuery {
     pub respond: Sender<Response>,
 }
 
+/// What a coalesced block is submitted against: a single matrix (the
+/// classic single-stage path) or a registered job-graph pipeline. The
+/// two id spaces are disjoint, so the variant is part of the bucket
+/// key — a matrix and a pipeline that happen to share an id never
+/// coalesce together.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlushTarget {
+    Matrix(MatrixId),
+    Pipeline(PipelineId),
+}
+
 /// Commands a session can send the batcher thread.
 pub enum BatchCmd {
     /// Park one query for coalescing.
-    Enqueue { matrix: MatrixId, query: PendingQuery },
+    Enqueue { target: FlushTarget, query: PendingQuery },
     /// Flush everything and exit once in-flight work resolves.
     Shutdown,
 }
 
-/// A flush ready to submit: queries against one matrix sharing one
+/// A flush ready to submit: queries against one target sharing one
 /// mode and priority, in arrival order.
 pub struct Flush {
-    pub matrix: MatrixId,
+    pub target: FlushTarget,
     pub priority: Priority,
     pub queries: Vec<PendingQuery>,
 }
@@ -93,7 +106,7 @@ struct Bucket {
 pub struct Coalescer {
     window: Duration,
     max_batch: usize,
-    buckets: HashMap<(MatrixId, ModeKey, Priority), Bucket>,
+    buckets: HashMap<(FlushTarget, ModeKey, Priority), Bucket>,
 }
 
 impl Coalescer {
@@ -104,8 +117,13 @@ impl Coalescer {
 
     /// Park a query; returns a [`Flush`] immediately when the bucket
     /// hits `max_batch` (trigger 1 — a full block waits for nothing).
-    pub fn enqueue(&mut self, now: Instant, matrix: MatrixId, query: PendingQuery) -> Option<Flush> {
-        let key = (matrix, query.input.mode_key(), query.priority);
+    pub fn enqueue(
+        &mut self,
+        now: Instant,
+        target: FlushTarget,
+        query: PendingQuery,
+    ) -> Option<Flush> {
+        let key = (target, query.input.mode_key(), query.priority);
         let bucket = self.buckets.entry(key).or_insert_with(|| Bucket {
             queries: Vec::new(),
             opened: now,
@@ -119,7 +137,7 @@ impl Coalescer {
         if bucket.queries.len() >= self.max_batch {
             self.buckets
                 .remove(&key)
-                .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+                .map(|b| Flush { target: key.0, priority: key.2, queries: b.queries })
         } else {
             None
         }
@@ -142,7 +160,7 @@ impl Coalescer {
 
     /// Buckets whose flush time has arrived (triggers 2 and 3).
     pub fn due(&mut self, now: Instant) -> Vec<Flush> {
-        let ripe: Vec<(MatrixId, ModeKey, Priority)> = self
+        let ripe: Vec<(FlushTarget, ModeKey, Priority)> = self
             .buckets
             .iter()
             .filter(|(_, b)| now >= self.flush_at(b))
@@ -152,19 +170,19 @@ impl Coalescer {
             .filter_map(|key| {
                 self.buckets
                     .remove(&key)
-                    .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+                    .map(|b| Flush { target: key.0, priority: key.2, queries: b.queries })
             })
             .collect()
     }
 
     /// Flush every bucket regardless of age (trigger 4 — drain).
     pub fn flush_all(&mut self) -> Vec<Flush> {
-        let keys: Vec<(MatrixId, ModeKey, Priority)> = self.buckets.keys().copied().collect();
+        let keys: Vec<(FlushTarget, ModeKey, Priority)> = self.buckets.keys().copied().collect();
         keys.into_iter()
             .filter_map(|key| {
                 self.buckets
                     .remove(&key)
-                    .map(|b| Flush { matrix: key.0, priority: key.2, queries: b.queries })
+                    .map(|b| Flush { target: key.0, priority: key.2, queries: b.queries })
             })
             .collect()
     }
@@ -238,7 +256,31 @@ fn submit_flush(coord: &Coordinator, metrics: &Metrics, flush: Flush) -> Option<
         deadline: if all_have_deadlines { deadline } else { None },
         priority: flush.priority,
     };
-    match coord.submit_batch_with(flush.matrix, &inputs, opts) {
+    let submitted = match flush.target {
+        FlushTarget::Matrix(matrix) => coord.submit_batch_with(matrix, &inputs, opts),
+        FlushTarget::Pipeline(pipeline) => {
+            // Pipeline tokens are raw bit vectors; the sessions only
+            // ever park 1-bit inputs under a pipeline target, so a
+            // bit-less input here is a routing bug answered typed.
+            let mut tokens = Vec::with_capacity(inputs.len());
+            for input in &inputs {
+                match input.bits() {
+                    Some(b) => tokens.push(b.to_vec()),
+                    None => {
+                        reject_slots(
+                            slots,
+                            &JobError::Unsupported {
+                                reason: "pipeline tokens must be 1-bit queries".into(),
+                            },
+                        );
+                        return None;
+                    }
+                }
+            }
+            coord.submit_pipeline_with(pipeline, &tokens, opts)
+        }
+    };
+    match submitted {
         Ok(handle) => {
             if n >= 2 {
                 // ordering: Relaxed — coalescing counters are
@@ -421,7 +463,7 @@ mod tests {
         let window = Duration::from_micros(200);
         let mut c = Coalescer::new(window, 32);
         let (q, _rx) = query(1, None);
-        assert!(c.enqueue(base, 5, q).is_none());
+        assert!(c.enqueue(base, FlushTarget::Matrix(5), q).is_none());
         // One tick before the window closes: nothing due yet.
         assert!(c.due(base + window - Duration::from_micros(1)).is_empty());
         assert_eq!(c.next_due(base), Some(window));
@@ -440,12 +482,12 @@ mod tests {
         for i in 0..3 {
             let (q, rx) = query(i, None);
             rxs.push(rx);
-            assert!(c.enqueue(base, 9, q).is_none(), "below max_batch nothing flushes");
+            assert!(c.enqueue(base, FlushTarget::Matrix(9), q).is_none(), "below max_batch nothing flushes");
         }
         let (q, rx) = query(3, None);
         rxs.push(rx);
-        let flush = c.enqueue(base, 9, q).expect("fourth query fills the block");
-        assert_eq!(flush.matrix, 9);
+        let flush = c.enqueue(base, FlushTarget::Matrix(9), q).expect("fourth query fills the block");
+        assert_eq!(flush.target, FlushTarget::Matrix(9));
         assert_eq!(flush.queries.len(), 4);
         let ids: Vec<u64> = flush.queries.iter().map(|q| q.req_id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3], "submission order preserved for demux");
@@ -459,17 +501,36 @@ mod tests {
         let mut c = Coalescer::new(window, 32);
         let (qa, _ra) = query(1, None);
         let (qb, _rb) = query(2, None);
-        assert!(c.enqueue(base, 1, qa).is_none());
-        assert!(c.enqueue(base, 2, qb).is_none());
+        assert!(c.enqueue(base, FlushTarget::Matrix(1), qa).is_none());
+        assert!(c.enqueue(base, FlushTarget::Matrix(2), qb).is_none());
         assert_eq!(c.pending(), 2);
         let flushes = c.due(base + window);
         assert_eq!(flushes.len(), 2, "different matrices never share a block");
-        let mut matrices: Vec<MatrixId> = flushes.iter().map(|f| f.matrix).collect();
-        matrices.sort_unstable();
-        assert_eq!(matrices, vec![1, 2]);
+        let mut targets: Vec<FlushTarget> = flushes.iter().map(|f| f.target).collect();
+        targets.sort_unstable_by_key(|t| match *t {
+            FlushTarget::Matrix(id) => (0, id),
+            FlushTarget::Pipeline(id) => (1, id),
+        });
+        assert_eq!(targets, vec![FlushTarget::Matrix(1), FlushTarget::Matrix(2)]);
         for f in &flushes {
             assert_eq!(f.queries.len(), 1);
         }
+    }
+
+    #[test]
+    fn pipeline_and_matrix_targets_never_share_a_bucket() {
+        // Same numeric id, different namespaces: each keeps its own
+        // bucket and flushes separately.
+        let base = Instant::now();
+        let window = Duration::from_micros(100);
+        let mut c = Coalescer::new(window, 32);
+        let (qa, _ra) = query(1, None);
+        let (qb, _rb) = query(2, None);
+        assert!(c.enqueue(base, FlushTarget::Matrix(7), qa).is_none());
+        assert!(c.enqueue(base, FlushTarget::Pipeline(7), qb).is_none());
+        assert_eq!(c.pending(), 2);
+        let flushes = c.due(base + window);
+        assert_eq!(flushes.len(), 2, "disjoint id namespaces never coalesce");
     }
 
     #[test]
@@ -480,7 +541,7 @@ mod tests {
         // Deadline 12 ms out: pressure point is deadline − window =
         // base + 2 ms, well before window expiry at base + 10 ms.
         let (q, _rx) = query(1, Some(base + Duration::from_millis(12)));
-        assert!(c.enqueue(base, 3, q).is_none());
+        assert!(c.enqueue(base, FlushTarget::Matrix(3), q).is_none());
         assert!(c.due(base + Duration::from_millis(1)).is_empty());
         let flushes = c.due(base + Duration::from_millis(2));
         assert_eq!(flushes.len(), 1, "deadline pressure beats window expiry");
@@ -492,7 +553,7 @@ mod tests {
         let window = Duration::from_secs(3600);
         let mut c = Coalescer::new(window, 32);
         let (q, _rx) = query(1, Some(base + Duration::from_millis(1)));
-        assert!(c.enqueue(base, 3, q).is_none());
+        assert!(c.enqueue(base, FlushTarget::Matrix(3), q).is_none());
         assert_eq!(c.next_due(base), Some(Duration::ZERO));
         assert_eq!(c.due(base).len(), 1);
     }
@@ -503,8 +564,8 @@ mod tests {
         let mut c = Coalescer::new(Duration::from_secs(3600), 32);
         let (qa, _ra) = query(1, None);
         let (qb, _rb) = query(2, None);
-        let _ = c.enqueue(base, 1, qa);
-        let _ = c.enqueue(base, 2, qb);
+        let _ = c.enqueue(base, FlushTarget::Matrix(1), qa);
+        let _ = c.enqueue(base, FlushTarget::Matrix(2), qb);
         assert_eq!(c.flush_all().len(), 2);
         assert_eq!(c.pending(), 0);
         assert!(c.next_due(base).is_none());

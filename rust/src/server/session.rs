@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::{Coordinator, JobError, JobInput, Metrics};
 use crate::util::sync::Ordering;
 
-use super::batcher::{BatchCmd, PendingQuery};
+use super::batcher::{BatchCmd, FlushTarget, PendingQuery};
 use super::wire::{self, FrameReader, Op, Request, Response};
 
 /// State shared by every session of one server.
@@ -238,6 +238,9 @@ fn handle_frame(
 
 /// Answer one decoded request. Same slot contract as [`handle_frame`].
 fn handle_request(req: Request, shared: &SessionShared, tx: &Sender<Response>) -> bool {
+    if req.op == Op::Pipeline {
+        return handle_pipeline(req, shared, tx);
+    }
     let shape = shared.coord.matrix_shape(req.matrix);
     if req.op == Op::Info {
         let resp = match shape {
@@ -270,7 +273,7 @@ fn handle_request(req: Request, shared: &SessionShared, tx: &Sender<Response>) -
         Op::Pm1Mvp => JobInput::Pm1Mvp(req.bits),
         Op::Hamming => JobInput::Hamming(req.bits),
         Op::Gf2 => JobInput::Gf2(req.bits),
-        Op::Info => return true, // handled above
+        Op::Info | Op::Pipeline => return true, // handled above
     };
     let deadline = (req.deadline_us > 0)
         .then(|| Instant::now() + Duration::from_micros(req.deadline_us));
@@ -281,7 +284,8 @@ fn handle_request(req: Request, shared: &SessionShared, tx: &Sender<Response>) -
         priority: req.priority,
         respond: tx.clone(),
     };
-    if shared.batcher.send(BatchCmd::Enqueue { matrix: req.matrix, query }).is_err() {
+    let target = FlushTarget::Matrix(req.matrix);
+    if shared.batcher.send(BatchCmd::Enqueue { target, query }).is_err() {
         // Batcher already gone: the server is past drain. Answer
         // typed shutdown ourselves (the enqueue never happened, so the
         // batcher cannot).
@@ -294,6 +298,55 @@ fn handle_request(req: Request, shared: &SessionShared, tx: &Sender<Response>) -
     }
     // The response (from the batcher or the fallback above) releases
     // the slot via the writer; nothing to release here.
+    true
+}
+
+/// Answer one [`Op::Pipeline`] request: validate the token against
+/// the pipeline's input width, then park it under a pipeline flush
+/// target — coalescing and demux work exactly as for matrices, the
+/// batcher just submits the block through `submit_pipeline_with`.
+fn handle_pipeline(req: Request, shared: &SessionShared, tx: &Sender<Response>) -> bool {
+    let Some((in_width, _)) = shared.coord.pipeline_shape(req.matrix) else {
+        let _ = tx.send(Response::Error {
+            req_id: req.req_id,
+            code: wire::ERR_UNKNOWN_MATRIX,
+            message: format!("unknown pipeline {}", req.matrix),
+            overload: None,
+        });
+        return true;
+    };
+    if req.bits.len() != in_width {
+        let _ = tx.send(wire::response_for_job_error(
+            req.req_id,
+            &JobError::DimMismatch {
+                context: "pipeline input width",
+                expected: in_width,
+                got: req.bits.len(),
+            },
+        ));
+        return true;
+    }
+    let deadline = (req.deadline_us > 0)
+        .then(|| Instant::now() + Duration::from_micros(req.deadline_us));
+    let query = PendingQuery {
+        req_id: req.req_id,
+        // The wrapper mode is a carrier only — the batcher unwraps the
+        // raw bits before `submit_pipeline_with`, and each stage's own
+        // registered op decides the arithmetic.
+        input: JobInput::Pm1Mvp(req.bits),
+        deadline,
+        priority: req.priority,
+        respond: tx.clone(),
+    };
+    let target = FlushTarget::Pipeline(req.matrix);
+    if shared.batcher.send(BatchCmd::Enqueue { target, query }).is_err() {
+        let _ = tx.send(Response::Error {
+            req_id: req.req_id,
+            code: wire::ERR_SHUTTING_DOWN,
+            message: "server draining: admissions closed".into(),
+            overload: None,
+        });
+    }
     true
 }
 

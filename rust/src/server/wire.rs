@@ -115,6 +115,11 @@ pub enum Op {
     Gf2,
     /// Matrix shape query (no job submitted).
     Info,
+    /// Job-graph pipeline submission: the query bits are the first
+    /// stage's input token and [`Request::matrix`] carries the
+    /// *pipeline id* (the two id spaces are disjoint namespaces keyed
+    /// by this op byte, so no extra head field is needed).
+    Pipeline,
 }
 
 impl Op {
@@ -125,6 +130,7 @@ impl Op {
             Op::Hamming => 2,
             Op::Gf2 => 3,
             Op::Info => 4,
+            Op::Pipeline => 5,
         }
     }
 
@@ -135,17 +141,19 @@ impl Op {
             2 => Some(Op::Hamming),
             3 => Some(Op::Gf2),
             4 => Some(Op::Info),
+            5 => Some(Op::Pipeline),
             _ => None,
         }
     }
 
-    /// Parse a CLI spelling (`pm1`/`hamming`/`gf2`).
+    /// Parse a CLI spelling (`pm1`/`hamming`/`gf2`/`pipeline`).
     pub fn parse(name: &str) -> Option<Op> {
         match name {
             "pm1" | "pm1_mvp" => Some(Op::Pm1Mvp),
             "hamming" => Some(Op::Hamming),
             "gf2" | "gf2_mvp" => Some(Op::Gf2),
             "info" => Some(Op::Info),
+            "pipeline" | "pipe" => Some(Op::Pipeline),
             _ => None,
         }
     }
@@ -157,6 +165,7 @@ impl Op {
             Op::Hamming => "hamming",
             Op::Gf2 => "gf2",
             Op::Info => "info",
+            Op::Pipeline => "pipeline",
         }
     }
 }
@@ -187,7 +196,8 @@ pub struct Request {
     pub op: Op,
     /// Admission tier for the resulting job.
     pub priority: Priority,
-    /// Target matrix.
+    /// Target matrix — or, for [`Op::Pipeline`], the pipeline id the
+    /// token enters (`MatrixId` and `PipelineId` are both `u64`).
     pub matrix: MatrixId,
     /// Relative end-to-end deadline in µs from server receipt (0 =
     /// none). Relative — not absolute — so clients and server need no
@@ -604,6 +614,21 @@ mod tests {
             deadline_us: 0,
             bits: Vec::new(),
         });
+        rt_request(Request {
+            req_id: 41,
+            op: Op::Pipeline,
+            priority: Priority::Normal,
+            matrix: 2, // a pipeline id under Op::Pipeline
+            deadline_us: 250_000,
+            bits: (0..32).map(|i| i % 2 == 0).collect(),
+        });
+    }
+
+    #[test]
+    fn pipeline_op_code_round_trips() {
+        assert_eq!(Op::from_code(Op::Pipeline.code()), Some(Op::Pipeline));
+        assert_eq!(Op::parse("pipeline"), Some(Op::Pipeline));
+        assert_eq!(Op::parse(Op::Pipeline.name()), Some(Op::Pipeline));
     }
 
     #[test]

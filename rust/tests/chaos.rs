@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use ppac::coordinator::{
     AdmissionPolicy, Coordinator, CoordinatorConfig, JobError, JobInput, JobOptions,
-    JobOutput, MatrixSpec,
+    JobOutput, MatrixSpec, PipelineSpec, StageOp, StageSpec,
 };
 use ppac::error::PpacError;
 use ppac::golden;
@@ -350,5 +350,161 @@ fn overload_storm_resolves_every_job_and_drains_all_gauges() {
     for (r, x) in results.iter().zip(&xs) {
         assert_eq!(r.output, Ok(pm1_golden(&a, x)), "post-storm pool must serve correctly");
     }
+    coord.shutdown();
+}
+
+/// The kill-mid-pipeline round: a 3-stage BNN-style pipeline whose
+/// hidden activations live *worker-resident* between stages, with a
+/// seeded kill fired into every other round of traffic. A victim may
+/// die while holding resident intermediates; the driver must
+/// re-materialize the affected stage from a replica (restarting the
+/// token's chain from stage 0 — intermediates are never trusted across
+/// an epoch bump) or resolve the token with a typed error. Acceptance:
+/// every token resolves correct-or-typed within a bounded wait, the
+/// `intermediates_resident` gauge drains to zero once the storm settles
+/// (supervisor invalidation reclaims entries stranded on dead
+/// incarnations), and the healed pool serves the pipeline bit-exactly.
+#[test]
+fn kill_mid_pipeline_drains_residency_and_stays_correct_or_typed() {
+    let mut rng = Xoshiro256pp::seeded(703);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 3,
+        max_batch: 4,
+        replicas: 2,
+        retry_limit: 3,
+        heartbeat_ms: 2,
+        supervise: true,
+        restart_backoff_ms: 1,
+        reducers: 1,
+        max_reducers: 3,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Three single-shard stages (two hidden 32×32, one 10×32 readout):
+    // every stage fits one tile, so consecutive stages chain on-worker
+    // whenever their replicas co-locate and the intermediate never
+    // crosses the host between stages.
+    let w1 = rand_matrix(&mut rng, 32, 32);
+    let w2 = rand_matrix(&mut rng, 32, 32);
+    let w3 = rand_matrix(&mut rng, 10, 32);
+    let b1 = rng.ints(32, -4, 4);
+    let b2 = rng.ints(32, -4, 4);
+    let b3 = rng.ints(10, -4, 4);
+    let m1 = coord.register(MatrixSpec::Bit1 { rows: w1.clone() }).unwrap();
+    let m2 = coord.register(MatrixSpec::Bit1 { rows: w2.clone() }).unwrap();
+    let m3 = coord.register(MatrixSpec::Bit1 { rows: w3.clone() }).unwrap();
+    let pipe = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![
+                StageSpec { matrix: m1, op: StageOp::Pm1Mvp, take: 32, bias: b1.clone() },
+                StageSpec { matrix: m2, op: StageOp::Pm1Mvp, take: 32, bias: b2.clone() },
+                StageSpec { matrix: m3, op: StageOp::Pm1Mvp, take: 10, bias: b3.clone() },
+            ],
+        })
+        .unwrap();
+
+    // Host golden: hidden stages binarize z = ⟨±1⟩ + bias at z ≥ 0, the
+    // readout returns raw pre-activations.
+    let golden_chain = |x: &[bool]| -> JobOutput {
+        let h1: Vec<bool> = w1
+            .iter()
+            .zip(&b1)
+            .map(|(row, b)| golden::pm1_inner(row, x) + b >= 0)
+            .collect();
+        let h2: Vec<bool> = w2
+            .iter()
+            .zip(&b2)
+            .map(|(row, b)| golden::pm1_inner(row, &h1) + b >= 0)
+            .collect();
+        JobOutput::Ints(
+            w3.iter().zip(&b3).map(|(row, b)| golden::pm1_inner(row, &h2) + b).collect(),
+        )
+    };
+
+    const ROUNDS: usize = 8;
+    const BATCH: usize = 6;
+    let mut handles = Vec::with_capacity(ROUNDS);
+    let mut batches = Vec::with_capacity(ROUNDS);
+    for round in 0..ROUNDS {
+        let xs: Vec<Vec<bool>> = (0..BATCH).map(|_| rng.bits(32)).collect();
+        handles.push(coord.submit_pipeline(pipe, &xs).unwrap());
+        batches.push(xs);
+        if round % 2 == 0 {
+            // Seeded chaos: crash one worker mid-pipeline. The victim
+            // may be holding resident intermediates for in-flight
+            // chains — exactly the state this round exists to break.
+            let victim = (rng.next_u64() % 3) as usize;
+            coord.kill_worker(victim).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(rng.next_u64() % 4));
+    }
+
+    // Every token resolves within a bounded wait — bit-exact against
+    // the host chain, or a typed error. Chaos may lose a token's chain,
+    // never corrupt an answered one with a stale intermediate.
+    let mut correct = 0usize;
+    let mut typed = 0usize;
+    for (handle, xs) in handles.into_iter().zip(&batches) {
+        let mut handle = handle;
+        let results = handle
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap()
+            .expect("a pipeline batch hung past the 30 s bound");
+        assert_eq!(results.len(), BATCH);
+        for (r, x) in results.iter().zip(xs) {
+            match &r.output {
+                Ok(out) => {
+                    assert_eq!(*out, golden_chain(x), "job {}", r.job_id);
+                    correct += 1;
+                }
+                Err(_) => typed += 1, // typed error: resolved, not hung
+            }
+        }
+    }
+    assert_eq!(correct + typed, ROUNDS * BATCH, "every token resolved exactly once");
+    assert!(correct > 0, "replicated stages must serve some tokens through the storm");
+
+    // The supervisor heals the pool, and its post-restart invalidation
+    // sweep reclaims every intermediate stranded on a dead incarnation:
+    // the residency gauge must drain to zero, alongside all occupancy.
+    assert!(
+        wait_until(Duration::from_secs(10), || coord.routing_stats().live_workers == 3),
+        "supervisor failed to restore 3/3 live workers; stats: {:?}",
+        coord.routing_stats()
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let s = coord.metrics.snapshot();
+            s.intermediates_resident == 0
+                && s.per_worker.iter().all(|w| w.inflight == 0)
+                && s.reducer_queue_depth == 0
+        }),
+        "residency and occupancy must drain to zero; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
+    let snap = coord.metrics.snapshot();
+    assert!(snap.workers_lost >= 1, "the storm killed at least one worker");
+    assert!(snap.workers_restarted >= 1, "the supervisor restarted at least one");
+    assert!(
+        snap.pipeline_stages_executed >= 3,
+        "chained traffic must have executed stages on-worker; snapshot: {snap:?}"
+    );
+
+    // Post-heal: a clean pipeline batch over the restored pool is
+    // bit-exact, and residency still drains once it settles.
+    let xs: Vec<Vec<bool>> = (0..BATCH).map(|_| rng.bits(32)).collect();
+    let results = coord.submit_pipeline(pipe, &xs).unwrap().wait().unwrap();
+    for (r, x) in results.iter().zip(&xs) {
+        assert_eq!(r.output, Ok(golden_chain(x)), "healed pool must chain correctly");
+    }
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            coord.metrics.snapshot().intermediates_resident == 0
+        }),
+        "post-heal residency must drain; snapshot: {:?}",
+        coord.metrics.snapshot()
+    );
     coord.shutdown();
 }

@@ -1,0 +1,357 @@
+//! Job-graph pipeline integration suite: multi-stage workloads with
+//! worker-resident intermediates, end to end through the coordinator.
+//!
+//! Invariants pinned here:
+//!
+//! - a 3-layer BNN submitted as one pipeline is **bit-exact** against
+//!   the host-loop `BnnOnPpac::forward_batch` reference, and when every
+//!   stage is single-shard and co-locatable it executes with **zero
+//!   host round-trips** (`stage_spills == 0`, one chained dispatch);
+//! - the single-stage pipeline is the degenerate one-stage graph: same
+//!   numbers as `submit_batch` against the same matrix (plus the
+//!   declared bias);
+//! - a multi-shard stage falls back to the host gather path
+//!   (`stage_spills` counts it) and still produces golden results;
+//! - registration is validated typed: shapes must chain, ops must be
+//!   1-bit, biases must fit;
+//! - the registry TTL sweep never evicts a matrix referenced by a live
+//!   pipeline — and evicts it again once the pipeline is unregistered;
+//! - residency accounting drains: `intermediates_resident` returns to
+//!   0 once submitted work resolves.
+
+use std::time::{Duration, Instant};
+
+use ppac::apps::bnn::{BnnLayer, BnnOnPpac};
+use ppac::coordinator::{
+    Coordinator, CoordinatorConfig, JobError, JobInput, JobOptions, JobOutput, MatrixSpec,
+    PipelineSpec, StageOp, StageSpec,
+};
+use ppac::error::PpacError;
+use ppac::formats::NumberFormat;
+use ppac::golden;
+use ppac::sim::PpacConfig;
+use ppac::util::rng::Xoshiro256pp;
+
+fn rand_matrix(rng: &mut Xoshiro256pp, m: usize, n: usize) -> Vec<Vec<bool>> {
+    (0..m).map(|_| rng.bits(n)).collect()
+}
+
+fn start(workers: usize, replicas: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers,
+        max_batch: 16,
+        replicas,
+        retry_limit: 2,
+        reducers: 1,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Poll `cond` until it holds or `timeout` elapses.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+fn ints(result: &ppac::coordinator::JobResult) -> Vec<i64> {
+    match &result.output {
+        Ok(JobOutput::Ints(v)) => v.clone(),
+        other => panic!("expected ints, got {other:?}"),
+    }
+}
+
+/// The acceptance test: a 3-layer BNN as one pipeline, bit-exact
+/// against the host loop, with zero host hops between the co-located
+/// single-shard stages and all residency drained afterwards.
+#[test]
+fn three_layer_bnn_pipeline_matches_host_loop() {
+    let mut rng = Xoshiro256pp::seeded(900);
+    let layers = vec![
+        BnnLayer::random(&mut rng, 32, 32),
+        BnnLayer::random(&mut rng, 32, 32),
+        BnnLayer::random(&mut rng, 10, 32),
+    ];
+    let mut net = BnnOnPpac::compile(layers, PpacConfig::new(32, 32)).unwrap();
+    let coord = start(2, 2);
+    let pipeline = net.register_pipeline(&coord).unwrap();
+    assert_eq!(coord.pipeline_shape(pipeline), Some((32, 10)));
+
+    let xs: Vec<Vec<bool>> = (0..8).map(|_| rng.bits(32)).collect();
+    let want = net.forward_batch(&xs).unwrap();
+    let results = coord.submit_pipeline(pipeline, &xs).unwrap().wait().unwrap();
+    assert_eq!(results.len(), xs.len());
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(ints(r), want[i], "token {i}");
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.stage_spills, 0, "co-located stages must not hop through the host");
+    assert_eq!(
+        snap.pipeline_stages_executed, 3,
+        "one chained dispatch executes all three stages on-worker"
+    );
+    assert_eq!(snap.jobs_completed, xs.len() as u64);
+    assert_eq!(snap.jobs_failed, 0);
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    assert!(
+        wait_until(Duration::from_secs(2), || {
+            metrics.snapshot().intermediates_resident == 0
+        }),
+        "no stage intermediate may stay resident after the batch resolves"
+    );
+    coord.shutdown();
+}
+
+/// The single-stage pipeline is the degenerate one-stage graph: its
+/// final-stage output equals `submit_batch` on the same matrix, plus
+/// the stage bias.
+#[test]
+fn single_stage_pipeline_is_the_degenerate_graph() {
+    let mut rng = Xoshiro256pp::seeded(901);
+    let rows = rand_matrix(&mut rng, 16, 32);
+    let bias: Vec<i64> = (0..16).map(|i| i as i64 - 8).collect();
+    let coord = start(2, 1);
+    let matrix = coord.register(MatrixSpec::Bit1 { rows: rows.clone() }).unwrap();
+    let pipeline = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![StageSpec {
+                matrix,
+                op: StageOp::Pm1Mvp,
+                take: 16,
+                bias: bias.clone(),
+            }],
+        })
+        .unwrap();
+
+    let xs: Vec<Vec<bool>> = (0..6).map(|_| rng.bits(32)).collect();
+    let plain_inputs: Vec<JobInput> = xs.iter().cloned().map(JobInput::Pm1Mvp).collect();
+    let plain = coord.submit_batch(matrix, &plain_inputs).unwrap().wait().unwrap();
+    let piped = coord.submit_pipeline(pipeline, &xs).unwrap().wait().unwrap();
+    for (i, (p, q)) in plain.iter().zip(&piped).enumerate() {
+        let want: Vec<i64> =
+            ints(p).iter().zip(&bias).map(|(&v, &b)| v + b).collect();
+        assert_eq!(ints(q), want, "token {i}");
+    }
+    coord.shutdown();
+}
+
+/// A stage whose matrix tiles into several shards cannot chain on one
+/// worker: it takes the host gather path (counted as a spill) and the
+/// chain still produces golden end-to-end results.
+#[test]
+fn multi_shard_stages_spill_to_host_and_stay_correct() {
+    let mut rng = Xoshiro256pp::seeded(902);
+    // 64×32 and 10×64 on a 32×32 tile: 2 shards each, so both stages
+    // are host-gathered, with the re-binarize between them on the host.
+    let w1 = rand_matrix(&mut rng, 64, 32);
+    let b1: Vec<i64> = rng.ints(64, -4, 4);
+    let w2 = rand_matrix(&mut rng, 10, 64);
+    let b2: Vec<i64> = rng.ints(10, -4, 4);
+    let coord = start(3, 2);
+    let m1 = coord.register(MatrixSpec::Bit1 { rows: w1.clone() }).unwrap();
+    let m2 = coord.register(MatrixSpec::Bit1 { rows: w2.clone() }).unwrap();
+    let pipeline = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![
+                StageSpec { matrix: m1, op: StageOp::Pm1Mvp, take: 64, bias: b1.clone() },
+                StageSpec { matrix: m2, op: StageOp::Pm1Mvp, take: 10, bias: b2.clone() },
+            ],
+        })
+        .unwrap();
+    assert_eq!(coord.pipeline_shape(pipeline), Some((32, 10)));
+
+    let xs: Vec<Vec<bool>> = (0..5).map(|_| rng.bits(32)).collect();
+    let results = coord.submit_pipeline(pipeline, &xs).unwrap().wait().unwrap();
+    for (i, (x, r)) in xs.iter().zip(&results).enumerate() {
+        let hidden: Vec<bool> = w1
+            .iter()
+            .zip(&b1)
+            .map(|(row, &b)| golden::pm1_inner(row, x) + b >= 0)
+            .collect();
+        let want: Vec<i64> = w2
+            .iter()
+            .zip(&b2)
+            .map(|(row, &b)| golden::pm1_inner(row, &hidden) + b)
+            .collect();
+        assert_eq!(ints(r), want, "token {i}");
+    }
+    let snap = coord.metrics.snapshot();
+    assert!(snap.stage_spills >= 2, "both multi-shard stages must count as host hops");
+    assert_eq!(snap.jobs_failed, 0);
+    coord.shutdown();
+}
+
+/// Registration rejects malformed graphs with typed errors, before any
+/// job is submitted.
+#[test]
+fn registration_validation_is_typed() {
+    let mut rng = Xoshiro256pp::seeded(903);
+    let coord = start(2, 1);
+    let bit = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 16, 32) }).unwrap();
+    let multibit = coord
+        .register(MatrixSpec::Multibit {
+            rows: (0..16).map(|_| rng.ints(8, 0, 3)).collect(),
+            k: 2,
+            format: NumberFormat::Uint,
+        })
+        .unwrap();
+
+    let stage = |matrix, take, bias: Vec<i64>| StageSpec {
+        matrix,
+        op: StageOp::Pm1Mvp,
+        take,
+        bias,
+    };
+
+    // Empty graph.
+    assert!(matches!(
+        coord.register_pipeline(PipelineSpec { stages: vec![] }),
+        Err(PpacError::Config(_))
+    ));
+    // Unknown matrix.
+    assert!(matches!(
+        coord.register_pipeline(PipelineSpec { stages: vec![stage(9999, 4, vec![])] }),
+        Err(PpacError::Coordinator(_))
+    ));
+    // Multibit matrices cannot chain (only 1-bit tokens re-binarize).
+    assert!(matches!(
+        coord.register_pipeline(PipelineSpec { stages: vec![stage(multibit, 4, vec![])] }),
+        Err(PpacError::Config(_))
+    ));
+    // take out of range.
+    assert!(coord
+        .register_pipeline(PipelineSpec { stages: vec![stage(bit, 0, vec![])] })
+        .is_err());
+    assert!(coord
+        .register_pipeline(PipelineSpec { stages: vec![stage(bit, 17, vec![])] })
+        .is_err());
+    // Bias length must match take.
+    assert!(coord
+        .register_pipeline(PipelineSpec { stages: vec![stage(bit, 16, vec![1, 2, 3])] })
+        .is_err());
+    // GF(2) stages carry no bias.
+    assert!(matches!(
+        coord.register_pipeline(PipelineSpec {
+            stages: vec![StageSpec { matrix: bit, op: StageOp::Gf2, take: 16, bias: vec![0; 16] }],
+        }),
+        Err(PpacError::Config(_))
+    ));
+    // Widths must chain: stage 1 takes 16 rows, `bit` needs 32 inputs.
+    assert!(matches!(
+        coord.register_pipeline(PipelineSpec {
+            stages: vec![stage(bit, 16, vec![]), stage(bit, 16, vec![])],
+        }),
+        Err(PpacError::DimMismatch { .. })
+    ));
+    // The valid graph still registers after all the rejections.
+    assert!(coord
+        .register_pipeline(PipelineSpec { stages: vec![stage(bit, 16, vec![])] })
+        .is_ok());
+    coord.shutdown();
+}
+
+/// Satellite regression: the registry TTL sweep must skip matrices
+/// referenced by a live pipeline — and sweep them again the moment the
+/// pipeline is unregistered.
+#[test]
+fn ttl_sweep_skips_pipeline_matrices() {
+    let mut rng = Xoshiro256pp::seeded(904);
+    let coord = Coordinator::start(CoordinatorConfig {
+        tile: PpacConfig::new(32, 32),
+        workers: 2,
+        max_batch: 8,
+        replicas: 1,
+        registry_ttl: Some(Duration::from_millis(30)),
+        ..Default::default()
+    })
+    .unwrap();
+    let pinned = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 16, 32) }).unwrap();
+    let loose = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 16, 32) }).unwrap();
+    let pipeline = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![StageSpec { matrix: pinned, op: StageOp::Pm1Mvp, take: 16, bias: vec![] }],
+        })
+        .unwrap();
+
+    std::thread::sleep(Duration::from_millis(60));
+    // The sweep is opportunistic: registry activity triggers it.
+    let _tick = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 4, 32) }).unwrap();
+    assert!(
+        coord.matrix_shape(pinned).is_some(),
+        "a matrix referenced by a live pipeline must survive the TTL sweep"
+    );
+    assert!(coord.matrix_shape(loose).is_none(), "the unpinned matrix sweeps normally");
+    assert!(coord.metrics.snapshot().auto_evictions >= 1);
+
+    // Unregister the pipeline: the pin is gone, the matrix sweeps too.
+    coord.unregister_pipeline(pipeline).unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    let _tick2 = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 4, 32) }).unwrap();
+    assert!(
+        coord.matrix_shape(pinned).is_none(),
+        "unregistering the pipeline unpins its matrices from the sweep"
+    );
+    coord.shutdown();
+}
+
+/// Submitting to a pipeline whose stage matrix was manually
+/// unregistered fails typed at submit time — whole batch, no partial
+/// dispatch.
+#[test]
+fn submit_after_stage_matrix_unregistered_fails_typed() {
+    let mut rng = Xoshiro256pp::seeded(905);
+    let coord = start(2, 1);
+    let matrix = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 16, 32) }).unwrap();
+    let pipeline = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![StageSpec { matrix, op: StageOp::Pm1Mvp, take: 16, bias: vec![] }],
+        })
+        .unwrap();
+    coord.unregister_matrix(matrix).unwrap();
+    let xs = vec![rng.bits(32)];
+    assert!(matches!(
+        coord.submit_pipeline(pipeline, &xs),
+        Err(PpacError::Coordinator(_))
+    ));
+    // Unknown pipeline ids are typed too.
+    assert!(coord.submit_pipeline(777, &xs).is_err());
+    coord.shutdown();
+}
+
+/// An already-expired deadline fails the whole batch typed before any
+/// dispatch and counts into `deadlines_exceeded`.
+#[test]
+fn expired_deadline_fails_typed_before_dispatch() {
+    let mut rng = Xoshiro256pp::seeded(906);
+    let coord = start(2, 1);
+    let matrix = coord.register(MatrixSpec::Bit1 { rows: rand_matrix(&mut rng, 16, 32) }).unwrap();
+    let pipeline = coord
+        .register_pipeline(PipelineSpec {
+            stages: vec![StageSpec { matrix, op: StageOp::Pm1Mvp, take: 16, bias: vec![] }],
+        })
+        .unwrap();
+    let xs: Vec<Vec<bool>> = (0..3).map(|_| rng.bits(32)).collect();
+    let opts = JobOptions {
+        deadline: Some(Instant::now() - Duration::from_millis(1)),
+        ..JobOptions::default()
+    };
+    assert!(matches!(
+        coord.submit_pipeline_with(pipeline, &xs, opts),
+        Err(PpacError::Job(JobError::DeadlineExceeded))
+    ));
+    assert!(coord.metrics.snapshot().deadlines_exceeded >= xs.len() as u64);
+    // Width checks stay typed as well.
+    assert!(matches!(
+        coord.submit_pipeline(pipeline, &[rng.bits(16)]),
+        Err(PpacError::DimMismatch { .. })
+    ));
+    coord.shutdown();
+}

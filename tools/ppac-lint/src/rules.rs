@@ -41,6 +41,7 @@ const HANDOFF: &[&str] = &[
     "admission_queue_depth",
     "cancelled",
     "connections_open",
+    "intermediates_resident",
 ];
 
 /// How many lines above a `Relaxed` use the `// ordering:` justification
@@ -58,6 +59,7 @@ const GAUGES: &[&str] = &[
     "reducer_queue_depth",
     "admission_queue_depth",
     "connections_open",
+    "intermediates_resident",
 ];
 
 /// Submission counters and the completion-side counters that must
@@ -100,11 +102,20 @@ const MONOTONIC: &[&str] = &[
     "frames_rejected",
     "batches_coalesced",
     "coalesced_queries",
+    "pipeline_stages_executed",
+    "stage_spills",
 ];
 
 /// Id/tie-break sequences — `fetch_add` is the allocation itself.
-const SEQUENCE: &[&str] =
-    &["next_matrix", "next_shard", "next_job", "next_reducer", "rr", "last_sweep_ms"];
+const SEQUENCE: &[&str] = &[
+    "next_matrix",
+    "next_shard",
+    "next_job",
+    "next_reducer",
+    "next_pipeline",
+    "rr",
+    "last_sweep_ms",
+];
 
 fn is_punct(t: &Token, s: &str) -> bool {
     t.kind == TokKind::Punct && t.text == s
